@@ -1,0 +1,114 @@
+//! LAD with outliers — the paper's motivation for least absolute
+//! deviations (§1): an ℓ₂ fit is dragged by gross outliers while the LAD
+//! fit is robust; DVI makes the LAD path cheap.
+//!
+//! This example:
+//!   1. generates a linear dataset with 10% gross outliers;
+//!   2. fits least squares (normal equations, for contrast) and a LAD
+//!      path with DVI screening;
+//!   3. reports coefficient recovery error of both and the screening
+//!      statistics.
+//!
+//! Run: `cargo run --release --example lad_outliers`
+
+use dvi_screen::data::{synth, Rng};
+use dvi_screen::linalg::{self, RowMatrix};
+use dvi_screen::path::{PathConfig, PathRunner};
+use dvi_screen::problem::{Instance, Model};
+use dvi_screen::screening::RuleKind;
+
+/// Plain least squares via normal equations (n is small here); Gaussian
+/// elimination with partial pivoting.
+fn least_squares(x: &RowMatrix, y: &[f64]) -> Vec<f64> {
+    let n = x.cols();
+    // A = XᵀX, b = Xᵀy
+    let mut a = vec![vec![0.0; n]; n];
+    let mut b = vec![0.0; n];
+    for i in 0..x.rows() {
+        let row = x.row(i);
+        for p in 0..n {
+            b[p] += row[p] * y[i];
+            for q in 0..n {
+                a[p][q] += row[p] * row[q];
+            }
+        }
+    }
+    // solve A w = b
+    for col in 0..n {
+        let piv = (col..n)
+            .max_by(|&r1, &r2| a[r1][col].abs().partial_cmp(&a[r2][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        assert!(d.abs() > 1e-12, "singular normal equations");
+        for r in col + 1..n {
+            let f = a[r][col] / d;
+            for c2 in col..n {
+                a[r][c2] -= f * a[col][c2];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut w = vec![0.0; n];
+    for r in (0..n).rev() {
+        let mut s = b[r];
+        for c2 in r + 1..n {
+            s -= a[r][c2] * w[c2];
+        }
+        w[r] = s / a[r][r];
+    }
+    w
+}
+
+fn main() {
+    let n = 6;
+    // ground-truth weights via the same generator the dataset uses
+    let mut rng = Rng::new(0x0DD);
+    let w_true: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+    // regenerate the dataset deterministically from that seed
+    let ds = {
+        let mut d = synth::linear_regression(0x0DD, 3000, n, 0.3, 0.10, 40.0);
+        d.name = "outliers-demo".into();
+        d
+    };
+    println!(
+        "dataset: {} instances, {} features, 10% outliers at 40x noise",
+        ds.len(),
+        ds.dim()
+    );
+
+    // --- least squares (non-robust) -----------------------------------
+    let w_ls = least_squares(&ds.x, &ds.y);
+    let err_ls = {
+        let d: Vec<f64> = w_ls.iter().zip(&w_true).map(|(a, b)| a - b).collect();
+        linalg::norm(&d)
+    };
+
+    // --- LAD path with DVI screening -----------------------------------
+    let cfg = PathConfig::log_grid(1e-2, 10.0, 100).with_validation(true);
+    let out = PathRunner::new(Model::Lad, cfg, RuleKind::DviW).run(&ds);
+    // w from the final (largest-C, loss-dominated) path point
+    let inst = Instance::from_dataset(Model::Lad, &ds);
+    let c_last = out.steps.last().unwrap().c;
+    let w_lad = inst.w_from_theta(c_last, &out.final_theta);
+    let err_lad = {
+        let d: Vec<f64> = w_lad.iter().zip(&w_true).map(|(a, b)| a - b).collect();
+        linalg::norm(&d)
+    };
+
+    println!("‖w_LS  − w*‖ = {err_ls:.4}   (least squares, dragged by outliers)");
+    println!("‖w_LAD − w*‖ = {err_lad:.4}   (LAD at C={c_last:.2})");
+    println!(
+        "LAD path: {:.2}s total, {:.1}% mean rejection, screening {:.4}s, worst KKT {:.1e}",
+        out.total_secs,
+        100.0 * out.mean_rejection(),
+        out.screen_secs,
+        out.worst_violation().unwrap()
+    );
+    assert!(
+        err_lad < err_ls,
+        "LAD should beat least squares under gross outliers"
+    );
+    println!("robustness confirmed: LAD error < LS error");
+}

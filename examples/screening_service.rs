@@ -1,0 +1,58 @@
+//! The coordinator as a service: submit a batch of heterogeneous
+//! screening/path jobs through the line-JSON front-end (exactly what
+//! `dvi serve` exposes on stdin/stdout) and consume the streamed results.
+//!
+//! Run: `cargo run --release --example screening_service`
+
+use dvi_screen::config::parse_json;
+use dvi_screen::coordinator::ScreeningService;
+
+fn main() {
+    let requests = r#"
+# SVM rule comparison on a toy (miniature scale)
+{"dataset": "toy2", "rule": "ssnsv",  "scale": 0.2, "points": 25}
+{"dataset": "toy2", "rule": "essnsv", "scale": 0.2, "points": 25}
+{"dataset": "toy2", "rule": "dvi",    "scale": 0.2, "points": 25}
+# LAD on two simulated real sets
+{"dataset": "houses", "model": "lad", "scale": 0.05, "points": 25}
+{"dataset": "magic",  "model": "lad", "scale": 0.05, "points": 25}
+# and one deliberately bad request to show failure isolation
+{"dataset": "not-a-dataset"}
+"#;
+
+    let mut svc = ScreeningService::new(2);
+    let mut out = Vec::new();
+    svc.serve(requests.as_bytes(), &mut out).expect("serve");
+    let text = String::from_utf8(out).unwrap();
+
+    println!("{:<22} {:<8} {:>10} {:>10}", "dataset/rule", "ok", "rejection", "secs");
+    let mut oks = 0;
+    for line in text.lines() {
+        let j = parse_json(line).expect("response json");
+        let ok = j.get("ok").and_then(|v| v.as_bool()).unwrap_or(false);
+        if ok {
+            oks += 1;
+            println!(
+                "{:<22} {:<8} {:>9.1}% {:>10.3}",
+                format!(
+                    "{}/{}",
+                    j.get("dataset").unwrap().as_str().unwrap(),
+                    j.get("rule").unwrap().as_str().unwrap()
+                ),
+                "ok",
+                100.0 * j.get("mean_rejection").unwrap().as_float().unwrap(),
+                j.get("total_secs").unwrap().as_float().unwrap(),
+            );
+        } else {
+            println!(
+                "{:<22} {:<8} {}",
+                "-",
+                "ERROR",
+                j.get("error").and_then(|v| v.as_str()).unwrap_or("?")
+            );
+        }
+    }
+    println!("\ncoordinator metrics:\n{}", svc.metrics().render());
+    assert_eq!(oks, 5, "five good jobs expected");
+    svc.shutdown();
+}

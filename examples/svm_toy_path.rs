@@ -1,0 +1,42 @@
+//! The paper's Figure 1 workload as a runnable demo: DVI_s rejection
+//! stacked-area charts on Toy1/Toy2/Toy3, plus the R̃ vs L̃ split the
+//! paper discusses (separated classes ⇒ R̃ dominates; overlapping ⇒ L̃
+//! grows to a comparable share).
+//!
+//! Run: `cargo run --release --example svm_toy_path [-- <per_class>]`
+
+use dvi_screen::data::synth;
+use dvi_screen::path::{PathConfig, PathRunner};
+use dvi_screen::problem::Model;
+use dvi_screen::report::StackedArea;
+use dvi_screen::screening::RuleKind;
+
+fn main() {
+    let per_class: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000);
+
+    let cfg = PathConfig::log_grid(1e-2, 10.0, 100);
+    for ds in synth::paper_toys(per_class) {
+        let out = PathRunner::new(Model::Svm, cfg.clone(), RuleKind::DviW).run(&ds);
+        let (lo, hi) = out.rejection_series();
+        let r_share: f64 = lo.iter().sum::<f64>() / lo.len() as f64;
+        let l_share: f64 = hi.iter().sum::<f64>() / hi.len() as f64;
+        println!(
+            "{}: mean rejection {:.1}%  (R̃ {:.1}%, L̃ {:.1}%)  path {:.2}s",
+            ds.name,
+            100.0 * out.mean_rejection(),
+            100.0 * r_share,
+            100.0 * l_share,
+            out.total_secs
+        );
+        let chart = StackedArea::new(ds.name.clone(), lo, hi).height(14);
+        println!("{}", chart.render());
+    }
+    println!(
+        "Observation (paper §7.1): as the classes overlap more (toy1→toy3),\n\
+         the L̃ region (▒) grows while R̃ (█) shrinks — yet DVI still\n\
+         discards most instances."
+    );
+}

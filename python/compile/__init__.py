@@ -1,0 +1,6 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX model + AOT export.
+
+Nothing in this package is imported at runtime by the rust coordinator —
+`make artifacts` runs :mod:`compile.aot` once, producing HLO text under
+``artifacts/`` which `rust/src/runtime` loads via PJRT.
+"""

@@ -1,0 +1,109 @@
+"""AOT export: lower the L2 screening graph to HLO text per shape bucket.
+
+Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (what
+``make artifacts`` runs). Writes one ``dvi_screen_{l}x{n}.hlo.txt`` per
+bucket plus ``manifest.json`` for rust/src/runtime/artifacts.rs.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.ref import GUARD_EPS
+from .kernels.screen import BLOCK_L
+from . import model
+
+# Shape buckets: every (l, n) a dataset can present is padded up to the
+# smallest bucket that fits. l is a multiple of BLOCK_L (the Pallas row
+# tile); n covers the paper's datasets (max n = 54, Covertype).
+BUCKETS = [
+    (2048, 8),      # toys (2000×2)
+    (4096, 8),
+    (8192, 8),      # houses analog scaled
+    (8192, 16),     # wine (6497×12)
+    (8192, 32),     # computer (8192×21)
+    (16384, 32),    # ijcnn1 quarter-scale
+    (24576, 16),    # magic (19020×10), houses (20640×8)
+    (24576, 64),
+    (40960, 64),    # covertype (37877×54)
+    (53248, 32),    # ijcnn1 (49990×22)
+]
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    """Lower a jittable fn to XLA HLO text via stablehlo."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def bucket_specs(l, n):
+    """Abstract input specs for one bucket (f32 end to end)."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((l, n), f32),   # z
+        jax.ShapeDtypeStruct((n,), f32),     # u
+        jax.ShapeDtypeStruct((l,), f32),     # ybar
+        jax.ShapeDtypeStruct((l,), f32),     # znorm
+        jax.ShapeDtypeStruct((), f32),       # mid
+        jax.ShapeDtypeStruct((), f32),       # rad
+    )
+
+
+def build(out_dir: str, buckets=None, verbose=True) -> dict:
+    """Lower every bucket and write artifacts + manifest. Returns the
+    manifest dict."""
+    buckets = buckets or BUCKETS
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for l, n in buckets:
+        assert l % BLOCK_L == 0, f"bucket l={l} must be a multiple of {BLOCK_L}"
+        fname = f"dvi_screen_{l}x{n}.hlo.txt"
+        text = to_hlo_text(model.dvi_screen_graph, *bucket_specs(l, n))
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append({"l": l, "n": n, "file": fname})
+        if verbose:
+            print(f"  {fname}: {len(text)} chars")
+    manifest = {
+        "version": 1,
+        "dtype": "f32",
+        "guard_eps": GUARD_EPS,
+        "block_l": BLOCK_L,
+        "buckets": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {len(entries)} buckets + manifest.json to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="only the smallest bucket (CI / tests)",
+    )
+    args = ap.parse_args()
+    buckets = BUCKETS[:1] if args.quick else BUCKETS
+    build(args.out_dir, buckets)
+
+
+if __name__ == "__main__":
+    main()

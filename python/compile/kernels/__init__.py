@@ -1,0 +1,9 @@
+"""L1 Pallas kernels for the DVI screening hot-spot.
+
+The kernels here are authored once at build time, verified against the
+pure-jnp oracle in :mod:`compile.kernels.ref` by pytest, composed into the
+L2 JAX graph in :mod:`compile.model`, and AOT-lowered to HLO text by
+:mod:`compile.aot`. Python never runs on the rust request path.
+"""
+
+from . import ref, screen  # noqa: F401

@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracle for the screening kernels.
+
+These are the semantics the Pallas kernels must reproduce *exactly* (same
+dtype, same guard band) — pytest asserts bit-equality of the decision
+codes and allclose on the intermediate scores.
+
+DVI rule (paper Thm 7 / Cor 9), evaluated at the *next* path point with
+``mid = (C_{k+1}+C_k)/2`` and ``rad = (C_{k+1}-C_k)/2`` and ``u = Zᵀθ*(C_k)``:
+
+    score_i = mid·⟨u, z_i⟩
+    slack_i = rad·‖u‖·‖z_i‖
+    code_i  = 1  (R, θ→α)  if score_i − slack_i > ȳ_i + τ_i
+            = 2  (L, θ→β)  if score_i + slack_i < ȳ_i − τ_i
+            = 0  (keep)    otherwise
+
+τ is the conservative f32 guard band: rounding in f32 may only ever turn a
+screening decision into a *keep* (never the reverse), so the AOT artifact
+stays safe. τ_i = guard·(|score_i| + slack_i + |ȳ_i| + 1).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# Default guard band, chosen ≳ 2^-17 ≈ 7.6e-6: a couple of orders above
+# f32's eps (1.2e-7) to absorb accumulated matvec rounding across n ≤ 64
+# features, while screening negligibly less than exact f64 (parity tests
+# in rust/tests/integration_runtime.rs quantify the gap).
+GUARD_EPS = 1e-5
+
+
+def scores(z, u):
+    """p_i = ⟨u, z_i⟩ for every row of z: the (l, n) @ (n,) matvec."""
+    return z @ u
+
+
+@partial(jax.jit, static_argnames=("guard",))
+def dvi_screen(z, u, ybar, znorm, mid, rad, guard=GUARD_EPS):
+    """Reference DVI screening: decision codes per instance.
+
+    Args:
+      z: (l, n) instance matrix (rows z_i = a_i·x_i).
+      u: (n,) — Zᵀθ*(C_k).
+      ybar: (l,) — b_i·y_i.
+      znorm: (l,) — ‖z_i‖ (precomputed once per dataset).
+      mid, rad: scalars (see module docstring).
+      guard: conservative band (static).
+
+    Returns:
+      (l,) float32 codes: 0 keep / 1 at-lower / 2 at-upper.
+    """
+    dt = z.dtype
+    u = u.astype(dt)
+    unorm = jnp.sqrt(jnp.sum(u * u))
+    p = scores(z, u)
+    score = mid.astype(dt) * p
+    slack = rad.astype(dt) * unorm * znorm.astype(dt)
+    tau = dt.type(guard) * (jnp.abs(score) + slack + jnp.abs(ybar) + dt.type(1.0))
+    at_lo = score - slack > ybar + tau
+    at_hi = score + slack < ybar - tau
+    return jnp.where(at_lo, 1.0, jnp.where(at_hi, 2.0, 0.0)).astype(jnp.float32)
+
+
+def row_norms(z):
+    """‖z_i‖ per row (the one-time norm precomputation)."""
+    return jnp.sqrt(jnp.sum(z * z, axis=1))

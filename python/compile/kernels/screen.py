@@ -1,0 +1,145 @@
+"""Pallas kernels for the DVI screening scan.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+screening is a single O(l·n) pass over the data. On TPU-shaped hardware
+that maps to streaming the (l, n) instance matrix HBM→VMEM in
+(BLOCK_L, n) row tiles while the shared n-vector u, the thresholds and the
+scalars stay resident in VMEM. Per tile the kernel fuses:
+
+  1. the (BLOCK_L, n) @ (n,) matvec p = z_tile · u   (MXU-friendly),
+  2. the norm lookup and both DVI inequalities,
+  3. the guard-banded decision code emit,
+
+so every instance is touched exactly once and no l×l Gram matrix is ever
+materialized (the w-form rule of Cor. 9 replaces the paper's O(l²) Gram
+trick).
+
+Kernels run with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU perf is estimated from the BlockSpec VMEM
+footprint in EXPERIMENTS.md §Perf.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import GUARD_EPS
+
+# Default row-tile. VMEM estimate per grid step (f32):
+#   z tile: 512·n_pad·4B ≤ 512·64·4 = 128 KiB, u: ≤ 256 B, vectors: 3·2 KiB
+# — comfortably inside a 16 MiB VMEM budget with double-buffering room.
+BLOCK_L = 512
+
+
+def _screen_kernel(z_ref, u_ref, ybar_ref, znorm_ref, sc_ref, code_ref, *, guard):
+    """One (BLOCK_L, n) tile: fused matvec + rule application.
+
+    sc_ref packs the scalars [mid, rad, unorm] (3,) — computed once in the
+    L2 graph (‖u‖ is a whole-vector reduction, so it cannot live in the
+    per-tile kernel).
+    """
+    z = z_ref[...]
+    u = u_ref[...]
+    mid = sc_ref[0]
+    rad = sc_ref[1]
+    unorm = sc_ref[2]
+    p = z @ u  # (BLOCK_L,)
+    score = mid * p
+    slack = rad * unorm * znorm_ref[...]
+    ybar = ybar_ref[...]
+    one = jnp.asarray(1.0, z.dtype)
+    tau = jnp.asarray(guard, z.dtype) * (jnp.abs(score) + slack + jnp.abs(ybar) + one)
+    at_lo = score - slack > ybar + tau
+    at_hi = score + slack < ybar - tau
+    code_ref[...] = jnp.where(at_lo, 1.0, jnp.where(at_hi, 2.0, 0.0)).astype(
+        jnp.float32
+    )
+
+
+@partial(jax.jit, static_argnames=("block_l", "guard"))
+def dvi_screen(z, u, ybar, znorm, mid, rad, *, block_l=BLOCK_L, guard=GUARD_EPS):
+    """Pallas DVI screening scan. Semantics = :func:`compile.kernels.ref.dvi_screen`.
+
+    Requires l % block_l == 0 (the AOT shape buckets guarantee it; tests
+    exercise ragged shapes via the bucket-padding helper in model.py).
+    """
+    l, n = z.shape
+    if l % block_l != 0:
+        raise ValueError(f"l={l} not a multiple of block_l={block_l}")
+    dt = z.dtype
+    unorm = jnp.sqrt(jnp.sum(u.astype(dt) ** 2))
+    scalars = jnp.stack(
+        [mid.astype(dt), rad.astype(dt), unorm.astype(dt)]
+    )  # (3,)
+    grid = (l // block_l,)
+    return pl.pallas_call(
+        partial(_screen_kernel, guard=guard),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_l, n), lambda i: (i, 0)),  # stream z tiles
+            pl.BlockSpec((n,), lambda i: (0,)),  # u resident
+            pl.BlockSpec((block_l,), lambda i: (i,)),
+            pl.BlockSpec((block_l,), lambda i: (i,)),
+            pl.BlockSpec((3,), lambda i: (0,)),  # scalars resident
+        ],
+        out_specs=pl.BlockSpec((block_l,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((l,), jnp.float32),
+        interpret=True,
+    )(z, u.astype(dt), ybar, znorm, scalars)
+
+
+def _matvec_kernel(z_ref, u_ref, p_ref):
+    p_ref[...] = z_ref[...] @ u_ref[...]
+
+
+@partial(jax.jit, static_argnames=("block_l",))
+def scores(z, u, *, block_l=BLOCK_L):
+    """Standalone tiled matvec p = z @ u (used by the ablation bench and
+    the kernel-level tests)."""
+    l, n = z.shape
+    if l % block_l != 0:
+        raise ValueError(f"l={l} not a multiple of block_l={block_l}")
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(l // block_l,),
+        in_specs=[
+            pl.BlockSpec((block_l, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_l,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((l,), z.dtype),
+        interpret=True,
+    )(z, u.astype(z.dtype))
+
+
+def _row_norm_kernel(z_ref, out_ref):
+    z = z_ref[...]
+    out_ref[...] = jnp.sqrt(jnp.sum(z * z, axis=1))
+
+
+@partial(jax.jit, static_argnames=("block_l",))
+def row_norms(z, *, block_l=BLOCK_L):
+    """Tiled per-row norms — the one-time per-dataset precomputation."""
+    l, n = z.shape
+    if l % block_l != 0:
+        raise ValueError(f"l={l} not a multiple of block_l={block_l}")
+    return pl.pallas_call(
+        _row_norm_kernel,
+        grid=(l // block_l,),
+        in_specs=[pl.BlockSpec((block_l, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_l,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((l,), z.dtype),
+        interpret=True,
+    )(z)
+
+
+def vmem_bytes(block_l: int, n: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency per grid step for the fused kernel — used
+    by the §Perf notes and asserted against the 16 MiB budget in tests."""
+    z_tile = block_l * n * dtype_bytes
+    u = n * dtype_bytes
+    vecs = 3 * block_l * dtype_bytes  # ybar, znorm, codes
+    scalars = 3 * dtype_bytes
+    return z_tile + u + vecs + scalars

@@ -1,0 +1,70 @@
+"""L2: the JAX screening graph that the AOT artifacts freeze.
+
+``dvi_screen_graph`` is the function `aot.py` lowers per shape bucket:
+it computes ‖u‖ once (whole-vector reduction), then invokes the fused
+L1 Pallas kernel. The rust runtime calls the compiled artifact with
+
+    (z, u, ybar, znorm, mid, rad) -> (codes,)
+
+where codes are float32 0/1/2 (keep / at-lower / at-upper).
+
+Also here: padding helpers (datasets are padded up to the static bucket
+shape — padded rows have z = 0, ‖z‖ = 0, ȳ = 0 so they never screen), and
+a jnp dual-objective used by the python test-suite as an independent check
+of the rust solver's numerics.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, screen
+
+
+def dvi_screen_graph(z, u, ybar, znorm, mid, rad):
+    """The artifact entry point (bucket-static shapes, f32)."""
+    return screen.dvi_screen(z, u, ybar, znorm, mid, rad)
+
+
+def dvi_screen_reference(z, u, ybar, znorm, mid, rad):
+    """Same graph wired to the jnp oracle (for lowering-parity tests)."""
+    return ref.dvi_screen(z, u, ybar, znorm, mid, rad)
+
+
+def pad_inputs(z, u, ybar, znorm, l_pad, n_pad):
+    """Zero-pad runtime inputs up to the bucket shape (mirrors the logic
+    in rust/src/runtime/pjrt.rs; tested for agreement)."""
+    l, n = z.shape
+    if l > l_pad or n > n_pad:
+        raise ValueError(f"shape ({l},{n}) exceeds bucket ({l_pad},{n_pad})")
+    zp = jnp.zeros((l_pad, n_pad), z.dtype).at[:l, :n].set(z)
+    up = jnp.zeros((n_pad,), u.dtype).at[:n].set(u)
+    yp = jnp.zeros((l_pad,), ybar.dtype).at[:l].set(ybar)
+    np_ = jnp.zeros((l_pad,), znorm.dtype).at[:l].set(znorm)
+    return zp, up, yp, np_
+
+
+def dual_objective(z, theta, ybar, c):
+    """g(θ) = C/2·‖Zᵀθ‖² − ⟨ȳ, θ⟩ — problem (12); used to cross-check the
+    rust solver from the python tests via shared fixtures."""
+    u = z.T @ theta
+    return 0.5 * c * jnp.sum(u * u) - jnp.dot(ybar, theta)
+
+
+def kkt_classify(z, w, ybar, tol):
+    """Membership by Eq. (14): 1 = R (−⟨w,z_i⟩ > ȳ_i), 2 = L, 0 = E."""
+    s = -(z @ w)
+    return jnp.where(s > ybar + tol, 1, jnp.where(s < ybar - tol, 2, 0))
+
+
+def example_inputs(l_pad, n_pad, seed=0):
+    """Deterministic example inputs of a bucket shape (for lowering and
+    smoke tests)."""
+    k = jax.random.PRNGKey(seed)
+    kz, ku, ky = jax.random.split(k, 3)
+    z = jax.random.normal(kz, (l_pad, n_pad), jnp.float32)
+    u = jax.random.normal(ku, (n_pad,), jnp.float32)
+    ybar = jnp.sign(jax.random.normal(ky, (l_pad,), jnp.float32)) * 1.0
+    znorm = jnp.sqrt(jnp.sum(z * z, axis=1))
+    mid = jnp.float32(1.1)
+    rad = jnp.float32(0.1)
+    return z, u, ybar, znorm, mid, rad

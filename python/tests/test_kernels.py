@@ -1,0 +1,150 @@
+"""L1 kernel correctness: Pallas vs the pure-jnp oracle.
+
+The decision codes must be *bit-identical* (same dtype, same guard) —
+anything weaker could silently flip a screening decision, which breaks the
+safety guarantee the whole paper rests on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, screen
+
+
+def make_inputs(l, n, seed, dtype=jnp.float32, spread=1.0):
+    k = jax.random.PRNGKey(seed)
+    kz, ku, ky, km = jax.random.split(k, 4)
+    z = (jax.random.normal(kz, (l, n)) * spread).astype(dtype)
+    u = jax.random.normal(ku, (n,)).astype(dtype)
+    ybar = jnp.sign(jax.random.normal(ky, (l,))).astype(dtype)
+    znorm = jnp.sqrt(jnp.sum(z.astype(jnp.float32) ** 2, axis=1)).astype(dtype)
+    mid, rad = jnp.asarray(1.3, dtype), jnp.asarray(0.2, dtype)
+    return z, u, ybar, znorm, mid, rad
+
+
+class TestMatvecKernel:
+    @pytest.mark.parametrize("l,n", [(512, 2), (1024, 8), (512, 54), (2048, 22)])
+    def test_matches_jnp(self, l, n):
+        z, u, *_ = make_inputs(l, n, seed=l + n)
+        got = screen.scores(z, u)
+        want = ref.scores(z, u)
+        # f32 matvec accumulation order differs between the tiled kernel
+        # and the fused jnp dot — allow a few ulps of drift
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_ragged(self):
+        z, u, *_ = make_inputs(512, 4, seed=1)
+        with pytest.raises(ValueError, match="multiple"):
+            screen.scores(z[:100], u)
+
+    def test_block_sizes_agree(self):
+        z, u, *_ = make_inputs(2048, 16, seed=2)
+        a = screen.scores(z, u, block_l=512)
+        b = screen.scores(z, u, block_l=256)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+class TestRowNorms:
+    @pytest.mark.parametrize("l,n", [(512, 3), (1024, 64)])
+    def test_matches_jnp(self, l, n):
+        z, *_ = make_inputs(l, n, seed=l)
+        np.testing.assert_allclose(
+            screen.row_norms(z), ref.row_norms(z), rtol=1e-6, atol=1e-6
+        )
+
+    def test_zero_rows(self):
+        z = jnp.zeros((512, 4), jnp.float32)
+        assert (screen.row_norms(z) == 0.0).all()
+
+
+class TestScreenKernel:
+    @pytest.mark.parametrize("l,n", [(512, 2), (1024, 12), (512, 54), (1536, 22)])
+    def test_codes_bit_identical(self, l, n):
+        z, u, ybar, znorm, mid, rad = make_inputs(l, n, seed=3 * l + n)
+        got = screen.dvi_screen(z, u, ybar, znorm, mid, rad)
+        want = ref.dvi_screen(z, u, ybar, znorm, mid, rad)
+        assert got.dtype == jnp.float32
+        assert (got == want).all(), f"codes differ at {np.where(got != want)}"
+
+    def test_screens_something_separable(self):
+        # strongly separated scores ⇒ rule should fire
+        z, u, ybar, znorm, mid, rad = make_inputs(512, 4, seed=9, spread=4.0)
+        got = screen.dvi_screen(z, u, ybar, znorm, mid, rad)
+        assert int((got > 0).sum()) > 0
+
+    def test_zero_u_keeps_all_near_margin(self):
+        # u = 0 ⇒ score = slack = 0; codes decided purely by sign of ȳ ± τ
+        z, _, ybar, znorm, mid, rad = make_inputs(512, 4, seed=10)
+        u0 = jnp.zeros((4,), jnp.float32)
+        got = screen.dvi_screen(z, u0, ybar, znorm, mid, rad)
+        want = ref.dvi_screen(z, u0, ybar, znorm, mid, rad)
+        assert (got == want).all()
+
+    def test_padded_rows_inert(self):
+        # identical data with and without zero padding ⇒ same codes prefix
+        z, u, ybar, znorm, mid, rad = make_inputs(512, 8, seed=11)
+        from compile import model
+
+        zp, up, yp, npad = model.pad_inputs(z, u, ybar, znorm, 1024, 16)
+        got = screen.dvi_screen(zp, up, yp, npad, mid, rad)
+        base = screen.dvi_screen(z, u, ybar, znorm, mid, rad)
+        assert (got[:512] == base).all()
+
+    def test_guard_monotone(self):
+        # a larger guard can only turn decisions into keeps
+        z, u, ybar, znorm, mid, rad = make_inputs(1024, 8, seed=12)
+        tight = screen.dvi_screen(z, u, ybar, znorm, mid, rad, guard=0.0)
+        loose = screen.dvi_screen(z, u, ybar, znorm, mid, rad, guard=1e-2)
+        flipped = (loose != tight) & (loose != 0)
+        assert not bool(flipped.any()), "guard created a new decision"
+
+    @staticmethod
+    def assert_parity(got, want):
+        """Codes must agree except possibly *at* the guard boundary, where
+        differing f32 accumulation order can flip screen↔keep. A 1↔2 flip
+        (lower vs upper bound) is impossible and always an error."""
+        got = np.asarray(got)
+        want = np.asarray(want)
+        diff = got != want
+        # never AtLo vs AtHi
+        assert not bool(((got > 0) & (want > 0) & diff).any()), "1<->2 flip"
+        # boundary flips must be rare (< 0.5% of instances)
+        assert diff.mean() < 5e-3, f"{diff.sum()} disagreements"
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        l=st.sampled_from([512, 1024, 1536]),
+        n=st.integers(min_value=1, max_value=64),
+        seed=st.integers(min_value=0, max_value=2**31),
+        spread=st.sampled_from([0.1, 1.0, 10.0]),
+    )
+    def test_hypothesis_parity(self, l, n, seed, spread):
+        z, u, ybar, znorm, mid, rad = make_inputs(l, n, seed=seed, spread=spread)
+        got = screen.dvi_screen(z, u, ybar, znorm, mid, rad)
+        want = ref.dvi_screen(z, u, ybar, znorm, mid, rad)
+        self.assert_parity(got, want)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        mid=st.floats(min_value=0.02, max_value=20.0),
+        frac=st.floats(min_value=0.001, max_value=0.999),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_scalar_sweep(self, mid, frac, seed):
+        # rad < mid always (C_{k+1} > C_k > 0 ⇒ rad/mid < 1)
+        z, u, ybar, znorm, _, _ = make_inputs(512, 8, seed=seed)
+        midj = jnp.asarray(mid, jnp.float32)
+        radj = jnp.asarray(mid * frac, jnp.float32)
+        got = screen.dvi_screen(z, u, ybar, znorm, midj, radj)
+        want = ref.dvi_screen(z, u, ybar, znorm, midj, radj)
+        self.assert_parity(got, want)
+
+
+class TestVmemBudget:
+    def test_default_block_within_budget(self):
+        # 16 MiB VMEM with ≥2x headroom for double buffering
+        for n in (8, 16, 32, 64):
+            assert screen.vmem_bytes(screen.BLOCK_L, n) * 2 < 16 * 1024 * 1024

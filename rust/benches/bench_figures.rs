@@ -1,0 +1,28 @@
+//! Regenerates the paper's **Figures 1, 2 and 3** — rejection-ratio
+//! curves (stacked-area charts in the terminal, CSV series on disk).
+//!
+//! Run: `cargo bench --bench bench_figures [-- --scale 0.25 --points 100]`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use dvi_screen::experiments::{self, ExpOptions};
+
+fn main() {
+    let scale = common::arg_f64("scale", 0.25);
+    let points = common::arg_usize("points", 100);
+    let opts = ExpOptions {
+        scale,
+        points,
+        tol: 1e-6,
+        out_dir: "results".into(),
+        use_pjrt: false,
+        validate: false,
+    };
+    println!("# bench_figures: scale {scale}, {points}-point grid\n");
+    let t = std::time::Instant::now();
+    println!("{}", experiments::run("fig1", &opts).unwrap());
+    println!("{}", experiments::run("fig2", &opts).unwrap());
+    println!("{}", experiments::run("fig3", &opts).unwrap());
+    println!("# total {:.1}s; CSVs in results/", t.elapsed().as_secs_f64());
+}

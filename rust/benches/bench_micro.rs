@@ -1,0 +1,117 @@
+//! Microbenches for the hot paths (§Perf in EXPERIMENTS.md):
+//!
+//! * the native DVI scan (throughput in GB/s over the instance matrix —
+//!   the paper's "scan the data set only once" cost);
+//! * the PJRT/AOT scan (per-call latency incl. u upload + codes download);
+//! * one dual-CD sweep (gradient-eval rate);
+//! * Lemma 20 extremization (SSNSV/ESSNSV inner loop);
+//! * w-form vs θ-form DVI ablation (the Gram-matrix crossover).
+//!
+//! Run: `cargo bench --bench bench_micro`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::bench;
+use dvi_screen::config::SolverConfig;
+use dvi_screen::data::synth;
+use dvi_screen::problem::{Instance, Model};
+use dvi_screen::screening::dvi::dvi_scan;
+use dvi_screen::screening::ssnsv::lemma20_min;
+use dvi_screen::screening::Dvi;
+use dvi_screen::solver::CdSolver;
+
+fn main() {
+    println!("# bench_micro\n");
+
+    // ---- native DVI scan ------------------------------------------------
+    for (l, n) in [(10_000usize, 22usize), (40_000, 54)] {
+        let ds = synth::gaussian_classes(1, l, n, 1.0, 1.0, 0.5, 1.0);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let u: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let bytes = (l * n * 8) as f64;
+        let s = bench(&format!("native_dvi_scan_{l}x{n}"), 5, 0.5, || {
+            dvi_scan(&inst, 1.05, 0.05, &u)
+        });
+        println!("    -> {:.2} GB/s effective", bytes / s.min_s / 1e9);
+    }
+
+    // ---- PJRT scan -------------------------------------------------------
+    match dvi_screen::runtime::PjrtScreener::from_default_dir() {
+        Ok(mut screener) => {
+            let ds = synth::gaussian_classes(2, 10_000, 22, 1.0, 1.0, 0.5, 1.0);
+            let inst = Instance::from_dataset(Model::Svm, &ds);
+            let u: Vec<f64> = (0..22).map(|i| (i as f64 * 0.21).cos()).collect();
+            // first call pays compile + upload
+            let t = std::time::Instant::now();
+            screener.try_scan(&inst, 1.05, 0.05, &u).expect("pjrt");
+            println!(
+                "{:<44} cold (compile+upload) {:>10.4}s",
+                "pjrt_dvi_scan_10000x22", t.elapsed().as_secs_f64()
+            );
+            bench("pjrt_dvi_scan_10000x22 (warm)", 5, 0.5, || {
+                screener.try_scan(&inst, 1.05, 0.05, &u).expect("pjrt")
+            });
+        }
+        Err(e) => println!("pjrt scan skipped: {e}"),
+    }
+
+    // ---- solver sweep rate -----------------------------------------------
+    {
+        let ds = synth::toy_gaussian(9, 5_000, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let solver =
+            CdSolver::new(SolverConfig { tol: 1e-7, max_outer: 100_000, ..Default::default() });
+        let mut evals = 0u64;
+        let s = bench("cd_solve_toy2_l10000_C1", 3, 1.0, || {
+            let r = solver.solve(&inst, 1.0, inst.cold_start());
+            evals = r.stats.grad_evals;
+            r.stats.coord_updates
+        });
+        println!(
+            "    -> {:.1} M grad-evals/s ({} evals/solve)",
+            evals as f64 / s.min_s / 1e6,
+            evals
+        );
+    }
+
+    // ---- Lemma 20 --------------------------------------------------------
+    {
+        let n = 54;
+        let v: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let u: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+        let o: Vec<f64> = vec![0.1; n];
+        bench("lemma20_min_n54 (x10000)", 5, 0.5, || {
+            let mut acc = 0.0;
+            for k in 0..10_000 {
+                acc += lemma20_min(&v, &u, 10.0 + k as f64 * 1e-4, &o, 2.0);
+            }
+            acc
+        });
+    }
+
+    // ---- w-form vs θ-form ablation ----------------------------------------
+    println!("\n# ablation: DVI w-form (O(l·n)) vs θ-form (O(l²) w/ cached Gram)");
+    for l in [500usize, 2000, 6000] {
+        let n = 22;
+        let ds = synth::gaussian_classes(3, l, n, 1.0, 1.0, 0.5, 1.0);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let solver = CdSolver::new(SolverConfig { tol: 1e-6, ..Default::default() });
+        let r = solver.solve(&inst, 0.5, inst.cold_start());
+        let w_rule = Dvi::new_w();
+        bench(&format!("dvi_w_form_{l}x{n}"), 5, 0.3, || {
+            w_rule.screen(&inst, 0.5, 0.6, &r.theta, &r.u)
+        });
+        let t = std::time::Instant::now();
+        let t_rule = Dvi::new_theta(&inst);
+        let gram_secs = t.elapsed().as_secs_f64();
+        let s = bench(&format!("dvi_theta_form_{l}x{n}"), 5, 0.3, || {
+            t_rule.screen(&inst, 0.5, 0.6, &r.theta, &r.u)
+        });
+        println!(
+            "    -> Gram precompute {:.3}s amortizes over {:.0} steps vs w-form",
+            gram_secs,
+            gram_secs / (s.min_s.max(1e-12))
+        );
+    }
+}

@@ -1,0 +1,31 @@
+//! Regenerates the paper's **Tables 1, 2 and 3** — end-to-end path
+//! runtimes for Solver vs Solver+rule, with the same row structure the
+//! paper reports (rule time, init time, total, speedup).
+//!
+//! Run: `cargo bench --bench bench_tables [-- --scale 0.25 --points 100]`
+//! The scale applies to the simulated real sets; toys always run at the
+//! paper's full 1000/class. Results also land in `results/*.csv`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use dvi_screen::experiments::{self, ExpOptions};
+
+fn main() {
+    let scale = common::arg_f64("scale", 0.25);
+    let points = common::arg_usize("points", 100);
+    let opts = ExpOptions {
+        scale,
+        points,
+        tol: 1e-6,
+        out_dir: "results".into(),
+        use_pjrt: false,
+        validate: false,
+    };
+    println!("# bench_tables: scale {scale}, {points}-point grid\n");
+    let t = std::time::Instant::now();
+    println!("{}", experiments::run("tab1", &opts).unwrap());
+    println!("{}", experiments::run("tab2", &opts).unwrap());
+    println!("{}", experiments::run("tab3", &opts).unwrap());
+    println!("# total {:.1}s; CSVs in results/", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,70 @@
+//! Shared bench harness (criterion is unavailable offline): warmup +
+//! repeated timing with mean/p50/min reporting, and CLI arg handling
+//! (`cargo bench` passes `--bench`; we also accept `--scale`, `--points`).
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+}
+
+impl BenchStats {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>4} iters  mean {:>12.6}s  p50 {:>12.6}s  min {:>12.6}s",
+            self.name, self.iters, self.mean_s, self.p50_s, self.min_s
+        )
+    }
+}
+
+/// Run `f` until `min_time_s` elapses (at least `min_iters` times) and
+/// report stats. `f` should return something observable to keep the
+/// optimizer honest; we black-box it.
+pub fn bench<T>(name: &str, min_iters: usize, min_time_s: f64, mut f: impl FnMut() -> T) -> BenchStats {
+    // warmup
+    std::hint::black_box(f());
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_secs_f64() < min_time_s {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        min_s: samples[0],
+        p50_s: samples[samples.len() / 2],
+    };
+    println!("{}", stats.line());
+    stats
+}
+
+/// Parse `--key value` bench args, ignoring cargo's `--bench` flag.
+pub fn arg_f64(key: &str, default: f64) -> f64 {
+    let args: Vec<String> = std::env::args().collect();
+    for i in 0..args.len() {
+        if args[i] == format!("--{key}") {
+            if let Some(v) = args.get(i + 1).and_then(|s| s.parse().ok()) {
+                return v;
+            }
+        }
+    }
+    default
+}
+
+pub fn arg_usize(key: &str, default: usize) -> usize {
+    arg_f64(key, default as f64) as usize
+}

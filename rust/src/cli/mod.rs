@@ -1,0 +1,302 @@
+//! Hand-rolled CLI (offline build — no clap).
+
+use crate::config::RunConfig;
+use crate::coordinator::ScreeningService;
+use crate::data::{registry, Task};
+use crate::experiments::{self, ExpOptions};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+dvi — safe exact data reduction for SVM and LAD (DVI screening)
+
+USAGE:
+  dvi path [--dataset NAME] [--model svm|lad|wsvm] [--rule dvi|dvi-theta|ssnsv|essnsv|none]
+           [--scale S] [--points N] [--c-min F] [--c-max F] [--tol F]
+           [--validate] [--pjrt] [--config FILE]
+  dvi experiment --id fig1|tab1|fig2|tab2|fig3|tab3|all
+           [--scale S] [--points N] [--tol F] [--out DIR] [--pjrt]
+  dvi cv   [--dataset NAME] [--model svm|lad] [--folds K] [--scale S]
+           [--points N] [--rule dvi|none]     cross-validated C selection
+  dvi serve [--workers N]            line-JSON requests on stdin
+  dvi gen-data --dataset NAME --out FILE [--scale S]
+  dvi info                           runtime + artifact status
+  dvi help
+";
+
+/// Parse `--key value` / `--flag` style args into a map. Returns
+/// (positional, flags).
+fn parse_flags(args: &[String]) -> Result<(Vec<String>, BTreeMap<String, String>), String> {
+    let mut pos = Vec::new();
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            // boolean flags
+            if matches!(key, "validate" | "pjrt" | "help") {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+                continue;
+            }
+            let val = args
+                .get(i + 1)
+                .ok_or_else(|| format!("flag --{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok((pos, flags))
+}
+
+fn get_f64(flags: &BTreeMap<String, String>, key: &str, default: f64) -> Result<f64, String> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+    }
+}
+
+fn get_usize(flags: &BTreeMap<String, String>, key: &str, default: usize) -> Result<usize, String> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+    }
+}
+
+/// Entry point; returns the process exit code.
+pub fn dispatch(args: &[String]) -> i32 {
+    match run(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<(), String> {
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "path" => cmd_path(rest),
+        "cv" => cmd_cv(rest),
+        "experiment" => cmd_experiment(rest),
+        "serve" => cmd_serve(rest),
+        "gen-data" => cmd_gen_data(rest),
+        "info" => cmd_info(),
+        other => Err(format!("unknown command `{other}`\n{USAGE}")),
+    }
+}
+
+fn cmd_path(args: &[String]) -> Result<(), String> {
+    let (_, flags) = parse_flags(args)?;
+    let mut cfg = if let Some(file) = flags.get("config") {
+        RunConfig::from_file(std::path::Path::new(file)).map_err(|e| e.to_string())?
+    } else {
+        RunConfig::default()
+    };
+    if let Some(v) = flags.get("dataset") {
+        cfg.dataset = v.clone();
+    }
+    if let Some(v) = flags.get("model") {
+        cfg.model = v.clone();
+    }
+    if let Some(v) = flags.get("rule") {
+        cfg.rule = v.clone();
+    }
+    cfg.scale = get_f64(&flags, "scale", cfg.scale)?;
+    cfg.grid.points = get_usize(&flags, "points", cfg.grid.points)?;
+    cfg.grid.c_min = get_f64(&flags, "c-min", cfg.grid.c_min)?;
+    cfg.grid.c_max = get_f64(&flags, "c-max", cfg.grid.c_max)?;
+    cfg.solver.tol = get_f64(&flags, "tol", cfg.solver.tol)?;
+    cfg.validate = cfg.validate || flags.contains_key("validate");
+    cfg.use_pjrt = cfg.use_pjrt || flags.contains_key("pjrt");
+
+    let spec = crate::coordinator::JobSpec { id: 0, run: cfg };
+    let outcome = crate::coordinator::run_job(&spec);
+    match outcome.result {
+        Err(e) => Err(e),
+        Ok(s) => {
+            println!(
+                "dataset={} model={} rule={} l={} steps={}",
+                s.dataset, s.model, s.rule, s.l, s.steps
+            );
+            println!(
+                "mean rejection {:.2}%  init {:.3}s  screening {:.4}s  total {:.3}s  updates {}",
+                100.0 * s.mean_rejection,
+                s.init_secs,
+                s.screen_secs,
+                s.total_secs,
+                s.total_updates
+            );
+            if let Some(v) = s.worst_violation {
+                println!("worst full-KKT violation: {v:.3e}");
+            }
+            Ok(())
+        }
+    }
+}
+
+fn cmd_cv(args: &[String]) -> Result<(), String> {
+    use crate::path::{cross_validate, PathConfig};
+    use crate::problem::Model;
+    use crate::screening::RuleKind;
+    let (_, flags) = parse_flags(args)?;
+    let dataset = flags.get("dataset").cloned().unwrap_or_else(|| "toy1".into());
+    let model = Model::parse(flags.get("model").map(String::as_str).unwrap_or("svm"))
+        .ok_or("bad --model")?;
+    let rule = RuleKind::parse(flags.get("rule").map(String::as_str).unwrap_or("dvi"))
+        .ok_or("bad --rule")?;
+    let folds = get_usize(&flags, "folds", 5)?;
+    let scale = get_f64(&flags, "scale", 0.25)?;
+    let points = get_usize(&flags, "points", 50)?;
+    let ds = registry::resolve(&dataset, scale, model.expected_task())?;
+    if ds.task != model.expected_task() {
+        return Err(format!("dataset `{dataset}` does not match model"));
+    }
+    let cfg = PathConfig::log_grid(1e-2, 10.0, points);
+    let r = cross_validate(model, &ds, &cfg, rule, folds, 0xCF);
+    println!(
+        "{}-fold CV on {} ({} rows): best C = {:.4} (score {:.4}); \
+         {:.1}% mean rejection; {:.2}s",
+        folds,
+        ds.name,
+        ds.len(),
+        r.best_c(),
+        r.mean_score[r.best_index],
+        100.0 * r.mean_rejection,
+        r.total_secs
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &[String]) -> Result<(), String> {
+    let (_, flags) = parse_flags(args)?;
+    let id = flags.get("id").ok_or("--id required (fig1..fig3, tab1..tab3, all)")?;
+    let mut opts = ExpOptions::default();
+    opts.scale = get_f64(&flags, "scale", opts.scale)?;
+    opts.points = get_usize(&flags, "points", opts.points)?;
+    opts.tol = get_f64(&flags, "tol", opts.tol)?;
+    if let Some(dir) = flags.get("out") {
+        opts.out_dir = PathBuf::from(dir);
+    }
+    opts.use_pjrt = flags.contains_key("pjrt");
+    let report = experiments::run(id, &opts)?;
+    println!("{report}");
+    println!("(CSV written to {})", opts.out_dir.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    let (_, flags) = parse_flags(args)?;
+    let workers = get_usize(&flags, "workers", 2)?;
+    let mut svc = ScreeningService::new(workers);
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    svc.serve(stdin.lock(), stdout.lock()).map_err(|e| e.to_string())?;
+    eprintln!("{}", svc.metrics().render());
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_gen_data(args: &[String]) -> Result<(), String> {
+    let (_, flags) = parse_flags(args)?;
+    let name = flags.get("dataset").ok_or("--dataset required")?;
+    let out = flags.get("out").ok_or("--out required")?;
+    let scale = get_f64(&flags, "scale", 1.0)?;
+    let ds = registry::resolve(name, scale, Task::Classification)?;
+    crate::data::io::write_libsvm(&ds, std::path::Path::new(out))
+        .map_err(|e| e.to_string())?;
+    println!("wrote {} instances × {} features to {out}", ds.len(), ds.dim());
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    println!("dvi-screen {}", crate::VERSION);
+    let dir = crate::runtime::artifacts::default_dir();
+    match crate::runtime::ArtifactManifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} ({} buckets, dtype {})", dir.display(), m.buckets.len(), m.dtype);
+            for b in &m.buckets {
+                println!("  {}x{} -> {}", b.l, b.n, b.file);
+            }
+            m.check_files().map_err(|e| e.to_string())?;
+            println!("all artifact files present");
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — native screening only"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_flags_mixed() {
+        let args: Vec<String> = ["--scale", "0.5", "--validate", "--points", "10"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let (pos, flags) = parse_flags(&args).unwrap();
+        assert!(pos.is_empty());
+        assert_eq!(flags["scale"], "0.5");
+        assert_eq!(flags["validate"], "true");
+        assert_eq!(flags["points"], "10");
+    }
+
+    #[test]
+    fn parse_flags_missing_value() {
+        let args = vec!["--scale".to_string()];
+        assert!(parse_flags(&args).is_err());
+    }
+
+    #[test]
+    fn dispatch_help_and_unknown() {
+        assert_eq!(dispatch(&["help".to_string()]), 0);
+        assert_eq!(dispatch(&["bogus".to_string()]), 1);
+        assert_eq!(dispatch(&[]), 0);
+    }
+
+    #[test]
+    fn cmd_path_runs_tiny() {
+        let args: Vec<String> = [
+            "path", "--dataset", "toy1", "--scale", "0.02", "--points", "4", "--tol", "1e-5",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&args), 0);
+    }
+
+    #[test]
+    fn cmd_gen_data_roundtrip() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dvi_cli_gen_{}.svm", std::process::id()));
+        let args: Vec<String> = [
+            "gen-data",
+            "--dataset",
+            "toy2",
+            "--scale",
+            "0.02",
+            "--out",
+            p.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&args), 0);
+        assert!(p.exists());
+        std::fs::remove_file(&p).ok();
+    }
+}

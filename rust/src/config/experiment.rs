@@ -1,0 +1,293 @@
+//! Typed configuration consumed by the launcher (`dvi` CLI) and the
+//! experiment harness. Values parse from the TOML subset in
+//! [`super::toml`]; everything has sensible paper-faithful defaults so an
+//! empty config reproduces the paper's protocol.
+
+use super::toml::{parse_str, TomlError, Value};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Dual coordinate-descent solver parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolverConfig {
+    /// Stop when the maximal projected-gradient violation falls below tol.
+    pub tol: f64,
+    /// Hard cap on outer sweeps.
+    pub max_outer: usize,
+    /// Enable active-set shrinking.
+    pub shrink: bool,
+    /// Seed for the coordinate permutation.
+    pub seed: u64,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig { tol: 1e-6, max_outer: 2000, shrink: true, seed: 0x5EED }
+    }
+}
+
+/// Regularization-path grid. The paper: 100 values of C in [1e-2, 10],
+/// equally spaced in log scale.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GridConfig {
+    pub c_min: f64,
+    pub c_max: f64,
+    pub points: usize,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        GridConfig { c_min: 1e-2, c_max: 10.0, points: 100 }
+    }
+}
+
+impl GridConfig {
+    /// Log-spaced grid values (ascending).
+    pub fn values(&self) -> Vec<f64> {
+        assert!(self.c_min > 0.0 && self.c_max > self.c_min && self.points >= 2);
+        let (a, b) = (self.c_min.ln(), self.c_max.ln());
+        (0..self.points)
+            .map(|k| (a + (b - a) * k as f64 / (self.points - 1) as f64).exp())
+            .collect()
+    }
+}
+
+/// One path run: model × dataset × screening rule × grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    /// "svm" | "lad" | "wsvm"
+    pub model: String,
+    /// dataset registry name ("toy1".."toy3", "ijcnn1", ..., or a path to
+    /// a libsvm file prefixed "file:")
+    pub dataset: String,
+    /// size scale for the simulated real sets (tests use ≪1)
+    pub scale: f64,
+    /// "dvi" (w-form) | "dvi-theta" | "ssnsv" | "essnsv" | "none"
+    pub rule: String,
+    pub grid: GridConfig,
+    pub solver: SolverConfig,
+    /// Execute the screening scan through the AOT PJRT artifact instead of
+    /// the native rust implementation.
+    pub use_pjrt: bool,
+    /// After each reduced solve, verify full-problem KKT over all l
+    /// (safety validation; costs one extra scan).
+    pub validate: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "svm".into(),
+            dataset: "toy1".into(),
+            scale: 1.0,
+            rule: "dvi".into(),
+            grid: GridConfig::default(),
+            solver: SolverConfig::default(),
+            use_pjrt: false,
+            validate: false,
+        }
+    }
+}
+
+/// A named experiment (one of the paper's tables/figures) with its runs.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub id: String,
+    pub runs: Vec<RunConfig>,
+    /// Output directory for CSV/fig artifacts.
+    pub out_dir: String,
+}
+
+fn get_f64(m: &BTreeMap<String, Value>, k: &str, d: f64) -> Result<f64, TomlError> {
+    match m.get(k) {
+        None => Ok(d),
+        Some(v) => v
+            .as_float()
+            .ok_or_else(|| TomlError { line: 0, msg: format!("`{k}` must be a number") }),
+    }
+}
+
+fn get_usize(m: &BTreeMap<String, Value>, k: &str, d: usize) -> Result<usize, TomlError> {
+    match m.get(k) {
+        None => Ok(d),
+        Some(v) => v
+            .as_int()
+            .filter(|&i| i >= 0)
+            .map(|i| i as usize)
+            .ok_or_else(|| TomlError { line: 0, msg: format!("`{k}` must be a non-negative int") }),
+    }
+}
+
+fn get_bool(m: &BTreeMap<String, Value>, k: &str, d: bool) -> Result<bool, TomlError> {
+    match m.get(k) {
+        None => Ok(d),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| TomlError { line: 0, msg: format!("`{k}` must be a bool") }),
+    }
+}
+
+fn get_str(m: &BTreeMap<String, Value>, k: &str, d: &str) -> Result<String, TomlError> {
+    match m.get(k) {
+        None => Ok(d.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| TomlError { line: 0, msg: format!("`{k}` must be a string") }),
+    }
+}
+
+impl RunConfig {
+    /// Parse a run config from TOML text. Unknown keys are rejected to
+    /// catch typos early.
+    pub fn from_toml_str(src: &str) -> Result<RunConfig, TomlError> {
+        let m = parse_str(src)?;
+        const KNOWN: [&str; 13] = [
+            "model",
+            "dataset",
+            "scale",
+            "rule",
+            "use_pjrt",
+            "validate",
+            "grid.c_min",
+            "grid.c_max",
+            "grid.points",
+            "solver.tol",
+            "solver.max_outer",
+            "solver.shrink",
+            "solver.seed",
+        ];
+        for k in m.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                return Err(TomlError { line: 0, msg: format!("unknown config key `{k}`") });
+            }
+        }
+        let d = RunConfig::default();
+        let cfg = RunConfig {
+            model: get_str(&m, "model", &d.model)?,
+            dataset: get_str(&m, "dataset", &d.dataset)?,
+            scale: get_f64(&m, "scale", d.scale)?,
+            rule: get_str(&m, "rule", &d.rule)?,
+            grid: GridConfig {
+                c_min: get_f64(&m, "grid.c_min", d.grid.c_min)?,
+                c_max: get_f64(&m, "grid.c_max", d.grid.c_max)?,
+                points: get_usize(&m, "grid.points", d.grid.points)?,
+            },
+            solver: SolverConfig {
+                tol: get_f64(&m, "solver.tol", d.solver.tol)?,
+                max_outer: get_usize(&m, "solver.max_outer", d.solver.max_outer)?,
+                shrink: get_bool(&m, "solver.shrink", d.solver.shrink)?,
+                seed: get_usize(&m, "solver.seed", d.solver.seed as usize)? as u64,
+            },
+            use_pjrt: get_bool(&m, "use_pjrt", d.use_pjrt)?,
+            validate: get_bool(&m, "validate", d.validate)?,
+        };
+        cfg.validate_semantics()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &Path) -> Result<RunConfig, TomlError> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| TomlError { line: 0, msg: format!("read {}: {e}", path.display()) })?;
+        Self::from_toml_str(&src)
+    }
+
+    fn validate_semantics(&self) -> Result<(), TomlError> {
+        let bad = |msg: String| Err(TomlError { line: 0, msg });
+        if !["svm", "lad", "wsvm"].contains(&self.model.as_str()) {
+            return bad(format!("unknown model `{}`", self.model));
+        }
+        if !["dvi", "dvi-theta", "ssnsv", "essnsv", "none"].contains(&self.rule.as_str()) {
+            return bad(format!("unknown rule `{}`", self.rule));
+        }
+        if self.grid.c_min <= 0.0 || self.grid.c_max <= self.grid.c_min {
+            return bad("grid must satisfy 0 < c_min < c_max".into());
+        }
+        if self.grid.points < 2 {
+            return bad("grid.points must be ≥ 2".into());
+        }
+        if !(self.scale > 0.0 && self.scale <= 1.0) {
+            return bad("scale must be in (0, 1]".into());
+        }
+        if self.solver.tol <= 0.0 {
+            return bad("solver.tol must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_protocol() {
+        let g = GridConfig::default();
+        assert_eq!(g.points, 100);
+        let v = g.values();
+        assert_eq!(v.len(), 100);
+        assert!((v[0] - 1e-2).abs() < 1e-12);
+        assert!((v[99] - 10.0).abs() < 1e-9);
+        // log-spacing: ratios constant
+        let r0 = v[1] / v[0];
+        let r50 = v[51] / v[50];
+        assert!((r0 - r50).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let src = r#"
+model = "lad"
+dataset = "houses"
+scale = 0.25
+rule = "dvi-theta"
+use_pjrt = true
+validate = true
+
+[grid]
+c_min = 0.1
+c_max = 5.0
+points = 10
+
+[solver]
+tol = 1e-8
+max_outer = 100
+shrink = false
+seed = 7
+"#;
+        let c = RunConfig::from_toml_str(src).unwrap();
+        assert_eq!(c.model, "lad");
+        assert_eq!(c.dataset, "houses");
+        assert_eq!(c.grid.points, 10);
+        assert_eq!(c.solver.seed, 7);
+        assert!(c.use_pjrt && c.validate && !c.solver.shrink);
+    }
+
+    #[test]
+    fn empty_config_is_default() {
+        let c = RunConfig::from_toml_str("").unwrap();
+        assert_eq!(c, RunConfig::default());
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(RunConfig::from_toml_str("modle = \"svm\"").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_semantics() {
+        assert!(RunConfig::from_toml_str("model = \"nope\"").is_err());
+        assert!(RunConfig::from_toml_str("rule = \"nope\"").is_err());
+        assert!(RunConfig::from_toml_str("[grid]\nc_min = -1.0").is_err());
+        assert!(RunConfig::from_toml_str("[grid]\npoints = 1").is_err());
+        assert!(RunConfig::from_toml_str("scale = 2.0").is_err());
+        assert!(RunConfig::from_toml_str("[solver]\ntol = 0.0").is_err());
+    }
+
+    #[test]
+    fn rejects_type_mismatch() {
+        assert!(RunConfig::from_toml_str("scale = \"big\"").is_err());
+        assert!(RunConfig::from_toml_str("[solver]\nshrink = 1").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Configuration system.
+//!
+//! Offline build ⇒ no serde/toml crates, so this module implements a small
+//! TOML-subset parser ([`toml`]) plus the typed configuration structs the
+//! launcher consumes ([`experiment`]). Supported TOML subset: `[section]`
+//! and `[section.sub]` headers, `key = value` with strings, integers,
+//! floats, booleans, and homogeneous inline arrays — which covers every
+//! config this framework ships.
+
+pub mod experiment;
+pub mod json;
+pub mod toml;
+
+pub use experiment::{ExperimentConfig, GridConfig, RunConfig, SolverConfig};
+pub use json::{parse_json, Json, JsonError};
+pub use toml::{parse_str, TomlError, Value};

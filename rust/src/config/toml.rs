@@ -1,0 +1,273 @@
+//! Minimal TOML-subset parser (offline build — no external crates).
+//!
+//! Supports:
+//! * `[section]` / `[section.subsection]` headers (arbitrary dotted depth);
+//! * `key = value` pairs with string, integer, float, boolean values;
+//! * homogeneous inline arrays `[1, 2, 3]` / `["a", "b"]`;
+//! * `#` comments and blank lines;
+//! * dotted keys resolve into a flat map keyed `section.sub.key`.
+//!
+//! Not supported (rejected with an error rather than mis-parsed):
+//! multi-line strings, datetimes, inline tables, arrays of tables.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`C = 10` is a valid float).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> TomlError {
+    TomlError { line, msg: msg.into() }
+}
+
+/// Parse a config document into a flat `section.key → Value` map.
+pub fn parse_str(src: &str) -> Result<BTreeMap<String, Value>, TomlError> {
+    let mut map = BTreeMap::new();
+    let mut prefix = String::new();
+    for (i, raw) in src.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let inner = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if inner.is_empty() || inner.starts_with('[') {
+                return Err(err(lineno, "bad section header (arrays of tables unsupported)"));
+            }
+            validate_key_path(inner).map_err(|m| err(lineno, m))?;
+            prefix = inner.to_string();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+        let key = key.trim();
+        validate_key_path(key).map_err(|m| err(lineno, m))?;
+        let full = if prefix.is_empty() { key.to_string() } else { format!("{prefix}.{key}") };
+        let value = parse_value(val.trim()).map_err(|m| err(lineno, m))?;
+        if map.insert(full.clone(), value).is_some() {
+            return Err(err(lineno, format!("duplicate key `{full}`")));
+        }
+    }
+    Ok(map)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (idx, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..idx],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn validate_key_path(path: &str) -> Result<(), String> {
+    for seg in path.split('.') {
+        if seg.is_empty() {
+            return Err("empty key segment".into());
+        }
+        if !seg.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+            return Err(format!("invalid key segment `{seg}`"));
+        }
+    }
+    Ok(())
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quotes unsupported".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_array_items(inner)? {
+            items.push(parse_value(part.trim())?);
+        }
+        let homogeneous = items
+            .windows(2)
+            .all(|w| std::mem::discriminant(&w[0]) == std::mem::discriminant(&w[1]));
+        if !homogeneous {
+            return Err("heterogeneous arrays unsupported".into());
+        }
+        return Ok(Value::Array(items));
+    }
+    // numbers: int if no '.', 'e', or inf/nan marker
+    let is_floatish = s.contains('.') || s.contains('e') || s.contains('E') || s == "inf" || s == "-inf";
+    if is_floatish {
+        s.parse::<f64>().map(Value::Float).map_err(|e| format!("bad float `{s}`: {e}"))
+    } else {
+        s.parse::<i64>().map(Value::Int).map_err(|e| format!("bad number `{s}`: {e}"))
+    }
+}
+
+/// Split array items at top-level commas (strings may contain commas).
+fn split_array_items(s: &str) -> Result<Vec<&str>, String> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (idx, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..idx]);
+                start = idx + 1;
+            }
+            '[' | ']' if !in_str => return Err("nested arrays unsupported".into()),
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    out.push(&s[start..]);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_sections() {
+        let doc = r#"
+# top comment
+name = "run1"
+steps = 100
+
+[solver]
+tol = 1e-6
+max_iter = 5000
+shrink = true
+
+[grid.c]
+lo = 0.01
+hi = 10.0
+"#;
+        let m = parse_str(doc).unwrap();
+        assert_eq!(m["name"].as_str(), Some("run1"));
+        assert_eq!(m["steps"].as_int(), Some(100));
+        assert_eq!(m["solver.tol"].as_float(), Some(1e-6));
+        assert_eq!(m["solver.shrink"].as_bool(), Some(true));
+        assert_eq!(m["grid.c.lo"].as_float(), Some(0.01));
+    }
+
+    #[test]
+    fn arrays() {
+        let m = parse_str("xs = [1, 2, 3]\nys = [1.5, 2.5]\nnames = [\"a\", \"b\"]").unwrap();
+        let xs = m["xs"].as_array().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_int(), Some(3));
+        assert_eq!(m["ys"].as_array().unwrap()[1].as_float(), Some(2.5));
+        assert_eq!(m["names"].as_array().unwrap()[0].as_str(), Some("a"));
+    }
+
+    #[test]
+    fn empty_array_and_comment_in_string() {
+        let m = parse_str("xs = []\ns = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(m["xs"].as_array().unwrap().len(), 0);
+        assert_eq!(m["s"].as_str(), Some("a # not comment"));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let m = parse_str("a = 3\nb = 3.0\nc = 1e2\nd = -7").unwrap();
+        assert_eq!(m["a"], Value::Int(3));
+        assert_eq!(m["b"], Value::Float(3.0));
+        assert_eq!(m["c"], Value::Float(100.0));
+        assert_eq!(m["d"], Value::Int(-7));
+        // as_float accepts ints
+        assert_eq!(m["a"].as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_str("[unclosed").is_err());
+        assert!(parse_str("x 3").is_err());
+        assert!(parse_str("x = ").is_err());
+        assert!(parse_str("x = \"unterminated").is_err());
+        assert!(parse_str("x = [1, \"a\"]").is_err()); // heterogeneous
+        assert!(parse_str("x = [[1]]").is_err()); // nested
+        assert!(parse_str("a = 1\na = 2").is_err()); // duplicate
+        assert!(parse_str("bad key = 1").is_err());
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let e = parse_str("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+}

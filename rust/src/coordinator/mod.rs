@@ -1,0 +1,12 @@
+//! L3 coordinator: turns [`crate::config::RunConfig`]s into scheduled
+//! path-run jobs on a thread worker pool, tracks metrics, and exposes a
+//! line-oriented JSON service (the "screening service" the examples and
+//! the CLI drive).
+
+pub mod job;
+pub mod pool;
+pub mod service;
+
+pub use job::{run_job, JobOutcome, JobSpec};
+pub use pool::WorkerPool;
+pub use service::ScreeningService;

@@ -1,0 +1,184 @@
+//! Thread worker pool executing [`JobSpec`]s.
+//!
+//! std-only (no tokio offline): a bounded mpsc work queue feeding N worker
+//! threads, results collected on a shared channel. Jobs that panic are
+//! caught (`catch_unwind`) and surfaced as failed outcomes — one bad run
+//! must not take down an experiment sweep.
+
+use super::job::{run_job, JobOutcome, JobSpec};
+use crate::metrics::Registry;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+enum Msg {
+    Job(JobSpec),
+    Shutdown,
+}
+
+/// Fixed-size worker pool.
+pub struct WorkerPool {
+    tx: Sender<Msg>,
+    results_rx: Receiver<JobOutcome>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<AtomicU64>,
+    pub metrics: Arc<Registry>,
+}
+
+impl WorkerPool {
+    /// Spawn `n_workers` threads (≥1).
+    pub fn new(n_workers: usize) -> WorkerPool {
+        let n = n_workers.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (results_tx, results_rx) = channel::<JobOutcome>();
+        let pending = Arc::new(AtomicU64::new(0));
+        let metrics = Arc::new(Registry::default());
+
+        let mut workers = Vec::with_capacity(n);
+        for wid in 0..n {
+            let rx = rx.clone();
+            let results_tx = results_tx.clone();
+            let pending = pending.clone();
+            let metrics = metrics.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("dvi-worker-{wid}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Msg::Job(spec)) => {
+                                let hist = metrics.histogram("job_secs");
+                                let t = std::time::Instant::now();
+                                let outcome = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| run_job(&spec)),
+                                )
+                                .unwrap_or_else(|p| JobOutcome {
+                                    id: spec.id,
+                                    result: Err(panic_msg(p)),
+                                });
+                                hist.record(t.elapsed());
+                                metrics.counter("jobs_done").inc();
+                                if outcome.result.is_err() {
+                                    metrics.counter("jobs_failed").inc();
+                                }
+                                pending.fetch_sub(1, Ordering::SeqCst);
+                                // receiver may be gone during shutdown
+                                let _ = results_tx.send(outcome);
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        WorkerPool { tx, results_rx, workers, pending, metrics }
+    }
+
+    /// Enqueue a job.
+    pub fn submit(&self, spec: JobSpec) {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(Msg::Job(spec)).expect("pool closed");
+    }
+
+    /// Number of submitted-but-unfinished jobs.
+    pub fn pending(&self) -> u64 {
+        self.pending.load(Ordering::SeqCst)
+    }
+
+    /// Block for the next finished job.
+    pub fn recv(&self) -> Option<JobOutcome> {
+        self.results_rx.recv().ok()
+    }
+
+    /// Submit a batch and wait for all results (order by job id).
+    pub fn run_all(&self, specs: Vec<JobSpec>) -> Vec<JobOutcome> {
+        let n = specs.len();
+        for s in specs {
+            self.submit(s);
+        }
+        let mut out: Vec<JobOutcome> = (0..n).filter_map(|_| self.recv()).collect();
+        out.sort_by_key(|o| o.id);
+        out
+    }
+
+    /// Graceful shutdown (waits for workers to exit).
+    pub fn shutdown(mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("job panicked: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("job panicked: {s}")
+    } else {
+        "job panicked".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GridConfig, RunConfig, SolverConfig};
+
+    fn spec(id: u64, dataset: &str) -> JobSpec {
+        JobSpec {
+            id,
+            run: RunConfig {
+                model: "svm".into(),
+                dataset: dataset.into(),
+                scale: 0.03,
+                rule: "dvi".into(),
+                grid: GridConfig { c_min: 0.01, c_max: 10.0, points: 4 },
+                solver: SolverConfig { tol: 1e-5, ..Default::default() },
+                use_pjrt: false,
+                validate: false,
+            },
+        }
+    }
+
+    #[test]
+    fn runs_batch_in_parallel() {
+        let pool = WorkerPool::new(3);
+        let outcomes = pool.run_all(vec![spec(0, "toy1"), spec(1, "toy2"), spec(2, "toy3")]);
+        assert_eq!(outcomes.len(), 3);
+        for (i, o) in outcomes.iter().enumerate() {
+            assert_eq!(o.id, i as u64);
+            assert!(o.result.is_ok(), "{:?}", o.result);
+        }
+        assert_eq!(pool.pending(), 0);
+        assert_eq!(pool.metrics.counter("jobs_done").get(), 3);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn failed_jobs_are_data() {
+        let pool = WorkerPool::new(1);
+        let outcomes = pool.run_all(vec![spec(0, "missing-set")]);
+        assert!(outcomes[0].result.is_err());
+        assert_eq!(pool.metrics.counter("jobs_failed").get(), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn mixed_batch_keeps_going_after_failure() {
+        let pool = WorkerPool::new(2);
+        let outcomes =
+            pool.run_all(vec![spec(0, "missing"), spec(1, "toy1"), spec(2, "missing2")]);
+        assert!(outcomes[0].result.is_err());
+        assert!(outcomes[1].result.is_ok());
+        assert!(outcomes[2].result.is_err());
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,226 @@
+//! The screening service: a line-oriented JSON front-end over the worker
+//! pool. Each request line is a JSON object describing a run; each
+//! response line is the job summary (or error). This is the long-running
+//! L3 process the `screening_service` example drives end-to-end.
+//!
+//! Request schema (all fields optional except dataset):
+//! ```json
+//! {"dataset": "toy1", "model": "svm", "rule": "dvi",
+//!  "scale": 0.1, "points": 20, "c_min": 0.01, "c_max": 10.0,
+//!  "validate": true}
+//! ```
+
+use super::job::{JobOutcome, JobSpec};
+use super::pool::WorkerPool;
+use crate::config::json::{parse_json, Json};
+use crate::config::RunConfig;
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+
+/// Service wrapping a pool with JSON request/response framing.
+pub struct ScreeningService {
+    pool: WorkerPool,
+    next_id: u64,
+}
+
+impl ScreeningService {
+    pub fn new(workers: usize) -> ScreeningService {
+        ScreeningService { pool: WorkerPool::new(workers), next_id: 0 }
+    }
+
+    /// Parse one request line into a RunConfig.
+    pub fn parse_request(line: &str) -> Result<RunConfig, String> {
+        let j = parse_json(line).map_err(|e| e.to_string())?;
+        let obj = j.as_object().ok_or("request must be a JSON object")?;
+        let mut cfg = RunConfig::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "dataset" => cfg.dataset = v.as_str().ok_or("dataset: string")?.to_string(),
+                "model" => cfg.model = v.as_str().ok_or("model: string")?.to_string(),
+                "rule" => cfg.rule = v.as_str().ok_or("rule: string")?.to_string(),
+                "scale" => cfg.scale = v.as_float().ok_or("scale: number")?,
+                "points" => {
+                    cfg.grid.points = v.as_int().ok_or("points: int")? as usize;
+                }
+                "c_min" => cfg.grid.c_min = v.as_float().ok_or("c_min: number")?,
+                "c_max" => cfg.grid.c_max = v.as_float().ok_or("c_max: number")?,
+                "tol" => cfg.solver.tol = v.as_float().ok_or("tol: number")?,
+                "validate" => cfg.validate = v.as_bool().ok_or("validate: bool")?,
+                "use_pjrt" => cfg.use_pjrt = v.as_bool().ok_or("use_pjrt: bool")?,
+                other => return Err(format!("unknown request field `{other}`")),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Submit a run; returns its job id.
+    pub fn submit(&mut self, run: RunConfig) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.pool.submit(JobSpec { id, run });
+        id
+    }
+
+    /// Block for the next result.
+    pub fn recv(&self) -> Option<JobOutcome> {
+        self.pool.recv()
+    }
+
+    /// Encode an outcome as a JSON response line.
+    pub fn encode_response(outcome: &JobOutcome) -> String {
+        let mut o = BTreeMap::new();
+        o.insert("id".to_string(), Json::Int(outcome.id as i64));
+        match &outcome.result {
+            Err(e) => {
+                o.insert("ok".into(), Json::Bool(false));
+                o.insert("error".into(), Json::Str(e.clone()));
+            }
+            Ok(s) => {
+                o.insert("ok".into(), Json::Bool(true));
+                o.insert("dataset".into(), Json::Str(s.dataset.clone()));
+                o.insert("model".into(), Json::Str(s.model.clone()));
+                o.insert("rule".into(), Json::Str(s.rule.clone()));
+                o.insert("l".into(), Json::Int(s.l as i64));
+                o.insert("steps".into(), Json::Int(s.steps as i64));
+                o.insert("mean_rejection".into(), Json::Float(s.mean_rejection));
+                o.insert("init_secs".into(), Json::Float(s.init_secs));
+                o.insert("screen_secs".into(), Json::Float(s.screen_secs));
+                o.insert("total_secs".into(), Json::Float(s.total_secs));
+                o.insert("total_updates".into(), Json::Int(s.total_updates as i64));
+                if let Some(v) = s.worst_violation {
+                    o.insert("worst_violation".into(), Json::Float(v));
+                }
+                o.insert(
+                    "rejection_lo".into(),
+                    Json::Array(s.rejection_lo.iter().map(|&v| Json::Float(v)).collect()),
+                );
+                o.insert(
+                    "rejection_hi".into(),
+                    Json::Array(s.rejection_hi.iter().map(|&v| Json::Float(v)).collect()),
+                );
+            }
+        }
+        Json::Object(o).to_string()
+    }
+
+    /// Serve until EOF: one JSON request per line in, one JSON response
+    /// per line out. Responses are written in completion order with ids.
+    pub fn serve<R: BufRead, W: Write>(&mut self, input: R, mut output: W) -> std::io::Result<()> {
+        let mut submitted = 0u64;
+        for line in input.lines() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            match Self::parse_request(line) {
+                Ok(cfg) => {
+                    self.submit(cfg);
+                    submitted += 1;
+                }
+                Err(e) => {
+                    let mut o = BTreeMap::new();
+                    o.insert("ok".to_string(), Json::Bool(false));
+                    o.insert("error".to_string(), Json::Str(e));
+                    writeln!(output, "{}", Json::Object(o).to_string())?;
+                }
+            }
+        }
+        for _ in 0..submitted {
+            if let Some(outcome) = self.recv() {
+                writeln!(output, "{}", Self::encode_response(&outcome))?;
+                output.flush()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Shut the pool down.
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+
+    /// Metrics registry (jobs_done, jobs_failed, job_secs).
+    pub fn metrics(&self) -> &crate::metrics::Registry {
+        &self.pool.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_full_and_defaults() {
+        let cfg = ScreeningService::parse_request(
+            r#"{"dataset": "toy2", "model": "svm", "rule": "essnsv",
+                "scale": 0.5, "points": 12, "c_min": 0.1, "c_max": 2.0,
+                "tol": 1e-7, "validate": true}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset, "toy2");
+        assert_eq!(cfg.rule, "essnsv");
+        assert_eq!(cfg.grid.points, 12);
+        assert!(cfg.validate);
+
+        let d = ScreeningService::parse_request(r#"{"dataset": "toy1"}"#).unwrap();
+        assert_eq!(d.grid.points, 100);
+    }
+
+    #[test]
+    fn parse_request_rejects_unknown() {
+        assert!(ScreeningService::parse_request(r#"{"datafoo": 1}"#).is_err());
+        assert!(ScreeningService::parse_request("not json").is_err());
+        assert!(ScreeningService::parse_request(r#"{"scale": "big"}"#).is_err());
+    }
+
+    #[test]
+    fn serve_round_trip() {
+        let mut svc = ScreeningService::new(2);
+        let input = br#"
+# a comment line
+{"dataset": "toy1", "scale": 0.03, "points": 4, "tol": 1e-5}
+{"dataset": "no-such", "points": 4}
+"#;
+        let mut out = Vec::new();
+        svc.serve(&input[..], &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let ok_count = lines
+            .iter()
+            .filter(|l| parse_json(l).unwrap().get("ok").unwrap().as_bool() == Some(true))
+            .count();
+        assert_eq!(ok_count, 1, "{text}");
+        assert_eq!(svc.metrics().counter("jobs_done").get(), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn encode_response_contains_series() {
+        let outcome = JobOutcome {
+            id: 7,
+            result: Ok(super::super::job::JobSummary {
+                dataset: "d".into(),
+                model: "svm".into(),
+                rule: "dvi".into(),
+                l: 10,
+                steps: 2,
+                mean_rejection: 0.5,
+                rejection_lo: vec![0.0, 0.4],
+                rejection_hi: vec![0.0, 0.1],
+                grid: vec![0.1, 1.0],
+                init_secs: 0.01,
+                screen_secs: 0.001,
+                total_secs: 0.05,
+                total_updates: 123,
+                worst_violation: Some(1e-9),
+            }),
+        };
+        let s = ScreeningService::encode_response(&outcome);
+        let j = parse_json(&s).unwrap();
+        assert_eq!(j.get("id").unwrap().as_int(), Some(7));
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("rejection_lo").unwrap().as_array().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,178 @@
+//! The dataset container shared by every layer of the system.
+
+use crate::linalg::RowMatrix;
+
+/// What the responses mean.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// Binary classification, labels in {−1, +1} (SVM).
+    Classification,
+    /// Real-valued regression targets (LAD).
+    Regression,
+}
+
+/// A dense supervised data set: l instances × n features plus responses.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Human-readable identifier, used in reports and the artifact cache.
+    pub name: String,
+    pub task: Task,
+    /// l × n instance matrix X (rows are instances).
+    pub x: RowMatrix,
+    /// Responses: labels (±1) for classification, targets for regression.
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, task: Task, x: RowMatrix, y: Vec<f64>) -> Self {
+        assert_eq!(x.rows(), y.len(), "instances and responses disagree");
+        if task == Task::Classification {
+            assert!(
+                y.iter().all(|&v| v == 1.0 || v == -1.0),
+                "classification labels must be ±1"
+            );
+        }
+        Dataset { name: name.into(), task, x, y }
+    }
+
+    /// Number of instances l.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.x.rows()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature dimension n.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Z-score every feature column in place (guarding zero-variance
+    /// columns). The paper's experiments standardize features; screening
+    /// bounds are scale-sensitive so this keeps norms comparable.
+    pub fn standardize(&mut self) {
+        let (l, n) = (self.len(), self.dim());
+        if l == 0 {
+            return;
+        }
+        for j in 0..n {
+            let mut s = 0.0;
+            for i in 0..l {
+                s += self.x.get(i, j);
+            }
+            let mu = s / l as f64;
+            let mut v = 0.0;
+            for i in 0..l {
+                let d = self.x.get(i, j) - mu;
+                v += d * d;
+            }
+            let sd = (v / l as f64).sqrt();
+            let inv = if sd > 1e-12 { 1.0 / sd } else { 1.0 };
+            for i in 0..l {
+                let val = (self.x.get(i, j) - mu) * inv;
+                self.x.set(i, j, val);
+            }
+        }
+    }
+
+    /// Center regression targets (LAD has no intercept in problem (29);
+    /// centering y plays that role).
+    pub fn center_targets(&mut self) {
+        if self.task != Task::Regression || self.y.is_empty() {
+            return;
+        }
+        let mu = self.y.iter().sum::<f64>() / self.y.len() as f64;
+        for v in &mut self.y {
+            *v -= mu;
+        }
+    }
+
+    /// Subset by row indices (copies).
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            name: format!("{}[{}]", self.name, idx.len()),
+            task: self.task,
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+
+    /// Class balance (positive fraction) for classification sets.
+    pub fn positive_fraction(&self) -> f64 {
+        if self.task != Task::Classification || self.is_empty() {
+            return 0.0;
+        }
+        self.y.iter().filter(|&&v| v > 0.0).count() as f64 / self.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::RowMatrix;
+
+    fn tiny() -> Dataset {
+        let x = RowMatrix::from_flat(4, 2, vec![0.0, 10.0, 2.0, 10.0, 4.0, 30.0, 6.0, 30.0]);
+        Dataset::new("tiny", Task::Classification, x, vec![1.0, 1.0, -1.0, -1.0])
+    }
+
+    #[test]
+    fn basic_shape() {
+        let d = tiny();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.positive_fraction(), 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_labels() {
+        let x = RowMatrix::zeros(1, 1);
+        Dataset::new("bad", Task::Classification, x, vec![0.5]);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut d = tiny();
+        d.standardize();
+        for j in 0..d.dim() {
+            let col: Vec<f64> = (0..d.len()).map(|i| d.x.get(i, j)).collect();
+            let mu = col.iter().sum::<f64>() / col.len() as f64;
+            let var = col.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / col.len() as f64;
+            assert!(mu.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn standardize_constant_column_is_noop_scale() {
+        let x = RowMatrix::from_flat(3, 1, vec![5.0, 5.0, 5.0]);
+        let mut d = Dataset::new("c", Task::Regression, x, vec![1.0, 2.0, 3.0]);
+        d.standardize();
+        for i in 0..3 {
+            assert_eq!(d.x.get(i, 0), 0.0); // centered, scale guarded
+        }
+    }
+
+    #[test]
+    fn center_targets_regression_only() {
+        let x = RowMatrix::zeros(3, 1);
+        let mut d = Dataset::new("r", Task::Regression, x, vec![1.0, 2.0, 3.0]);
+        d.center_targets();
+        assert!((d.y.iter().sum::<f64>()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn select_subsets() {
+        let d = tiny();
+        let s = d.select(&[0, 3]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.y, vec![1.0, -1.0]);
+        assert_eq!(s.x.row(1), d.x.row(3));
+    }
+}

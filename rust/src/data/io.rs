@@ -1,0 +1,214 @@
+//! libsvm-format dataset IO.
+//!
+//! Format: one instance per line, `label idx:val idx:val ...` with 1-based
+//! feature indices. This is the interchange format of the solvers the
+//! paper benchmarks against (LIBSVM/LIBLINEAR), so datasets generated here
+//! can be cross-checked against external tools, and users can feed their
+//! own data to the CLI.
+
+use super::dataset::{Dataset, Task};
+use crate::linalg::RowMatrix;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Errors for dataset IO.
+#[derive(Debug, thiserror::Error)]
+pub enum IoError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("empty data set")]
+    Empty,
+}
+
+/// Parse a libsvm file. Feature dimension is the max index seen (or
+/// `min_dim` if larger). `task` controls label validation.
+pub fn read_libsvm(path: &Path, task: Task, min_dim: usize) -> Result<Dataset, IoError> {
+    let f = File::open(path)?;
+    let reader = BufReader::new(f);
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut labels: Vec<f64> = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let lab: f64 = parts
+            .next()
+            .ok_or_else(|| IoError::Parse { line: lineno + 1, msg: "missing label".into() })?
+            .parse()
+            .map_err(|e| IoError::Parse { line: lineno + 1, msg: format!("label: {e}") })?;
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (i, v) = tok.split_once(':').ok_or_else(|| IoError::Parse {
+                line: lineno + 1,
+                msg: format!("bad feature token `{tok}`"),
+            })?;
+            let i: usize = i
+                .parse()
+                .map_err(|e| IoError::Parse { line: lineno + 1, msg: format!("index: {e}") })?;
+            if i == 0 {
+                return Err(IoError::Parse {
+                    line: lineno + 1,
+                    msg: "libsvm indices are 1-based".into(),
+                });
+            }
+            let v: f64 = v
+                .parse()
+                .map_err(|e| IoError::Parse { line: lineno + 1, msg: format!("value: {e}") })?;
+            max_idx = max_idx.max(i);
+            feats.push((i - 1, v));
+        }
+        labels.push(lab);
+        rows.push(feats);
+    }
+    if rows.is_empty() {
+        return Err(IoError::Empty);
+    }
+    let n = max_idx.max(min_dim);
+    let mut x = RowMatrix::zeros(rows.len(), n);
+    for (r, feats) in rows.iter().enumerate() {
+        for &(j, v) in feats {
+            x.set(r, j, v);
+        }
+    }
+    if task == Task::Classification {
+        // map arbitrary two-class labels onto ±1 (common: 0/1, 1/2)
+        let mut uniq: Vec<f64> = labels.clone();
+        uniq.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        uniq.dedup();
+        if uniq.len() != 2 && !(uniq.len() == 1 && (uniq[0] == 1.0 || uniq[0] == -1.0)) {
+            if uniq != vec![-1.0, 1.0] {
+                return Err(IoError::Parse {
+                    line: 0,
+                    msg: format!("expected 2 classes, got {:?}", uniq),
+                });
+            }
+        }
+        if uniq.len() == 2 && uniq != vec![-1.0, 1.0] {
+            let lo = uniq[0];
+            for l in &mut labels {
+                *l = if *l == lo { -1.0 } else { 1.0 };
+            }
+        }
+    }
+    Ok(Dataset::new(
+        path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        task,
+        x,
+        labels,
+    ))
+}
+
+/// Write a dataset in libsvm format (dense — all features emitted; zeros
+/// skipped to keep files small).
+pub fn write_libsvm(ds: &Dataset, path: &Path) -> Result<(), IoError> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for i in 0..ds.len() {
+        write!(w, "{}", format_num(ds.y[i]))?;
+        for (j, &v) in ds.x.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, format_num(v))?;
+            }
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn format_num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.12}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use std::path::PathBuf;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dvi_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_classification() {
+        let ds = synth::toy_gaussian(1, 20, 1.5, 0.75);
+        let p = tmpfile("cls.svm");
+        write_libsvm(&ds, &p).unwrap();
+        let back = read_libsvm(&p, Task::Classification, ds.dim()).unwrap();
+        assert_eq!(back.len(), ds.len());
+        assert_eq!(back.dim(), ds.dim());
+        assert_eq!(back.y, ds.y);
+        for i in 0..ds.len() {
+            for j in 0..ds.dim() {
+                assert!((back.x.get(i, j) - ds.x.get(i, j)).abs() < 1e-9);
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn roundtrip_regression() {
+        let mut rng = crate::data::Rng::new(4);
+        let ds = synth::random_regression(&mut rng, 15, 4);
+        let p = tmpfile("reg.svm");
+        write_libsvm(&ds, &p).unwrap();
+        let back = read_libsvm(&p, Task::Regression, 4).unwrap();
+        assert_eq!(back.len(), 15);
+        for i in 0..15 {
+            assert!((back.y[i] - ds.y[i]).abs() < 1e-9);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn parses_alt_labels_and_comments() {
+        let p = tmpfile("alt.svm");
+        std::fs::write(&p, "# comment\n0 1:1.0\n1 2:2.0\n\n0 1:-1\n").unwrap();
+        let ds = read_libsvm(&p, Task::Classification, 0).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.y, vec![-1.0, 1.0, -1.0]);
+        assert_eq!(ds.dim(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        let p = tmpfile("zero.svm");
+        std::fs::write(&p, "1 0:1.0\n").unwrap();
+        assert!(matches!(
+            read_libsvm(&p, Task::Regression, 0),
+            Err(IoError::Parse { .. })
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let p = tmpfile("empty.svm");
+        std::fs::write(&p, "\n# nothing\n").unwrap();
+        assert!(matches!(read_libsvm(&p, Task::Regression, 0), Err(IoError::Empty)));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_token() {
+        let p = tmpfile("bad.svm");
+        std::fs::write(&p, "1 nonsense\n").unwrap();
+        assert!(read_libsvm(&p, Task::Regression, 0).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

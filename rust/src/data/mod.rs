@@ -1,0 +1,13 @@
+//! Datasets: the container type, deterministic synthetic generators for
+//! the paper's toy experiments, simulated analogs of the paper's six real
+//! data sets, and libsvm-format IO.
+
+pub mod dataset;
+pub mod io;
+pub mod registry;
+pub mod rng;
+pub mod simreal;
+pub mod synth;
+
+pub use dataset::{Dataset, Task};
+pub use rng::Rng;

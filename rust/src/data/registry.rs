@@ -1,0 +1,101 @@
+//! Name-based dataset resolution used by configs, the CLI, and the
+//! coordinator: `toy1..toy3`, the six simulated real sets, parameterized
+//! synthetics, or `file:<path>` (libsvm format).
+
+use super::dataset::{Dataset, Task};
+use super::{io, simreal, synth};
+use std::path::Path;
+
+/// Resolve a dataset name.
+///
+/// * `toy1`/`toy2`/`toy3` — the paper's §7.1 synthetics (1000/class);
+/// * `ijcnn1`, `wine`, `covertype`, `magic`, `computer`, `houses` — the
+///   simulated analogs of the paper's real sets (scaled by `scale`);
+/// * `gauss:<l>:<n>` / `linreg:<l>:<n>` — parameterized synthetics;
+/// * `file:<path>` — libsvm file; task from `task` hint.
+pub fn resolve(name: &str, scale: f64, task_hint: Task) -> Result<Dataset, String> {
+    match name {
+        "toy1" => Ok(synth::toy_gaussian(1, scaled_per_class(scale), 1.5, 0.75)),
+        "toy2" => Ok(synth::toy_gaussian(2, scaled_per_class(scale), 0.75, 0.75)),
+        "toy3" => Ok(synth::toy_gaussian(3, scaled_per_class(scale), 0.5, 0.75)),
+        _ => {
+            if let Some(ds) = simreal::by_name(name, scale) {
+                return Ok(ds);
+            }
+            if let Some(rest) = name.strip_prefix("gauss:") {
+                let (l, n) = parse_l_n(rest)?;
+                return Ok(synth::gaussian_classes(0xA11CE, l, n, 1.0, 1.0, 0.5, 1.0));
+            }
+            if let Some(rest) = name.strip_prefix("linreg:") {
+                let (l, n) = parse_l_n(rest)?;
+                return Ok(synth::linear_regression(0xB0B, l, n, 0.2, 0.05, 10.0));
+            }
+            if let Some(path) = name.strip_prefix("file:") {
+                return io::read_libsvm(Path::new(path), task_hint, 0)
+                    .map_err(|e| format!("read {path}: {e}"));
+            }
+            Err(format!("unknown dataset `{name}`"))
+        }
+    }
+}
+
+fn scaled_per_class(scale: f64) -> usize {
+    ((1000.0 * scale).round() as usize).max(8)
+}
+
+fn parse_l_n(s: &str) -> Result<(usize, usize), String> {
+    let (l, n) = s.split_once(':').ok_or_else(|| format!("expected <l>:<n>, got `{s}`"))?;
+    let l: usize = l.parse().map_err(|e| format!("bad l: {e}"))?;
+    let n: usize = n.parse().map_err(|e| format!("bad n: {e}"))?;
+    if l == 0 || n == 0 {
+        return Err("l and n must be positive".into());
+    }
+    Ok((l, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toys_resolve() {
+        let d = resolve("toy1", 0.1, Task::Classification).unwrap();
+        assert_eq!(d.len(), 200);
+        assert_eq!(d.dim(), 2);
+        assert!(resolve("toy3", 0.05, Task::Classification).is_ok());
+    }
+
+    #[test]
+    fn simreal_resolve() {
+        let d = resolve("wine", 0.01, Task::Classification).unwrap();
+        assert_eq!(d.dim(), 12);
+    }
+
+    #[test]
+    fn parameterized_resolve() {
+        let d = resolve("gauss:50:7", 1.0, Task::Classification).unwrap();
+        assert_eq!((d.len(), d.dim()), (50, 7));
+        let r = resolve("linreg:30:4", 1.0, Task::Regression).unwrap();
+        assert_eq!((r.len(), r.dim()), (30, 4));
+    }
+
+    #[test]
+    fn file_resolve_roundtrip() {
+        let ds = synth::toy_gaussian(1, 10, 1.5, 0.75);
+        let mut p = std::env::temp_dir();
+        p.push(format!("dvi_registry_{}.svm", std::process::id()));
+        io::write_libsvm(&ds, &p).unwrap();
+        let name = format!("file:{}", p.display());
+        let back = resolve(&name, 1.0, Task::Classification).unwrap();
+        assert_eq!(back.len(), 20);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn errors() {
+        assert!(resolve("nope", 1.0, Task::Classification).is_err());
+        assert!(resolve("gauss:xx:3", 1.0, Task::Classification).is_err());
+        assert!(resolve("gauss:0:3", 1.0, Task::Classification).is_err());
+        assert!(resolve("file:/does/not/exist", 1.0, Task::Regression).is_err());
+    }
+}

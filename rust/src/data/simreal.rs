@@ -1,0 +1,283 @@
+//! Simulated analogs of the paper's six evaluation data sets.
+//!
+//! The originals (UCI / LIBSVM mirrors) are external downloads; this build
+//! is offline, so each set is replaced by a *seeded synthetic analog*
+//! matched on size (l, n), feature scaling, class balance, and the margin /
+//! residual geometry that actually drives screening behaviour. See
+//! `DESIGN.md §Substitutions` for the paper→analog mapping and the
+//! argument for why this preserves the experiments' shape: every screening
+//! rule consumes the data only through ⟨w, x̄ᵢ⟩, ‖x̄ᵢ‖ and ‖w‖.
+//!
+//! All generators accept a `scale` in (0, 1] that shrinks l (tests use
+//! small scales; the benchmark harness uses 1.0).
+
+use super::dataset::{Dataset, Task};
+use super::rng::Rng;
+use crate::linalg::RowMatrix;
+
+fn scaled(l: usize, scale: f64) -> usize {
+    ((l as f64 * scale).round() as usize).max(16)
+}
+
+/// IJCNN1 analog: 49,990 × 22, ~9:1 negative:positive imbalance (the real
+/// set is ~90% negative), moderate overlap so that roughly 10–25% of the
+/// instances end up on or inside the margin at mid-path C.
+pub fn ijcnn1(scale: f64) -> Dataset {
+    let l = scaled(49_990, scale);
+    let n = 22;
+    let mut rng = Rng::new(0x11C4);
+    let mut x = RowMatrix::zeros(l, n);
+    let mut y = vec![0.0; l];
+    for i in 0..l {
+        let label = if rng.bernoulli(0.10) { 1.0 } else { -1.0 };
+        y[i] = label;
+        // anisotropic covariance: first 6 coords carry most of the signal
+        for j in 0..n {
+            let (shift, sig) = if j < 6 {
+                (label * 0.9, 1.0)
+            } else {
+                (label * 0.12, 1.4)
+            };
+            x.set(i, j, shift + rng.normal(0.0, sig));
+        }
+    }
+    let mut d = Dataset::new("ijcnn1-sim", Task::Classification, x, y);
+    d.standardize();
+    d
+}
+
+/// Wine Quality analog: 6,497 × 12; labels derived from a noisy linear
+/// score over correlated physico-chemical-style features (quality ≥ 6),
+/// giving heavily overlapping classes.
+pub fn wine(scale: f64) -> Dataset {
+    let l = scaled(6_497, scale);
+    let n = 12;
+    let mut rng = Rng::new(0x3142);
+    let w0: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+    let mut x = RowMatrix::zeros(l, n);
+    let mut y = vec![0.0; l];
+    // latent factor to correlate features (wine chemistry is collinear)
+    for i in 0..l {
+        let f = rng.gaussian();
+        let mut score = 0.0;
+        for j in 0..n {
+            let v = 0.6 * f + 0.8 * rng.gaussian();
+            x.set(i, j, v);
+            score += w0[j] * v;
+        }
+        score += rng.normal(0.0, 2.0); // heavy label noise ⇒ overlap
+        y[i] = if score > 0.0 { 1.0 } else { -1.0 };
+    }
+    let mut d = Dataset::new("wine-sim", Task::Classification, x, y);
+    d.standardize();
+    d
+}
+
+/// Forest Covertype (2-class subset) analog: 37,877 × 54 with 40 of the 54
+/// columns binary one-hot-ish (soil/wilderness indicators in the real set)
+/// and well-separated continuous clusters ⇒ near-complete screening.
+pub fn covertype(scale: f64) -> Dataset {
+    let l = scaled(37_877, scale);
+    let n = 54;
+    let n_cont = 14;
+    let mut rng = Rng::new(0xC0Fe as u64);
+    let mut x = RowMatrix::zeros(l, n);
+    let mut y = vec![0.0; l];
+    for i in 0..l {
+        let label = if rng.bernoulli(0.45) { 1.0 } else { -1.0 };
+        y[i] = label;
+        for j in 0..n_cont {
+            // strong separation on continuous block
+            x.set(i, j, label * 1.6 + rng.normal(0.0, 1.0));
+        }
+        // binary block: class-dependent activation probabilities
+        for j in n_cont..n {
+            let p = if label > 0.0 { 0.12 } else { 0.05 };
+            x.set(i, j, if rng.bernoulli(p) { 1.0 } else { 0.0 });
+        }
+    }
+    let mut d = Dataset::new("covertype-sim", Task::Classification, x, y);
+    d.standardize();
+    d
+}
+
+/// Normalize a weight vector to a target norm.
+fn unit_w(rng: &mut Rng, n: usize, norm: f64) -> Vec<f64> {
+    let mut w: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+    let s = norm / crate::linalg::norm(&w).max(1e-12);
+    for v in &mut w {
+        *v *= s;
+    }
+    w
+}
+
+// The LAD analogs are tuned so the *residual-to-fit ratio* matches what
+// the paper's rejection curves imply. DVI keeps instance i only when its
+// residual is inside a band of width ≈ (rad/mid)·‖w*‖·‖xᵢ‖ around zero
+// (rad/mid ≈ 0.035 on the paper's 100-point grid); the real Magic /
+// Computer / Houses targets are poorly fit by a linear model on
+// standardized features (large irreducible residuals, modest ‖w*‖),
+// which is exactly what drives their 90%/~100%/~100% rejection. The
+// generators therefore use a weak linear signal plus dominant residual
+// noise, ordered houses > computer > magic in residual/band ratio.
+
+/// Magic Gamma Telescope analog: 19,020 × 10 — long-tailed features,
+/// weak linear fit with heavy residual spread ⇒ rejection ≈ 90%.
+pub fn magic(scale: f64) -> Dataset {
+    let l = scaled(19_020, scale);
+    let n = 10;
+    let mut rng = Rng::new(0x3a61c);
+    let w0 = unit_w(&mut rng, n, 1.0);
+    let mut x = RowMatrix::zeros(l, n);
+    let mut y = vec![0.0; l];
+    for i in 0..l {
+        let mut t = 0.0;
+        for j in 0..n {
+            let v = rng.lognormal(0.0, 0.6) - 1.0; // long tail, ~zero mode
+            x.set(i, j, v);
+            t += w0[j] * v;
+        }
+        y[i] = t + rng.normal(0.0, 1.2);
+    }
+    let mut d = Dataset::new("magic-sim", Task::Regression, x, y);
+    d.standardize();
+    d.center_targets();
+    d
+}
+
+/// Computer (comp-activ) analog: 8,192 × 21 — system-activity regression
+/// with a weak linear component, wide residuals and a few percent gross
+/// outliers ⇒ rejection approaching 100%.
+pub fn computer(scale: f64) -> Dataset {
+    let l = scaled(8_192, scale);
+    let n = 21;
+    let mut rng = Rng::new(0xC09);
+    let w0 = unit_w(&mut rng, n, 0.4);
+    let mut x = RowMatrix::zeros(l, n);
+    let mut y = vec![0.0; l];
+    for i in 0..l {
+        // system-activity counters are strongly collinear (load factor):
+        // a shared latent keeps the effective dimension low, as in the
+        // real comp-activ set
+        let f = rng.gaussian();
+        for j in 0..n {
+            x.set(i, j, 0.8 * f + 0.6 * rng.gaussian());
+        }
+        let noise = if rng.bernoulli(0.03) {
+            rng.normal(0.0, 15.0) // bursty outliers (the LAD motivation)
+        } else {
+            rng.normal(0.0, 1.5)
+        };
+        y[i] = crate::linalg::dot(x.row(i), &w0) + noise;
+    }
+    let mut d = Dataset::new("computer-sim", Task::Regression, x, y);
+    d.standardize();
+    d.center_targets();
+    d
+}
+
+/// Houses (California housing) analog: 20,640 × 8 — weakest linear
+/// signal of the three relative to the residual spread ⇒ the highest
+/// rejection; the paper reports ~115× speedup here.
+pub fn houses(scale: f64) -> Dataset {
+    let l = scaled(20_640, scale);
+    let n = 8;
+    let mut rng = Rng::new(0x40e5);
+    let w0 = unit_w(&mut rng, n, 0.3);
+    let mut x = RowMatrix::zeros(l, n);
+    let mut y = vec![0.0; l];
+    for i in 0..l {
+        for j in 0..n {
+            x.set(i, j, rng.normal(0.0, 1.0));
+        }
+        let r = x.row(i);
+        let inter = 0.2 * r[0] * r[1] - 0.15 * r[2] * r[3];
+        y[i] = crate::linalg::dot(r, &w0) + inter + rng.normal(0.0, 1.5);
+    }
+    let mut d = Dataset::new("houses-sim", Task::Regression, x, y);
+    d.standardize();
+    d.center_targets();
+    d
+}
+
+/// Registry lookup by name (used by the CLI and the experiment configs).
+pub fn by_name(name: &str, scale: f64) -> Option<Dataset> {
+    match name {
+        "ijcnn1" => Some(ijcnn1(scale)),
+        "wine" => Some(wine(scale)),
+        "covertype" => Some(covertype(scale)),
+        "magic" => Some(magic(scale)),
+        "computer" => Some(computer(scale)),
+        "houses" => Some(houses(scale)),
+        _ => None,
+    }
+}
+
+/// Names of the three SVM evaluation sets (paper Fig. 2 / Table 2).
+pub const SVM_SETS: [&str; 3] = ["ijcnn1", "wine", "covertype"];
+/// Names of the three LAD evaluation sets (paper Fig. 3 / Table 3).
+pub const LAD_SETS: [&str; 3] = ["magic", "computer", "houses"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_paper() {
+        assert_eq!(ijcnn1(1e-3).dim(), 22);
+        assert_eq!(wine(1e-2).dim(), 12);
+        assert_eq!(covertype(1e-3).dim(), 54);
+        assert_eq!(magic(1e-3).dim(), 10);
+        assert_eq!(computer(1e-2).dim(), 21);
+        assert_eq!(houses(1e-3).dim(), 8);
+    }
+
+    #[test]
+    fn full_scale_sizes() {
+        // construct cheap small versions but check the scaling arithmetic
+        assert_eq!(super::scaled(49_990, 1.0), 49_990);
+        assert_eq!(super::scaled(20_640, 0.5), 10_320);
+        assert_eq!(super::scaled(100, 1e-9), 16); // floor
+    }
+
+    #[test]
+    fn ijcnn1_imbalance() {
+        let d = ijcnn1(0.05);
+        let pf = d.positive_fraction();
+        assert!(pf > 0.05 && pf < 0.18, "positive fraction {pf}");
+    }
+
+    #[test]
+    fn tasks_correct() {
+        assert_eq!(wine(0.01).task, Task::Classification);
+        assert_eq!(covertype(0.002).task, Task::Classification);
+        assert_eq!(magic(0.005).task, Task::Regression);
+        assert_eq!(houses(0.005).task, Task::Regression);
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        for name in SVM_SETS.iter().chain(LAD_SETS.iter()) {
+            let d = by_name(name, 0.002).expect(name);
+            assert!(d.len() >= 16);
+        }
+        assert!(by_name("nope", 1.0).is_none());
+    }
+
+    #[test]
+    fn regression_targets_centered() {
+        for name in LAD_SETS {
+            let d = by_name(name, 0.01).unwrap();
+            let mu = d.y.iter().sum::<f64>() / d.len() as f64;
+            assert!(mu.abs() < 1e-9, "{name} target mean {mu}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = wine(0.01);
+        let b = wine(0.01);
+        assert_eq!(a.x.flat(), b.x.flat());
+        assert_eq!(a.y, b.y);
+    }
+}

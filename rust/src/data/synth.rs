@@ -1,0 +1,190 @@
+//! Synthetic data generators for the paper's §7.1 toy experiments and for
+//! randomized tests.
+//!
+//! The paper's Toy1/Toy2/Toy3 are two 1000-point classes drawn from
+//! N((±μ, ±μ)ᵀ, 0.75²·I) with μ = 1.5, 0.75, 0.5 — increasingly
+//! overlapping. `toy_gaussian` reproduces exactly that family; the other
+//! generators cover regression (LAD) workloads with controllable outlier
+//! contamination.
+
+use super::dataset::{Dataset, Task};
+use super::rng::Rng;
+use crate::linalg::RowMatrix;
+
+/// The paper's 2-D two-gaussian toys. `toy_id` only names the set
+/// (Toy1/2/3); pass `mu` = 1.5 / 0.75 / 0.5 and `sigma` = 0.75 for the
+/// paper's versions. Each class gets `per_class` points; seeds are fixed
+/// per toy so datasets are reproducible.
+pub fn toy_gaussian(toy_id: u32, per_class: usize, mu: f64, sigma: f64) -> Dataset {
+    let mut rng = Rng::new(0xD5C0 + toy_id as u64);
+    let l = 2 * per_class;
+    let mut x = RowMatrix::zeros(l, 2);
+    let mut y = vec![0.0; l];
+    for i in 0..per_class {
+        // positive class at (+mu, +mu)
+        x.set(i, 0, rng.normal(mu, sigma));
+        x.set(i, 1, rng.normal(mu, sigma));
+        y[i] = 1.0;
+        // negative class at (−mu, −mu)
+        let k = per_class + i;
+        x.set(k, 0, rng.normal(-mu, sigma));
+        x.set(k, 1, rng.normal(-mu, sigma));
+        y[k] = -1.0;
+    }
+    Dataset::new(format!("toy{toy_id}"), Task::Classification, x, y)
+}
+
+/// The three paper toys at their published parameters.
+pub fn paper_toys(per_class: usize) -> Vec<Dataset> {
+    vec![
+        toy_gaussian(1, per_class, 1.5, 0.75),
+        toy_gaussian(2, per_class, 0.75, 0.75),
+        toy_gaussian(3, per_class, 0.5, 0.75),
+    ]
+}
+
+/// General gaussian-mixture classification set in n dimensions: class
+/// centers at ±μ·1/√n (so the center separation is 2μ regardless of n),
+/// optional anisotropy (per-coordinate scale ramp) and class imbalance.
+pub fn gaussian_classes(
+    seed: u64,
+    l: usize,
+    n: usize,
+    mu: f64,
+    sigma: f64,
+    positive_fraction: f64,
+    anisotropy: f64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = RowMatrix::zeros(l, n);
+    let mut y = vec![0.0; l];
+    let shift = mu / (n as f64).sqrt();
+    for i in 0..l {
+        let label = if rng.bernoulli(positive_fraction) { 1.0 } else { -1.0 };
+        y[i] = label;
+        for j in 0..n {
+            // scale ramps linearly from 1 to `anisotropy` across coords
+            let s = 1.0 + (anisotropy - 1.0) * j as f64 / (n.max(2) - 1) as f64;
+            x.set(i, j, label * shift + rng.normal(0.0, sigma * s));
+        }
+    }
+    Dataset::new(format!("gauss{seed}"), Task::Classification, x, y)
+}
+
+/// Linear-model regression data y = ⟨w°, x⟩ + ε with gaussian noise and a
+/// fraction of gross outliers (the LAD motivation): outliers get noise
+/// amplified by `outlier_scale`.
+pub fn linear_regression(
+    seed: u64,
+    l: usize,
+    n: usize,
+    noise: f64,
+    outlier_fraction: f64,
+    outlier_scale: f64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let w0: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+    let mut x = RowMatrix::zeros(l, n);
+    let mut y = vec![0.0; l];
+    for i in 0..l {
+        for j in 0..n {
+            x.set(i, j, rng.normal(0.0, 1.0));
+        }
+        let clean = crate::linalg::dot(x.row(i), &w0);
+        let eps = if rng.bernoulli(outlier_fraction) {
+            rng.normal(0.0, noise * outlier_scale)
+        } else {
+            rng.normal(0.0, noise)
+        };
+        y[i] = clean + eps;
+    }
+    Dataset::new(format!("linreg{seed}"), Task::Regression, x, y)
+}
+
+/// Small random classification problem for unit/property tests.
+pub fn random_classification(rng: &mut Rng, l: usize, n: usize) -> Dataset {
+    let mu = rng.uniform_in(0.2, 2.0);
+    let seed = rng.next_u64();
+    gaussian_classes(seed, l, n, mu, 1.0, 0.5, 1.0)
+}
+
+/// Small random regression problem for unit/property tests.
+pub fn random_regression(rng: &mut Rng, l: usize, n: usize) -> Dataset {
+    let noise = rng.uniform_in(0.05, 0.5);
+    let seed = rng.next_u64();
+    linear_regression(seed, l, n, noise, 0.1, 10.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toy_matches_paper_spec() {
+        let d = toy_gaussian(1, 1000, 1.5, 0.75);
+        assert_eq!(d.len(), 2000);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.positive_fraction(), 0.5);
+        // class means near (±1.5, ±1.5)
+        let (mut px, mut nx) = (0.0, 0.0);
+        for i in 0..d.len() {
+            if d.y[i] > 0.0 {
+                px += d.x.get(i, 0);
+            } else {
+                nx += d.x.get(i, 0);
+            }
+        }
+        assert!((px / 1000.0 - 1.5).abs() < 0.1);
+        assert!((nx / 1000.0 + 1.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn toys_are_reproducible() {
+        let a = toy_gaussian(2, 100, 0.75, 0.75);
+        let b = toy_gaussian(2, 100, 0.75, 0.75);
+        assert_eq!(a.x.flat(), b.x.flat());
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn paper_toys_overlap_ordering() {
+        // smaller mu ⇒ more class overlap ⇒ more hinge violations at a
+        // fixed w. Use w = (1,1)/√2 direction as a proxy.
+        let toys = paper_toys(500);
+        let violation = |d: &Dataset| {
+            (0..d.len())
+                .filter(|&i| {
+                    let m = d.y[i] * (d.x.get(i, 0) + d.x.get(i, 1)) / 2f64.sqrt();
+                    m < 1.0
+                })
+                .count()
+        };
+        let v: Vec<usize> = toys.iter().map(violation).collect();
+        assert!(v[0] < v[1] && v[1] < v[2], "violations {v:?}");
+    }
+
+    #[test]
+    fn gaussian_classes_imbalance() {
+        let d = gaussian_classes(7, 4000, 10, 1.0, 1.0, 0.9, 2.0);
+        assert!((d.positive_fraction() - 0.9).abs() < 0.03);
+        assert_eq!(d.dim(), 10);
+    }
+
+    #[test]
+    fn linear_regression_outliers_increase_spread() {
+        let clean = linear_regression(3, 2000, 5, 0.1, 0.0, 1.0);
+        let dirty = linear_regression(3, 2000, 5, 0.1, 0.2, 50.0);
+        let spread = |d: &Dataset| crate::linalg::std_dev(&d.y);
+        assert!(spread(&dirty) > spread(&clean));
+    }
+
+    #[test]
+    fn random_generators_shapes() {
+        let mut rng = Rng::new(1);
+        let c = random_classification(&mut rng, 64, 5);
+        assert_eq!((c.len(), c.dim()), (64, 5));
+        let r = random_regression(&mut rng, 32, 3);
+        assert_eq!((r.len(), r.dim()), (32, 3));
+        assert_eq!(r.task, Task::Regression);
+    }
+}

@@ -1,0 +1,62 @@
+//! # dvi-screen
+//!
+//! A pathwise-training framework for SVM and Least Absolute Deviations (LAD)
+//! regression with **safe exact data reduction**, reproducing
+//! *"Scaling SVM and Least Absolute Deviations via Exact Data Reduction"*
+//! (Jie Wang, Peter Wonka, Jieping Ye — ICML 2014).
+//!
+//! The paper's contribution — **DVI** screening rules derived from
+//! variational inequalities on the dual boxed QP — is implemented in
+//! [`screening`], together with the SSNSV and ESSNSV baselines it compares
+//! against. The surrounding framework provides:
+//!
+//! * [`problem`] — the paper's unified formulation (problem (3)): a loss
+//!   spec `(φ, aᵢ, bᵢ)` with conjugate box `[α, β]`, instantiated for SVM
+//!   (hinge), LAD (absolute), and weighted SVM (the paper's §8 extension).
+//! * [`solver`] — a LIBLINEAR-style dual coordinate-descent solver for the
+//!   boxed QP (12)/(15) with shrinking and warm starts.
+//! * [`path`] — the regularization-path runner that alternates
+//!   screen → reduce (Lemma 4) → solve over the paper's 100-point C-grid.
+//! * [`runtime`] — a PJRT client that executes the AOT-compiled JAX/Pallas
+//!   screening graph (built once by `python/compile/aot.py`; Python is
+//!   never on the request path).
+//! * [`coordinator`] — a multi-threaded job coordinator and screening
+//!   service: the L3 entry point that examples and the CLI drive.
+//! * [`data`], [`linalg`], [`config`], [`report`], [`validation`],
+//!   [`metrics`], [`testutil`] — substrates (dataset generators and IO,
+//!   dense kernels, config parsing, table/figure emitters, safety
+//!   validation, metrics, property-test helpers).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dvi_screen::data::synth;
+//! use dvi_screen::path::{PathConfig, PathRunner};
+//! use dvi_screen::problem::Model;
+//! use dvi_screen::screening::RuleKind;
+//!
+//! let ds = synth::toy_gaussian(1, 1000, 1.5, 0.75); // Toy1
+//! let cfg = PathConfig::log_grid(1e-2, 10.0, 100);
+//! let mut runner = PathRunner::new(Model::Svm, cfg, RuleKind::DviW);
+//! let out = runner.run(&ds);
+//! println!("mean rejection {:.1}%", 100.0 * out.mean_rejection());
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod path;
+pub mod problem;
+pub mod report;
+pub mod runtime;
+pub mod screening;
+pub mod solver;
+pub mod testutil;
+pub mod validation;
+
+/// Library version (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,209 @@
+//! Row-major dense matrix with the operations the solver and screening
+//! rules need: row access, matvec in both orientations, row norms, and a
+//! Gram-column helper for the dual coordinate-descent inner loop.
+
+use super::{axpy, dot};
+
+/// Dense row-major matrix (l rows × n cols). Rows are data instances.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl RowMatrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        RowMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a flat row-major buffer (length must equal rows·cols).
+    pub fn from_flat(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "flat buffer size mismatch");
+        RowMatrix { rows, cols, data }
+    }
+
+    /// Build from a closure `f(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        RowMatrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row i.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Flat row-major view.
+    #[inline]
+    pub fn flat(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// out[i] = ⟨row_i, v⟩ — the screening scan direction (l·n flops).
+    pub fn matvec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = dot(self.row(i), v);
+        }
+    }
+
+    /// out = Σ_i v[i]·row_i, i.e. out = Mᵀ v (n-vector). Used for
+    /// u = Zᵀθ and the Lemma-4 offset vector.
+    pub fn t_matvec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for (i, &vi) in v.iter().enumerate() {
+            if vi != 0.0 {
+                axpy(vi, self.row(i), out);
+            }
+        }
+    }
+
+    /// Squared norm of every row.
+    pub fn row_norms_sq(&self) -> Vec<f64> {
+        (0..self.rows).map(|i| dot(self.row(i), self.row(i))).collect()
+    }
+
+    /// Sub-matrix of the given rows (copies).
+    pub fn select_rows(&self, idx: &[usize]) -> RowMatrix {
+        let mut data = Vec::with_capacity(idx.len() * self.cols);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        RowMatrix { rows: idx.len(), cols: self.cols, data }
+    }
+
+    /// Gram entry G[i,j] = ⟨row_i, row_j⟩.
+    #[inline]
+    pub fn gram(&self, i: usize, j: usize) -> f64 {
+        dot(self.row(i), self.row(j))
+    }
+
+    /// Append a row.
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.cols);
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Scale row i in place by s.
+    pub fn scale_row(&mut self, i: usize, s: f64) {
+        for v in self.row_mut(i) {
+            *v *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m23() -> RowMatrix {
+        RowMatrix::from_flat(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn accessors() {
+        let m = m23();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.get(0, 2), 3.0);
+    }
+
+    #[test]
+    fn from_fn_layout() {
+        let m = RowMatrix::from_fn(2, 2, |i, j| (10 * i + j) as f64);
+        assert_eq!(m.flat(), &[0.0, 1.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn matvec_both_ways() {
+        let m = m23();
+        let mut out = vec![0.0; 2];
+        m.matvec(&[1.0, 0.0, -1.0], &mut out);
+        assert_eq!(out, vec![-2.0, -2.0]);
+
+        let mut out2 = vec![0.0; 3];
+        m.t_matvec(&[1.0, 2.0], &mut out2);
+        assert_eq!(out2, vec![9.0, 12.0, 15.0]);
+    }
+
+    #[test]
+    fn t_matvec_skips_zeros() {
+        let m = m23();
+        let mut out = vec![0.0; 3];
+        m.t_matvec(&[0.0, 1.0], &mut out);
+        assert_eq!(out, vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn row_norms() {
+        let m = m23();
+        let n = m.row_norms_sq();
+        assert_eq!(n, vec![14.0, 77.0]);
+    }
+
+    #[test]
+    fn select_and_push() {
+        let m = m23();
+        let s = m.select_rows(&[1]);
+        assert_eq!(s.rows(), 1);
+        assert_eq!(s.row(0), &[4.0, 5.0, 6.0]);
+        let mut m2 = s;
+        m2.push_row(&[7.0, 8.0, 9.0]);
+        assert_eq!(m2.rows(), 2);
+        assert_eq!(m2.gram(0, 1), 4.0 * 7.0 + 5.0 * 8.0 + 6.0 * 9.0);
+    }
+
+    #[test]
+    fn scale_row_works() {
+        let mut m = m23();
+        m.scale_row(0, -1.0);
+        assert_eq!(m.row(0), &[-1.0, -2.0, -3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_flat_size_mismatch_panics() {
+        RowMatrix::from_flat(2, 2, vec![1.0; 5]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Dense linear-algebra kernels used by the solver and the native
+//! screening implementations.
+//!
+//! Everything operates on `f64` slices (row-major matrices). The inner
+//! loops are written so rustc/LLVM auto-vectorizes them (4-way unrolled
+//! accumulators, no bounds checks in the hot loop via exact-length
+//! `chunks_exact`). These are the L3 hot paths profiled in
+//! `EXPERIMENTS.md §Perf`.
+
+pub mod matrix;
+
+pub use matrix::RowMatrix;
+
+/// Dot product ⟨x, y⟩ with 8 independent accumulators (breaks the FP
+/// dependency chain so LLVM emits vector FMAs).
+///
+/// Perf note (EXPERIMENTS.md §Perf): measured against a 4-way unrolled
+/// and a plain-iterator variant on this machine — 8-way wins at every
+/// row length the screening scan sees (+26% at n=22, +34% at n=54,
+/// +6% at n=512); the single-accumulator version collapses on long rows
+/// (FP dependency chain).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let (xa, xr) = x.split_at(chunks * 8);
+    let (ya, yr) = y.split_at(chunks * 8);
+    let mut s = [0.0f64; 8];
+    for (xc, yc) in xa.chunks_exact(8).zip(ya.chunks_exact(8)) {
+        for k in 0..8 {
+            s[k] += xc[k] * yc[k];
+        }
+    }
+    let mut tail = 0.0;
+    for (a, b) in xr.iter().zip(yr.iter()) {
+        tail += a * b;
+    }
+    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])) + tail
+}
+
+/// y ← y + a·x.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+/// x ← a·x.
+#[inline]
+pub fn scale(a: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(x: &[f64]) -> f64 {
+    norm_sq(x).sqrt()
+}
+
+/// ℓ∞ distance between two vectors.
+pub fn max_abs_diff(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Sum of elements.
+#[inline]
+pub fn sum(x: &[f64]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    for c in x.chunks(4) {
+        for (a, v) in acc.iter_mut().zip(c) {
+            *a += *v;
+        }
+    }
+    acc.iter().sum()
+}
+
+/// Mean of elements (0 for empty input).
+pub fn mean(x: &[f64]) -> f64 {
+    if x.is_empty() {
+        0.0
+    } else {
+        sum(x) / x.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(x: &[f64]) -> f64 {
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(x);
+    let v = x.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / x.len() as f64;
+    v.sqrt()
+}
+
+/// Clamp `v` into [lo, hi].
+#[inline]
+pub fn clamp(v: f64, lo: f64, hi: f64) -> f64 {
+    v.max(lo).min(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f64> = (0..103).map(|i| i as f64 * 0.5 - 3.0).collect();
+        let y: Vec<f64> = (0..103).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-9 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn dot_empty_and_short() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn scale_and_norm() {
+        let mut x = vec![3.0, 4.0];
+        assert_eq!(norm(&x), 5.0);
+        scale(2.0, &mut x);
+        assert_eq!(norm_sq(&x), 100.0);
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 4.0]), 1.0);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn stats() {
+        let x = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&x) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&x) - 2.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn clamp_basic() {
+        assert_eq!(clamp(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clamp(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clamp(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn sum_matches_naive() {
+        let x: Vec<f64> = (0..57).map(|i| i as f64 * 0.25).collect();
+        let naive: f64 = x.iter().sum();
+        assert!((sum(&x) - naive).abs() < 1e-9);
+    }
+}

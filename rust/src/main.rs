@@ -1,0 +1,20 @@
+//! `dvi` — the launcher CLI.
+//!
+//! Subcommands:
+//! * `path`       — run one regularization path (flags below)
+//! * `experiment` — regenerate a paper table/figure by id (tab1..tab3,
+//!   fig1..fig3, or `all`)
+//! * `serve`      — line-JSON screening service on stdin/stdout
+//! * `gen-data`   — write a dataset to a libsvm file
+//! * `info`       — print artifact/runtime info
+//!
+//! Offline build ⇒ no clap; flags are parsed by a small hand-rolled
+//! parser (`--key value` / `--flag`).
+
+use dvi_screen::cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = cli::dispatch(&args);
+    std::process::exit(code);
+}

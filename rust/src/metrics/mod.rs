@@ -1,0 +1,201 @@
+//! Lightweight metrics: counters, gauges, and duration histograms with
+//! percentile queries. Used by the coordinator and the bench harness.
+//! Thread-safe via atomics / mutex-guarded histogram buffers.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Monotonic counter.
+#[derive(Default, Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Duration histogram with exact storage (sample counts here are small —
+/// thousands of path steps, not millions of RPCs).
+#[derive(Default, Debug)]
+pub struct Histogram {
+    samples: Mutex<Vec<f64>>,
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        self.record_secs(d.as_secs_f64());
+    }
+    pub fn record_secs(&self, s: f64) {
+        self.samples.lock().unwrap().push(s);
+    }
+    pub fn count(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+    pub fn sum(&self) -> f64 {
+        self.samples.lock().unwrap().iter().sum()
+    }
+    pub fn mean(&self) -> f64 {
+        let g = self.samples.lock().unwrap();
+        if g.is_empty() {
+            0.0
+        } else {
+            g.iter().sum::<f64>() / g.len() as f64
+        }
+    }
+    /// Percentile in [0, 100] by nearest-rank; 0 for empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let mut v = self.samples.lock().unwrap().clone();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+        v[rank.min(v.len() - 1)]
+    }
+    pub fn min(&self) -> f64 {
+        self.percentile(0.0)
+    }
+    pub fn max(&self) -> f64 {
+        self.percentile(100.0)
+    }
+}
+
+/// Scoped timer: records elapsed time into a histogram on drop.
+pub struct Timer<'a> {
+    hist: &'a Histogram,
+    start: Instant,
+}
+
+impl<'a> Timer<'a> {
+    pub fn start(hist: &'a Histogram) -> Self {
+        Timer { hist, start: Instant::now() }
+    }
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        self.hist.record(self.start.elapsed());
+    }
+}
+
+/// A registry of named metrics, renderable as a text report.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Human-readable dump (sorted by name).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{name} = {}\n", c.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{name}: n={} mean={:.6}s p50={:.6}s p99={:.6}s max={:.6}s\n",
+                h.count(),
+                h.mean(),
+                h.percentile(50.0),
+                h.percentile(99.0),
+                h.max()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent() {
+        let c = std::sync::Arc::new(Counter::default());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let h = Histogram::default();
+        for i in 1..=100 {
+            h.record_secs(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(100.0), 100.0);
+        let p50 = h.percentile(50.0);
+        assert!((49.0..=52.0).contains(&p50));
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn timer_records() {
+        let h = Histogram::default();
+        {
+            let _t = Timer::start(&h);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(h.count(), 1);
+        assert!(h.sum() >= 0.001);
+    }
+
+    #[test]
+    fn registry_shares_instances() {
+        let r = Registry::default();
+        r.counter("jobs").inc();
+        r.counter("jobs").inc();
+        assert_eq!(r.counter("jobs").get(), 2);
+        r.histogram("lat").record_secs(0.5);
+        let s = r.render();
+        assert!(s.contains("jobs = 2"));
+        assert!(s.contains("lat: n=1"));
+    }
+}

@@ -1,0 +1,42 @@
+//! Pathwise training: the paper's experimental protocol.
+//!
+//! Solve the dual at a grid 0 < C₁ < … < C_K (default: 100 points,
+//! log-spaced in [1e-2, 10]); between consecutive points apply a screening
+//! rule, snap the screened coordinates to their bound, and run the solver
+//! only over the survivors (the Lemma-4 reduced problem, realized by
+//! freezing coordinates inside [`crate::solver::CdSolver::solve_free`]).
+
+pub mod runner;
+pub mod select;
+
+pub use runner::{PathConfig, PathOutput, PathRunner, StepRecord};
+pub use select::{cross_validate, CvResult};
+
+use crate::problem::Instance;
+use crate::screening::Decision;
+
+/// Pluggable backend for the DVI screening scan — the hot O(l·n) pass.
+/// The native implementation lives in [`crate::screening::dvi`]; the PJRT
+/// runtime provides an AOT-compiled JAX/Pallas implementation
+/// ([`crate::runtime::PjrtScreener`]).
+pub trait DviScanBackend {
+    /// Evaluate the DVI decision for every instance.
+    /// `mid` = (C_{k+1}+C_k)/2, `rad` = (C_{k+1}−C_k)/2, `u` = Zᵀθ*(C_k).
+    fn scan(&mut self, inst: &Instance, mid: f64, rad: f64, u: &[f64]) -> Vec<Decision>;
+
+    /// Identifier for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Native rust backend (default).
+pub struct NativeScan;
+
+impl DviScanBackend for NativeScan {
+    fn scan(&mut self, inst: &Instance, mid: f64, rad: f64, u: &[f64]) -> Vec<Decision> {
+        crate::screening::dvi::dvi_scan(inst, mid, rad, u)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}

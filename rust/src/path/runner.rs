@@ -1,0 +1,457 @@
+//! The regularization-path runner.
+
+use super::{DviScanBackend, NativeScan};
+use crate::config::{GridConfig, SolverConfig};
+use crate::data::Dataset;
+use crate::problem::{Instance, Model};
+use crate::screening::{Dvi, RuleKind, ScreenReport, Ssnsv, SsnsvContext};
+use crate::solver::CdSolver;
+use std::time::Instant;
+
+/// Path configuration: the C-grid plus solver settings.
+#[derive(Clone, Debug)]
+pub struct PathConfig {
+    pub grid: Vec<f64>,
+    pub solver: SolverConfig,
+    /// After each reduced solve, recompute the *full-problem* KKT
+    /// violation — the safety check (costs one extra O(l·n) scan).
+    pub validate: bool,
+    /// Warm-start each grid point from the previous solution. `true` is
+    /// the strong modern baseline; `false` reproduces the paper's
+    /// "Solver" arm (each C solved independently). Only honored for
+    /// [`RuleKind::None`] — every screening rule needs the previous
+    /// solution anyway.
+    pub warm_start: bool,
+}
+
+impl PathConfig {
+    /// The paper's protocol: `points` log-spaced values in [c_min, c_max].
+    pub fn log_grid(c_min: f64, c_max: f64, points: usize) -> PathConfig {
+        PathConfig {
+            grid: GridConfig { c_min, c_max, points }.values(),
+            solver: SolverConfig::default(),
+            validate: false,
+            warm_start: true,
+        }
+    }
+
+    /// Disable warm starts for the no-screening arm (the paper's
+    /// baseline protocol).
+    pub fn with_cold_baseline(mut self) -> Self {
+        self.warm_start = false;
+        self
+    }
+
+    pub fn with_solver(mut self, solver: SolverConfig) -> Self {
+        self.solver = solver;
+        self
+    }
+
+    pub fn with_validation(mut self, validate: bool) -> Self {
+        self.validate = validate;
+        self
+    }
+}
+
+/// Measurements for one path point.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub c: f64,
+    /// Instances fixed to the lower bound (paper's R̃ set).
+    pub n_lo: usize,
+    /// Instances fixed to the upper bound (paper's L̃ set).
+    pub n_hi: usize,
+    /// Coordinates entering the reduced solve.
+    pub free: usize,
+    pub screen_secs: f64,
+    pub solve_secs: f64,
+    pub coord_updates: u64,
+    /// O(n) coordinate-gradient evaluations (the honest work metric).
+    pub grad_evals: u64,
+    pub outer_iters: usize,
+    pub dual_obj: f64,
+    /// Full-problem KKT violation (populated when `validate`).
+    pub kkt_violation: Option<f64>,
+}
+
+impl StepRecord {
+    /// Fraction of instances screened out at this step.
+    pub fn rejection(&self, l: usize) -> f64 {
+        (self.n_lo + self.n_hi) as f64 / l as f64
+    }
+}
+
+/// Result of a full path run.
+#[derive(Clone, Debug)]
+pub struct PathOutput {
+    pub dataset: String,
+    pub model: Model,
+    pub rule: RuleKind,
+    pub l: usize,
+    pub steps: Vec<StepRecord>,
+    /// Time solving the required initial point(s) — C₁ always; also C_K
+    /// for SSNSV/ESSNSV (the paper's "Init." rows).
+    pub init_secs: f64,
+    /// Total screening time across the path (the paper's "DVI_s" rows).
+    pub screen_secs: f64,
+    /// Wall-clock for the whole run (init + screening + all solves).
+    pub total_secs: f64,
+    /// θ*(C_K) — the final model, for downstream use.
+    pub final_theta: Vec<f64>,
+}
+
+impl PathOutput {
+    /// Mean rejection over the screened steps (steps 2..K; the first grid
+    /// point is always solved in full).
+    pub fn mean_rejection(&self) -> f64 {
+        let screened: Vec<f64> =
+            self.steps.iter().skip(1).map(|s| s.rejection(self.l)).collect();
+        crate::linalg::mean(&screened)
+    }
+
+    /// Rejection split per step (lo-fraction, hi-fraction) — the series
+    /// behind the paper's stacked-area charts.
+    pub fn rejection_series(&self) -> (Vec<f64>, Vec<f64>) {
+        let l = self.l as f64;
+        let r = self.steps.iter().map(|s| s.n_lo as f64 / l).collect();
+        let h = self.steps.iter().map(|s| s.n_hi as f64 / l).collect();
+        (r, h)
+    }
+
+    /// Total coordinate updates (solver work proxy).
+    pub fn total_updates(&self) -> u64 {
+        self.steps.iter().map(|s| s.coord_updates).sum()
+    }
+
+    /// Total coordinate-gradient evaluations — each costs an O(n) dot, so
+    /// this is proportional to solver flops (the quantity screening cuts).
+    pub fn total_grad_evals(&self) -> u64 {
+        self.steps.iter().map(|s| s.grad_evals).sum()
+    }
+
+    /// Worst full-problem KKT violation observed (validation runs).
+    pub fn worst_violation(&self) -> Option<f64> {
+        self.steps.iter().filter_map(|s| s.kkt_violation).fold(None, |acc, v| {
+            Some(acc.map_or(v, |a: f64| a.max(v)))
+        })
+    }
+}
+
+/// Orchestrates screen → reduce → solve along the grid.
+pub struct PathRunner {
+    pub model: Model,
+    pub cfg: PathConfig,
+    pub rule: RuleKind,
+    backend: Box<dyn DviScanBackend>,
+}
+
+impl PathRunner {
+    pub fn new(model: Model, cfg: PathConfig, rule: RuleKind) -> PathRunner {
+        PathRunner { model, cfg, rule, backend: Box::new(NativeScan) }
+    }
+
+    /// Swap the DVI scan backend (e.g. the PJRT AOT executable).
+    pub fn with_backend(mut self, backend: Box<dyn DviScanBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Run the full path on a dataset.
+    pub fn run(&mut self, ds: &Dataset) -> PathOutput {
+        let inst = Instance::from_dataset(self.model, ds);
+        self.run_instance(&inst)
+    }
+
+    /// Run on a pre-built instance.
+    pub fn run_instance(&mut self, inst: &Instance) -> PathOutput {
+        let grid = &self.cfg.grid;
+        assert!(grid.len() >= 2, "need at least two grid points");
+        assert!(
+            grid.windows(2).all(|w| w[0] < w[1]),
+            "grid must be strictly ascending"
+        );
+        let solver = CdSolver::new(self.cfg.solver.clone());
+        let l = inst.len();
+        let run_start = Instant::now();
+
+        // --- init solves -------------------------------------------------
+        let t = Instant::now();
+        let mut cur = solver.solve(inst, grid[0], inst.cold_start());
+        let mut init_secs = t.elapsed().as_secs_f64();
+
+        // SSNSV/ESSNSV additionally require the solution at C_max.
+        let w_feasible: Option<Vec<f64>> = match self.rule {
+            RuleKind::Ssnsv | RuleKind::Essnsv => {
+                let t = Instant::now();
+                let r = solver.solve(inst, *grid.last().unwrap(), inst.cold_start());
+                init_secs += t.elapsed().as_secs_f64();
+                Some(inst.w_from_theta(*grid.last().unwrap(), &r.theta))
+            }
+            _ => None,
+        };
+
+        // θ-form DVI precomputes the Gram matrix once; that cost is
+        // attributed to init (the paper's "G can be computed only once").
+        let dvi_rule: Option<Dvi> = match self.rule {
+            RuleKind::DviTheta => {
+                let t = Instant::now();
+                let r = Dvi::new_theta(inst);
+                init_secs += t.elapsed().as_secs_f64();
+                Some(r)
+            }
+            RuleKind::DviW => Some(Dvi::new_w()),
+            _ => None,
+        };
+
+        let mut steps = Vec::with_capacity(grid.len());
+        let mut screen_secs_total = 0.0;
+
+        // first grid point: full solve, no screening
+        steps.push(StepRecord {
+            c: grid[0],
+            n_lo: 0,
+            n_hi: 0,
+            free: l,
+            screen_secs: 0.0,
+            solve_secs: init_secs,
+            coord_updates: cur.stats.coord_updates,
+            grad_evals: cur.stats.grad_evals,
+            outer_iters: cur.stats.outer_iters,
+            dual_obj: inst.dual_objective(grid[0], &cur.theta),
+            kkt_violation: self
+                .cfg
+                .validate
+                .then(|| CdSolver::kkt_violation(inst, grid[0], &cur.theta)),
+        });
+
+        // --- path --------------------------------------------------------
+        for k in 1..grid.len() {
+            let (c_prev, c_next) = (grid[k - 1], grid[k]);
+
+            let t_screen = Instant::now();
+            let report: ScreenReport = match self.rule {
+                RuleKind::None => ScreenReport::keep_all(l),
+                RuleKind::DviW => {
+                    let mid = 0.5 * (c_next + c_prev);
+                    let rad = 0.5 * (c_next - c_prev);
+                    ScreenReport::from_decisions(self.backend.scan(inst, mid, rad, &cur.u))
+                }
+                RuleKind::DviTheta => dvi_rule
+                    .as_ref()
+                    .unwrap()
+                    .screen(inst, c_prev, c_next, &cur.theta, &cur.u),
+                RuleKind::Ssnsv | RuleKind::Essnsv => {
+                    let w_anchor = inst.w_from_theta(c_prev, &cur.theta);
+                    let ctx = SsnsvContext {
+                        w_anchor: &w_anchor,
+                        w_feasible: w_feasible.as_ref().unwrap(),
+                    };
+                    Ssnsv::new(self.rule == RuleKind::Essnsv).screen(inst, &ctx)
+                }
+            };
+            let screen_secs = t_screen.elapsed().as_secs_f64();
+            screen_secs_total += screen_secs;
+
+            // Paper-protocol baseline: no warm start, every C solved
+            // independently (only meaningful without screening).
+            if self.rule == RuleKind::None && !self.cfg.warm_start {
+                let t_solve = Instant::now();
+                cur = solver.solve(inst, c_next, inst.cold_start());
+                steps.push(StepRecord {
+                    c: c_next,
+                    n_lo: 0,
+                    n_hi: 0,
+                    free: l,
+                    screen_secs: 0.0,
+                    solve_secs: t_solve.elapsed().as_secs_f64(),
+                    coord_updates: cur.stats.coord_updates,
+                    grad_evals: cur.stats.grad_evals,
+                    outer_iters: cur.stats.outer_iters,
+                    dual_obj: 0.5 * c_next * crate::linalg::norm_sq(&cur.u)
+                        - crate::linalg::dot(&inst.ybar, &cur.theta),
+                    kkt_violation: self
+                        .cfg
+                        .validate
+                        .then(|| CdSolver::kkt_violation(inst, c_next, &cur.theta)),
+                });
+                continue;
+            }
+
+            // Warm start from the previous solution; snap screened coords
+            // to their bound, updating u *incrementally* (only changed
+            // coordinates pay) so the per-step cost is O(changed·n +
+            // free·n·sweeps), never a blanket O(l·n).
+            let mut theta0 = cur.theta.clone();
+            let mut u0 = cur.u.clone();
+            for (i, d) in report.decisions.iter().enumerate() {
+                let target = match d {
+                    crate::screening::Decision::AtLo => inst.lo[i],
+                    crate::screening::Decision::AtHi => inst.hi[i],
+                    crate::screening::Decision::Keep => {
+                        crate::linalg::clamp(theta0[i], inst.lo[i], inst.hi[i])
+                    }
+                };
+                let delta = target - theta0[i];
+                if delta != 0.0 {
+                    theta0[i] = target;
+                    crate::linalg::axpy(delta, inst.z.row(i), &mut u0);
+                }
+            }
+            let free = report.free_indices();
+
+            let t_solve = Instant::now();
+            cur = solver.solve_free_with_u(inst, c_next, theta0, &free, u0);
+            let solve_secs = t_solve.elapsed().as_secs_f64();
+
+            // periodic hygiene refresh of the incrementally-maintained u
+            if k % 32 == 0 {
+                cur.u = inst.u_from_theta(&cur.theta);
+            }
+
+            steps.push(StepRecord {
+                c: c_next,
+                n_lo: report.n_lo,
+                n_hi: report.n_hi,
+                free: free.len(),
+                screen_secs,
+                solve_secs,
+                coord_updates: cur.stats.coord_updates,
+                grad_evals: cur.stats.grad_evals,
+                outer_iters: cur.stats.outer_iters,
+                // O(n + l) from the cached u — NOT a fresh O(l·n) matvec
+                dual_obj: 0.5 * c_next * crate::linalg::norm_sq(&cur.u)
+                    - crate::linalg::dot(&inst.ybar, &cur.theta),
+                kkt_violation: self
+                    .cfg
+                    .validate
+                    .then(|| CdSolver::kkt_violation(inst, c_next, &cur.theta)),
+            });
+        }
+
+        PathOutput {
+            dataset: inst.name.clone(),
+            model: self.model,
+            rule: self.rule,
+            l,
+            steps,
+            init_secs,
+            screen_secs: screen_secs_total,
+            total_secs: run_start.elapsed().as_secs_f64(),
+            final_theta: cur.theta,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn quick_cfg(points: usize) -> PathConfig {
+        PathConfig::log_grid(1e-2, 10.0, points)
+            .with_solver(SolverConfig { tol: 1e-7, max_outer: 50_000, ..Default::default() })
+            .with_validation(true)
+    }
+
+    #[test]
+    fn dvi_path_runs_and_is_safe() {
+        let ds = synth::toy_gaussian(1, 150, 1.5, 0.75);
+        let mut runner = PathRunner::new(Model::Svm, quick_cfg(12), RuleKind::DviW);
+        let out = runner.run(&ds);
+        assert_eq!(out.steps.len(), 12);
+        // validation: the reduced solves still satisfy full-problem KKT
+        let worst = out.worst_violation().unwrap();
+        assert!(worst < 1e-5, "worst violation {worst}");
+        // well-separated toy ⇒ strong screening
+        assert!(out.mean_rejection() > 0.5, "rejection {}", out.mean_rejection());
+    }
+
+    #[test]
+    fn lad_path_runs() {
+        let mut rng = crate::data::Rng::new(10);
+        let ds = synth::random_regression(&mut rng, 120, 5);
+        // the paper's protocol uses a dense grid (100 pts); DVI's radius
+        // shrinks with the grid spacing, so use a reasonably fine grid
+        let mut runner = PathRunner::new(Model::Lad, quick_cfg(24), RuleKind::DviW);
+        let out = runner.run(&ds);
+        assert!(out.worst_violation().unwrap() < 1e-5);
+        assert!(out.mean_rejection() > 0.1, "rejection {}", out.mean_rejection());
+    }
+
+    #[test]
+    fn none_rule_keeps_everything() {
+        let ds = synth::toy_gaussian(2, 60, 0.75, 0.75);
+        let mut runner = PathRunner::new(Model::Svm, quick_cfg(5), RuleKind::None);
+        let out = runner.run(&ds);
+        assert_eq!(out.mean_rejection(), 0.0);
+        assert!(out.worst_violation().unwrap() < 1e-5);
+    }
+
+    #[test]
+    fn screened_path_matches_unscreened_path() {
+        let ds = synth::toy_gaussian(3, 100, 1.0, 0.75);
+        let cfg = quick_cfg(8);
+        let out_dvi =
+            PathRunner::new(Model::Svm, cfg.clone(), RuleKind::DviW).run(&ds);
+        let out_none = PathRunner::new(Model::Svm, cfg, RuleKind::None).run(&ds);
+        for (a, b) in out_dvi.steps.iter().zip(&out_none.steps) {
+            assert!(
+                (a.dual_obj - b.dual_obj).abs() < 1e-5 * b.dual_obj.abs().max(1.0),
+                "objective mismatch at C={}: {} vs {}",
+                a.c,
+                a.dual_obj,
+                b.dual_obj
+            );
+        }
+    }
+
+    #[test]
+    fn ssnsv_and_essnsv_paths_safe_and_ordered() {
+        let ds = synth::toy_gaussian(4, 120, 1.0, 0.75);
+        let cfg = quick_cfg(8);
+        let out_s =
+            PathRunner::new(Model::Svm, cfg.clone(), RuleKind::Ssnsv).run(&ds);
+        let out_e =
+            PathRunner::new(Model::Svm, cfg.clone(), RuleKind::Essnsv).run(&ds);
+        let out_d = PathRunner::new(Model::Svm, cfg, RuleKind::DviW).run(&ds);
+        assert!(out_s.worst_violation().unwrap() < 1e-5);
+        assert!(out_e.worst_violation().unwrap() < 1e-5);
+        // the paper's headline ordering: DVI ≥ ESSNSV ≥ SSNSV
+        assert!(out_e.mean_rejection() >= out_s.mean_rejection() - 1e-12);
+        assert!(out_d.mean_rejection() >= out_e.mean_rejection() - 1e-12);
+    }
+
+    #[test]
+    fn dvi_theta_path_matches_w_path() {
+        let ds = synth::toy_gaussian(5, 80, 1.0, 0.75);
+        let cfg = quick_cfg(6);
+        let a = PathRunner::new(Model::Svm, cfg.clone(), RuleKind::DviW).run(&ds);
+        let b = PathRunner::new(Model::Svm, cfg, RuleKind::DviTheta).run(&ds);
+        for (x, y) in a.steps.iter().zip(&b.steps) {
+            assert_eq!((x.n_lo, x.n_hi), (y.n_lo, y.n_hi), "at C={}", x.c);
+        }
+    }
+
+    #[test]
+    fn rejection_series_shapes() {
+        let ds = synth::toy_gaussian(6, 60, 1.5, 0.75);
+        let out = PathRunner::new(Model::Svm, quick_cfg(7), RuleKind::DviW).run(&ds);
+        let (r, h) = out.rejection_series();
+        assert_eq!(r.len(), 7);
+        assert_eq!(h.len(), 7);
+        assert!(r.iter().zip(&h).all(|(a, b)| a + b <= 1.0 + 1e-12));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_unsorted_grid() {
+        let ds = synth::toy_gaussian(7, 20, 1.0, 0.75);
+        let cfg = PathConfig {
+            grid: vec![1.0, 0.5],
+            solver: SolverConfig::default(),
+            validate: false,
+            warm_start: true,
+        };
+        PathRunner::new(Model::Svm, cfg, RuleKind::DviW).run(&ds);
+    }
+}

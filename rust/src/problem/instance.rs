@@ -1,0 +1,304 @@
+//! Materialized problem instance: `(Z, ȳ, box)` plus cached row norms.
+
+use crate::data::{Dataset, Task};
+use crate::linalg::{self, RowMatrix};
+
+/// Which special case of problem (3) to instantiate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Model {
+    /// Hinge-loss SVM, Eq. (24). Dual box [0, 1].
+    Svm,
+    /// Least absolute deviations, Eq. (29). Dual box [−1, 1].
+    Lad,
+    /// Weighted SVM (paper §8 extension): per-class costs; dual box
+    /// [0, cᵢ].
+    WeightedSvm,
+}
+
+impl Model {
+    pub fn parse(s: &str) -> Option<Model> {
+        match s {
+            "svm" => Some(Model::Svm),
+            "lad" => Some(Model::Lad),
+            "wsvm" => Some(Model::WeightedSvm),
+            _ => None,
+        }
+    }
+
+    pub fn expected_task(&self) -> Task {
+        match self {
+            Model::Svm | Model::WeightedSvm => Task::Classification,
+            Model::Lad => Task::Regression,
+        }
+    }
+}
+
+/// A dual problem instance:
+/// min_{θ, loᵢ ≤ θᵢ ≤ hiᵢ}  C/2·‖Zᵀθ‖² − ⟨ȳ, θ⟩.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub model: Model,
+    pub name: String,
+    /// Z (l×n): row i is zᵢ = aᵢ·xᵢ.
+    pub z: RowMatrix,
+    /// ȳᵢ = bᵢ·yᵢ.
+    pub ybar: Vec<f64>,
+    /// Per-coordinate lower bound α (uniform for SVM/LAD).
+    pub lo: Vec<f64>,
+    /// Per-coordinate upper bound β.
+    pub hi: Vec<f64>,
+    /// Cached ‖zᵢ‖².
+    pub z_norms_sq: Vec<f64>,
+}
+
+impl Instance {
+    /// Build from a dataset. Weighted SVM uses inverse-class-frequency
+    /// costs normalized to mean 1 (a common imbalanced-data choice).
+    pub fn from_dataset(model: Model, ds: &Dataset) -> Instance {
+        assert_eq!(
+            ds.task,
+            model.expected_task(),
+            "dataset task does not match model"
+        );
+        let (l, n) = (ds.len(), ds.dim());
+        let mut z = RowMatrix::zeros(l, n);
+        let mut ybar = vec![0.0; l];
+        match model {
+            Model::Svm | Model::WeightedSvm => {
+                // zᵢ = −yᵢxᵢ, ȳᵢ = yᵢ² = 1
+                for i in 0..l {
+                    let yi = ds.y[i];
+                    for (j, &v) in ds.x.row(i).iter().enumerate() {
+                        z.set(i, j, -yi * v);
+                    }
+                    ybar[i] = 1.0;
+                }
+            }
+            Model::Lad => {
+                // zᵢ = −xᵢ, ȳᵢ = yᵢ
+                for i in 0..l {
+                    for (j, &v) in ds.x.row(i).iter().enumerate() {
+                        z.set(i, j, -v);
+                    }
+                    ybar[i] = ds.y[i];
+                }
+            }
+        }
+        let (lo, hi) = match model {
+            Model::Svm => (vec![0.0; l], vec![1.0; l]),
+            Model::Lad => (vec![-1.0; l], vec![1.0; l]),
+            Model::WeightedSvm => {
+                let pos = ds.y.iter().filter(|&&v| v > 0.0).count().max(1);
+                let neg = (l - pos).max(1);
+                // inverse-frequency, normalized to mean ≈ 1
+                let (cp, cn) = (l as f64 / (2.0 * pos as f64), l as f64 / (2.0 * neg as f64));
+                let hi: Vec<f64> =
+                    ds.y.iter().map(|&v| if v > 0.0 { cp } else { cn }).collect();
+                (vec![0.0; l], hi)
+            }
+        };
+        let z_norms_sq = z.row_norms_sq();
+        Instance {
+            model,
+            name: ds.name.clone(),
+            z,
+            ybar,
+            lo,
+            hi,
+            z_norms_sq,
+        }
+    }
+
+    /// Number of instances l.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.z.rows()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature dimension n.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.z.cols()
+    }
+
+    /// u = Zᵀθ (n-vector). w*(C) = −C·u at the optimum.
+    pub fn u_from_theta(&self, theta: &[f64]) -> Vec<f64> {
+        let mut u = vec![0.0; self.dim()];
+        self.z.t_matvec(theta, &mut u);
+        u
+    }
+
+    /// Primal weight vector from the dual point: w = −C·Zᵀθ (Eq. 13).
+    pub fn w_from_theta(&self, c: f64, theta: &[f64]) -> Vec<f64> {
+        let mut w = self.u_from_theta(theta);
+        linalg::scale(-c, &mut w);
+        w
+    }
+
+    /// Dual objective g(θ) = C/2·‖Zᵀθ‖² − ⟨ȳ, θ⟩ (problem (12)).
+    pub fn dual_objective(&self, c: f64, theta: &[f64]) -> f64 {
+        let u = self.u_from_theta(theta);
+        0.5 * c * linalg::norm_sq(&u) - linalg::dot(&self.ybar, theta)
+    }
+
+    /// Primal objective of problem (3): 1/2‖w‖² + C·Σφ(⟨w,zᵢ⟩+ȳᵢ).
+    /// φ = [t]₊ for (weighted) SVM and |t| for LAD.
+    pub fn primal_objective(&self, c: f64, w: &[f64]) -> f64 {
+        let mut loss = 0.0;
+        for i in 0..self.len() {
+            let t = linalg::dot(w, self.z.row(i)) + self.ybar[i];
+            let phi = match self.model {
+                Model::Svm => t.max(0.0),
+                Model::Lad => t.abs(),
+                Model::WeightedSvm => self.hi[i] * t.max(0.0),
+            };
+            loss += phi;
+        }
+        // weighted SVM folds the cost into φ via the hi (=cᵢ) vector, so
+        // the C multiplier is uniform
+        0.5 * linalg::norm_sq(w) + c * loss
+    }
+
+    /// Project a θ vector into the box (used for warm starts).
+    pub fn project_box(&self, theta: &mut [f64]) {
+        for i in 0..theta.len() {
+            theta[i] = linalg::clamp(theta[i], self.lo[i], self.hi[i]);
+        }
+    }
+
+    /// Whether θ is inside the box (with tolerance).
+    pub fn in_box(&self, theta: &[f64], tol: f64) -> bool {
+        theta
+            .iter()
+            .enumerate()
+            .all(|(i, &t)| t >= self.lo[i] - tol && t <= self.hi[i] + tol)
+    }
+
+    /// Mid-point of the box — a reasonable cold-start θ⁰. For SVM the
+    /// classic cold start is θ=0 (all lower bounds); we follow LIBLINEAR.
+    pub fn cold_start(&self) -> Vec<f64> {
+        match self.model {
+            Model::Svm | Model::WeightedSvm => vec![0.0; self.len()],
+            Model::Lad => vec![0.0; self.len()],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::data::Rng;
+
+    #[test]
+    fn svm_instance_construction() {
+        let ds = synth::toy_gaussian(1, 10, 1.5, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        assert_eq!(inst.len(), 20);
+        assert_eq!(inst.dim(), 2);
+        // zᵢ = −yᵢxᵢ
+        for i in 0..inst.len() {
+            for j in 0..2 {
+                assert_eq!(inst.z.get(i, j), -ds.y[i] * ds.x.get(i, j));
+            }
+            assert_eq!(inst.ybar[i], 1.0);
+            assert_eq!((inst.lo[i], inst.hi[i]), (0.0, 1.0));
+        }
+    }
+
+    #[test]
+    fn lad_instance_construction() {
+        let mut rng = Rng::new(2);
+        let ds = synth::random_regression(&mut rng, 12, 3);
+        let inst = Instance::from_dataset(Model::Lad, &ds);
+        for i in 0..12 {
+            for j in 0..3 {
+                assert_eq!(inst.z.get(i, j), -ds.x.get(i, j));
+            }
+            assert_eq!(inst.ybar[i], ds.y[i]);
+            assert_eq!((inst.lo[i], inst.hi[i]), (-1.0, 1.0));
+        }
+    }
+
+    #[test]
+    fn weighted_svm_box() {
+        let ds = synth::gaussian_classes(5, 200, 4, 1.0, 1.0, 0.25, 1.0);
+        let inst = Instance::from_dataset(Model::WeightedSvm, &ds);
+        // minority (positive) class gets the larger cost
+        let pos_cost = (0..200).find(|&i| ds.y[i] > 0.0).map(|i| inst.hi[i]).unwrap();
+        let neg_cost = (0..200).find(|&i| ds.y[i] < 0.0).map(|i| inst.hi[i]).unwrap();
+        assert!(pos_cost > neg_cost);
+        assert!(inst.lo.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn task_mismatch_panics() {
+        let ds = synth::toy_gaussian(1, 5, 1.0, 0.5);
+        Instance::from_dataset(Model::Lad, &ds);
+    }
+
+    #[test]
+    fn w_theta_identity() {
+        let ds = synth::toy_gaussian(3, 8, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let theta: Vec<f64> = (0..16).map(|i| (i % 2) as f64).collect();
+        let c = 2.5;
+        let w = inst.w_from_theta(c, &theta);
+        // w = −C·Σθᵢzᵢ = C·Σ_{θᵢ=1} yᵢxᵢ
+        let mut expect = vec![0.0; 2];
+        for i in 0..16 {
+            if theta[i] == 1.0 {
+                for j in 0..2 {
+                    expect[j] += c * ds.y[i] * ds.x.get(i, j);
+                }
+            }
+        }
+        for j in 0..2 {
+            assert!((w[j] - expect[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn objectives_finite_and_weak_duality() {
+        let ds = synth::toy_gaussian(4, 20, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let c = 1.0;
+        let theta = vec![0.5; inst.len()];
+        let w = inst.w_from_theta(c, &theta);
+        // weak duality of (3)/(11): primal(w) ≥ −C·dual(θ)... our dual
+        // objective (12) is scaled: max of (11) = −C·min of (12). So
+        // primal ≥ −C·g(θ) for any feasible θ, w.
+        let p = inst.primal_objective(c, &w);
+        let g = inst.dual_objective(c, &theta);
+        assert!(p.is_finite() && g.is_finite());
+        assert!(p >= -c * g - 1e-9, "weak duality violated: {p} < {}", -c * g);
+    }
+
+    #[test]
+    fn project_and_in_box() {
+        let ds = synth::toy_gaussian(5, 5, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let mut theta = vec![-0.5, 0.5, 2.0, 1.0, 0.0, -0.1, 0.9, 1.1, 0.2, 0.3];
+        assert!(!inst.in_box(&theta, 1e-12));
+        inst.project_box(&mut theta);
+        assert!(inst.in_box(&theta, 1e-12));
+        assert_eq!(theta[0], 0.0);
+        assert_eq!(theta[2], 1.0);
+    }
+
+    #[test]
+    fn norms_cached_correctly() {
+        let ds = synth::toy_gaussian(6, 7, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        for i in 0..inst.len() {
+            let manual = crate::linalg::norm_sq(inst.z.row(i));
+            assert!((inst.z_norms_sq[i] - manual).abs() < 1e-12);
+        }
+    }
+}

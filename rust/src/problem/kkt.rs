@@ -1,0 +1,107 @@
+//! KKT-condition classification (Eq. 14) — the ground truth the screening
+//! rules are validated against.
+//!
+//! With w* the primal optimum:
+//!
+//! * i ∈ R  ⟺  −⟨w*, zᵢ⟩ > ȳᵢ  ⟺  θᵢ* = α   (SVM: margin exceeded)
+//! * i ∈ E  ⟺  −⟨w*, zᵢ⟩ = ȳᵢ               (support vectors)
+//! * i ∈ L  ⟺  −⟨w*, zᵢ⟩ < ȳᵢ  ⟺  θᵢ* = β   (SVM: inside / violating)
+//!
+//! Both R and L are *non-support* vectors in the paper's terminology.
+
+use super::instance::Instance;
+use crate::linalg;
+
+/// Membership of one instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KktClass {
+    /// θᵢ* = α (lower bound active).
+    R,
+    /// support vector: ȳᵢ hit exactly (within tolerance).
+    E,
+    /// θᵢ* = β (upper bound active).
+    L,
+}
+
+/// Full-problem membership for every instance.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    pub classes: Vec<KktClass>,
+}
+
+impl Membership {
+    pub fn count(&self, k: KktClass) -> usize {
+        self.classes.iter().filter(|&&c| c == k).count()
+    }
+    /// Fraction of instances that are non-support vectors (R ∪ L).
+    pub fn non_sv_fraction(&self) -> f64 {
+        if self.classes.is_empty() {
+            return 0.0;
+        }
+        (self.count(KktClass::R) + self.count(KktClass::L)) as f64 / self.classes.len() as f64
+    }
+}
+
+/// Classify every instance by the KKT conditions at (C, w*). `tol` is the
+/// dead-band around equality: an instance within tol of the margin is
+/// conservatively labeled E (support vector).
+pub fn classify_kkt(inst: &Instance, w: &[f64], tol: f64) -> Membership {
+    let classes = (0..inst.len())
+        .map(|i| {
+            let s = -linalg::dot(w, inst.z.row(i)); // −⟨w, zᵢ⟩
+            if s > inst.ybar[i] + tol {
+                KktClass::R
+            } else if s < inst.ybar[i] - tol {
+                KktClass::L
+            } else {
+                KktClass::E
+            }
+        })
+        .collect();
+    Membership { classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::problem::instance::Model;
+
+    #[test]
+    fn classification_matches_margins() {
+        // hand-built: 1-D SVM, w = [1]. margin yᵢ·w·xᵢ.
+        use crate::data::{Dataset, Task};
+        use crate::linalg::RowMatrix;
+        let x = RowMatrix::from_flat(3, 1, vec![2.0, 1.0, 0.5]);
+        let ds = Dataset::new("m", Task::Classification, x, vec![1.0, 1.0, 1.0]);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        // zᵢ = −xᵢ, ȳ = 1; −⟨w,zᵢ⟩ = w·xᵢ = margin
+        let m = classify_kkt(&inst, &[1.0], 1e-9);
+        assert_eq!(m.classes, vec![KktClass::R, KktClass::E, KktClass::L]);
+        assert_eq!(m.count(KktClass::E), 1);
+        assert!((m.non_sv_fraction() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tolerance_widens_e_band() {
+        use crate::data::{Dataset, Task};
+        use crate::linalg::RowMatrix;
+        let x = RowMatrix::from_flat(2, 1, vec![1.05, 0.95]);
+        let ds = Dataset::new("t", Task::Classification, x, vec![1.0, 1.0]);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let sharp = classify_kkt(&inst, &[1.0], 1e-6);
+        assert_eq!(sharp.classes, vec![KktClass::R, KktClass::L]);
+        let fuzzy = classify_kkt(&inst, &[1.0], 0.1);
+        assert_eq!(fuzzy.classes, vec![KktClass::E, KktClass::E]);
+    }
+
+    #[test]
+    fn separated_toy_mostly_r_at_large_margin() {
+        let ds = synth::toy_gaussian(1, 200, 1.5, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        // direction (1,1)/√2 with a generous scale classifies nearly all
+        let w = [3.0, 3.0];
+        let m = classify_kkt(&inst, &w, 1e-9);
+        assert!(m.count(KktClass::R) > 350, "R = {}", m.count(KktClass::R));
+    }
+}

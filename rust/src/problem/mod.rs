@@ -1,0 +1,33 @@
+//! The paper's unified formulation (problem (3)):
+//!
+//! ```text
+//!   min_w  1/2‖w‖² + C·Σᵢ φ(wᵀ(aᵢxᵢ) + bᵢyᵢ)
+//! ```
+//!
+//! with φ a nonnegative continuous sublinear function, whose conjugate is
+//! the indicator of a box `[α, β]` (Lemma 3). The dual (12) is the boxed QP
+//!
+//! ```text
+//!   min_{θ ∈ [α,β]^l}  C/2·‖Zᵀθ‖² − ⟨ȳ, θ⟩,    zᵢ = aᵢxᵢ, ȳᵢ = bᵢyᵢ,
+//! ```
+//!
+//! and w*(C) = −C·Zᵀθ*(C) (Eq. 13).
+//!
+//! [`Instance`] materializes `(Z, ȳ, [α,β])` from a [`Dataset`] for a
+//! chosen [`Model`]:
+//!
+//! * **SVM** (24): φ=[t]₊, aᵢ=−yᵢ, bᵢ=yᵢ ⇒ zᵢ=−yᵢxᵢ, ȳᵢ=1, box [0,1]
+//!   (Lemma 10).
+//! * **LAD** (29): φ=|t|, aᵢ=−1, bᵢ=1 ⇒ zᵢ=−xᵢ, ȳᵢ=yᵢ, box [−1,1]
+//!   (Lemma 13).
+//! * **Weighted SVM** (§8 future work): per-instance misclassification
+//!   costs cᵢ scale the loss term; in the dual the box becomes
+//!   [0, cᵢ] per coordinate. We support per-coordinate boxes throughout so
+//!   the DVI derivation carries over verbatim (Theorem 6 never uses the
+//!   box shape, only θ ∈ feasible set for both parameter values).
+
+pub mod instance;
+pub mod kkt;
+
+pub use instance::{Instance, Model};
+pub use kkt::{classify_kkt, KktClass, Membership};

@@ -1,0 +1,115 @@
+//! Terminal stacked-area chart — renders the paper's Fig. 1/2/3 rejection
+//! curves as unicode block art: for each grid point (x axis = C index),
+//! the column is filled bottom-up with the R-fraction (`█`), then the
+//! L-fraction (`▒`), remainder blank (unscreened instances).
+
+/// Stacked-area chart of two series (each in [0,1], sum ≤ 1).
+pub struct StackedArea {
+    title: String,
+    r_frac: Vec<f64>,
+    l_frac: Vec<f64>,
+    height: usize,
+}
+
+impl StackedArea {
+    pub fn new(title: impl Into<String>, r_frac: Vec<f64>, l_frac: Vec<f64>) -> Self {
+        assert_eq!(r_frac.len(), l_frac.len());
+        for (r, l) in r_frac.iter().zip(&l_frac) {
+            assert!(
+                (0.0..=1.0 + 1e-9).contains(r) && (0.0..=1.0 + 1e-9).contains(l),
+                "fractions must be in [0,1]"
+            );
+            assert!(r + l <= 1.0 + 1e-6, "stacked fractions exceed 1: {r}+{l}");
+        }
+        StackedArea { title: title.into(), r_frac, l_frac, height: 16 }
+    }
+
+    pub fn height(mut self, h: usize) -> Self {
+        self.height = h.max(4);
+        self
+    }
+
+    /// Render to a string. Each input point is one column; a y-axis with
+    /// 0/50/100% ticks on the left.
+    pub fn render(&self) -> String {
+        let h = self.height;
+        let w = self.r_frac.len();
+        let mut grid = vec![vec![' '; w]; h];
+        for (c, (&r, &l)) in self.r_frac.iter().zip(&self.l_frac).enumerate() {
+            let r_cells = (r * h as f64).round() as usize;
+            let l_cells = (l * h as f64).round() as usize;
+            for row in 0..r_cells.min(h) {
+                grid[h - 1 - row][c] = '█';
+            }
+            for row in r_cells..(r_cells + l_cells).min(h) {
+                grid[h - 1 - row][c] = '▒';
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("{}  (█ = R-screened, ▒ = L-screened, blank = kept)\n", self.title));
+        for (i, row) in grid.iter().enumerate() {
+            let frac = 1.0 - i as f64 / h as f64;
+            let label = if i == 0 {
+                "100%"
+            } else if i == h / 2 {
+                " 50%"
+            } else if (frac * 100.0).round() == 0.0 {
+                "  0%"
+            } else {
+                "    "
+            };
+            out.push_str(label);
+            out.push('|');
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str("  0%+");
+        out.push_str(&"-".repeat(w));
+        out.push('\n');
+        out.push_str("     C: low -> high\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_expected_shape() {
+        let r = vec![1.0, 0.5, 0.0, 0.25];
+        let l = vec![0.0, 0.25, 0.5, 0.25];
+        let s = StackedArea::new("toy", r, l).height(8).render();
+        let lines: Vec<&str> = s.lines().collect();
+        // title + 8 rows + axis + caption
+        assert_eq!(lines.len(), 1 + 8 + 2);
+        // first column fully '█' in all 8 chart rows
+        for row in 1..9 {
+            let col0 = lines[row].chars().nth(5).unwrap();
+            assert_eq!(col0, '█', "row {row}: {}", lines[row]);
+        }
+        // third column: top half ▒... bottom has ▒ in lower half rows only
+        assert!(s.contains('▒'));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_overflow() {
+        StackedArea::new("bad", vec![0.8], vec![0.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_length_mismatch() {
+        StackedArea::new("bad", vec![0.5, 0.5], vec![0.5]);
+    }
+
+    #[test]
+    fn zero_series_renders_blank() {
+        let s = StackedArea::new("flat", vec![0.0; 10], vec![0.0; 10]).height(4).render();
+        // skip the legend line; the chart body must be empty
+        let body: String = s.lines().skip(1).collect();
+        assert!(!body.contains('█'));
+        assert!(!body.contains('▒'));
+    }
+}

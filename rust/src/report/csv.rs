@@ -1,0 +1,95 @@
+//! Minimal CSV writer (RFC-4180 quoting for the subset we emit).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
+    pub fn create(path: &Path, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.iter().map(|h| quote(h)).collect::<Vec<_>>().join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    /// Write one row of already-formatted cells.
+    pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.cols, "csv row width mismatch");
+        writeln!(
+            self.w,
+            "{}",
+            cells.iter().map(|c| quote(c)).collect::<Vec<_>>().join(",")
+        )
+    }
+
+    /// Write a row of f64s with full precision.
+    pub fn row_f64(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        let v: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        self.row(&v)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+fn quote(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_quotes() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dvi_csv_test_{}.csv", std::process::id()));
+        {
+            let mut w = CsvWriter::create(&p, &["a", "b,c"]).unwrap();
+            w.row(&["x".into(), "say \"hi\", ok".into()]).unwrap();
+            w.row_f64(&[1.5, 2.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let s = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "a,\"b,c\"");
+        assert_eq!(lines[1], "x,\"say \"\"hi\"\", ok\"");
+        assert_eq!(lines[2], "1.5,2");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn creates_parent_dirs() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dvi_csv_dir_{}", std::process::id()));
+        p.push("nested/out.csv");
+        let mut w = CsvWriter::create(&p, &["x"]).unwrap();
+        w.row(&["1".into()]).unwrap();
+        w.flush().unwrap();
+        assert!(p.exists());
+        std::fs::remove_dir_all(p.parent().unwrap().parent().unwrap()).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dvi_csv_bad_{}.csv", std::process::id()));
+        let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+        let _ = w.row(&["only".into()]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Report emitters: ASCII tables (paper-table style), CSV files, and
+//! terminal stacked-area charts (for the Fig. 1 rejection-rate plots).
+
+pub mod chart;
+pub mod csv;
+pub mod table;
+
+pub use chart::StackedArea;
+pub use csv::CsvWriter;
+pub use table::Table;

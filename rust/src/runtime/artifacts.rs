@@ -1,0 +1,206 @@
+//! Artifact manifest: which AOT-compiled HLO executables exist and for
+//! which (l_pad, n_pad) shape buckets.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` alongside one
+//! `dvi_screen_{l}x{n}.hlo.txt` per bucket. HLO shapes are static, so the
+//! runtime pads each dataset up to the smallest bucket that fits: padded
+//! rows have zᵢ = 0, ‖zᵢ‖ = 0 and θᵢ = 0 so they influence nothing, and
+//! their rule output is ignored.
+
+use crate::config::json::{parse_json, Json};
+use std::path::{Path, PathBuf};
+
+/// One compiled shape bucket.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapeBucket {
+    /// Padded instance count.
+    pub l: usize,
+    /// Padded feature dimension.
+    pub n: usize,
+    /// HLO text file (relative to the artifact dir).
+    pub file: String,
+}
+
+impl ShapeBucket {
+    /// Whether a dataset of shape (l, n) fits in this bucket.
+    pub fn fits(&self, l: usize, n: usize) -> bool {
+        l <= self.l && n <= self.n
+    }
+    /// Padded element count (cost proxy for bucket selection).
+    pub fn area(&self) -> usize {
+        self.l * self.n
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub version: i64,
+    pub dtype: String,
+    /// Conservative guard band the kernel applies so f32 rounding can
+    /// never produce an unsafe decision (see python/compile/model.py).
+    pub guard_eps: f64,
+    pub buckets: Vec<ShapeBucket>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+/// Manifest loading errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] crate::config::json::JsonError),
+    #[error("manifest: {0}")]
+    Schema(String),
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)?;
+        Self::parse(&src, dir)
+    }
+
+    /// Parse manifest text (dir recorded for resolving bucket files).
+    pub fn parse(src: &str, dir: &Path) -> Result<ArtifactManifest, ManifestError> {
+        let j = parse_json(src)?;
+        let schema = |m: &str| ManifestError::Schema(m.to_string());
+        let version = j
+            .get("version")
+            .and_then(Json::as_int)
+            .ok_or_else(|| schema("missing version"))?;
+        if version != 1 {
+            return Err(schema(&format!("unsupported manifest version {version}")));
+        }
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| schema("missing dtype"))?
+            .to_string();
+        let guard_eps = j
+            .get("guard_eps")
+            .and_then(Json::as_float)
+            .ok_or_else(|| schema("missing guard_eps"))?;
+        let mut buckets = Vec::new();
+        for b in j
+            .get("buckets")
+            .and_then(Json::as_array)
+            .ok_or_else(|| schema("missing buckets"))?
+        {
+            let l = b.get("l").and_then(Json::as_int).ok_or_else(|| schema("bucket.l"))?;
+            let n = b.get("n").and_then(Json::as_int).ok_or_else(|| schema("bucket.n"))?;
+            let file = b
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| schema("bucket.file"))?
+                .to_string();
+            if l <= 0 || n <= 0 {
+                return Err(schema("bucket dims must be positive"));
+            }
+            buckets.push(ShapeBucket { l: l as usize, n: n as usize, file });
+        }
+        if buckets.is_empty() {
+            return Err(schema("no buckets"));
+        }
+        Ok(ArtifactManifest { version, dtype, guard_eps, buckets, dir: dir.to_path_buf() })
+    }
+
+    /// Smallest bucket (by padded area) that fits (l, n).
+    pub fn pick(&self, l: usize, n: usize) -> Option<&ShapeBucket> {
+        self.buckets
+            .iter()
+            .filter(|b| b.fits(l, n))
+            .min_by_key(|b| b.area())
+    }
+
+    /// Absolute path of a bucket's HLO file.
+    pub fn hlo_path(&self, bucket: &ShapeBucket) -> PathBuf {
+        self.dir.join(&bucket.file)
+    }
+
+    /// Verify every bucket file exists on disk.
+    pub fn check_files(&self) -> Result<(), ManifestError> {
+        for b in &self.buckets {
+            let p = self.hlo_path(b);
+            if !p.is_file() {
+                return Err(ManifestError::Schema(format!(
+                    "missing artifact file {}",
+                    p.display()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The default artifact directory: `$DVI_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("DVI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+        "version": 1, "dtype": "f32", "guard_eps": 1e-5,
+        "buckets": [
+            {"l": 2048, "n": 16, "file": "a.hlo.txt"},
+            {"l": 8192, "n": 16, "file": "b.hlo.txt"},
+            {"l": 8192, "n": 64, "file": "c.hlo.txt"},
+            {"l": 65536, "n": 64, "file": "d.hlo.txt"}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_and_pick() {
+        let m = ArtifactManifest::parse(DOC, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.buckets.len(), 4);
+        // smallest fitting bucket wins
+        assert_eq!(m.pick(1000, 10).unwrap().file, "a.hlo.txt");
+        assert_eq!(m.pick(5000, 10).unwrap().file, "b.hlo.txt");
+        assert_eq!(m.pick(5000, 54).unwrap().file, "c.hlo.txt");
+        assert_eq!(m.pick(50_000, 22).unwrap().file, "d.hlo.txt");
+        assert!(m.pick(100_000, 10).is_none());
+        assert!(m.pick(10, 100).is_none());
+    }
+
+    #[test]
+    fn hlo_path_joins_dir() {
+        let m = ArtifactManifest::parse(DOC, Path::new("/x/y")).unwrap();
+        let b = m.pick(1, 1).unwrap();
+        assert_eq!(m.hlo_path(b), PathBuf::from("/x/y/a.hlo.txt"));
+    }
+
+    #[test]
+    fn schema_errors() {
+        assert!(ArtifactManifest::parse("{}", Path::new(".")).is_err());
+        assert!(ArtifactManifest::parse(
+            r#"{"version": 2, "dtype": "f32", "guard_eps": 0.0, "buckets": []}"#,
+            Path::new(".")
+        )
+        .is_err());
+        assert!(ArtifactManifest::parse(
+            r#"{"version": 1, "dtype": "f32", "guard_eps": 0.0, "buckets": []}"#,
+            Path::new(".")
+        )
+        .is_err());
+        assert!(ArtifactManifest::parse(
+            r#"{"version": 1, "dtype": "f32", "guard_eps": 0.0,
+                "buckets": [{"l": -1, "n": 2, "file": "x"}]}"#,
+            Path::new(".")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn check_files_reports_missing() {
+        let m = ArtifactManifest::parse(DOC, Path::new("/nonexistent-dir-xyz")).unwrap();
+        assert!(m.check_files().is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas screening artifacts
+//! (HLO text under `artifacts/`) and executes them from the rust hot path.
+//! Python is build-time only — see `python/compile/aot.py`.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactManifest, ShapeBucket};
+pub use pjrt::PjrtScreener;

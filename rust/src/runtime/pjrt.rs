@@ -1,0 +1,230 @@
+//! PJRT execution of the AOT-compiled DVI screening scan.
+//!
+//! The artifact is the HLO text of the JAX/Pallas graph
+//! `dvi_screen(z, u, ybar, znorm, mid, rad) -> codes` lowered once at
+//! build time (see `python/compile/model.py` / `aot.py`). This module
+//! compiles each shape bucket on the PJRT CPU client (once, cached),
+//! keeps the per-dataset tensors (z, ȳ, ‖zᵢ‖) resident as device buffers,
+//! and per path step uploads only u and the two scalars.
+//!
+//! Codes: 0 = Keep, 1 = AtLo (R), 2 = AtHi (L). The kernel applies a
+//! conservative guard band (`manifest.guard_eps`) so that f32 rounding
+//! can only ever *keep more* than the exact f64 rule — never screen an
+//! instance the f64 rule would keep (parity-tested in
+//! `rust/tests/integration_runtime.rs`).
+
+use super::artifacts::{ArtifactManifest, ShapeBucket};
+use crate::path::DviScanBackend;
+use crate::problem::Instance;
+use crate::screening::Decision;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Errors from the PJRT screening path.
+#[derive(Debug, thiserror::Error)]
+pub enum PjrtError {
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("no shape bucket fits l={l}, n={n}")]
+    NoBucket { l: usize, n: usize },
+    #[error("artifact output malformed: {0}")]
+    BadOutput(String),
+}
+
+impl From<xla::Error> for PjrtError {
+    fn from(e: xla::Error) -> Self {
+        PjrtError::Xla(e.to_string())
+    }
+}
+
+struct CachedInstance {
+    bucket: ShapeBucket,
+    z: xla::PjRtBuffer,
+    ybar: xla::PjRtBuffer,
+    znorm: xla::PjRtBuffer,
+}
+
+/// PJRT-backed implementation of [`DviScanBackend`].
+pub struct PjrtScreener {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    exes: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
+    cache: HashMap<String, CachedInstance>,
+    /// Number of times the PJRT path failed and the native scan was used.
+    pub fallbacks: u64,
+    /// Number of successful PJRT scans.
+    pub scans: u64,
+}
+
+impl PjrtScreener {
+    /// Create a screener over a loaded manifest. Compilation is lazy (per
+    /// bucket, on first use).
+    pub fn new(manifest: ArtifactManifest) -> Result<PjrtScreener, PjrtError> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtScreener {
+            client,
+            manifest,
+            exes: HashMap::new(),
+            cache: HashMap::new(),
+            fallbacks: 0,
+            scans: 0,
+        })
+    }
+
+    /// Load the manifest from the default artifact dir and build.
+    pub fn from_default_dir() -> Result<PjrtScreener, PjrtError> {
+        let dir = super::artifacts::default_dir();
+        let manifest = ArtifactManifest::load(&dir)
+            .map_err(|e| PjrtError::Xla(format!("manifest: {e}")))?;
+        PjrtScreener::new(manifest)
+    }
+
+    fn executable(
+        &mut self,
+        bucket: &ShapeBucket,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>, PjrtError> {
+        if let Some(e) = self.exes.get(&bucket.file) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(bucket);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| PjrtError::BadOutput("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.exes.insert(bucket.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    fn cache_key(inst: &Instance) -> String {
+        format!("{}:{}x{}", inst.name, inst.len(), inst.dim())
+    }
+
+    /// Upload the per-dataset tensors (padded to the bucket) once.
+    fn ensure_instance(&mut self, inst: &Instance) -> Result<(), PjrtError> {
+        let key = Self::cache_key(inst);
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let (l, n) = (inst.len(), inst.dim());
+        let bucket = self
+            .manifest
+            .pick(l, n)
+            .ok_or(PjrtError::NoBucket { l, n })?
+            .clone();
+        let (lp, np) = (bucket.l, bucket.n);
+
+        // z padded (lp × np), row-major f32
+        let mut zf = vec![0.0f32; lp * np];
+        for i in 0..l {
+            let row = inst.z.row(i);
+            for j in 0..n {
+                zf[i * np + j] = row[j] as f32;
+            }
+        }
+        let mut ybar = vec![0.0f32; lp];
+        let mut znorm = vec![0.0f32; lp];
+        for i in 0..l {
+            ybar[i] = inst.ybar[i] as f32;
+            znorm[i] = inst.z_norms_sq[i].sqrt() as f32;
+        }
+        let z = self.client.buffer_from_host_buffer(&zf, &[lp, np], None)?;
+        let ybar = self.client.buffer_from_host_buffer(&ybar, &[lp], None)?;
+        let znorm = self.client.buffer_from_host_buffer(&znorm, &[lp], None)?;
+        self.cache.insert(key, CachedInstance { bucket, z, ybar, znorm });
+        Ok(())
+    }
+
+    /// Drop cached device buffers for an instance (tests / memory).
+    pub fn evict(&mut self, inst: &Instance) {
+        self.cache.remove(&Self::cache_key(inst));
+    }
+
+    /// The PJRT scan proper; errors are surfaced (the trait impl falls
+    /// back to the native scan).
+    pub fn try_scan(
+        &mut self,
+        inst: &Instance,
+        mid: f64,
+        rad: f64,
+        u: &[f64],
+    ) -> Result<Vec<Decision>, PjrtError> {
+        self.ensure_instance(inst)?;
+        let key = Self::cache_key(inst);
+        let bucket = self.cache[&key].bucket.clone();
+        let exe = self.executable(&bucket)?;
+        let cached = &self.cache[&key];
+
+        // pad u to np
+        let mut uf = vec![0.0f32; bucket.n];
+        for (dst, &v) in uf.iter_mut().zip(u.iter()) {
+            *dst = v as f32;
+        }
+        let u_buf = self.client.buffer_from_host_buffer(&uf, &[bucket.n], None)?;
+        let mid_buf = self
+            .client
+            .buffer_from_host_buffer(&[mid as f32], &[], None)?;
+        let rad_buf = self
+            .client
+            .buffer_from_host_buffer(&[rad as f32], &[], None)?;
+
+        let outs = exe.execute_b(&[&cached.z, &u_buf, &cached.ybar, &cached.znorm, &mid_buf, &rad_buf])?;
+        let lit = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| PjrtError::BadOutput("empty result".into()))?
+            .to_literal_sync()?;
+        let codes_lit = lit.to_tuple1()?;
+        let codes = codes_lit.to_vec::<f32>()?;
+        if codes.len() != bucket.l {
+            return Err(PjrtError::BadOutput(format!(
+                "expected {} codes, got {}",
+                bucket.l,
+                codes.len()
+            )));
+        }
+        let decisions = codes[..inst.len()]
+            .iter()
+            .map(|&c| match c as i64 {
+                1 => Decision::AtLo,
+                2 => Decision::AtHi,
+                _ => Decision::Keep,
+            })
+            .collect();
+        self.scans += 1;
+        Ok(decisions)
+    }
+}
+
+impl DviScanBackend for PjrtScreener {
+    fn scan(&mut self, inst: &Instance, mid: f64, rad: f64, u: &[f64]) -> Vec<Decision> {
+        match self.try_scan(inst, mid, rad, u) {
+            Ok(d) => d,
+            Err(e) => {
+                // fail safe: fall back to the exact native scan
+                self.fallbacks += 1;
+                eprintln!("[pjrt] scan failed ({e}); falling back to native");
+                crate::screening::dvi::dvi_scan(inst, mid, rad, u)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT integration tests live in rust/tests/integration_runtime.rs —
+    // they need the artifacts built by `make artifacts`. Unit tests here
+    // cover the pieces that do not require artifacts.
+    use super::*;
+
+    #[test]
+    fn error_display() {
+        let e = PjrtError::NoBucket { l: 10, n: 3 };
+        assert!(e.to_string().contains("l=10"));
+    }
+}

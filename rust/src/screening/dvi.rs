@@ -1,0 +1,297 @@
+//! DVI — the paper's screening rules (Theorem 7, Corollaries 8–15).
+//!
+//! Given θ*(C_k) solved and C_{k+1} > C_k, Theorem 6 bounds Zᵀθ*(C_{k+1})
+//! inside a ball of radius ((C_{k+1}−C_k)/2C_{k+1})·‖Zᵀθ*(C_k)‖ around
+//! ((C_k+C_{k+1})/2C_{k+1})·Zᵀθ*(C_k). Pushing that ball through the KKT
+//! rules (R1')/(R2') yields, with u = Zᵀθ*(C_k), mid = (C_{k+1}+C_k)/2 and
+//! rad = (C_{k+1}−C_k)/2:
+//!
+//! ```text
+//!   mid·⟨u, zᵢ⟩ − rad·‖u‖·‖zᵢ‖ > ȳᵢ  ⇒  θᵢ*(C_{k+1}) = α   (R)
+//!   mid·⟨u, zᵢ⟩ + rad·‖u‖·‖zᵢ‖ < ȳᵢ  ⇒  θᵢ*(C_{k+1}) = β   (L)
+//! ```
+//!
+//! The two published forms differ only in how ⟨u, zᵢ⟩ is evaluated:
+//!
+//! * **w-form (DVI_s, Cor. 9/12/15)** — from w*(C_k) = −C_k·u: an O(l·n)
+//!   streaming scan, no extra memory. This is the production form and the
+//!   one the Pallas kernel implements.
+//! * **θ-form (DVI_s*, Cor. 8/11/14)** — from the Gram matrix G = ZZᵀ:
+//!   ⟨u,zᵢ⟩ = gᵢᵀθ, ‖u‖² = θᵀGθ, ‖zᵢ‖² = Gᵢᵢ. O(l²) per step after a
+//!   one-time O(l²·n) factorization; only sensible when G fits in memory
+//!   (the ablation bench explores the crossover).
+
+use super::{Decision, ScreenReport};
+use crate::linalg::{self, RowMatrix};
+use crate::problem::Instance;
+
+/// Which evaluation strategy to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DviForm {
+    /// Streaming w-form (Corollary 9).
+    W,
+    /// Gram-matrix θ-form (Corollary 8).
+    Theta,
+}
+
+/// DVI screening rule. Holds the (optional) cached Gram matrix for the
+/// θ-form; construct once per dataset and reuse along the path.
+pub struct Dvi {
+    pub form: DviForm,
+    gram: Option<RowMatrix>,
+}
+
+impl Dvi {
+    /// w-form: no precomputation.
+    pub fn new_w() -> Dvi {
+        Dvi { form: DviForm::W, gram: None }
+    }
+
+    /// θ-form: precomputes G = ZZᵀ (O(l²·n) once). Panics if l is so large
+    /// that G would exceed ~2 GiB — use the w-form there.
+    pub fn new_theta(inst: &Instance) -> Dvi {
+        let l = inst.len();
+        assert!(
+            l * l <= 256 * 1024 * 1024,
+            "Gram matrix for l={l} would exceed the memory budget; use DviForm::W"
+        );
+        let mut g = RowMatrix::zeros(l, l);
+        for i in 0..l {
+            for j in i..l {
+                let v = inst.z.gram(i, j);
+                g.set(i, j, v);
+                g.set(j, i, v);
+            }
+        }
+        Dvi { form: DviForm::Theta, gram: Some(g) }
+    }
+
+    /// Screen for C_next given θ*(C_prev). `u_prev` must equal Zᵀθ_prev
+    /// (the solver hands it over for free). Requires C_next > C_prev > 0.
+    pub fn screen(
+        &self,
+        inst: &Instance,
+        c_prev: f64,
+        c_next: f64,
+        theta_prev: &[f64],
+        u_prev: &[f64],
+    ) -> ScreenReport {
+        assert!(c_next > c_prev && c_prev > 0.0, "need C_next > C_prev > 0");
+        assert_eq!(theta_prev.len(), inst.len());
+        let mid = 0.5 * (c_next + c_prev);
+        let rad = 0.5 * (c_next - c_prev);
+        let decisions = match self.form {
+            DviForm::W => self.screen_w(inst, mid, rad, u_prev),
+            DviForm::Theta => self.screen_theta(inst, mid, rad, theta_prev),
+        };
+        ScreenReport::from_decisions(decisions)
+    }
+
+    fn screen_w(&self, inst: &Instance, mid: f64, rad: f64, u: &[f64]) -> Vec<Decision> {
+        dvi_scan(inst, mid, rad, u)
+    }
+
+    fn screen_theta(&self, inst: &Instance, mid: f64, rad: f64, theta: &[f64]) -> Vec<Decision> {
+        let g = self.gram.as_ref().expect("θ-form requires the Gram matrix");
+        assert_eq!(g.rows(), inst.len());
+        // ‖u‖² = θᵀGθ via one matvec
+        let mut gtheta = vec![0.0; inst.len()];
+        g.matvec(theta, &mut gtheta);
+        let u_norm = linalg::dot(&gtheta, theta).max(0.0).sqrt();
+        let mut out = Vec::with_capacity(inst.len());
+        for i in 0..inst.len() {
+            let p = gtheta[i]; // gᵢᵀθ = ⟨u, zᵢ⟩
+            let zn = g.get(i, i).max(0.0).sqrt();
+            let slack = rad * u_norm * zn;
+            out.push(decide(mid * p, slack, inst.ybar[i]));
+        }
+        out
+    }
+}
+
+/// The streaming DVI scan (w-form, Corollary 9): one O(l·n) pass
+/// evaluating both inequalities for every instance. This is the hot path
+/// the PJRT/Pallas artifact mirrors; kept as a free function so backends
+/// can share it.
+pub fn dvi_scan(inst: &Instance, mid: f64, rad: f64, u: &[f64]) -> Vec<Decision> {
+    assert_eq!(u.len(), inst.dim());
+    let u_norm = linalg::norm(u);
+    let mut out = Vec::with_capacity(inst.len());
+    for i in 0..inst.len() {
+        let p = linalg::dot(u, inst.z.row(i)); // ⟨u, zᵢ⟩
+        let zn = inst.z_norms_sq[i].sqrt();
+        let slack = rad * u_norm * zn;
+        out.push(decide(mid * p, slack, inst.ybar[i]));
+    }
+    out
+}
+
+/// Shared decision core: score ± slack vs ȳᵢ.
+#[inline]
+fn decide(score: f64, slack: f64, ybar: f64) -> Decision {
+    if score - slack > ybar {
+        Decision::AtLo
+    } else if score + slack < ybar {
+        Decision::AtHi
+    } else {
+        Decision::Keep
+    }
+}
+
+/// Theorem 6 ball check (used by property tests): returns the distance of
+/// Zᵀθ_next from the ball center, and the ball radius.
+pub fn theorem6_ball(
+    inst: &Instance,
+    c_prev: f64,
+    c_next: f64,
+    theta_prev: &[f64],
+    theta_next: &[f64],
+) -> (f64, f64) {
+    let u_prev = inst.u_from_theta(theta_prev);
+    let u_next = inst.u_from_theta(theta_next);
+    let scale = (c_prev + c_next) / (2.0 * c_next);
+    let center: Vec<f64> = u_prev.iter().map(|v| v * scale).collect();
+    let dist = u_next
+        .iter()
+        .zip(&center)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt();
+    let radius = (c_next - c_prev) / (2.0 * c_next) * linalg::norm(&u_prev);
+    (dist, radius)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SolverConfig;
+    use crate::data::{synth, Rng};
+    use crate::problem::{classify_kkt, Instance, KktClass, Model};
+    use crate::solver::CdSolver;
+
+    fn solve(inst: &Instance, c: f64) -> crate::solver::SolveResult {
+        CdSolver::new(SolverConfig { tol: 1e-9, ..Default::default() })
+            .solve(inst, c, inst.cold_start())
+    }
+
+    #[test]
+    fn w_and_theta_forms_agree() {
+        let ds = synth::toy_gaussian(31, 60, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let r = solve(&inst, 0.5);
+        let w_rule = Dvi::new_w();
+        let t_rule = Dvi::new_theta(&inst);
+        let a = w_rule.screen(&inst, 0.5, 0.8, &r.theta, &r.u);
+        let b = t_rule.screen(&inst, 0.5, 0.8, &r.theta, &r.u);
+        assert_eq!(a.decisions, b.decisions);
+        assert!(a.rejection() > 0.0, "expected some screening on a separable toy");
+    }
+
+    #[test]
+    fn dvi_is_safe_on_svm() {
+        let ds = synth::toy_gaussian(32, 80, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let (c0, c1) = (0.3, 0.6);
+        let r0 = solve(&inst, c0);
+        let rep = Dvi::new_w().screen(&inst, c0, c1, &r0.theta, &r0.u);
+        // ground truth at c1
+        let r1 = solve(&inst, c1);
+        let w1 = inst.w_from_theta(c1, &r1.theta);
+        let truth = classify_kkt(&inst, &w1, 1e-7);
+        for (i, d) in rep.decisions.iter().enumerate() {
+            match d {
+                Decision::AtLo => assert_eq!(truth.classes[i], KktClass::R, "i={i}"),
+                Decision::AtHi => assert_eq!(truth.classes[i], KktClass::L, "i={i}"),
+                Decision::Keep => {}
+            }
+        }
+    }
+
+    #[test]
+    fn dvi_is_safe_on_lad() {
+        let mut rng = Rng::new(8);
+        let ds = synth::random_regression(&mut rng, 100, 6);
+        let inst = Instance::from_dataset(Model::Lad, &ds);
+        let (c0, c1) = (0.2, 0.5);
+        let r0 = solve(&inst, c0);
+        let rep = Dvi::new_w().screen(&inst, c0, c1, &r0.theta, &r0.u);
+        let r1 = solve(&inst, c1);
+        let w1 = inst.w_from_theta(c1, &r1.theta);
+        let truth = classify_kkt(&inst, &w1, 1e-7);
+        let mut screened = 0;
+        for (i, d) in rep.decisions.iter().enumerate() {
+            match d {
+                Decision::AtLo => {
+                    screened += 1;
+                    assert_eq!(truth.classes[i], KktClass::R, "i={i}");
+                }
+                Decision::AtHi => {
+                    screened += 1;
+                    assert_eq!(truth.classes[i], KktClass::L, "i={i}");
+                }
+                Decision::Keep => {}
+            }
+        }
+        assert!(screened > 0, "LAD screening found nothing");
+    }
+
+    #[test]
+    fn closer_parameters_screen_more() {
+        let ds = synth::toy_gaussian(33, 100, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let c0 = 1.0;
+        let r0 = solve(&inst, c0);
+        let rule = Dvi::new_w();
+        let near = rule.screen(&inst, c0, 1.05, &r0.theta, &r0.u);
+        let far = rule.screen(&inst, c0, 5.0, &r0.theta, &r0.u);
+        assert!(
+            near.rejection() >= far.rejection(),
+            "near {} < far {}",
+            near.rejection(),
+            far.rejection()
+        );
+    }
+
+    #[test]
+    fn theorem6_ball_contains_next_solution() {
+        let ds = synth::toy_gaussian(34, 60, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        for (c0, c1) in [(0.1, 0.2), (0.5, 2.0), (1.0, 1.01)] {
+            let t0 = solve(&inst, c0).theta;
+            let t1 = solve(&inst, c1).theta;
+            let (dist, radius) = theorem6_ball(&inst, c0, c1, &t0, &t1);
+            assert!(
+                dist <= radius + 1e-6,
+                "C {c0}->{c1}: dist {dist} > radius {radius}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_increasing_c() {
+        let ds = synth::toy_gaussian(35, 10, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let r = solve(&inst, 1.0);
+        Dvi::new_w().screen(&inst, 1.0, 1.0, &r.theta, &r.u);
+    }
+
+    #[test]
+    fn weighted_svm_screening_safe() {
+        let ds = synth::gaussian_classes(36, 120, 4, 1.5, 1.0, 0.3, 1.0);
+        let inst = Instance::from_dataset(Model::WeightedSvm, &ds);
+        let (c0, c1) = (0.2, 0.35);
+        let r0 = solve(&inst, c0);
+        let rep = Dvi::new_w().screen(&inst, c0, c1, &r0.theta, &r0.u);
+        let r1 = solve(&inst, c1);
+        let w1 = inst.w_from_theta(c1, &r1.theta);
+        let truth = classify_kkt(&inst, &w1, 1e-7);
+        for (i, d) in rep.decisions.iter().enumerate() {
+            match d {
+                Decision::AtLo => assert_eq!(truth.classes[i], KktClass::R, "i={i}"),
+                Decision::AtHi => assert_eq!(truth.classes[i], KktClass::L, "i={i}"),
+                Decision::Keep => {}
+            }
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Safe screening rules — the paper's contribution.
+//!
+//! Every rule consumes a solved path point and emits, for the next
+//! parameter value, a per-instance [`Decision`]: leave the coordinate
+//! free, or fix it to the lower (`AtLo`, the paper's R set, θ=α) or upper
+//! (`AtHi`, the L set, θ=β) bound. *Safe* means a decision other than
+//! `Keep` is guaranteed to match the exact optimum — validated by
+//! [`crate::validation`] and the integration test suite.
+//!
+//! Implemented rules:
+//! * [`dvi::Dvi`] — the paper's DVI_s (w-form, Cor. 9/12/15) and DVI_s*
+//!   (θ-form with cached Gram matrix, Cor. 8/11/14);
+//! * [`ssnsv::Ssnsv`] — the SSNSV baseline (Ogawa et al. 2013, Eq. 27)
+//!   and its VI-enhanced variant ESSNSV (Eq. 28 / Theorem 19), sharing
+//!   the cone∩ball extremization of Lemma 20;
+//! * [`RuleKind::None`] — no screening (the paper's plain "Solver" arm).
+
+pub mod dvi;
+pub mod ssnsv;
+
+pub use dvi::{Dvi, DviForm};
+pub use ssnsv::{Ssnsv, SsnsvContext};
+
+use crate::problem::Instance;
+
+/// Screening decision for one instance at the *next* parameter value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Membership unknown — stays in the reduced optimization.
+    Keep,
+    /// Guaranteed θᵢ* = α (paper's R set).
+    AtLo,
+    /// Guaranteed θᵢ* = β (paper's L set).
+    AtHi,
+}
+
+/// Which rule the path runner applies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuleKind {
+    /// DVI_s, w-form (Cor. 9): O(l·n) per step, streaming.
+    DviW,
+    /// DVI_s*, θ-form (Cor. 8): O(l²) with a one-time Gram matrix.
+    DviTheta,
+    /// SSNSV baseline (needs solves at both grid extremes).
+    Ssnsv,
+    /// Enhanced SSNSV via variational inequalities (§5.2).
+    Essnsv,
+    /// No screening.
+    None,
+}
+
+impl RuleKind {
+    pub fn parse(s: &str) -> Option<RuleKind> {
+        match s {
+            "dvi" => Some(RuleKind::DviW),
+            "dvi-theta" => Some(RuleKind::DviTheta),
+            "ssnsv" => Some(RuleKind::Ssnsv),
+            "essnsv" => Some(RuleKind::Essnsv),
+            "none" => Some(RuleKind::None),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuleKind::DviW => "dvi",
+            RuleKind::DviTheta => "dvi-theta",
+            RuleKind::Ssnsv => "ssnsv",
+            RuleKind::Essnsv => "essnsv",
+            RuleKind::None => "none",
+        }
+    }
+}
+
+/// Summary of one screening application.
+#[derive(Clone, Debug)]
+pub struct ScreenReport {
+    pub decisions: Vec<Decision>,
+    pub n_lo: usize,
+    pub n_hi: usize,
+}
+
+impl ScreenReport {
+    pub fn from_decisions(decisions: Vec<Decision>) -> Self {
+        let n_lo = decisions.iter().filter(|&&d| d == Decision::AtLo).count();
+        let n_hi = decisions.iter().filter(|&&d| d == Decision::AtHi).count();
+        ScreenReport { decisions, n_lo, n_hi }
+    }
+
+    /// All-Keep report (the no-screening arm).
+    pub fn keep_all(l: usize) -> Self {
+        ScreenReport { decisions: vec![Decision::Keep; l], n_lo: 0, n_hi: 0 }
+    }
+
+    /// Fraction of instances screened out (the paper's rejection ratio).
+    pub fn rejection(&self) -> f64 {
+        if self.decisions.is_empty() {
+            return 0.0;
+        }
+        (self.n_lo + self.n_hi) as f64 / self.decisions.len() as f64
+    }
+
+    /// Indices left free.
+    pub fn free_indices(&self) -> Vec<usize> {
+        self.decisions
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == Decision::Keep)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Apply the decisions to a warm-start θ (screened coords snap to
+    /// their bound; kept coords are clamped into the box).
+    pub fn apply_to_theta(&self, inst: &Instance, theta: &mut [f64]) {
+        for (i, d) in self.decisions.iter().enumerate() {
+            match d {
+                Decision::AtLo => theta[i] = inst.lo[i],
+                Decision::AtHi => theta[i] = inst.hi[i],
+                Decision::Keep => {
+                    theta[i] = crate::linalg::clamp(theta[i], inst.lo[i], inst.hi[i])
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::problem::{Instance, Model};
+
+    #[test]
+    fn report_counts_and_rejection() {
+        let d = vec![Decision::Keep, Decision::AtLo, Decision::AtHi, Decision::AtLo];
+        let r = ScreenReport::from_decisions(d);
+        assert_eq!((r.n_lo, r.n_hi), (2, 1));
+        assert!((r.rejection() - 0.75).abs() < 1e-12);
+        assert_eq!(r.free_indices(), vec![0]);
+    }
+
+    #[test]
+    fn keep_all_is_empty_rejection() {
+        let r = ScreenReport::keep_all(10);
+        assert_eq!(r.rejection(), 0.0);
+        assert_eq!(r.free_indices().len(), 10);
+    }
+
+    #[test]
+    fn apply_to_theta_snaps_bounds() {
+        let ds = synth::toy_gaussian(1, 2, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let r = ScreenReport::from_decisions(vec![
+            Decision::AtLo,
+            Decision::AtHi,
+            Decision::Keep,
+            Decision::Keep,
+        ]);
+        let mut theta = vec![0.7, 0.2, 1.5, -0.5];
+        r.apply_to_theta(&inst, &mut theta);
+        assert_eq!(theta, vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn rulekind_parse_roundtrip() {
+        for k in [
+            RuleKind::DviW,
+            RuleKind::DviTheta,
+            RuleKind::Ssnsv,
+            RuleKind::Essnsv,
+            RuleKind::None,
+        ] {
+            assert_eq!(RuleKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(RuleKind::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,317 @@
+//! SSNSV (Ogawa et al., ICML 2013) and the paper's VI-enhanced variant
+//! ESSNSV (§5.2, Theorem 19) — the baselines DVI is compared against.
+//!
+//! Both bound w*(C) inside a region Ω and apply (R1″)/(R2″):
+//!
+//! ```text
+//!   min_{w∈Ω} ⟨w, x̄ᵢ⟩ > 1  ⇒  i ∈ R (θᵢ = 0)
+//!   max_{w∈Ω} ⟨w, x̄ᵢ⟩ < 1  ⇒  i ∈ L (θᵢ = 1)
+//! ```
+//!
+//! with x̄ᵢ = yᵢxᵢ. The region is the intersection of
+//!
+//! * a half-space from the variational inequality at the solved point
+//!   w_a := w*(C_k):  ⟨w_a, w − w_a⟩ ≥ 0, and
+//! * a ball from a feasible point ŵ := w*(C_max) of the loss-constrained
+//!   formulation (26):
+//!   * SSNSV (Eq. 27): ‖w‖ ≤ ‖ŵ‖ (center 0, radius ‖ŵ‖);
+//!   * ESSNSV (Eq. 28): ‖w − ŵ/2‖ ≤ ‖ŵ‖/2 — *half* the radius, obtained
+//!     by applying the same VI trick DVI uses; Ω′ ⊂ Ω, so ESSNSV
+//!     dominates SSNSV pointwise.
+//!
+//! The extremization over cone∩ball is Lemma 20's closed form,
+//! implemented in [`lemma20_min`].
+//!
+//! Path protocol (paper Table 2 "Init."): requires solving at *both* grid
+//! extremes — ŵ comes from C_max (feasible for every smaller C's loss
+//! level since the loss s(C) decreases as C grows... s(C_max) ≤ s(C) for
+//! C ≤ C_max), while the half-space anchor is the most recent solved point
+//! w*(C_k), valid for all C ≥ C_k.
+//!
+//! SSNSV is defined for SVM only (the 2013 paper and this paper's
+//! experiments); the constructor rejects LAD instances.
+
+use super::{Decision, ScreenReport};
+use crate::linalg::{self};
+use crate::problem::{Instance, Model};
+
+/// Inputs for one SSNSV/ESSNSV screening application.
+#[derive(Clone, Debug)]
+pub struct SsnsvContext<'a> {
+    /// w*(C_k) — optimal at the most recent solved path point (the
+    /// half-space anchor; the paper's w*(s_a)).
+    pub w_anchor: &'a [f64],
+    /// ŵ — a feasible point for the target loss level; along a C-path,
+    /// w*(C_max) (the paper's ŵ(s_b)).
+    pub w_feasible: &'a [f64],
+}
+
+/// SSNSV baseline rule; `enhanced = true` gives ESSNSV.
+#[derive(Clone, Copy, Debug)]
+pub struct Ssnsv {
+    pub enhanced: bool,
+}
+
+impl Ssnsv {
+    pub fn new(enhanced: bool) -> Self {
+        Ssnsv { enhanced }
+    }
+
+    /// Screen all instances. Panics on LAD instances (rule is SVM-only).
+    pub fn screen(&self, inst: &Instance, ctx: &SsnsvContext) -> ScreenReport {
+        assert!(
+            inst.model != Model::Lad,
+            "SSNSV/ESSNSV are derived for SVM only"
+        );
+        let w_a = ctx.w_anchor;
+        let w_hat = ctx.w_feasible;
+        assert_eq!(w_a.len(), inst.dim());
+        assert_eq!(w_hat.len(), inst.dim());
+
+        let wa_norm_sq = linalg::norm_sq(w_a);
+        let what_norm = linalg::norm(w_hat);
+        // Degenerate anchor (w_a = 0): the half-space is vacuous; fall
+        // back to ball-only bounds (Cauchy–Schwarz on the ball).
+        let cone = if wa_norm_sq > 0.0 {
+            Some(Cone { u: w_a.iter().map(|v| -v).collect::<Vec<f64>>(), d: -wa_norm_sq })
+        } else {
+            None
+        };
+        let (o, r): (Vec<f64>, f64) = if self.enhanced {
+            (w_hat.iter().map(|v| 0.5 * v).collect(), 0.5 * what_norm)
+        } else {
+            (vec![0.0; inst.dim()], what_norm)
+        };
+
+        let l = inst.len();
+        let mut decisions = Vec::with_capacity(l);
+        let mut xbar = vec![0.0; inst.dim()];
+        for i in 0..l {
+            // x̄ᵢ = yᵢxᵢ = −zᵢ for (weighted) SVM.
+            for (x, z) in xbar.iter_mut().zip(inst.z.row(i)) {
+                *x = -z;
+            }
+            let lower = match &cone {
+                Some(c) => lemma20_min(&xbar, &c.u, c.d, &o, r),
+                None => ball_min(&xbar, &o, r),
+            };
+            if lower > inst.ybar[i] {
+                decisions.push(Decision::AtLo);
+                continue;
+            }
+            // max⟨w,x̄⟩ = −min⟨w,−x̄⟩
+            let neg: Vec<f64> = xbar.iter().map(|v| -v).collect();
+            let upper = -match &cone {
+                Some(c) => lemma20_min(&neg, &c.u, c.d, &o, r),
+                None => ball_min(&neg, &o, r),
+            };
+            if upper < inst.ybar[i] {
+                decisions.push(Decision::AtHi);
+            } else {
+                decisions.push(Decision::Keep);
+            }
+        }
+        ScreenReport::from_decisions(decisions)
+    }
+}
+
+struct Cone {
+    u: Vec<f64>,
+    d: f64,
+}
+
+/// min ⟨v, w⟩ over ‖w − o‖ ≤ r (no half-space): vᵀo − r‖v‖.
+fn ball_min(v: &[f64], o: &[f64], r: f64) -> f64 {
+    linalg::dot(v, o) - r * linalg::norm(v)
+}
+
+/// Lemma 20: minimize vᵀw subject to uᵀw ≤ d and ‖w − o‖ ≤ r (r > 0).
+///
+/// With d′ = d − uᵀo:
+/// * if vᵀu + ‖v‖·d′/r ≥ 0 the ball constraint alone is active:
+///   f* = vᵀo − r‖v‖;
+/// * otherwise both are active:
+///   f* = vᵀo − ‖v⊥‖·√(r² − d′²/‖u‖²) + vᵀu·d′/‖u‖²,
+///   v⊥ = v − (vᵀu/‖u‖²)·u.
+pub fn lemma20_min(v: &[f64], u: &[f64], d: f64, o: &[f64], r: f64) -> f64 {
+    debug_assert!(r > 0.0);
+    let v_norm = linalg::norm(v);
+    if v_norm == 0.0 {
+        return linalg::dot(v, o); // constant objective
+    }
+    let u_norm_sq = linalg::norm_sq(u);
+    if u_norm_sq == 0.0 {
+        // half-space 0 ≤ d: vacuous if d ≥ 0, infeasible otherwise —
+        // treat as ball-only (callers guarantee feasibility).
+        return ball_min(v, o, r);
+    }
+    let d_prime = d - linalg::dot(u, o);
+    let vu = linalg::dot(v, u);
+    if vu + v_norm * d_prime / r >= 0.0 {
+        return linalg::dot(v, o) - r * v_norm;
+    }
+    // both constraints active
+    let scale = vu / u_norm_sq;
+    let vperp_sq = (linalg::norm_sq(v) - scale * vu).max(0.0);
+    let inside = (r * r - d_prime * d_prime / u_norm_sq).max(0.0);
+    linalg::dot(v, o) - vperp_sq.sqrt() * inside.sqrt() + vu * d_prime / u_norm_sq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SolverConfig;
+    use crate::data::synth;
+    use crate::data::Rng;
+    use crate::problem::{classify_kkt, KktClass};
+    use crate::solver::CdSolver;
+
+    fn solve(inst: &Instance, c: f64) -> crate::solver::SolveResult {
+        CdSolver::new(SolverConfig { tol: 1e-9, ..Default::default() })
+            .solve(inst, c, inst.cold_start())
+    }
+
+    /// Monte-Carlo check of Lemma 20 against random feasible points.
+    #[test]
+    fn lemma20_lower_bounds_feasible_points() {
+        let mut rng = Rng::new(77);
+        for trial in 0..200 {
+            let n = 2 + (trial % 5);
+            let v: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+            let u: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+            let o: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+            let r = rng.uniform_in(0.3, 2.0);
+            // pick d so the problem is feasible: require the center obeys
+            // the half-space with slack
+            let d = linalg::dot(&u, &o) + rng.uniform_in(0.0, r * linalg::norm(&u));
+            let fstar = lemma20_min(&v, &u, d, &o, r);
+            // sample random points in the ball, project to half-space by
+            // rejection
+            let mut checked = 0;
+            for _ in 0..500 {
+                let dir: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+                let nn = linalg::norm(&dir);
+                if nn == 0.0 {
+                    continue;
+                }
+                let rad = r * rng.uniform().powf(1.0 / n as f64);
+                let w: Vec<f64> = o
+                    .iter()
+                    .zip(&dir)
+                    .map(|(oi, di)| oi + rad * di / nn)
+                    .collect();
+                if linalg::dot(&u, &w) <= d {
+                    checked += 1;
+                    let val = linalg::dot(&v, &w);
+                    assert!(
+                        val >= fstar - 1e-9,
+                        "trial {trial}: feasible value {val} < f* {fstar}"
+                    );
+                }
+            }
+            assert!(checked > 0, "no feasible samples in trial {trial}");
+        }
+    }
+
+    #[test]
+    fn lemma20_ball_only_case() {
+        // u pointing away from v so the half-space is inactive
+        let v = vec![1.0, 0.0];
+        let u = vec![1.0, 0.0];
+        let o = vec![0.0, 0.0];
+        // d large ⇒ half-space vacuous in the ball
+        let f = lemma20_min(&v, &u, 100.0, &o, 2.0);
+        assert!((f - (-2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lemma20_both_active_case() {
+        // minimize w_x over ‖w‖≤1 intersect w_x ≥ 0 (uᵀw ≤ 0 with
+        // u = (−1, 0)): optimum 0 at the boundary circle∩line... the
+        // minimum of v=(1,0) over {w_x ≥ 0, ‖w‖ ≤ 1} is 0.
+        let v = vec![1.0, 0.0];
+        let u = vec![-1.0, 0.0];
+        let f = lemma20_min(&v, &u, 0.0, &[0.0, 0.0], 1.0);
+        assert!(f.abs() < 1e-12, "{f}");
+    }
+
+    fn setup_path(ds_seed: u32) -> (Instance, Vec<f64>, Vec<f64>, f64, f64) {
+        let ds = synth::toy_gaussian(ds_seed, 80, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let (c_min, c_max) = (0.1, 2.0);
+        let w_min = {
+            let r = solve(&inst, c_min);
+            inst.w_from_theta(c_min, &r.theta)
+        };
+        let w_max = {
+            let r = solve(&inst, c_max);
+            inst.w_from_theta(c_max, &r.theta)
+        };
+        (inst, w_min, w_max, c_min, c_max)
+    }
+
+    #[test]
+    fn ssnsv_safe_and_essnsv_dominates() {
+        let (inst, w_min, w_max, _c_min, c_max) = setup_path(41);
+        let ctx = SsnsvContext { w_anchor: &w_min, w_feasible: &w_max };
+        let base = Ssnsv::new(false).screen(&inst, &ctx);
+        let enh = Ssnsv::new(true).screen(&inst, &ctx);
+
+        // ESSNSV's region is a subset ⇒ every decision SSNSV makes,
+        // ESSNSV makes too (pointwise dominance).
+        for (b, e) in base.decisions.iter().zip(&enh.decisions) {
+            if *b != Decision::Keep {
+                assert_eq!(b, e, "ESSNSV lost a decision SSNSV made");
+            }
+        }
+        assert!(enh.rejection() >= base.rejection());
+
+        // safety vs the true membership at an interior C
+        let c_mid = 0.7;
+        let r_mid = solve(&inst, c_mid);
+        let w_mid = inst.w_from_theta(c_mid, &r_mid.theta);
+        let truth = classify_kkt(&inst, &w_mid, 1e-7);
+        for (i, d) in enh.decisions.iter().enumerate() {
+            match d {
+                Decision::AtLo => assert_eq!(truth.classes[i], KktClass::R, "i={i}"),
+                Decision::AtHi => assert_eq!(truth.classes[i], KktClass::L, "i={i}"),
+                Decision::Keep => {}
+            }
+        }
+        // also safe at the far end of the interval
+        let r_end = solve(&inst, c_max);
+        let w_end = inst.w_from_theta(c_max, &r_end.theta);
+        let truth_end = classify_kkt(&inst, &w_end, 1e-7);
+        for (i, d) in enh.decisions.iter().enumerate() {
+            match d {
+                Decision::AtLo => assert_eq!(truth_end.classes[i], KktClass::R, "i={i}"),
+                Decision::AtHi => assert_eq!(truth_end.classes[i], KktClass::L, "i={i}"),
+                Decision::Keep => {}
+            }
+        }
+    }
+
+    #[test]
+    fn zero_anchor_falls_back_to_ball() {
+        let ds = synth::toy_gaussian(42, 20, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let zeros = vec![0.0; 2];
+        let r = solve(&inst, 1.0);
+        let w_max = inst.w_from_theta(1.0, &r.theta);
+        let ctx = SsnsvContext { w_anchor: &zeros, w_feasible: &w_max };
+        // must not panic; ball-only bounds are valid (w*(C) ∈ ball)
+        let rep = Ssnsv::new(true).screen(&inst, &ctx);
+        assert_eq!(rep.decisions.len(), inst.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "SVM only")]
+    fn rejects_lad() {
+        let mut rng = Rng::new(9);
+        let ds = synth::random_regression(&mut rng, 10, 2);
+        let inst = Instance::from_dataset(Model::Lad, &ds);
+        let w = vec![0.0; 2];
+        let ctx = SsnsvContext { w_anchor: &w, w_feasible: &w };
+        Ssnsv::new(false).screen(&inst, &ctx);
+    }
+}

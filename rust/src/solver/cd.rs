@@ -1,0 +1,379 @@
+//! Dual coordinate descent for min_{θ∈box} C/2·‖Zᵀθ‖² − ⟨ȳ, θ⟩.
+//!
+//! Per coordinate (problem (16)/(17)): with u = Zᵀθ maintained
+//! incrementally, the 1-D subproblem over t has the closed form
+//!
+//! ```text
+//!   ∇ᵢ = C·⟨zᵢ, u⟩ − ȳᵢ
+//!   θᵢ ← clip(θᵢ − ∇ᵢ / (C·‖zᵢ‖²), loᵢ, hiᵢ);   u += Δθᵢ·zᵢ
+//! ```
+//!
+//! Convergence: maximal projected-gradient violation across a sweep below
+//! `tol` (LIBLINEAR's criterion). Shrinking removes bound-stuck,
+//! clearly-non-violating coordinates from the sweep and re-checks the full
+//! problem before declaring convergence, so the answer is identical with
+//! or without shrinking.
+
+use crate::config::SolverConfig;
+use crate::data::Rng;
+use crate::linalg::{self};
+use crate::problem::Instance;
+
+/// Outcome of a solve.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    /// Full-length dual vector (fixed coordinates passed through).
+    pub theta: Vec<f64>,
+    /// u = Zᵀθ at the returned point.
+    pub u: Vec<f64>,
+    pub stats: SolverStats,
+}
+
+/// Work counters for benchmarking (the paper's Tables 1–2 compare solver
+/// work with and without screening).
+#[derive(Clone, Debug, Default)]
+pub struct SolverStats {
+    pub outer_iters: usize,
+    pub coord_updates: u64,
+    /// Coordinate-gradient evaluations — each costs an O(n) dot product.
+    /// This is the honest work metric: shrinking avoids *updates* but the
+    /// sweep still pays the gradient scan for every active coordinate.
+    pub grad_evals: u64,
+    pub converged: bool,
+    pub final_violation: f64,
+    /// Number of coordinates actually optimized (l − screened).
+    pub active_coords: usize,
+}
+
+/// The solver object (holds config; stateless between solves).
+#[derive(Clone, Debug)]
+pub struct CdSolver {
+    pub cfg: SolverConfig,
+}
+
+impl CdSolver {
+    pub fn new(cfg: SolverConfig) -> Self {
+        CdSolver { cfg }
+    }
+
+    /// Solve with every coordinate free, cold or warm started at `theta0`.
+    pub fn solve(&self, inst: &Instance, c: f64, theta0: Vec<f64>) -> SolveResult {
+        let free: Vec<usize> = (0..inst.len()).collect();
+        self.solve_free(inst, c, theta0, &free)
+    }
+
+    /// Solve the reduced problem of Lemma 4: coordinates not in `free`
+    /// stay at their `theta0` value (screened to a bound by the caller),
+    /// and their contribution enters through u = Zᵀθ — mathematically
+    /// identical to the ŷ = ȳ − C·Ĝ₁₂θ̂ offset in the paper.
+    pub fn solve_free(
+        &self,
+        inst: &Instance,
+        c: f64,
+        theta: Vec<f64>,
+        free: &[usize],
+    ) -> SolveResult {
+        let u = inst.u_from_theta(&theta);
+        self.solve_free_with_u(inst, c, theta, free, u)
+    }
+
+    /// Hot-path variant of [`Self::solve_free`]: the caller supplies
+    /// u = Zᵀθ consistent with `theta` (maintained incrementally along a
+    /// path), avoiding the O(l·n) recomputation per step that would
+    /// otherwise swamp the savings screening buys. The returned `u` is
+    /// likewise incrementally maintained.
+    pub fn solve_free_with_u(
+        &self,
+        inst: &Instance,
+        c: f64,
+        mut theta: Vec<f64>,
+        free: &[usize],
+        mut u: Vec<f64>,
+    ) -> SolveResult {
+        assert_eq!(theta.len(), inst.len());
+        assert_eq!(u.len(), inst.dim());
+        assert!(c > 0.0, "C must be positive");
+        debug_assert!(inst.in_box(&theta, 1e-9), "warm start leaves the box");
+        debug_assert!(
+            crate::linalg::max_abs_diff(&u, &inst.u_from_theta(&theta)) < 1e-6,
+            "caller-supplied u inconsistent with theta"
+        );
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut stats = SolverStats { active_coords: free.len(), ..Default::default() };
+
+        // Active set for shrinking; indices into `free`'s coordinate ids.
+        let mut active: Vec<usize> = free.to_vec();
+        // Handle degenerate zero-norm rows up front: their gradient is the
+        // constant −ȳᵢ, so the optimum clips straight to a bound.
+        active.retain(|&i| {
+            if inst.z_norms_sq[i] > 0.0 {
+                true
+            } else {
+                let old = theta[i];
+                let opt = if inst.ybar[i] > 0.0 {
+                    inst.hi[i]
+                } else if inst.ybar[i] < 0.0 {
+                    inst.lo[i]
+                } else {
+                    old
+                };
+                theta[i] = opt; // no u update needed: zᵢ = 0
+                false
+            }
+        });
+
+        // Shrinking thresholds (LIBLINEAR §4): track max/min projected
+        // gradient of the previous sweep.
+        let mut m_bar = f64::INFINITY;
+        let mut shrunk = false;
+
+        let tol = self.cfg.tol;
+        loop {
+            if stats.outer_iters >= self.cfg.max_outer {
+                break;
+            }
+            stats.outer_iters += 1;
+            rng.shuffle(&mut active);
+
+            let mut max_violation = 0.0f64;
+            let mut kept = Vec::with_capacity(active.len());
+            for &i in &active {
+                let zi = inst.z.row(i);
+                stats.grad_evals += 1;
+                let g = c * linalg::dot(zi, &u) - inst.ybar[i];
+                let (lo, hi) = (inst.lo[i], inst.hi[i]);
+                let th = theta[i];
+
+                // projected gradient
+                let pg = if th <= lo + 1e-15 {
+                    // at lower bound we can only increase θ ⇒ only a
+                    // negative gradient is a violation
+                    if g > m_bar && self.cfg.shrink {
+                        // clearly stuck at the bound: shrink out
+                        continue;
+                    }
+                    g.min(0.0)
+                } else if th >= hi - 1e-15 {
+                    if g < -m_bar && self.cfg.shrink {
+                        continue;
+                    }
+                    g.max(0.0)
+                } else {
+                    g
+                };
+                kept.push(i);
+
+                let viol = pg.abs();
+                max_violation = max_violation.max(viol);
+                if viol > 1e-15 {
+                    let denom = c * inst.z_norms_sq[i];
+                    let new = linalg::clamp(th - g / denom, lo, hi);
+                    let delta = new - th;
+                    if delta != 0.0 {
+                        theta[i] = new;
+                        linalg::axpy(delta, zi, &mut u);
+                        stats.coord_updates += 1;
+                    }
+                }
+            }
+            shrunk = shrunk || kept.len() < active.len();
+            active = kept;
+            stats.final_violation = max_violation;
+
+            if max_violation < tol {
+                if self.cfg.shrink && shrunk {
+                    // re-expand and confirm on the full free set
+                    active = free
+                        .iter()
+                        .copied()
+                        .filter(|&i| inst.z_norms_sq[i] > 0.0)
+                        .collect();
+                    shrunk = false;
+                    m_bar = f64::INFINITY;
+                    // one more sweep over everything
+                    continue;
+                }
+                stats.converged = true;
+                break;
+            }
+            // relax the shrink threshold toward the current violation
+            m_bar = if max_violation.is_finite() { max_violation } else { f64::INFINITY };
+            if m_bar <= tol {
+                m_bar = f64::INFINITY;
+            }
+        }
+
+        // u is maintained incrementally (f64 axpy drift is ~machine-eps
+        // per update and validated against full recomputes in tests);
+        // recomputing here would reintroduce an O(l·n) cost per path step
+        // that screening is supposed to eliminate. Path runners refresh u
+        // periodically for hygiene.
+        SolveResult { theta, u, stats }
+    }
+
+    /// Maximum projected-gradient violation of θ for the full problem —
+    /// the optimality measure (0 at the exact optimum).
+    pub fn kkt_violation(inst: &Instance, c: f64, theta: &[f64]) -> f64 {
+        let u = inst.u_from_theta(theta);
+        let mut worst = 0.0f64;
+        for i in 0..inst.len() {
+            let g = c * linalg::dot(inst.z.row(i), &u) - inst.ybar[i];
+            let pg = if theta[i] <= inst.lo[i] + 1e-12 {
+                g.min(0.0)
+            } else if theta[i] >= inst.hi[i] - 1e-12 {
+                g.max(0.0)
+            } else {
+                g
+            };
+            worst = worst.max(pg.abs());
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SolverConfig;
+    use crate::data::{synth, Rng};
+    use crate::problem::{Instance, Model};
+
+    fn solver() -> CdSolver {
+        CdSolver::new(SolverConfig { tol: 1e-8, max_outer: 10_000, shrink: true, seed: 1 })
+    }
+
+    #[test]
+    fn solves_tiny_svm_exactly() {
+        // two points, one per class, at x = ±1 (1-D). For C ≥ 1/2 the
+        // margin is attained with w = 1 when C·2 ≥ ... closed form:
+        // dual: min C/2(θ₁+θ₂)²·1 ... z₁ = −x₁ = −1 (y=+1,x=1),
+        // z₂ = −(−1)(−1) = −1. So Zᵀθ = −(θ₁+θ₂), g = C/2(θ₁+θ₂)² − θ₁ − θ₂.
+        // With s = θ₁+θ₂ ∈ [0,2]: min C/2 s² − s ⇒ s* = min(1/C, 2).
+        use crate::data::{Dataset, Task};
+        use crate::linalg::RowMatrix;
+        let x = RowMatrix::from_flat(2, 1, vec![1.0, -1.0]);
+        let ds = Dataset::new("2pt", Task::Classification, x, vec![1.0, -1.0]);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        for &c in &[0.3, 0.5, 1.0, 5.0] {
+            let r = solver().solve(&inst, c, inst.cold_start());
+            let s = r.theta[0] + r.theta[1];
+            let expect = (1.0 / c).min(2.0);
+            assert!((s - expect).abs() < 1e-6, "C={c}: s={s} expect={expect}");
+            assert!(r.stats.converged);
+        }
+    }
+
+    #[test]
+    fn kkt_violation_small_after_solve() {
+        let ds = synth::toy_gaussian(2, 100, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let r = solver().solve(&inst, 1.0, inst.cold_start());
+        assert!(r.stats.converged);
+        let v = CdSolver::kkt_violation(&inst, 1.0, &r.theta);
+        assert!(v < 1e-6, "violation {v}");
+        assert!(inst.in_box(&r.theta, 1e-12));
+    }
+
+    #[test]
+    fn lad_kkt_small_after_solve() {
+        let mut rng = Rng::new(3);
+        let ds = synth::random_regression(&mut rng, 80, 5);
+        let inst = Instance::from_dataset(Model::Lad, &ds);
+        let r = solver().solve(&inst, 0.5, inst.cold_start());
+        let v = CdSolver::kkt_violation(&inst, 0.5, &r.theta);
+        assert!(v < 1e-6, "violation {v}");
+    }
+
+    #[test]
+    fn shrinking_matches_no_shrinking() {
+        let ds = synth::toy_gaussian(7, 80, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let with = CdSolver::new(SolverConfig { shrink: true, tol: 1e-10, ..Default::default() })
+            .solve(&inst, 2.0, inst.cold_start());
+        let without = CdSolver::new(SolverConfig { shrink: false, tol: 1e-10, ..Default::default() })
+            .solve(&inst, 2.0, inst.cold_start());
+        // same optimum (strongly convex in u ⇒ u unique; θ may differ on
+        // degenerate faces, so compare objectives and u)
+        let g1 = inst.dual_objective(2.0, &with.theta);
+        let g2 = inst.dual_objective(2.0, &without.theta);
+        assert!((g1 - g2).abs() < 1e-8, "{g1} vs {g2}");
+        assert!(crate::linalg::max_abs_diff(&with.u, &without.u) < 1e-5);
+    }
+
+    #[test]
+    fn warm_start_reduces_work() {
+        let ds = synth::toy_gaussian(8, 300, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let s = solver();
+        let r1 = s.solve(&inst, 1.0, inst.cold_start());
+        // warm start at a slightly larger C
+        let warm = s.solve(&inst, 1.1, r1.theta.clone());
+        let cold = s.solve(&inst, 1.1, inst.cold_start());
+        assert!(
+            warm.stats.coord_updates < cold.stats.coord_updates,
+            "warm {} !< cold {}",
+            warm.stats.coord_updates,
+            cold.stats.coord_updates
+        );
+    }
+
+    #[test]
+    fn frozen_coordinates_stay_fixed() {
+        let ds = synth::toy_gaussian(9, 50, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let full = solver().solve(&inst, 1.0, inst.cold_start());
+        // freeze coordinates that are at bounds in the optimum, re-solve
+        let free: Vec<usize> = (0..inst.len())
+            .filter(|&i| full.theta[i] > 1e-9 && full.theta[i] < 1.0 - 1e-9)
+            .collect();
+        let mut theta0 = full.theta.clone();
+        // jiggle the free coordinates away from the answer
+        for &i in &free {
+            theta0[i] = 0.5;
+        }
+        let red = solver().solve_free(&inst, 1.0, theta0, &free);
+        for i in 0..inst.len() {
+            if !free.contains(&i) {
+                assert_eq!(red.theta[i], full.theta[i], "frozen coord {i} moved");
+            }
+        }
+        let g_full = inst.dual_objective(1.0, &full.theta);
+        let g_red = inst.dual_objective(1.0, &red.theta);
+        assert!((g_full - g_red).abs() < 1e-7, "{g_full} vs {g_red}");
+    }
+
+    #[test]
+    fn zero_norm_rows_clip_to_bounds() {
+        use crate::data::{Dataset, Task};
+        use crate::linalg::RowMatrix;
+        // one all-zero regression row with positive target
+        let x = RowMatrix::from_flat(3, 2, vec![1.0, 0.5, 0.0, 0.0, -1.0, 2.0]);
+        let ds = Dataset::new("z", Task::Regression, x, vec![0.3, 2.0, -0.7]);
+        let inst = Instance::from_dataset(Model::Lad, &ds);
+        let r = solver().solve(&inst, 1.0, inst.cold_start());
+        assert_eq!(r.theta[1], 1.0, "zero row with y>0 must sit at β");
+    }
+
+    #[test]
+    fn respects_max_outer() {
+        let ds = synth::toy_gaussian(10, 200, 0.5, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let s = CdSolver::new(SolverConfig { max_outer: 1, tol: 1e-14, ..Default::default() });
+        let r = s.solve(&inst, 10.0, inst.cold_start());
+        assert_eq!(r.stats.outer_iters, 1);
+        assert!(!r.stats.converged);
+    }
+
+    #[test]
+    fn primal_dual_gap_closes() {
+        let ds = synth::toy_gaussian(11, 60, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let c = 0.7;
+        let r = solver().solve(&inst, c, inst.cold_start());
+        let w = inst.w_from_theta(c, &r.theta);
+        let p = inst.primal_objective(c, &w);
+        // optimal value of (3) equals −C·g(θ*) under our scaling of (12)
+        let d = -c * inst.dual_objective(c, &r.theta);
+        assert!((p - d).abs() < 1e-5 * p.abs().max(1.0), "gap {p} vs {d}");
+    }
+}

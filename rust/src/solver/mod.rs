@@ -1,0 +1,19 @@
+//! Solvers for the dual boxed QP (12)/(15).
+//!
+//! The workhorse is [`cd::CdSolver`] — a LIBLINEAR-style dual coordinate
+//! descent (Hsieh et al., ICML'08; the paper's §2 "Method to solve problem
+//! (15)") with optional active-set shrinking and warm starts. It solves
+//! the *reduced* problem of Lemma 4 natively: fixed coordinates are simply
+//! frozen and their contribution stays inside the running vector
+//! u = Zᵀθ, which is exactly the ŷ-offset construction of the lemma
+//! without materializing any sub-matrix.
+//!
+//! A projected-gradient solver ([`pg::PgSolver`]) is included as an
+//! independent cross-check used by the test suite (different algorithm,
+//! same optimum).
+
+pub mod cd;
+pub mod pg;
+
+pub use cd::{CdSolver, SolveResult, SolverStats};
+pub use pg::PgSolver;

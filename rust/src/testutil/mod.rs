@@ -1,0 +1,110 @@
+//! Property-testing helper ("shrink-lite").
+//!
+//! proptest is not available offline, so this module provides the minimal
+//! machinery our invariant tests need: run a property over N seeded random
+//! cases; on failure, retry with a deterministic sequence of *smaller*
+//! cases derived from the failing seed and report the smallest failure.
+
+use crate::data::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 32, seed: 0xBEEF }
+    }
+}
+
+/// Size hint passed to generators; shrinking lowers it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Size(pub usize);
+
+/// Run `prop(rng, size)`; `Ok(())` on pass, `Err(msg)` describing the
+/// violation on failure. Panics with a reproduction line on failure.
+pub fn check<F>(cfg: PropConfig, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng, Size) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = Size(4 + case * 4); // grow sizes across cases
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // try to find a smaller failing size with the same seed
+            let mut smallest = (size, msg);
+            let mut s = size.0;
+            while s > 4 {
+                s /= 2;
+                let mut rng = Rng::new(case_seed);
+                match prop(&mut rng, Size(s)) {
+                    Err(m) => smallest = (Size(s), m),
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property `{name}` failed (seed={case_seed:#x}, size={}): {}",
+                smallest.0 .0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert |a−b| ≤ atol + rtol·|b|, with a readable message.
+pub fn assert_close(a: f64, b: f64, atol: f64, rtol: f64, what: &str) -> Result<(), String> {
+    let tol = atol + rtol * b.abs();
+    if (a - b).abs() > tol {
+        Err(format!("{what}: {a} vs {b} (|Δ|={} > tol={tol})", (a - b).abs()))
+    } else {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(PropConfig { cases: 8, seed: 1 }, "tautology", |rng, size| {
+            let v: Vec<f64> = (0..size.0).map(|_| rng.uniform()).collect();
+            if v.iter().all(|&x| (0.0..1.0).contains(&x)) {
+                Ok(())
+            } else {
+                Err("uniform out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_seed() {
+        check(PropConfig { cases: 2, seed: 2 }, "always-fails", |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrink_reports_smaller_size() {
+        let result = std::panic::catch_unwind(|| {
+            check(PropConfig { cases: 1, seed: 3 }, "fails-when-big", |_, size| {
+                if size.0 >= 4 {
+                    Err("too big".into())
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("size=4"), "{msg}");
+    }
+
+    #[test]
+    fn assert_close_behaviour() {
+        assert!(assert_close(1.0, 1.0 + 1e-9, 1e-8, 0.0, "x").is_ok());
+        assert!(assert_close(1.0, 2.0, 1e-8, 0.0, "x").is_err());
+        assert!(assert_close(100.0, 100.5, 0.0, 0.01, "x").is_ok());
+    }
+}

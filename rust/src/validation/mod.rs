@@ -1,0 +1,152 @@
+//! Safety validation — machine-checking the paper's central claim that
+//! DVI (and SSNSV/ESSNSV) are *safe*: no screened instance is a true
+//! support vector.
+//!
+//! [`check_safety`] solves the next path point exactly (no screening) and
+//! compares every non-`Keep` decision against the KKT ground truth;
+//! [`check_exactness`] verifies the reduced solve reproduces the full
+//! optimum. Both are used by the integration suite and by
+//! `PathConfig::validate` in spot-check form.
+
+use crate::config::SolverConfig;
+use crate::problem::{classify_kkt, Instance, KktClass};
+use crate::screening::{Decision, ScreenReport};
+use crate::solver::CdSolver;
+
+/// Violation found by [`check_safety`].
+#[derive(Clone, Debug)]
+pub struct SafetyViolation {
+    pub index: usize,
+    pub decided: Decision,
+    pub truth: KktClass,
+    pub margin_gap: f64,
+}
+
+/// Result of a safety check.
+#[derive(Clone, Debug)]
+pub struct SafetyReport {
+    pub violations: Vec<SafetyViolation>,
+    pub n_checked: usize,
+    pub n_screened: usize,
+}
+
+impl SafetyReport {
+    pub fn is_safe(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Solve at `c` exactly and verify every screening decision. `kkt_tol` is
+/// the dead-band treated as "support vector" in the ground truth (a
+/// screened instance inside the dead-band counts as a violation — we are
+/// strict).
+pub fn check_safety(
+    inst: &Instance,
+    c: f64,
+    report: &ScreenReport,
+    solver_cfg: &SolverConfig,
+    kkt_tol: f64,
+) -> SafetyReport {
+    let solver = CdSolver::new(solver_cfg.clone());
+    let full = solver.solve(inst, c, inst.cold_start());
+    let w = inst.w_from_theta(c, &full.theta);
+    let truth = classify_kkt(inst, &w, kkt_tol);
+
+    let mut violations = Vec::new();
+    let mut n_screened = 0;
+    for (i, d) in report.decisions.iter().enumerate() {
+        let expected = match d {
+            Decision::Keep => continue,
+            Decision::AtLo => KktClass::R,
+            Decision::AtHi => KktClass::L,
+        };
+        n_screened += 1;
+        if truth.classes[i] != expected {
+            let s = -crate::linalg::dot(&w, inst.z.row(i));
+            violations.push(SafetyViolation {
+                index: i,
+                decided: *d,
+                truth: truth.classes[i],
+                margin_gap: s - inst.ybar[i],
+            });
+        }
+    }
+    SafetyReport { violations, n_checked: report.decisions.len(), n_screened }
+}
+
+/// Verify a reduced solve equals the full solve: dual objectives agree to
+/// `tol` and u vectors agree in ℓ∞. Returns Err with a description on
+/// mismatch.
+pub fn check_exactness(
+    inst: &Instance,
+    c: f64,
+    reduced_theta: &[f64],
+    solver_cfg: &SolverConfig,
+    tol: f64,
+) -> Result<(), String> {
+    let solver = CdSolver::new(solver_cfg.clone());
+    let full = solver.solve(inst, c, inst.cold_start());
+    let g_red = inst.dual_objective(c, reduced_theta);
+    let g_full = inst.dual_objective(c, &full.theta);
+    if (g_red - g_full).abs() > tol * g_full.abs().max(1.0) {
+        return Err(format!(
+            "objective mismatch at C={c}: reduced {g_red} vs full {g_full}"
+        ));
+    }
+    let u_red = inst.u_from_theta(reduced_theta);
+    let diff = crate::linalg::max_abs_diff(&u_red, &full.u);
+    // u is unique (strong convexity in u); θ need not be
+    let scale = crate::linalg::norm(&full.u).max(1.0);
+    if diff > 1e3 * tol * scale {
+        return Err(format!("u mismatch at C={c}: ℓ∞ diff {diff}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::problem::Model;
+    use crate::screening::Dvi;
+
+    #[test]
+    fn dvi_screening_passes_safety() {
+        let ds = synth::toy_gaussian(51, 100, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let cfg = SolverConfig { tol: 1e-9, ..Default::default() };
+        let solver = CdSolver::new(cfg.clone());
+        let r = solver.solve(&inst, 0.5, inst.cold_start());
+        let rep = Dvi::new_w().screen(&inst, 0.5, 1.0, &r.theta, &r.u);
+        let safety = check_safety(&inst, 1.0, &rep, &cfg, 1e-7);
+        assert!(safety.is_safe(), "{:?}", safety.violations);
+        assert!(safety.n_screened > 0);
+        assert_eq!(safety.n_checked, 200);
+    }
+
+    #[test]
+    fn fabricated_bad_decision_is_caught() {
+        let ds = synth::toy_gaussian(52, 50, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let cfg = SolverConfig { tol: 1e-9, ..Default::default() };
+        // claim everything is AtLo — certainly unsafe on an overlapping toy
+        let rep = crate::screening::ScreenReport::from_decisions(vec![
+            Decision::AtLo;
+            inst.len()
+        ]);
+        let safety = check_safety(&inst, 1.0, &rep, &cfg, 1e-7);
+        assert!(!safety.is_safe());
+    }
+
+    #[test]
+    fn exactness_detects_wrong_theta() {
+        let ds = synth::toy_gaussian(53, 40, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let cfg = SolverConfig { tol: 1e-9, ..Default::default() };
+        let solver = CdSolver::new(cfg.clone());
+        let good = solver.solve(&inst, 1.0, inst.cold_start());
+        assert!(check_exactness(&inst, 1.0, &good.theta, &cfg, 1e-6).is_ok());
+        let bad = vec![0.5; inst.len()];
+        assert!(check_exactness(&inst, 1.0, &bad, &cfg, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Coordinator end-to-end: pool scheduling, service framing, failure
+//! isolation, and metrics accounting.
+
+use dvi_screen::config::{GridConfig, RunConfig, SolverConfig};
+use dvi_screen::coordinator::{JobSpec, ScreeningService, WorkerPool};
+
+fn quick(dataset: &str, model: &str, rule: &str) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        dataset: dataset.into(),
+        scale: 0.03,
+        rule: rule.into(),
+        grid: GridConfig { c_min: 0.01, c_max: 10.0, points: 5 },
+        solver: SolverConfig { tol: 1e-5, max_outer: 20_000, ..Default::default() },
+        use_pjrt: false,
+        validate: true,
+    }
+}
+
+#[test]
+fn pool_runs_the_paper_matrix() {
+    // the paper's full rule×dataset matrix at miniature scale
+    let mut specs = Vec::new();
+    let mut id = 0;
+    for ds in ["toy1", "toy2", "toy3"] {
+        for rule in ["none", "dvi", "dvi-theta", "ssnsv", "essnsv"] {
+            specs.push(JobSpec { id, run: quick(ds, "svm", rule) });
+            id += 1;
+        }
+    }
+    for ds in ["magic", "computer", "houses"] {
+        let mut run = quick(ds, "lad", "dvi");
+        // plain dual CD converges slowly on LAD at large C; keep the
+        // miniature matrix inside a (generous) iteration cap
+        run.grid = GridConfig { c_min: 0.01, c_max: 1.0, points: 5 };
+        run.solver.max_outer = 300_000;
+        specs.push(JobSpec { id, run });
+        id += 1;
+    }
+    let pool = WorkerPool::new(4);
+    let outcomes = pool.run_all(specs);
+    assert_eq!(outcomes.len(), 18);
+    for o in &outcomes {
+        let s = o.result.as_ref().unwrap_or_else(|e| panic!("job {}: {e}", o.id));
+        if let Some(v) = s.worst_violation {
+            assert!(v < 1e-4, "job {} violation {v}", o.id);
+        }
+    }
+    assert_eq!(pool.metrics.counter("jobs_done").get(), 18);
+    assert_eq!(pool.metrics.counter("jobs_failed").get(), 0);
+    pool.shutdown();
+}
+
+#[test]
+fn service_handles_mixed_traffic() {
+    let mut svc = ScreeningService::new(2);
+    let input = br#"
+{"dataset": "toy1", "scale": 0.03, "points": 4, "tol": 1e-5}
+{"dataset": "houses", "model": "lad", "scale": 0.01, "points": 4, "tol": 1e-5}
+{"bad json
+{"dataset": "toy2", "rule": "essnsv", "scale": 0.03, "points": 4, "tol": 1e-5}
+{"dataset": "wine", "model": "lad", "points": 4}
+"#;
+    let mut out = Vec::new();
+    svc.serve(&input[..], &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    // 1 parse error + 4 job responses
+    assert_eq!(lines.len(), 5, "{text}");
+    let oks = lines
+        .iter()
+        .filter(|l| {
+            dvi_screen::config::parse_json(l).unwrap().get("ok").unwrap().as_bool()
+                == Some(true)
+        })
+        .count();
+    // wine+lad is a task mismatch → error; bad json → error
+    assert_eq!(oks, 3, "{text}");
+    svc.shutdown();
+}
+
+#[test]
+fn service_reports_rejection_series_lengths() {
+    let mut svc = ScreeningService::new(1);
+    let id = svc.submit(ScreeningService::parse_request(
+        r#"{"dataset": "toy1", "scale": 0.03, "points": 7, "tol": 1e-5}"#,
+    )
+    .unwrap());
+    let outcome = svc.recv().unwrap();
+    assert_eq!(outcome.id, id);
+    let s = outcome.result.unwrap();
+    assert_eq!(s.rejection_lo.len(), 7);
+    assert_eq!(s.grid.len(), 7);
+    assert!(s.grid.windows(2).all(|w| w[0] < w[1]));
+    svc.shutdown();
+}
+
+#[test]
+fn pool_survives_panicking_job() {
+    // A dataset name that reaches the panicking assert inside Instance
+    // construction is hard to fabricate through the safe config path, so
+    // exercise the catch_unwind wiring via a poisoned run: points ≥ 2 with
+    // c grid degenerate triggers the runner's assert.
+    let mut run = quick("toy1", "svm", "dvi");
+    run.grid = GridConfig { c_min: 1.0, c_max: 1.0 + 1e-12, points: 2 };
+    let pool = WorkerPool::new(1);
+    let outcomes = pool.run_all(vec![
+        JobSpec { id: 0, run },
+        JobSpec { id: 1, run: quick("toy1", "svm", "dvi") },
+    ]);
+    // job 0 may fail (panic caught) — job 1 must still succeed
+    assert!(outcomes[1].result.is_ok());
+    pool.shutdown();
+}

@@ -1,0 +1,155 @@
+//! Experiment-harness integration at miniature scale: every regenerator
+//! runs, writes its CSVs, and reproduces the paper's qualitative *shape*
+//! (orderings), which is the reproduction criterion in DESIGN.md.
+
+use dvi_screen::data::{registry, simreal, Task};
+use dvi_screen::experiments::{self, ExpOptions};
+use dvi_screen::path::{PathConfig, PathRunner};
+use dvi_screen::problem::Model;
+use dvi_screen::screening::RuleKind;
+
+fn opts(tag: &str) -> ExpOptions {
+    let mut dir = std::env::temp_dir();
+    dir.push(format!("dvi_exp_int_{}_{tag}", std::process::id()));
+    ExpOptions {
+        scale: 0.03,
+        points: 6,
+        tol: 1e-5,
+        out_dir: dir,
+        use_pjrt: false,
+        validate: false,
+    }
+}
+
+#[test]
+fn all_experiments_run_and_write_csv() {
+    let o = opts("all");
+    let report = experiments::run("all", &o).expect("all experiments");
+    for needle in ["Figure 1", "Table 1", "Figure 2", "Table 2", "Figure 3", "Table 3"] {
+        assert!(report.contains(needle), "missing `{needle}`");
+    }
+    for f in [
+        "fig1_toy1.csv",
+        "fig1_toy3.csv",
+        "tab1.csv",
+        "fig2_ijcnn1-sim_dvi.csv",
+        "fig2_wine-sim_ssnsv.csv",
+        "tab2.csv",
+        "fig3_houses-sim.csv",
+        "tab3.csv",
+    ] {
+        assert!(o.out_dir.join(f).exists(), "missing {f}");
+    }
+    std::fs::remove_dir_all(&o.out_dir).ok();
+}
+
+/// The paper's Fig. 2 headline: DVI ≥ ESSNSV ≥ SSNSV in rejection, on
+/// every SVM evaluation set — *under the paper's 100-point protocol*.
+/// (On much coarser grids the sequential DVI radius grows and the static
+/// ESSNSV region can win; that regime is covered by the ablation bench.)
+#[test]
+fn rule_ordering_matches_paper() {
+    let cfg = || {
+        PathConfig::log_grid(1e-2, 10.0, 100).with_solver(
+            dvi_screen::config::SolverConfig { tol: 1e-6, ..Default::default() },
+        )
+    };
+    for name in simreal::SVM_SETS {
+        let ds = registry::resolve(name, 0.04, Task::Classification).unwrap();
+        let r_ssnsv = PathRunner::new(Model::Svm, cfg(), RuleKind::Ssnsv).run(&ds);
+        let r_essnsv = PathRunner::new(Model::Svm, cfg(), RuleKind::Essnsv).run(&ds);
+        let r_dvi = PathRunner::new(Model::Svm, cfg(), RuleKind::DviW).run(&ds);
+        assert!(
+            r_essnsv.mean_rejection() >= r_ssnsv.mean_rejection() - 1e-9,
+            "{name}: essnsv {} < ssnsv {}",
+            r_essnsv.mean_rejection(),
+            r_ssnsv.mean_rejection()
+        );
+        assert!(
+            r_dvi.mean_rejection() >= r_essnsv.mean_rejection() - 1e-9,
+            "{name}: dvi {} < essnsv {}",
+            r_dvi.mean_rejection(),
+            r_essnsv.mean_rejection()
+        );
+    }
+}
+
+/// Fig. 1 shape: Toy1 (separated) screens more than Toy3 (overlapping),
+/// and Toy3's L̃ share is comparable to its R̃ share (the paper's
+/// observation about overlapping classes).
+#[test]
+fn toy_shapes_match_paper() {
+    let cfg = PathConfig::log_grid(1e-2, 10.0, 25)
+        .with_solver(dvi_screen::config::SolverConfig { tol: 1e-6, ..Default::default() });
+    let toys = dvi_screen::data::synth::paper_toys(120);
+    let outs: Vec<_> = toys
+        .iter()
+        .map(|ds| PathRunner::new(Model::Svm, cfg.clone(), RuleKind::DviW).run(ds))
+        .collect();
+    assert!(
+        outs[0].mean_rejection() > outs[2].mean_rejection(),
+        "toy1 {} !> toy3 {}",
+        outs[0].mean_rejection(),
+        outs[2].mean_rejection()
+    );
+    // Toy3: over the path, the hi (L) side must be a substantial share
+    let (lo3, hi3) = outs[2].rejection_series();
+    let lo_sum: f64 = lo3.iter().sum();
+    let hi_sum: f64 = hi3.iter().sum();
+    assert!(
+        hi_sum > 0.2 * lo_sum,
+        "toy3 L̃ share too small: {hi_sum} vs R̃ {lo_sum}"
+    );
+    // Toy1: R̃ dominates (clearly separated classes)
+    let (lo1, hi1) = outs[0].rejection_series();
+    assert!(lo1.iter().sum::<f64>() > 3.0 * hi1.iter().sum::<f64>());
+}
+
+/// Table 1/3 shape: screening speeds the path up on every dataset (wall
+/// clock), with the separated toy gaining at least as much as the most
+/// overlapped one in solver-work terms.
+#[test]
+fn speedup_shape() {
+    let o = ExpOptions { scale: 0.05, points: 12, tol: 1e-6, ..opts("speedup") };
+    let toys = dvi_screen::data::synth::paper_toys(150);
+    let mut updates_ratio = Vec::new();
+    for ds in &toys {
+        let cfg = PathConfig::log_grid(1e-2, 10.0, o.points)
+            .with_solver(dvi_screen::config::SolverConfig { tol: o.tol, ..Default::default() });
+        let plain = PathRunner::new(Model::Svm, cfg.clone(), RuleKind::None).run(ds);
+        let dvi = PathRunner::new(Model::Svm, cfg, RuleKind::DviW).run(ds);
+        // gradient evaluations are the honest work metric: shrinking
+        // skips *updates* but still pays the O(n) scan per active coord
+        assert!(
+            dvi.total_grad_evals() < plain.total_grad_evals(),
+            "{}: screening did not reduce solver work",
+            ds.name
+        );
+        updates_ratio
+            .push(plain.total_grad_evals() as f64 / dvi.total_grad_evals().max(1) as f64);
+    }
+    std::fs::remove_dir_all(&o.out_dir).ok();
+    // work-reduction at least ~2x somewhere in the toy family
+    assert!(updates_ratio.iter().cloned().fold(0.0, f64::max) > 2.0, "{updates_ratio:?}");
+}
+
+/// LAD fig3 shape: houses (low noise) rejects more than magic (heavy
+/// overlap) — the paper's ordering of speedups 115x > 10x.
+#[test]
+fn lad_rejection_ordering() {
+    let cfg = || {
+        PathConfig::log_grid(1e-2, 10.0, 100).with_solver(
+            dvi_screen::config::SolverConfig { tol: 1e-6, ..Default::default() },
+        )
+    };
+    let houses = registry::resolve("houses", 0.03, Task::Regression).unwrap();
+    let magic = registry::resolve("magic", 0.03, Task::Regression).unwrap();
+    let r_h = PathRunner::new(Model::Lad, cfg(), RuleKind::DviW).run(&houses);
+    let r_m = PathRunner::new(Model::Lad, cfg(), RuleKind::DviW).run(&magic);
+    assert!(
+        r_h.mean_rejection() > r_m.mean_rejection(),
+        "houses {} !> magic {}",
+        r_h.mean_rejection(),
+        r_m.mean_rejection()
+    );
+}

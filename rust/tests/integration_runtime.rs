@@ -1,0 +1,204 @@
+//! PJRT runtime integration: load the AOT screening artifact, execute it
+//! on real problem data, and verify parity with the native f64 scan.
+//!
+//! Requires `make artifacts` to have run (skips with a message otherwise —
+//! CI runs artifacts first).
+
+use dvi_screen::config::SolverConfig;
+use dvi_screen::data::synth;
+use dvi_screen::path::DviScanBackend;
+use dvi_screen::problem::{Instance, Model};
+use dvi_screen::runtime::{ArtifactManifest, PjrtScreener};
+use dvi_screen::screening::{dvi::dvi_scan, Decision};
+use dvi_screen::solver::CdSolver;
+
+fn manifest() -> Option<ArtifactManifest> {
+    let dir = dvi_screen::runtime::artifacts::default_dir();
+    match ArtifactManifest::load(&dir) {
+        Ok(m) => {
+            if m.check_files().is_ok() {
+                Some(m)
+            } else {
+                eprintln!("artifacts incomplete; run `make artifacts`");
+                None
+            }
+        }
+        Err(e) => {
+            eprintln!("skipping PJRT tests: {e}");
+            None
+        }
+    }
+}
+
+/// Native (f64, no guard) decisions — the exactness baseline.
+fn native(inst: &Instance, mid: f64, rad: f64, u: &[f64]) -> Vec<Decision> {
+    dvi_scan(inst, mid, rad, u)
+}
+
+#[test]
+fn pjrt_scan_matches_native_on_solved_problem() {
+    let Some(m) = manifest() else { return };
+    let mut screener = PjrtScreener::new(m).expect("pjrt client");
+
+    let ds = synth::toy_gaussian(1, 1000, 1.5, 0.75); // the paper's Toy1
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    let solver = CdSolver::new(SolverConfig { tol: 1e-8, ..Default::default() });
+    let r = solver.solve(&inst, 0.5, inst.cold_start());
+
+    let (c_prev, c_next) = (0.5, 0.65);
+    let mid = 0.5 * (c_next + c_prev);
+    let rad = 0.5 * (c_next - c_prev);
+
+    let got = screener.try_scan(&inst, mid, rad, &r.u).expect("pjrt scan");
+    assert_eq!(screener.fallbacks, 0);
+    let want = native(&inst, mid, rad, &r.u);
+    assert_eq!(got.len(), want.len());
+
+    let mut boundary_flips = 0usize;
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        if g == w {
+            continue;
+        }
+        // the f32 kernel runs a conservative guard band: it may KEEP an
+        // instance the f64 rule screens (never the reverse, and never a
+        // lo<->hi flip)
+        assert_eq!(*g, Decision::Keep, "unsafe PJRT decision at {i}: {g:?} vs {w:?}");
+        boundary_flips += 1;
+    }
+    let frac = boundary_flips as f64 / want.len() as f64;
+    assert!(frac < 0.02, "guard band too lossy: {boundary_flips} flips");
+    // and the scan must actually screen a meaningful share on Toy1
+    let screened = got.iter().filter(|&&d| d != Decision::Keep).count();
+    assert!(screened > got.len() / 4, "screened only {screened}");
+}
+
+#[test]
+fn pjrt_scan_is_safe_against_exact_solve() {
+    let Some(m) = manifest() else { return };
+    let mut screener = PjrtScreener::new(m).expect("pjrt client");
+    let ds = synth::toy_gaussian(2, 800, 0.75, 0.75);
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    let cfg = SolverConfig { tol: 1e-9, ..Default::default() };
+    let solver = CdSolver::new(cfg);
+    let (c_prev, c_next) = (0.3, 0.42);
+    let r0 = solver.solve(&inst, c_prev, inst.cold_start());
+    let mid = 0.5 * (c_next + c_prev);
+    let rad = 0.5 * (c_next - c_prev);
+    let decisions = screener.try_scan(&inst, mid, rad, &r0.u).expect("scan");
+
+    // exact membership at c_next
+    let r1 = solver.solve(&inst, c_next, inst.cold_start());
+    let w1 = inst.w_from_theta(c_next, &r1.theta);
+    let truth = dvi_screen::problem::classify_kkt(&inst, &w1, 1e-7);
+    for (i, d) in decisions.iter().enumerate() {
+        match d {
+            Decision::AtLo => {
+                assert_eq!(truth.classes[i], dvi_screen::problem::KktClass::R, "i={i}")
+            }
+            Decision::AtHi => {
+                assert_eq!(truth.classes[i], dvi_screen::problem::KktClass::L, "i={i}")
+            }
+            Decision::Keep => {}
+        }
+    }
+}
+
+#[test]
+fn pjrt_lad_scan_parity() {
+    let Some(m) = manifest() else { return };
+    let mut screener = PjrtScreener::new(m).expect("pjrt client");
+    let mut rng = dvi_screen::data::Rng::new(3);
+    let ds = synth::random_regression(&mut rng, 600, 7);
+    let inst = Instance::from_dataset(Model::Lad, &ds);
+    let solver = CdSolver::new(SolverConfig { tol: 1e-8, ..Default::default() });
+    let r = solver.solve(&inst, 0.2, inst.cold_start());
+    let (mid, rad) = (0.24, 0.04);
+    let got = screener.try_scan(&inst, mid, rad, &r.u).expect("scan");
+    let want = native(&inst, mid, rad, &r.u);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        if g != w {
+            assert_eq!(*g, Decision::Keep, "unsafe LAD decision at {i}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_bucket_reuse_and_eviction() {
+    let Some(m) = manifest() else { return };
+    let mut screener = PjrtScreener::new(m).expect("pjrt client");
+    let ds = synth::toy_gaussian(3, 500, 0.5, 0.75);
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    let u = vec![0.5, -0.25];
+    let a = screener.try_scan(&inst, 1.0, 0.1, &u).expect("scan 1");
+    let b = screener.try_scan(&inst, 1.0, 0.1, &u).expect("scan 2 (cached)");
+    assert_eq!(a, b);
+    assert_eq!(screener.scans, 2);
+    screener.evict(&inst);
+    let c = screener.try_scan(&inst, 1.0, 0.1, &u).expect("scan 3 (re-upload)");
+    assert_eq!(a, c);
+}
+
+#[test]
+fn pjrt_backend_in_path_runner_matches_native() {
+    let Some(m) = manifest() else { return };
+    use dvi_screen::path::{PathConfig, PathRunner};
+    use dvi_screen::screening::RuleKind;
+    let ds = synth::toy_gaussian(4, 400, 1.0, 0.75);
+    let cfg = PathConfig::log_grid(0.05, 5.0, 8)
+        .with_solver(SolverConfig { tol: 1e-7, max_outer: 50_000, ..Default::default() })
+        .with_validation(true);
+    let screener = PjrtScreener::new(m).expect("client");
+    let out_pjrt = PathRunner::new(Model::Svm, cfg.clone(), RuleKind::DviW)
+        .with_backend(Box::new(screener))
+        .run(&ds);
+    let out_native = PathRunner::new(Model::Svm, cfg, RuleKind::DviW).run(&ds);
+    // same optima (validation), nearly the same screening power
+    assert!(out_pjrt.worst_violation().unwrap() < 1e-5);
+    let d = (out_pjrt.mean_rejection() - out_native.mean_rejection()).abs();
+    assert!(d < 0.02, "rejection differs by {d}");
+}
+
+/// Failure injection: a corrupted artifact must not poison results — the
+/// compile error surfaces and the backend falls back to the native scan.
+#[test]
+fn corrupted_artifact_falls_back() {
+    let Some(_) = manifest() else { return };
+    // stage a broken artifact dir
+    let mut dir = std::env::temp_dir();
+    dir.push(format!("dvi_bad_artifacts_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("broken.hlo.txt"), "HloModule utterly { broken").unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version":1,"dtype":"f32","guard_eps":1e-5,
+            "buckets":[{"l":2048,"n":8,"file":"broken.hlo.txt"}]}"#,
+    )
+    .unwrap();
+    let m = ArtifactManifest::load(&dir).unwrap();
+    let mut screener = PjrtScreener::new(m).expect("client");
+    let ds = synth::toy_gaussian(7, 100, 1.0, 0.75);
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    let u = vec![0.1, -0.2];
+    assert!(screener.try_scan(&inst, 1.0, 0.1, &u).is_err());
+    // trait path: silently correct via native fallback
+    let d = screener.scan(&inst, 1.0, 0.1, &u);
+    assert_eq!(d, native(&inst, 1.0, 0.1, &u));
+    assert!(screener.fallbacks >= 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_bucket_is_reported_and_falls_back() {
+    let Some(m) = manifest() else { return };
+    let mut screener = PjrtScreener::new(m).expect("client");
+    // n=80 exceeds every declared bucket width
+    let ds = synth::gaussian_classes(9, 64, 80, 1.0, 1.0, 0.5, 1.0);
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    let u = vec![0.0; 80];
+    let err = screener.try_scan(&inst, 1.0, 0.1, &u).unwrap_err();
+    assert!(err.to_string().contains("bucket"), "{err}");
+    // the trait impl must fall back to native rather than fail
+    let d = screener.scan(&inst, 1.0, 0.1, &u);
+    assert_eq!(d.len(), 64);
+    assert_eq!(screener.fallbacks, 1);
+}

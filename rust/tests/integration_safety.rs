@@ -1,0 +1,175 @@
+//! The paper's central claim, machine-checked at scale: DVI, SSNSV and
+//! ESSNSV are *safe* — across models, datasets, grids and C-ranges, no
+//! screened instance is ever a support vector of the exact solution.
+
+use dvi_screen::config::SolverConfig;
+use dvi_screen::data::{synth, Rng};
+use dvi_screen::problem::{Instance, Model};
+use dvi_screen::screening::{Dvi, ScreenReport, Ssnsv, SsnsvContext};
+use dvi_screen::solver::CdSolver;
+use dvi_screen::validation::check_safety;
+
+fn solver_cfg() -> SolverConfig {
+    SolverConfig { tol: 1e-9, max_outer: 100_000, ..Default::default() }
+}
+
+fn solve(inst: &Instance, c: f64) -> dvi_screen::solver::SolveResult {
+    CdSolver::new(solver_cfg()).solve(inst, c, inst.cold_start())
+}
+
+/// Sweep DVI safety over random SVM problems and random C-pairs.
+#[test]
+fn dvi_safety_sweep_svm() {
+    let mut rng = Rng::new(0xAB);
+    for trial in 0..12 {
+        let l = 40 + 30 * trial;
+        let ds = synth::random_classification(&mut rng, l, 2 + trial % 6);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let c0 = 10f64.powf(rng.uniform_in(-2.0, 0.5));
+        let c1 = c0 * rng.uniform_in(1.01, 3.0);
+        let r0 = solve(&inst, c0);
+        let rep = Dvi::new_w().screen(&inst, c0, c1, &r0.theta, &r0.u);
+        let safety = check_safety(&inst, c1, &rep, &solver_cfg(), 1e-7);
+        assert!(
+            safety.is_safe(),
+            "trial {trial}: {} violations, first {:?}",
+            safety.violations.len(),
+            safety.violations.first()
+        );
+    }
+}
+
+/// Sweep DVI safety over random LAD problems.
+#[test]
+fn dvi_safety_sweep_lad() {
+    let mut rng = Rng::new(0xCD);
+    for trial in 0..12 {
+        let ds = synth::random_regression(&mut rng, 60 + 25 * trial, 2 + trial % 5);
+        let inst = Instance::from_dataset(Model::Lad, &ds);
+        let c0 = 10f64.powf(rng.uniform_in(-2.0, 0.0));
+        let c1 = c0 * rng.uniform_in(1.01, 2.5);
+        let r0 = solve(&inst, c0);
+        let rep = Dvi::new_w().screen(&inst, c0, c1, &r0.theta, &r0.u);
+        let safety = check_safety(&inst, c1, &rep, &solver_cfg(), 1e-7);
+        assert!(safety.is_safe(), "trial {trial}: {:?}", safety.violations.first());
+    }
+}
+
+/// DVI θ-form must make exactly the decisions of the w-form (they are the
+/// same bound, evaluated differently), hence equally safe.
+#[test]
+fn dvi_theta_form_identical_decisions() {
+    let mut rng = Rng::new(0xEF);
+    for _ in 0..6 {
+        let ds = synth::random_classification(&mut rng, 80, 3);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let r = solve(&inst, 0.4);
+        let w_form = Dvi::new_w().screen(&inst, 0.4, 0.9, &r.theta, &r.u);
+        let t_form = Dvi::new_theta(&inst).screen(&inst, 0.4, 0.9, &r.theta, &r.u);
+        assert_eq!(w_form.decisions, t_form.decisions);
+    }
+}
+
+/// SSNSV/ESSNSV safety across every interior grid point of a short path,
+/// and the dominance chain SSNSV ⊆ ESSNSV (region inclusion).
+#[test]
+fn ssnsv_family_safety_and_dominance_along_path() {
+    let mut rng = Rng::new(0x11);
+    for trial in 0..5 {
+        let ds = synth::random_classification(&mut rng, 120, 2 + trial);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let grid = [0.05, 0.2, 0.8, 3.0];
+        let w_feas = {
+            let r = solve(&inst, *grid.last().unwrap());
+            inst.w_from_theta(*grid.last().unwrap(), &r.theta)
+        };
+        for k in 0..grid.len() - 1 {
+            let r = solve(&inst, grid[k]);
+            let w_anchor = inst.w_from_theta(grid[k], &r.theta);
+            let ctx = SsnsvContext { w_anchor: &w_anchor, w_feasible: &w_feas };
+            let base = Ssnsv::new(false).screen(&inst, &ctx);
+            let enh = Ssnsv::new(true).screen(&inst, &ctx);
+            for (b, e) in base.decisions.iter().zip(&enh.decisions) {
+                if *b != dvi_screen::screening::Decision::Keep {
+                    assert_eq!(b, e, "ESSNSV lost an SSNSV decision");
+                }
+            }
+            for rep in [&base, &enh] {
+                let safety = check_safety(&inst, grid[k + 1], rep, &solver_cfg(), 1e-7);
+                assert!(
+                    safety.is_safe(),
+                    "trial {trial} k={k}: {:?}",
+                    safety.violations.first()
+                );
+            }
+        }
+    }
+}
+
+/// Weighted-SVM extension: per-coordinate boxes, same guarantee.
+#[test]
+fn weighted_svm_safety() {
+    let mut rng = Rng::new(0x22);
+    for trial in 0..6 {
+        let ds = synth::gaussian_classes(
+            rng.next_u64(),
+            100,
+            3,
+            rng.uniform_in(0.5, 1.5),
+            1.0,
+            0.25,
+            1.0,
+        );
+        let inst = Instance::from_dataset(Model::WeightedSvm, &ds);
+        let c0 = 0.1 * (trial + 1) as f64;
+        let c1 = c0 * 1.4;
+        let r0 = solve(&inst, c0);
+        let rep = Dvi::new_w().screen(&inst, c0, c1, &r0.theta, &r0.u);
+        let safety = check_safety(&inst, c1, &rep, &solver_cfg(), 1e-7);
+        assert!(safety.is_safe(), "trial {trial}: {:?}", safety.violations.first());
+    }
+}
+
+/// Degenerate inputs: duplicated rows, zero rows, constant labels.
+#[test]
+fn dvi_safety_degenerate_inputs() {
+    use dvi_screen::data::{Dataset, Task};
+    use dvi_screen::linalg::RowMatrix;
+    // duplicated + zero rows
+    let mut x = RowMatrix::zeros(6, 2);
+    x.set(0, 0, 1.0);
+    x.set(1, 0, 1.0); // duplicate of row 0
+    x.set(2, 1, -2.0);
+    // rows 3..5 zero
+    let ds = Dataset::new(
+        "degenerate",
+        Task::Classification,
+        x,
+        vec![1.0, 1.0, -1.0, 1.0, -1.0, 1.0],
+    );
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    let r0 = solve(&inst, 0.5);
+    let rep = Dvi::new_w().screen(&inst, 0.5, 1.0, &r0.theta, &r0.u);
+    let safety = check_safety(&inst, 1.0, &rep, &solver_cfg(), 1e-7);
+    assert!(safety.is_safe(), "{:?}", safety.violations);
+}
+
+/// Screening must never change the recovered optimum: solve the reduced
+/// problem after screening and compare against the full solve.
+#[test]
+fn reduced_solve_equals_full_solve_after_screening() {
+    let mut rng = Rng::new(0x33);
+    for _ in 0..6 {
+        let ds = synth::random_classification(&mut rng, 150, 4);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let (c0, c1) = (0.2, 0.35);
+        let r0 = solve(&inst, c0);
+        let rep: ScreenReport = Dvi::new_w().screen(&inst, c0, c1, &r0.theta, &r0.u);
+        let mut theta0 = r0.theta.clone();
+        rep.apply_to_theta(&inst, &mut theta0);
+        let reduced =
+            CdSolver::new(solver_cfg()).solve_free(&inst, c1, theta0, &rep.free_indices());
+        dvi_screen::validation::check_exactness(&inst, c1, &reduced.theta, &solver_cfg(), 1e-6)
+            .expect("reduced solve drifted from the full optimum");
+    }
+}

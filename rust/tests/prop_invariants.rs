@@ -1,0 +1,162 @@
+//! Property tests (shrink-lite harness from `dvi_screen::testutil`) over
+//! the mathematical invariants the paper's derivation rests on.
+
+use dvi_screen::config::SolverConfig;
+use dvi_screen::data::{synth, Rng};
+use dvi_screen::linalg;
+use dvi_screen::problem::{Instance, Model};
+use dvi_screen::screening::dvi::theorem6_ball;
+use dvi_screen::screening::ssnsv::lemma20_min;
+use dvi_screen::solver::{CdSolver, PgSolver};
+use dvi_screen::testutil::{assert_close, check, PropConfig};
+
+fn solver() -> CdSolver {
+    CdSolver::new(SolverConfig { tol: 1e-9, max_outer: 100_000, ..Default::default() })
+}
+
+fn random_instance(rng: &mut Rng, size: usize) -> Instance {
+    let l = 8 + size;
+    let n = 2 + size % 5;
+    if rng.bernoulli(0.5) {
+        Instance::from_dataset(Model::Svm, &synth::random_classification(rng, l, n))
+    } else {
+        Instance::from_dataset(Model::Lad, &synth::random_regression(rng, l, n))
+    }
+}
+
+/// Solver output is always inside the box and KKT-stationary.
+#[test]
+fn prop_solver_feasible_and_stationary() {
+    check(PropConfig { cases: 16, seed: 0x51 }, "solver-kkt", |rng, size| {
+        let inst = random_instance(rng, size.0);
+        let c = 10f64.powf(rng.uniform_in(-2.0, 1.0));
+        let r = solver().solve(&inst, c, inst.cold_start());
+        if !inst.in_box(&r.theta, 1e-9) {
+            return Err("θ outside the box".into());
+        }
+        let v = CdSolver::kkt_violation(&inst, c, &r.theta);
+        if v > 1e-6 {
+            return Err(format!("KKT violation {v}"));
+        }
+        Ok(())
+    });
+}
+
+/// Theorem 6: Zᵀθ*(C_{k+1}) lies inside the DVI ball built from θ*(C_k).
+#[test]
+fn prop_theorem6_ball_contains_solution() {
+    check(PropConfig { cases: 16, seed: 0x52 }, "thm6-ball", |rng, size| {
+        let inst = random_instance(rng, size.0);
+        let c0 = 10f64.powf(rng.uniform_in(-2.0, 0.5));
+        let c1 = c0 * rng.uniform_in(1.001, 4.0);
+        let t0 = solver().solve(&inst, c0, inst.cold_start()).theta;
+        let t1 = solver().solve(&inst, c1, inst.cold_start()).theta;
+        let (dist, radius) = theorem6_ball(&inst, c0, c1, &t0, &t1);
+        if dist > radius + 1e-6 {
+            return Err(format!("ball violated: dist {dist} > radius {radius}"));
+        }
+        Ok(())
+    });
+}
+
+/// Strong duality: primal(w*(C)) = −C·dual(θ*(C)) at the optimum.
+#[test]
+fn prop_strong_duality() {
+    check(PropConfig { cases: 12, seed: 0x53 }, "strong-duality", |rng, size| {
+        let inst = random_instance(rng, size.0);
+        let c = 10f64.powf(rng.uniform_in(-1.5, 0.5));
+        let r = solver().solve(&inst, c, inst.cold_start());
+        let w = inst.w_from_theta(c, &r.theta);
+        let p = inst.primal_objective(c, &w);
+        let d = -c * inst.dual_objective(c, &r.theta);
+        assert_close(p, d, 1e-6, 1e-5, "primal vs dual")
+    });
+}
+
+/// The two solvers (CD, projected gradient) find the same objective — an
+/// algorithm-independence check on the optimum.
+#[test]
+fn prop_cd_pg_agree() {
+    check(PropConfig { cases: 8, seed: 0x54 }, "cd-vs-pg", |rng, size| {
+        let inst = random_instance(rng, size.0 / 2);
+        let c = 10f64.powf(rng.uniform_in(-1.0, 0.3));
+        let cd = solver().solve(&inst, c, inst.cold_start());
+        let (pg, _) = PgSolver { tol: 1e-9, max_iters: 200_000 }.solve(&inst, c, inst.cold_start());
+        let g1 = inst.dual_objective(c, &cd.theta);
+        let g2 = inst.dual_objective(c, &pg);
+        assert_close(g1, g2, 1e-6, 1e-6, "cd vs pg objective")
+    });
+}
+
+/// Lemma 20's closed form never exceeds the value at random feasible
+/// points (it is the minimum).
+#[test]
+fn prop_lemma20_is_lower_bound() {
+    check(PropConfig { cases: 24, seed: 0x55 }, "lemma20", |rng, size| {
+        let n = 2 + size.0 % 6;
+        let v: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+        let u: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+        let o: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+        let r = rng.uniform_in(0.2, 3.0);
+        let d = linalg::dot(&u, &o) + rng.uniform_in(0.0, r * linalg::norm(&u));
+        let fstar = lemma20_min(&v, &u, d, &o, r);
+        for _ in 0..200 {
+            let dir: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+            let nn = linalg::norm(&dir);
+            if nn == 0.0 {
+                continue;
+            }
+            let rad = r * rng.uniform().powf(1.0 / n as f64);
+            let w: Vec<f64> =
+                o.iter().zip(&dir).map(|(oi, di)| oi + rad * di / nn).collect();
+            if linalg::dot(&u, &w) <= d {
+                let val = linalg::dot(&v, &w);
+                if val < fstar - 1e-9 {
+                    return Err(format!("feasible {val} < f* {fstar}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// DVI rejection is monotone in the grid gap: a smaller C-step screens at
+/// least as many instances (slack shrinks pointwise).
+#[test]
+fn prop_dvi_monotone_in_gap() {
+    use dvi_screen::screening::Dvi;
+    check(PropConfig { cases: 12, seed: 0x56 }, "dvi-monotone", |rng, size| {
+        let inst = random_instance(rng, size.0);
+        let c0 = 10f64.powf(rng.uniform_in(-1.5, 0.0));
+        let r0 = solver().solve(&inst, c0, inst.cold_start());
+        let near = Dvi::new_w().screen(&inst, c0, c0 * 1.05, &r0.theta, &r0.u);
+        let far = Dvi::new_w().screen(&inst, c0, c0 * 2.0, &r0.theta, &r0.u);
+        // pointwise: every far decision is also made by near
+        for (i, (nf, ff)) in near.decisions.iter().zip(&far.decisions).enumerate() {
+            if *ff != dvi_screen::screening::Decision::Keep && nf != ff {
+                return Err(format!("coord {i}: far screened {ff:?} but near said {nf:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// u = Zᵀθ is unique at the optimum even when θ is not: perturbing the
+/// solve order must not change u (within tolerance).
+#[test]
+fn prop_u_unique_across_seeds() {
+    check(PropConfig { cases: 8, seed: 0x57 }, "u-unique", |rng, size| {
+        let inst = random_instance(rng, size.0);
+        let c = 0.5;
+        let a = CdSolver::new(SolverConfig { tol: 1e-10, seed: rng.next_u64(), ..Default::default() })
+            .solve(&inst, c, inst.cold_start());
+        let b = CdSolver::new(SolverConfig { tol: 1e-10, seed: rng.next_u64(), ..Default::default() })
+            .solve(&inst, c, inst.cold_start());
+        let d = linalg::max_abs_diff(&a.u, &b.u);
+        let scale = linalg::norm(&a.u).max(1e-9);
+        if d > 1e-4 * scale.max(1.0) {
+            return Err(format!("u differs across solver seeds: {d}"));
+        }
+        Ok(())
+    });
+}
