@@ -2,12 +2,15 @@
 //!
 //! * the native DVI scan (throughput in GB/s over the instance matrix —
 //!   the paper's "scan the data set only once" cost);
+//! * scan scaling: the sharded `ParScan` engine at 1/2/4/8 threads over
+//!   l ∈ {10k, 100k, 1M} (the paper's "negligible vs solving" claim only
+//!   holds if the scan saturates the hardware);
 //! * the PJRT/AOT scan (per-call latency incl. u upload + codes download);
 //! * one dual-CD sweep (gradient-eval rate);
 //! * Lemma 20 extremization (SSNSV/ESSNSV inner loop);
 //! * w-form vs θ-form DVI ablation (the Gram-matrix crossover).
 //!
-//! Run: `cargo bench --bench bench_micro`
+//! Run: `cargo bench --bench bench_micro [-- --max-l 1000000]`
 
 #[path = "common/mod.rs"]
 mod common;
@@ -16,7 +19,7 @@ use common::bench;
 use dvi_screen::config::SolverConfig;
 use dvi_screen::data::synth;
 use dvi_screen::problem::{Instance, Model};
-use dvi_screen::screening::dvi::dvi_scan;
+use dvi_screen::screening::dvi::{dvi_scan, dvi_scan_par};
 use dvi_screen::screening::ssnsv::lemma20_min;
 use dvi_screen::screening::Dvi;
 use dvi_screen::solver::CdSolver;
@@ -34,6 +37,43 @@ fn main() {
             dvi_scan(&inst, 1.05, 0.05, &u)
         });
         println!("    -> {:.2} GB/s effective", bytes / s.min_s / 1e9);
+    }
+
+    // ---- scan scaling: sharded ParScan across thread counts --------------
+    // The acceptance series for the sharded engine: per-(l, threads) scan
+    // latency plus the speedup over the single-thread run of the same l.
+    // `--max-l` bounds the largest row count (the 1M build allocates
+    // ~180 MB for Z).
+    {
+        println!("\n# scan scaling: sharded ParScan (contiguous shards, std::thread::scope)");
+        let max_l = common::arg_usize("max-l", 1_000_000);
+        let n = 22usize;
+        for l in [10_000usize, 100_000, 1_000_000] {
+            if l > max_l {
+                println!("par_dvi_scan_{l}x{n} skipped (--max-l {max_l})");
+                continue;
+            }
+            let ds = synth::gaussian_classes(7, l, n, 1.0, 1.0, 0.5, 1.0);
+            let inst = Instance::from_dataset(Model::Svm, &ds);
+            let u: Vec<f64> = (0..n).map(|i| (i as f64 * 0.11).sin()).collect();
+            let bytes = (l * n * 8) as f64;
+            let mut single = f64::NAN;
+            for threads in [1usize, 2, 4, 8] {
+                let s = bench(&format!("par_dvi_scan_{l}x{n}_t{threads}"), 3, 0.3, || {
+                    dvi_scan_par(&inst, 1.05, 0.05, &u, threads)
+                });
+                if threads == 1 {
+                    single = s.min_s;
+                    println!("    -> {:.2} GB/s effective", bytes / s.min_s / 1e9);
+                } else {
+                    println!(
+                        "    -> {:.2} GB/s effective, {:.2}x vs 1 thread",
+                        bytes / s.min_s / 1e9,
+                        single / s.min_s
+                    );
+                }
+            }
+        }
     }
 
     // ---- PJRT scan -------------------------------------------------------

@@ -13,6 +13,7 @@ dvi — safe exact data reduction for SVM and LAD (DVI screening)
 USAGE:
   dvi path [--dataset NAME] [--model svm|lad|wsvm] [--rule dvi|dvi-theta|ssnsv|essnsv|none]
            [--scale S] [--points N] [--c-min F] [--c-max F] [--tol F]
+           [--threads N]  (scan/validate worker threads; 1 = serial, 0 = auto)
            [--validate] [--pjrt] [--config FILE]
   dvi experiment --id fig1|tab1|fig2|tab2|fig3|tab3|all
            [--scale S] [--points N] [--tol F] [--out DIR] [--pjrt]
@@ -119,6 +120,7 @@ fn cmd_path(args: &[String]) -> Result<(), String> {
     cfg.grid.c_min = get_f64(&flags, "c-min", cfg.grid.c_min)?;
     cfg.grid.c_max = get_f64(&flags, "c-max", cfg.grid.c_max)?;
     cfg.solver.tol = get_f64(&flags, "tol", cfg.solver.tol)?;
+    cfg.solver.threads = get_usize(&flags, "threads", cfg.solver.threads)?;
     cfg.validate = cfg.validate || flags.contains_key("validate");
     cfg.use_pjrt = cfg.use_pjrt || flags.contains_key("pjrt");
 
@@ -272,6 +274,18 @@ mod tests {
     fn cmd_path_runs_tiny() {
         let args: Vec<String> = [
             "path", "--dataset", "toy1", "--scale", "0.02", "--points", "4", "--tol", "1e-5",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&args), 0);
+    }
+
+    #[test]
+    fn cmd_path_runs_sharded() {
+        let args: Vec<String> = [
+            "path", "--dataset", "toy1", "--scale", "0.02", "--points", "4", "--tol", "1e-5",
+            "--threads", "3", "--validate",
         ]
         .iter()
         .map(|s| s.to_string())

@@ -18,11 +18,17 @@ pub struct SolverConfig {
     pub shrink: bool,
     /// Seed for the coordinate permutation.
     pub seed: u64,
+    /// Worker threads for the sharded screening scan, θ-form Gram build,
+    /// and full-problem KKT validation: 1 = serial (default — jobs already
+    /// run on a worker pool), 0 = auto-detect, n = n threads (clamped to
+    /// the row count and to 4× the hardware parallelism). Screening
+    /// decisions are byte-identical for every setting.
+    pub threads: usize,
 }
 
 impl Default for SolverConfig {
     fn default() -> Self {
-        SolverConfig { tol: 1e-6, max_outer: 2000, shrink: true, seed: 0x5EED }
+        SolverConfig { tol: 1e-6, max_outer: 2000, shrink: true, seed: 0x5EED, threads: 1 }
     }
 }
 
@@ -142,7 +148,7 @@ impl RunConfig {
     /// catch typos early.
     pub fn from_toml_str(src: &str) -> Result<RunConfig, TomlError> {
         let m = parse_str(src)?;
-        const KNOWN: [&str; 13] = [
+        const KNOWN: [&str; 14] = [
             "model",
             "dataset",
             "scale",
@@ -156,6 +162,7 @@ impl RunConfig {
             "solver.max_outer",
             "solver.shrink",
             "solver.seed",
+            "solver.threads",
         ];
         for k in m.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -178,6 +185,7 @@ impl RunConfig {
                 max_outer: get_usize(&m, "solver.max_outer", d.solver.max_outer)?,
                 shrink: get_bool(&m, "solver.shrink", d.solver.shrink)?,
                 seed: get_usize(&m, "solver.seed", d.solver.seed as usize)? as u64,
+                threads: get_usize(&m, "solver.threads", d.solver.threads)?,
             },
             use_pjrt: get_bool(&m, "use_pjrt", d.use_pjrt)?,
             validate: get_bool(&m, "validate", d.validate)?,
@@ -255,13 +263,26 @@ tol = 1e-8
 max_outer = 100
 shrink = false
 seed = 7
+threads = 4
 "#;
         let c = RunConfig::from_toml_str(src).unwrap();
         assert_eq!(c.model, "lad");
         assert_eq!(c.dataset, "houses");
         assert_eq!(c.grid.points, 10);
         assert_eq!(c.solver.seed, 7);
+        assert_eq!(c.solver.threads, 4);
         assert!(c.use_pjrt && c.validate && !c.solver.shrink);
+    }
+
+    #[test]
+    fn threads_defaults_serial() {
+        assert_eq!(RunConfig::from_toml_str("").unwrap().solver.threads, 1);
+        // 0 = auto-detect is a legal setting
+        assert_eq!(
+            RunConfig::from_toml_str("[solver]\nthreads = 0").unwrap().solver.threads,
+            0
+        );
+        assert!(RunConfig::from_toml_str("[solver]\nthreads = -2").is_err());
     }
 
     #[test]

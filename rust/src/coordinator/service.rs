@@ -7,8 +7,13 @@
 //! ```json
 //! {"dataset": "toy1", "model": "svm", "rule": "dvi",
 //!  "scale": 0.1, "points": 20, "c_min": 0.01, "c_max": 10.0,
-//!  "validate": true}
+//!  "threads": 4, "validate": true}
 //! ```
+//!
+//! `threads` selects the sharded scan/validation engine for the job
+//! (1 = serial, 0 = auto-detect); decisions are byte-identical either way.
+//! Numeric fields are validated here so malformed requests produce an
+//! error response line instead of a worker panic.
 
 use super::job::{JobOutcome, JobSpec};
 use super::pool::WorkerPool;
@@ -28,7 +33,10 @@ impl ScreeningService {
         ScreeningService { pool: WorkerPool::new(workers), next_id: 0 }
     }
 
-    /// Parse one request line into a RunConfig.
+    /// Parse one request line into a RunConfig. Numeric fields are
+    /// range-checked here: a negative `points` cast straight to `usize`
+    /// would wrap to a gigantic grid, and non-finite/non-positive C bounds
+    /// would panic inside the worker instead of producing an error line.
     pub fn parse_request(line: &str) -> Result<RunConfig, String> {
         let j = parse_json(line).map_err(|e| e.to_string())?;
         let obj = j.as_object().ok_or("request must be a JSON object")?;
@@ -40,15 +48,47 @@ impl ScreeningService {
                 "rule" => cfg.rule = v.as_str().ok_or("rule: string")?.to_string(),
                 "scale" => cfg.scale = v.as_float().ok_or("scale: number")?,
                 "points" => {
-                    cfg.grid.points = v.as_int().ok_or("points: int")? as usize;
+                    let p = v.as_int().ok_or("points: int")?;
+                    // lower bound: the grid needs two points; upper bound:
+                    // a huge request must not OOM the worker allocating the
+                    // grid (the paper's protocol is 100 points)
+                    if !(2..=1_000_000).contains(&p) {
+                        return Err(format!("points must be in [2, 1000000], got {p}"));
+                    }
+                    cfg.grid.points = p as usize;
                 }
-                "c_min" => cfg.grid.c_min = v.as_float().ok_or("c_min: number")?,
-                "c_max" => cfg.grid.c_max = v.as_float().ok_or("c_max: number")?,
+                "c_min" => {
+                    let x = v.as_float().ok_or("c_min: number")?;
+                    if !x.is_finite() || x <= 0.0 {
+                        return Err(format!("c_min must be finite and > 0, got {x}"));
+                    }
+                    cfg.grid.c_min = x;
+                }
+                "c_max" => {
+                    let x = v.as_float().ok_or("c_max: number")?;
+                    if !x.is_finite() || x <= 0.0 {
+                        return Err(format!("c_max must be finite and > 0, got {x}"));
+                    }
+                    cfg.grid.c_max = x;
+                }
                 "tol" => cfg.solver.tol = v.as_float().ok_or("tol: number")?,
+                "threads" => {
+                    let t = v.as_int().ok_or("threads: int")?;
+                    if t < 0 {
+                        return Err(format!("threads must be >= 0 (0 = auto), got {t}"));
+                    }
+                    cfg.solver.threads = t as usize;
+                }
                 "validate" => cfg.validate = v.as_bool().ok_or("validate: bool")?,
                 "use_pjrt" => cfg.use_pjrt = v.as_bool().ok_or("use_pjrt: bool")?,
                 other => return Err(format!("unknown request field `{other}`")),
             }
+        }
+        if cfg.grid.c_max <= cfg.grid.c_min {
+            return Err(format!(
+                "need c_min < c_max, got [{}, {}]",
+                cfg.grid.c_min, cfg.grid.c_max
+            ));
         }
         Ok(cfg)
     }
@@ -172,6 +212,41 @@ mod tests {
         assert!(ScreeningService::parse_request(r#"{"datafoo": 1}"#).is_err());
         assert!(ScreeningService::parse_request("not json").is_err());
         assert!(ScreeningService::parse_request(r#"{"scale": "big"}"#).is_err());
+    }
+
+    #[test]
+    fn parse_request_rejects_bad_numerics() {
+        // a negative points value must not wrap to a huge usize grid
+        for bad in [
+            r#"{"dataset": "toy1", "points": -5}"#,
+            r#"{"dataset": "toy1", "points": 0}"#,
+            r#"{"dataset": "toy1", "points": 1}"#,
+            r#"{"dataset": "toy1", "points": 4000000000000000000}"#,
+            r#"{"dataset": "toy1", "c_min": -1.0}"#,
+            r#"{"dataset": "toy1", "c_min": 0.0}"#,
+            r#"{"dataset": "toy1", "c_max": -2.5}"#,
+            r#"{"dataset": "toy1", "c_min": 5.0, "c_max": 0.5}"#,
+            r#"{"dataset": "toy1", "threads": -1}"#,
+        ] {
+            let e = ScreeningService::parse_request(bad);
+            assert!(e.is_err(), "accepted `{bad}`");
+        }
+        // boundary-legal values still parse
+        let ok = ScreeningService::parse_request(
+            r#"{"dataset": "toy1", "points": 2, "c_min": 0.5, "c_max": 0.6, "threads": 0}"#,
+        )
+        .unwrap();
+        assert_eq!(ok.grid.points, 2);
+        assert_eq!(ok.solver.threads, 0);
+    }
+
+    #[test]
+    fn parse_request_threads_flows_to_solver() {
+        let cfg = ScreeningService::parse_request(
+            r#"{"dataset": "toy2", "threads": 4, "points": 8}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.solver.threads, 4);
     }
 
     #[test]

@@ -13,14 +13,36 @@ use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
 /// Errors for dataset IO.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum IoError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("parse error at line {line}: {msg}")]
+    Io(std::io::Error),
     Parse { line: usize, msg: String },
-    #[error("empty data set")]
     Empty,
+}
+
+impl std::fmt::Display for IoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IoError::Io(e) => write!(f, "io: {e}"),
+            IoError::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+            IoError::Empty => write!(f, "empty data set"),
+        }
+    }
+}
+
+impl std::error::Error for IoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            IoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for IoError {
+    fn from(e: std::io::Error) -> Self {
+        IoError::Io(e)
+    }
 }
 
 /// Parse a libsvm file. Feature dimension is the max index seen (or

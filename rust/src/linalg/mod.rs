@@ -8,6 +8,7 @@
 //! `EXPERIMENTS.md §Perf`.
 
 pub mod matrix;
+pub mod par;
 
 pub use matrix::RowMatrix;
 

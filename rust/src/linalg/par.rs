@@ -1,0 +1,252 @@
+//! Sharded parallel execution on `std::thread::scope` workers (std-only —
+//! no rayon offline).
+//!
+//! The screening scan, the θ-form Gram build, and full-problem KKT
+//! validation are all embarrassingly parallel over the l data rows. This
+//! module provides the one primitive they share: split `0..items` into
+//! contiguous shards, evaluate a closure per shard on scoped worker
+//! threads, and return the per-shard results **in shard order** so callers
+//! can concatenate or reduce deterministically. Because shards are
+//! contiguous and each row's result is computed by exactly the same
+//! floating-point expression as the serial code, sharded row-wise maps are
+//! byte-identical to their serial counterparts for any thread count.
+//!
+//! Thread-count convention used throughout the crate (and in
+//! [`crate::config::SolverConfig::threads`]): `1` = serial (no threads
+//! spawned), `0` = auto-detect via `std::thread::available_parallelism`,
+//! `n` = exactly n workers (clamped to the number of items).
+
+use std::ops::Range;
+
+/// Resolve a requested thread count: 0 = auto-detect, otherwise the
+/// requested count; always ≥ 1, never more than `items`, and capped at
+/// 4× the detected hardware parallelism — an absurd request (e.g. a
+/// service caller asking for 500k workers) must degrade to a sane shard
+/// count, not abort the process in `thread::spawn`. Decisions produced by
+/// the sharded kernels are identical for every shard count, so clamping
+/// never changes results.
+pub fn effective_threads(requested: usize, items: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let t = if requested == 0 {
+        hw
+    } else {
+        requested.min(hw.saturating_mul(4))
+    };
+    t.max(1).min(items.max(1))
+}
+
+/// Split `0..items` into `shards` contiguous near-equal ranges (the first
+/// `items % shards` ranges get one extra element).
+pub fn shard_ranges(items: usize, shards: usize) -> Vec<Range<usize>> {
+    assert!(shards >= 1, "need at least one shard");
+    let base = items / shards;
+    let extra = items % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0;
+    for k in 0..shards {
+        let len = base + usize::from(k < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, items);
+    out
+}
+
+/// Row boundaries (length `shards + 1`) that split the upper triangle of
+/// an l×l matrix into row blocks of near-equal area: row i contributes
+/// `l − i` entries, so early rows are "heavier" and equal-row splits would
+/// starve the later workers.
+pub fn triangle_bounds(l: usize, shards: usize) -> Vec<usize> {
+    assert!(shards >= 1, "need at least one shard");
+    let total = (l as u128) * (l as u128 + 1) / 2;
+    let mut bounds = Vec::with_capacity(shards + 1);
+    bounds.push(0usize);
+    let mut acc: u128 = 0;
+    let mut i = 0usize;
+    for k in 1..shards {
+        let target = total * k as u128 / shards as u128;
+        while i < l && acc < target {
+            acc += (l - i) as u128;
+            i += 1;
+        }
+        bounds.push(i);
+    }
+    bounds.push(l);
+    bounds
+}
+
+/// Evaluate `f` over contiguous shards of `0..items` on scoped worker
+/// threads; results are returned in shard order. `threads` follows the
+/// crate convention (0 = auto, 1 = serial in the calling thread).
+pub fn run_sharded<T, F>(items: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    if items == 0 {
+        return Vec::new();
+    }
+    let t = effective_threads(threads, items);
+    let ranges = shard_ranges(items, t);
+    if t == 1 {
+        return ranges.into_iter().map(f).collect();
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| s.spawn(move || f(r)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("shard worker panicked"))
+            .collect()
+    })
+}
+
+/// Like [`run_sharded`], but for writers: split `data` — a row-major
+/// buffer of `row_len`-sized rows — into the contiguous row blocks
+/// delimited by `bounds` (e.g. from [`triangle_bounds`], or the edges of
+/// [`shard_ranges`]) and run `f(rows, block)` on each block on scoped
+/// worker threads. `bounds` must start at 0, be non-decreasing, and end
+/// at `data.len() / row_len`. Two bounds (one block) runs serially in the
+/// calling thread.
+pub fn run_sharded_mut<T, F>(data: &mut [T], row_len: usize, bounds: &[usize], f: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    assert!(bounds.len() >= 2, "bounds must delimit at least one block");
+    assert_eq!(bounds[0], 0, "bounds must start at row 0");
+    assert_eq!(
+        bounds[bounds.len() - 1] * row_len,
+        data.len(),
+        "bounds must cover the whole buffer"
+    );
+    if bounds.len() == 2 {
+        f(bounds[0]..bounds[1], data);
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest: &mut [T] = data;
+        for w in 0..bounds.len() - 1 {
+            let (lo, hi) = (bounds[w], bounds[w + 1]);
+            let taken = std::mem::take(&mut rest);
+            let (head, tail) = taken.split_at_mut((hi - lo) * row_len);
+            rest = tail;
+            s.spawn(move || f(lo..hi, head));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        for items in [0usize, 1, 5, 16, 103] {
+            for shards in [1usize, 2, 4, 7] {
+                let rs = shard_ranges(items, shards);
+                assert_eq!(rs.len(), shards);
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                }
+                assert_eq!(next, items);
+                // balanced: sizes differ by at most 1
+                let sizes: Vec<usize> = rs.iter().map(|r| r.end - r.start).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "{sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn effective_threads_clamps() {
+        // 4 ≤ 4×hw for any hw ≥ 1, so the request is honored exactly
+        assert_eq!(effective_threads(4, 100), 4);
+        assert_eq!(effective_threads(8, 3), 3);
+        assert_eq!(effective_threads(1, 0), 1);
+        assert!(effective_threads(0, 1_000_000) >= 1);
+        // an absurd request degrades instead of trying to spawn that many
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert!(effective_threads(500_000, 1_000_000) <= 4 * hw);
+    }
+
+    #[test]
+    fn triangle_bounds_monotone_and_balanced() {
+        for l in [1usize, 7, 64, 103] {
+            for shards in [1usize, 2, 4, 7] {
+                let b = triangle_bounds(l, shards);
+                assert_eq!(b.len(), shards + 1);
+                assert_eq!(b[0], 0);
+                assert_eq!(b[shards], l);
+                assert!(b.windows(2).all(|w| w[0] <= w[1]), "{b:?}");
+                // areas within one row's worth of each other is too strict
+                // for tiny l; just check no shard exceeds 2x the ideal for
+                // larger inputs
+                if l >= 32 && shards > 1 {
+                    let total = l * (l + 1) / 2;
+                    for w in b.windows(2) {
+                        let area: usize = (w[0]..w[1]).map(|i| l - i).sum();
+                        assert!(area <= 2 * total / shards + l, "area {area} of {total}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_sharded_preserves_order() {
+        for threads in [1usize, 2, 3, 7, 0] {
+            let shards = run_sharded(103, threads, |r| r.collect::<Vec<usize>>());
+            let flat: Vec<usize> = shards.into_iter().flatten().collect();
+            assert_eq!(flat, (0..103).collect::<Vec<usize>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_sharded_empty_input() {
+        let out: Vec<Vec<usize>> = run_sharded(0, 4, |r| r.collect());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn run_sharded_more_threads_than_items() {
+        let shards = run_sharded(3, 8, |r| r.len());
+        assert_eq!(shards.len(), 3);
+        assert_eq!(shards.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn run_sharded_mut_writes_disjoint_blocks() {
+        let (rows, row_len) = (11usize, 3usize);
+        for shards in [1usize, 2, 4, 7] {
+            let mut data = vec![0usize; rows * row_len];
+            let mut bounds: Vec<usize> = shard_ranges(rows, shards).iter().map(|r| r.start).collect();
+            bounds.push(rows);
+            run_sharded_mut(&mut data, row_len, &bounds, |rs, block| {
+                let lo = rs.start;
+                for i in rs {
+                    for j in 0..row_len {
+                        block[(i - lo) * row_len + j] = 100 * i + j;
+                    }
+                }
+            });
+            for i in 0..rows {
+                for j in 0..row_len {
+                    assert_eq!(data[i * row_len + j], 100 * i + j, "shards={shards}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_sharded_mut_empty_buffer() {
+        let mut data: Vec<f64> = Vec::new();
+        run_sharded_mut(&mut data, 0, &[0, 0], |_, block| assert!(block.is_empty()));
+    }
+}

@@ -40,3 +40,35 @@ impl DviScanBackend for NativeScan {
         "native"
     }
 }
+
+/// Sharded multi-threaded backend: the l rows are split into contiguous
+/// shards evaluated on `std::thread::scope` workers
+/// ([`crate::screening::dvi::dvi_scan_par`]); the per-shard decision
+/// vectors are merged in shard order, so the result is byte-identical to
+/// [`NativeScan`] for any thread count.
+pub struct ParScan {
+    threads: usize,
+}
+
+impl ParScan {
+    /// `threads == 0` auto-detects (`std::thread::available_parallelism`);
+    /// `threads == 1` degenerates to the serial scan.
+    pub fn new(threads: usize) -> ParScan {
+        ParScan { threads }
+    }
+
+    /// Configured worker count (0 = auto).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl DviScanBackend for ParScan {
+    fn scan(&mut self, inst: &Instance, mid: f64, rad: f64, u: &[f64]) -> Vec<Decision> {
+        crate::screening::dvi::dvi_scan_par(inst, mid, rad, u, self.threads)
+    }
+
+    fn name(&self) -> &'static str {
+        "par"
+    }
+}

@@ -1,6 +1,6 @@
 //! The regularization-path runner.
 
-use super::{DviScanBackend, NativeScan};
+use super::{DviScanBackend, NativeScan, ParScan};
 use crate::config::{GridConfig, SolverConfig};
 use crate::data::Dataset;
 use crate::problem::{Instance, Model};
@@ -146,8 +146,16 @@ pub struct PathRunner {
 }
 
 impl PathRunner {
+    /// `cfg.solver.threads` picks the scan backend: 1 (the default) keeps
+    /// the serial [`NativeScan`]; any other value installs the sharded
+    /// [`ParScan`] (0 = auto-detect), whose decisions are byte-identical.
     pub fn new(model: Model, cfg: PathConfig, rule: RuleKind) -> PathRunner {
-        PathRunner { model, cfg, rule, backend: Box::new(NativeScan) }
+        let backend: Box<dyn DviScanBackend> = if cfg.solver.threads == 1 {
+            Box::new(NativeScan)
+        } else {
+            Box::new(ParScan::new(cfg.solver.threads))
+        };
+        PathRunner { model, cfg, rule, backend }
     }
 
     /// Swap the DVI scan backend (e.g. the PJRT AOT executable).
@@ -177,7 +185,12 @@ impl PathRunner {
         // --- init solves -------------------------------------------------
         let t = Instant::now();
         let mut cur = solver.solve(inst, grid[0], inst.cold_start());
-        let mut init_secs = t.elapsed().as_secs_f64();
+        // keep the C₁ solve time separate: init_secs additionally absorbs
+        // the SSNSV C_max solve and the DVI-θ Gram precompute below, and
+        // charging those into steps[0].solve_secs would double-count init
+        // work in the per-step table
+        let c1_solve_secs = t.elapsed().as_secs_f64();
+        let mut init_secs = c1_solve_secs;
 
         // SSNSV/ESSNSV additionally require the solution at C_max.
         let w_feasible: Option<Vec<f64>> = match self.rule {
@@ -195,7 +208,7 @@ impl PathRunner {
         let dvi_rule: Option<Dvi> = match self.rule {
             RuleKind::DviTheta => {
                 let t = Instant::now();
-                let r = Dvi::new_theta(inst);
+                let r = Dvi::new_theta_threads(inst, self.cfg.solver.threads);
                 init_secs += t.elapsed().as_secs_f64();
                 Some(r)
             }
@@ -213,15 +226,14 @@ impl PathRunner {
             n_hi: 0,
             free: l,
             screen_secs: 0.0,
-            solve_secs: init_secs,
+            solve_secs: c1_solve_secs,
             coord_updates: cur.stats.coord_updates,
             grad_evals: cur.stats.grad_evals,
             outer_iters: cur.stats.outer_iters,
             dual_obj: inst.dual_objective(grid[0], &cur.theta),
-            kkt_violation: self
-                .cfg
-                .validate
-                .then(|| CdSolver::kkt_violation(inst, grid[0], &cur.theta)),
+            kkt_violation: self.cfg.validate.then(|| {
+                CdSolver::kkt_violation_threads(inst, grid[0], &cur.theta, self.cfg.solver.threads)
+            }),
         });
 
         // --- path --------------------------------------------------------
@@ -269,10 +281,14 @@ impl PathRunner {
                     outer_iters: cur.stats.outer_iters,
                     dual_obj: 0.5 * c_next * crate::linalg::norm_sq(&cur.u)
                         - crate::linalg::dot(&inst.ybar, &cur.theta),
-                    kkt_violation: self
-                        .cfg
-                        .validate
-                        .then(|| CdSolver::kkt_violation(inst, c_next, &cur.theta)),
+                    kkt_violation: self.cfg.validate.then(|| {
+                        CdSolver::kkt_violation_threads(
+                            inst,
+                            c_next,
+                            &cur.theta,
+                            self.cfg.solver.threads,
+                        )
+                    }),
                 });
                 continue;
             }
@@ -321,10 +337,14 @@ impl PathRunner {
                 // O(n + l) from the cached u — NOT a fresh O(l·n) matvec
                 dual_obj: 0.5 * c_next * crate::linalg::norm_sq(&cur.u)
                     - crate::linalg::dot(&inst.ybar, &cur.theta),
-                kkt_violation: self
-                    .cfg
-                    .validate
-                    .then(|| CdSolver::kkt_violation(inst, c_next, &cur.theta)),
+                kkt_violation: self.cfg.validate.then(|| {
+                    CdSolver::kkt_violation_threads(
+                        inst,
+                        c_next,
+                        &cur.theta,
+                        self.cfg.solver.threads,
+                    )
+                }),
             });
         }
 

@@ -46,14 +46,43 @@ pub struct ArtifactManifest {
 }
 
 /// Manifest loading errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json: {0}")]
-    Json(#[from] crate::config::json::JsonError),
-    #[error("manifest: {0}")]
+    Io(std::io::Error),
+    Json(crate::config::json::JsonError),
     Schema(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "io: {e}"),
+            ManifestError::Json(e) => write!(f, "json: {e}"),
+            ManifestError::Schema(m) => write!(f, "manifest: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io(e) => Some(e),
+            ManifestError::Json(e) => Some(e),
+            ManifestError::Schema(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ManifestError {
+    fn from(e: std::io::Error) -> Self {
+        ManifestError::Io(e)
+    }
+}
+
+impl From<crate::config::json::JsonError> for ManifestError {
+    fn from(e: crate::config::json::JsonError) -> Self {
+        ManifestError::Json(e)
+    }
 }
 
 impl ArtifactManifest {

@@ -1,8 +1,32 @@
 //! PJRT runtime: loads the AOT-compiled JAX/Pallas screening artifacts
 //! (HLO text under `artifacts/`) and executes them from the rust hot path.
 //! Python is build-time only — see `python/compile/aot.py`.
+//!
+//! The executor itself needs the `xla` crate, which is not part of the
+//! offline build: the real implementation sits behind the `pjrt` cargo
+//! feature, and the default build substitutes an API-compatible stub
+//! (sourced from `pjrt_stub.rs`) whose constructors report the runtime as
+//! unavailable and whose [`crate::path::DviScanBackend`] impl falls back
+//! to the exact native scan. Manifest parsing ([`artifacts`]) is always
+//! available, so `dvi info` and artifact validation work either way.
 
 pub mod artifacts;
+
+// The real executor references the `xla` crate, which must be vendored
+// before the feature can build — fail with a named diagnostic instead of
+// unresolved-crate errors deep inside pjrt.rs. Remove this guard when
+// adding the vendored dependency (ROADMAP.md open items).
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires a vendored `xla` crate (not part of the \
+     offline build); see ROADMAP.md open items"
+);
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use artifacts::{ArtifactManifest, ShapeBucket};

@@ -21,15 +21,24 @@ use std::collections::HashMap;
 use std::rc::Rc;
 
 /// Errors from the PJRT screening path.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PjrtError {
-    #[error("xla: {0}")]
     Xla(String),
-    #[error("no shape bucket fits l={l}, n={n}")]
     NoBucket { l: usize, n: usize },
-    #[error("artifact output malformed: {0}")]
     BadOutput(String),
 }
+
+impl std::fmt::Display for PjrtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PjrtError::Xla(m) => write!(f, "xla: {m}"),
+            PjrtError::NoBucket { l, n } => write!(f, "no shape bucket fits l={l}, n={n}"),
+            PjrtError::BadOutput(m) => write!(f, "artifact output malformed: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for PjrtError {}
 
 impl From<xla::Error> for PjrtError {
     fn from(e: xla::Error) -> Self {

@@ -1,0 +1,95 @@
+//! Offline stand-in for the PJRT screener (the real executor, behind the
+//! `pjrt` cargo feature, lives in `pjrt.rs` and needs a vendored `xla`
+//! crate). This stub keeps the exact public API so every caller — the
+//! coordinator, the experiment harness, benches, and integration tests —
+//! compiles unchanged:
+//!
+//! * constructors return [`PjrtError::Unavailable`], so callers take their
+//!   existing "PJRT unavailable, use native" paths;
+//! * the [`DviScanBackend`] impl falls back to the exact native f64 scan
+//!   (counted in `fallbacks`), so a stub screener that does get wired into
+//!   a path runner still produces correct decisions.
+
+use super::artifacts::ArtifactManifest;
+use crate::path::DviScanBackend;
+use crate::problem::Instance;
+use crate::screening::Decision;
+
+/// Errors from the (stubbed) PJRT screening path.
+#[derive(Debug)]
+pub enum PjrtError {
+    /// The crate was built without the `pjrt` feature.
+    Unavailable(String),
+}
+
+impl std::fmt::Display for PjrtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PjrtError::Unavailable(m) => write!(f, "pjrt unavailable: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for PjrtError {}
+
+/// API-compatible stand-in for the XLA-backed screener.
+pub struct PjrtScreener {
+    /// Number of times the PJRT path failed and the native scan was used.
+    pub fallbacks: u64,
+    /// Number of successful PJRT scans (always 0 in the stub).
+    pub scans: u64,
+}
+
+impl PjrtScreener {
+    /// The stub cannot execute artifacts; construction always fails so
+    /// callers fall back to the native backend.
+    pub fn new(_manifest: ArtifactManifest) -> Result<PjrtScreener, PjrtError> {
+        Err(PjrtError::Unavailable(
+            "built without the `pjrt` cargo feature (offline default)".into(),
+        ))
+    }
+
+    /// Load the manifest from the default artifact dir and build.
+    pub fn from_default_dir() -> Result<PjrtScreener, PjrtError> {
+        Err(PjrtError::Unavailable(
+            "built without the `pjrt` cargo feature (offline default)".into(),
+        ))
+    }
+
+    /// The PJRT scan proper; always errors in the stub.
+    pub fn try_scan(
+        &mut self,
+        _inst: &Instance,
+        _mid: f64,
+        _rad: f64,
+        _u: &[f64],
+    ) -> Result<Vec<Decision>, PjrtError> {
+        Err(PjrtError::Unavailable("no compiled artifact executor".into()))
+    }
+
+    /// Drop cached device buffers for an instance (no-op in the stub).
+    pub fn evict(&mut self, _inst: &Instance) {}
+}
+
+impl DviScanBackend for PjrtScreener {
+    fn scan(&mut self, inst: &Instance, mid: f64, rad: f64, u: &[f64]) -> Vec<Decision> {
+        // fail safe: the exact native scan
+        self.fallbacks += 1;
+        crate::screening::dvi::dvi_scan(inst, mid, rad, u)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_reports_missing_feature() {
+        let err = PjrtScreener::from_default_dir().unwrap_err();
+        assert!(err.to_string().contains("pjrt unavailable"), "{err}");
+    }
+}

@@ -22,7 +22,7 @@
 //!   (the ablation bench explores the crossover).
 
 use super::{Decision, ScreenReport};
-use crate::linalg::{self, RowMatrix};
+use crate::linalg::{self, par, RowMatrix};
 use crate::problem::Instance;
 
 /// Which evaluation strategy to use.
@@ -50,20 +50,56 @@ impl Dvi {
     /// θ-form: precomputes G = ZZᵀ (O(l²·n) once). Panics if l is so large
     /// that G would exceed ~2 GiB — use the w-form there.
     pub fn new_theta(inst: &Instance) -> Dvi {
+        Self::new_theta_threads(inst, 1)
+    }
+
+    /// θ-form with a sharded Gram build: the upper triangle is split into
+    /// contiguous row blocks of near-equal area (row i contributes l−i
+    /// entries) and computed on `std::thread::scope` workers. Every entry
+    /// is the same `⟨zᵢ, zⱼ⟩` dot the serial build evaluates, so the
+    /// matrix is identical for any thread count (0 = auto, 1 = serial).
+    pub fn new_theta_threads(inst: &Instance, threads: usize) -> Dvi {
         let l = inst.len();
+        // the l·l product itself can overflow usize on 32-bit targets
+        // before a plain `l * l <= budget` assert ever runs
         assert!(
-            l * l <= 256 * 1024 * 1024,
+            l.checked_mul(l).map_or(false, |entries| entries <= 256 * 1024 * 1024),
             "Gram matrix for l={l} would exceed the memory budget; use DviForm::W"
         );
-        let mut g = RowMatrix::zeros(l, l);
-        for i in 0..l {
-            for j in i..l {
-                let v = inst.z.gram(i, j);
-                g.set(i, j, v);
-                g.set(j, i, v);
+        let t = par::effective_threads(threads, l);
+        let mut data = vec![0.0f64; l * l];
+        if t <= 1 {
+            // serial: interleave the symmetric write into the single pass
+            // (a separate stride-l mirror sweep would only add traffic)
+            for i in 0..l {
+                for j in i..l {
+                    let v = inst.z.gram(i, j);
+                    data[i * l + j] = v;
+                    data[j * l + i] = v;
+                }
+            }
+        } else {
+            let bounds = par::triangle_bounds(l, t);
+            par::run_sharded_mut(&mut data, l, &bounds, |rows, block| {
+                let lo = rows.start;
+                for i in rows {
+                    let base = (i - lo) * l;
+                    for j in i..l {
+                        block[base + j] = inst.z.gram(i, j);
+                    }
+                }
+            });
+            // mirror the strict upper triangle into the lower one. This
+            // stays serial: each lower row reads upper entries owned by
+            // other shards, so disjoint &mut blocks can't express it —
+            // and it is O(l²) memory traffic vs the O(l²·n) dots above.
+            for i in 0..l {
+                for j in (i + 1)..l {
+                    data[j * l + i] = data[i * l + j];
+                }
             }
         }
-        Dvi { form: DviForm::Theta, gram: Some(g) }
+        Dvi { form: DviForm::Theta, gram: Some(RowMatrix::from_flat(l, l, data)) }
     }
 
     /// Screen for C_next given θ*(C_prev). `u_prev` must equal Zᵀθ_prev
@@ -115,9 +151,40 @@ impl Dvi {
 /// can share it.
 pub fn dvi_scan(inst: &Instance, mid: f64, rad: f64, u: &[f64]) -> Vec<Decision> {
     assert_eq!(u.len(), inst.dim());
+    dvi_scan_range(inst, mid, rad, u, linalg::norm(u), 0..inst.len())
+}
+
+/// Sharded multi-threaded variant of [`dvi_scan`]: the l rows are split
+/// into contiguous shards evaluated on `std::thread::scope` workers and
+/// the per-shard decision vectors are merged in shard order. `‖u‖` is
+/// computed once and every per-row expression is identical to the serial
+/// scan, so the result is byte-identical to [`dvi_scan`] for any thread
+/// count (`threads`: 0 = auto-detect, 1 = serial).
+pub fn dvi_scan_par(inst: &Instance, mid: f64, rad: f64, u: &[f64], threads: usize) -> Vec<Decision> {
+    assert_eq!(u.len(), inst.dim());
     let u_norm = linalg::norm(u);
+    let shards = par::run_sharded(inst.len(), threads, |r| {
+        dvi_scan_range(inst, mid, rad, u, u_norm, r)
+    });
     let mut out = Vec::with_capacity(inst.len());
-    for i in 0..inst.len() {
+    for mut s in shards {
+        out.append(&mut s);
+    }
+    out
+}
+
+/// The scan kernel over one contiguous row range — the single source of
+/// truth both the serial and the sharded scans evaluate.
+fn dvi_scan_range(
+    inst: &Instance,
+    mid: f64,
+    rad: f64,
+    u: &[f64],
+    u_norm: f64,
+    rows: std::ops::Range<usize>,
+) -> Vec<Decision> {
+    let mut out = Vec::with_capacity(rows.end - rows.start);
+    for i in rows {
         let p = linalg::dot(u, inst.z.row(i)); // ⟨u, zᵢ⟩
         let zn = inst.z_norms_sq[i].sqrt();
         let slack = rad * u_norm * zn;
@@ -274,6 +341,38 @@ mod tests {
         let inst = Instance::from_dataset(Model::Svm, &ds);
         let r = solve(&inst, 1.0);
         Dvi::new_w().screen(&inst, 1.0, 1.0, &r.theta, &r.u);
+    }
+
+    #[test]
+    fn par_scan_matches_serial_scan_exactly() {
+        // l = 103 is prime, so no thread count divides it evenly
+        let ds = synth::gaussian_classes(40, 103, 5, 1.0, 1.0, 0.5, 1.0);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let r = solve(&inst, 0.4);
+        let want = dvi_scan(&inst, 0.55, 0.15, &r.u);
+        for threads in [1usize, 2, 4, 7, 0] {
+            let got = dvi_scan_par(&inst, 0.55, 0.15, &r.u, threads);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_gram_build_matches_serial() {
+        let ds = synth::toy_gaussian(41, 30, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let r = solve(&inst, 0.5);
+        let serial = Dvi::new_theta(&inst);
+        for threads in [2usize, 3, 7, 0] {
+            let par_rule = Dvi::new_theta_threads(&inst, threads);
+            assert_eq!(
+                serial.gram.as_ref().unwrap().flat(),
+                par_rule.gram.as_ref().unwrap().flat(),
+                "threads={threads}"
+            );
+            let a = serial.screen(&inst, 0.5, 0.8, &r.theta, &r.u);
+            let b = par_rule.screen(&inst, 0.5, 0.8, &r.theta, &r.u);
+            assert_eq!(a.decisions, b.decisions);
+        }
     }
 
     #[test]

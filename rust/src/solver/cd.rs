@@ -215,9 +215,54 @@ impl CdSolver {
     /// the optimality measure (0 at the exact optimum).
     pub fn kkt_violation(inst: &Instance, c: f64, theta: &[f64]) -> f64 {
         let u = inst.u_from_theta(theta);
+        Self::violation_rows(inst, c, theta, &u, 0..inst.len())
+    }
+
+    /// Sharded variant of [`Self::kkt_violation`] for `PathConfig::validate`
+    /// on large l: both O(l·n) passes (u = Zᵀθ and the per-row projected
+    /// gradients) run over contiguous row shards on `std::thread::scope`
+    /// workers. The max-reduction is order-independent; u is accumulated
+    /// from per-shard partials, so it can differ from the serial sum by
+    /// rounding only (irrelevant at validation tolerances). `threads`
+    /// follows the crate convention (0 = auto, 1 = serial).
+    pub fn kkt_violation_threads(inst: &Instance, c: f64, theta: &[f64], threads: usize) -> f64 {
+        let l = inst.len();
+        let t = crate::linalg::par::effective_threads(threads, l);
+        if t <= 1 {
+            return Self::kkt_violation(inst, c, theta);
+        }
+        let partials = crate::linalg::par::run_sharded(l, t, |rows| {
+            let mut u = vec![0.0; inst.dim()];
+            for i in rows {
+                if theta[i] != 0.0 {
+                    linalg::axpy(theta[i], inst.z.row(i), &mut u);
+                }
+            }
+            u
+        });
+        let mut u = vec![0.0; inst.dim()];
+        for p in &partials {
+            for (a, b) in u.iter_mut().zip(p) {
+                *a += *b;
+            }
+        }
+        crate::linalg::par::run_sharded(l, t, |rows| Self::violation_rows(inst, c, theta, &u, rows))
+            .into_iter()
+            .fold(0.0, f64::max)
+    }
+
+    /// Projected-gradient violation over one contiguous row range — shared
+    /// by the serial and sharded checks.
+    fn violation_rows(
+        inst: &Instance,
+        c: f64,
+        theta: &[f64],
+        u: &[f64],
+        rows: std::ops::Range<usize>,
+    ) -> f64 {
         let mut worst = 0.0f64;
-        for i in 0..inst.len() {
-            let g = c * linalg::dot(inst.z.row(i), &u) - inst.ybar[i];
+        for i in rows {
+            let g = c * linalg::dot(inst.z.row(i), u) - inst.ybar[i];
             let pg = if theta[i] <= inst.lo[i] + 1e-12 {
                 g.min(0.0)
             } else if theta[i] >= inst.hi[i] - 1e-12 {
@@ -239,7 +284,7 @@ mod tests {
     use crate::problem::{Instance, Model};
 
     fn solver() -> CdSolver {
-        CdSolver::new(SolverConfig { tol: 1e-8, max_outer: 10_000, shrink: true, seed: 1 })
+        CdSolver::new(SolverConfig { tol: 1e-8, max_outer: 10_000, shrink: true, seed: 1, threads: 1 })
     }
 
     #[test]
@@ -272,6 +317,23 @@ mod tests {
         let v = CdSolver::kkt_violation(&inst, 1.0, &r.theta);
         assert!(v < 1e-6, "violation {v}");
         assert!(inst.in_box(&r.theta, 1e-12));
+    }
+
+    #[test]
+    fn threaded_kkt_violation_matches_serial() {
+        let ds = synth::toy_gaussian(12, 90, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let r = solver().solve(&inst, 0.8, inst.cold_start());
+        let serial = CdSolver::kkt_violation(&inst, 0.8, &r.theta);
+        for threads in [2usize, 3, 7, 0] {
+            let par = CdSolver::kkt_violation_threads(&inst, 0.8, &r.theta, threads);
+            // u is summed from per-shard partials ⇒ rounding-level drift only
+            assert!(
+                (par - serial).abs() <= 1e-9 * serial.abs().max(1.0),
+                "threads={threads}: {par} vs {serial}"
+            );
+        }
+        assert_eq!(CdSolver::kkt_violation_threads(&inst, 0.8, &r.theta, 1), serial);
     }
 
     #[test]

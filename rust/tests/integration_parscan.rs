@@ -1,0 +1,116 @@
+//! Cross-backend equivalence: the sharded `ParScan` engine must produce
+//! decision vectors **byte-identical** to `NativeScan` — per thread count,
+//! per model (SVM, weighted SVM, LAD), and for shard-hostile sizes
+//! (l prime, l not divisible by the shard count, l < threads).
+
+use dvi_screen::config::SolverConfig;
+use dvi_screen::data::{synth, Dataset, Rng};
+use dvi_screen::path::{DviScanBackend, NativeScan, ParScan, PathConfig, PathRunner};
+use dvi_screen::problem::{Instance, Model};
+use dvi_screen::screening::RuleKind;
+use dvi_screen::solver::CdSolver;
+
+const THREAD_COUNTS: [usize; 5] = [1, 2, 4, 7, 0];
+
+fn assert_backends_agree(inst: &Instance, c0: f64, c1: f64, what: &str) {
+    let solver = CdSolver::new(SolverConfig { tol: 1e-8, max_outer: 100_000, ..Default::default() });
+    let r = solver.solve(inst, c0, inst.cold_start());
+    let mid = 0.5 * (c1 + c0);
+    let rad = 0.5 * (c1 - c0);
+    let want = NativeScan.scan(inst, mid, rad, &r.u);
+    for threads in THREAD_COUNTS {
+        let got = ParScan::new(threads).scan(inst, mid, rad, &r.u);
+        assert_eq!(got, want, "{what}: ParScan({threads}) diverged from NativeScan (l={})", inst.len());
+    }
+}
+
+#[test]
+fn svm_parscan_matches_native() {
+    // l = 206 (= 2·103, prime factor 103) never splits evenly over 4 or 7
+    let ds = synth::toy_gaussian(81, 103, 1.0, 0.75);
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    assert_backends_agree(&inst, 0.3, 0.55, "svm-toy");
+}
+
+#[test]
+fn weighted_svm_parscan_matches_native() {
+    let ds = synth::gaussian_classes(82, 121, 4, 1.2, 1.0, 0.25, 1.5);
+    let inst = Instance::from_dataset(Model::WeightedSvm, &ds);
+    assert_backends_agree(&inst, 0.2, 0.4, "weighted-svm");
+}
+
+#[test]
+fn lad_parscan_matches_native() {
+    let mut rng = Rng::new(83);
+    let ds = synth::random_regression(&mut rng, 101, 6);
+    let inst = Instance::from_dataset(Model::Lad, &ds);
+    assert_backends_agree(&inst, 0.15, 0.3, "lad");
+}
+
+/// Fewer rows than workers: every shard is ≤ 1 row, empty shards must not
+/// corrupt the merged order.
+#[test]
+fn tiny_instance_fewer_rows_than_threads() {
+    let ds = synth::gaussian_classes(84, 5, 3, 1.0, 1.0, 0.5, 1.0);
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    assert_backends_agree(&inst, 0.5, 0.9, "tiny");
+}
+
+/// Degenerate rows (all-zero features) must survive sharding unchanged.
+#[test]
+fn degenerate_rows_parscan_matches_native() {
+    use dvi_screen::linalg::RowMatrix;
+    let mut x = RowMatrix::zeros(9, 2);
+    x.set(0, 0, 1.0);
+    x.set(1, 0, 1.0);
+    x.set(2, 1, -2.0);
+    let ds = Dataset::new(
+        "degenerate",
+        dvi_screen::data::Task::Classification,
+        x,
+        vec![1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0],
+    );
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    assert_backends_agree(&inst, 0.4, 0.8, "degenerate");
+}
+
+/// End-to-end: a full path run with `solver.threads` set routes the scan
+/// through ParScan and must reproduce the serial path bit-for-bit —
+/// identical screening counts at every step and an identical final θ.
+#[test]
+fn sharded_path_run_is_bit_identical_to_serial() {
+    let ds = synth::toy_gaussian(85, 150, 1.0, 0.75);
+    let cfg = |threads: usize| {
+        let mut solver = SolverConfig { tol: 1e-7, max_outer: 50_000, ..Default::default() };
+        solver.threads = threads;
+        PathConfig::log_grid(1e-2, 10.0, 10).with_solver(solver).with_validation(true)
+    };
+    let serial = PathRunner::new(Model::Svm, cfg(1), RuleKind::DviW).run(&ds);
+    for threads in [2usize, 4, 7] {
+        let sharded = PathRunner::new(Model::Svm, cfg(threads), RuleKind::DviW).run(&ds);
+        assert_eq!(serial.steps.len(), sharded.steps.len());
+        for (a, b) in serial.steps.iter().zip(&sharded.steps) {
+            assert_eq!((a.n_lo, a.n_hi, a.free), (b.n_lo, b.n_hi, b.free), "at C={}", a.c);
+            assert_eq!(a.dual_obj, b.dual_obj, "objective drifted at C={}", a.c);
+        }
+        assert_eq!(serial.final_theta, sharded.final_theta, "threads={threads}");
+        assert!(sharded.worst_violation().unwrap() < 1e-5);
+    }
+}
+
+/// The θ-form rule with a sharded Gram build screens identically along a
+/// path (same counts per step as the serial θ-form and the w-form).
+#[test]
+fn sharded_theta_path_matches_serial_theta() {
+    let ds = synth::toy_gaussian(86, 80, 1.0, 0.75);
+    let cfg = |threads: usize| {
+        let mut solver = SolverConfig { tol: 1e-7, max_outer: 50_000, ..Default::default() };
+        solver.threads = threads;
+        PathConfig::log_grid(1e-2, 10.0, 6).with_solver(solver)
+    };
+    let serial = PathRunner::new(Model::Svm, cfg(1), RuleKind::DviTheta).run(&ds);
+    let sharded = PathRunner::new(Model::Svm, cfg(3), RuleKind::DviTheta).run(&ds);
+    for (a, b) in serial.steps.iter().zip(&sharded.steps) {
+        assert_eq!((a.n_lo, a.n_hi), (b.n_lo, b.n_hi), "at C={}", a.c);
+    }
+}
