@@ -66,6 +66,7 @@ fn main() {
         out_dir: "results".into(),
         use_pjrt: false,
         validate: false,
+        threads: 0, // auto-detect: drive the sharded scan engine
     };
     println!(
         "[e2e] scale {scale} (IJCNN1 -> {} rows), {points}-point grid\n",

@@ -12,20 +12,20 @@
 //! Run: `cargo run --release --example lad_outliers`
 
 use dvi_screen::data::{synth, Rng};
-use dvi_screen::linalg::{self, RowMatrix};
+use dvi_screen::linalg::{self, Rows};
 use dvi_screen::path::{PathConfig, PathRunner};
 use dvi_screen::problem::{Instance, Model};
 use dvi_screen::screening::RuleKind;
 
 /// Plain least squares via normal equations (n is small here); Gaussian
 /// elimination with partial pivoting.
-fn least_squares(x: &RowMatrix, y: &[f64]) -> Vec<f64> {
+fn least_squares(x: &Rows, y: &[f64]) -> Vec<f64> {
     let n = x.cols();
     // A = XᵀX, b = Xᵀy
     let mut a = vec![vec![0.0; n]; n];
     let mut b = vec![0.0; n];
     for i in 0..x.rows() {
-        let row = x.row(i);
+        let row = x.row(i).to_vec();
         for p in 0..n {
             b[p] += row[p] * y[i];
             for q in 0..n {

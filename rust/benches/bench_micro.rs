@@ -76,6 +76,44 @@ fn main() {
         }
     }
 
+    // ---- sparse vs dense scan ---------------------------------------------
+    // CSR storage pays an index per value but touches only the nonzeros:
+    // the acceptance series for the storage-polymorphic data layer. At
+    // density 0.01 the CSR scan must beat dense by ≥5× (the win grows
+    // with 1/density until the per-row overhead floor).
+    {
+        use dvi_screen::linalg::Storage;
+        println!("\n# sparse vs dense scan: CSR vs dense storage of the same data");
+        let max_l = common::arg_usize("max-l", 1_000_000);
+        let n = 200usize;
+        for l in [10_000usize, 100_000] {
+            if l > max_l {
+                println!("csr_dvi_scan_{l}x{n} skipped (--max-l {max_l})");
+                continue;
+            }
+            for density in [0.01f64, 0.1, 1.0] {
+                let ds = synth::sparse_classes(0xC5A0 + (density * 100.0) as u64, l, n, density);
+                let sparse = Instance::from_dataset(Model::Svm, &ds);
+                let dense =
+                    Instance::from_dataset(Model::Svm, &ds.clone().into_storage(Storage::Dense));
+                let u: Vec<f64> = (0..n).map(|i| (i as f64 * 0.13).sin()).collect();
+                let tag = format!("{l}x{n}_d{density}");
+                let sd = bench(&format!("dense_dvi_scan_{tag}"), 3, 0.3, || {
+                    dvi_scan(&dense, 1.05, 0.05, &u)
+                });
+                let ss = bench(&format!("csr_dvi_scan_{tag}"), 3, 0.3, || {
+                    dvi_scan(&sparse, 1.05, 0.05, &u)
+                });
+                println!(
+                    "    -> csr {:.2}x vs dense (nnz {} of {})",
+                    sd.min_s / ss.min_s,
+                    ds.nnz(),
+                    l * n
+                );
+            }
+        }
+    }
+
     // ---- PJRT scan -------------------------------------------------------
     match dvi_screen::runtime::PjrtScreener::from_default_dir() {
         Ok(mut screener) => {

@@ -14,6 +14,9 @@ use dvi_screen::experiments::{self, ExpOptions};
 fn main() {
     let scale = common::arg_f64("scale", 0.25);
     let points = common::arg_usize("points", 100);
+    // 0 = auto-detect: table regeneration exploits the sharded ParScan
+    // engine by default (results are identical to --threads 1)
+    let threads = common::arg_usize("threads", 0);
     let opts = ExpOptions {
         scale,
         points,
@@ -21,8 +24,9 @@ fn main() {
         out_dir: "results".into(),
         use_pjrt: false,
         validate: false,
+        threads,
     };
-    println!("# bench_tables: scale {scale}, {points}-point grid\n");
+    println!("# bench_tables: scale {scale}, {points}-point grid, threads {threads} (0 = auto)\n");
     let t = std::time::Instant::now();
     println!("{}", experiments::run("tab1", &opts).unwrap());
     println!("{}", experiments::run("tab2", &opts).unwrap());

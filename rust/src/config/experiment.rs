@@ -70,6 +70,14 @@ pub struct RunConfig {
     pub scale: f64,
     /// "dvi" (w-form) | "dvi-theta" | "ssnsv" | "essnsv" | "none"
     pub rule: String,
+    /// Instance-matrix storage: "dense" | "csr" | "auto" (auto picks CSR
+    /// at or below the density threshold when the dataset loads).
+    /// Screening decisions and solver iterates are identical either way
+    /// for the same matrix data. (One caveat: `Dataset::standardize` is
+    /// storage-dependent by design — CSR standardization is scale-only to
+    /// preserve sparsity, so a standardized CSR load differs from a
+    /// standardized dense load of the same file.)
+    pub storage: String,
     pub grid: GridConfig,
     pub solver: SolverConfig,
     /// Execute the screening scan through the AOT PJRT artifact instead of
@@ -87,6 +95,7 @@ impl Default for RunConfig {
             dataset: "toy1".into(),
             scale: 1.0,
             rule: "dvi".into(),
+            storage: "auto".into(),
             grid: GridConfig::default(),
             solver: SolverConfig::default(),
             use_pjrt: false,
@@ -148,11 +157,12 @@ impl RunConfig {
     /// catch typos early.
     pub fn from_toml_str(src: &str) -> Result<RunConfig, TomlError> {
         let m = parse_str(src)?;
-        const KNOWN: [&str; 14] = [
+        const KNOWN: [&str; 15] = [
             "model",
             "dataset",
             "scale",
             "rule",
+            "storage",
             "use_pjrt",
             "validate",
             "grid.c_min",
@@ -175,6 +185,7 @@ impl RunConfig {
             dataset: get_str(&m, "dataset", &d.dataset)?,
             scale: get_f64(&m, "scale", d.scale)?,
             rule: get_str(&m, "rule", &d.rule)?,
+            storage: get_str(&m, "storage", &d.storage)?,
             grid: GridConfig {
                 c_min: get_f64(&m, "grid.c_min", d.grid.c_min)?,
                 c_max: get_f64(&m, "grid.c_max", d.grid.c_max)?,
@@ -201,13 +212,23 @@ impl RunConfig {
         Self::from_toml_str(&src)
     }
 
-    fn validate_semantics(&self) -> Result<(), TomlError> {
+    /// Semantic validation shared by every ingest surface (TOML configs
+    /// and the screening service's JSON requests): model/rule/storage
+    /// vocabulary, grid bounds, and the scale/tol ranges whose violation
+    /// would OOM or wedge a worker rather than error cleanly.
+    pub(crate) fn validate_semantics(&self) -> Result<(), TomlError> {
         let bad = |msg: String| Err(TomlError { line: 0, msg });
         if !["svm", "lad", "wsvm"].contains(&self.model.as_str()) {
             return bad(format!("unknown model `{}`", self.model));
         }
         if !["dvi", "dvi-theta", "ssnsv", "essnsv", "none"].contains(&self.rule.as_str()) {
             return bad(format!("unknown rule `{}`", self.rule));
+        }
+        if crate::linalg::Storage::parse(&self.storage).is_none() {
+            return bad(format!(
+                "unknown storage `{}` (dense | csr | auto)",
+                self.storage
+            ));
         }
         if self.grid.c_min <= 0.0 || self.grid.c_max <= self.grid.c_min {
             return bad("grid must satisfy 0 < c_min < c_max".into());
@@ -250,6 +271,7 @@ model = "lad"
 dataset = "houses"
 scale = 0.25
 rule = "dvi-theta"
+storage = "csr"
 use_pjrt = true
 validate = true
 
@@ -268,10 +290,21 @@ threads = 4
         let c = RunConfig::from_toml_str(src).unwrap();
         assert_eq!(c.model, "lad");
         assert_eq!(c.dataset, "houses");
+        assert_eq!(c.storage, "csr");
         assert_eq!(c.grid.points, 10);
         assert_eq!(c.solver.seed, 7);
         assert_eq!(c.solver.threads, 4);
         assert!(c.use_pjrt && c.validate && !c.solver.shrink);
+    }
+
+    #[test]
+    fn storage_defaults_auto_and_validates() {
+        assert_eq!(RunConfig::from_toml_str("").unwrap().storage, "auto");
+        assert_eq!(
+            RunConfig::from_toml_str("storage = \"dense\"").unwrap().storage,
+            "dense"
+        );
+        assert!(RunConfig::from_toml_str("storage = \"sparse\"").is_err());
     }
 
     #[test]

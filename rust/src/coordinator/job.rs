@@ -74,7 +74,9 @@ pub fn run_job(spec: &JobSpec) -> JobOutcome {
 fn run_inner(cfg: &RunConfig) -> Result<JobSummary, String> {
     let model = Model::parse(&cfg.model).ok_or_else(|| format!("bad model `{}`", cfg.model))?;
     let rule = RuleKind::parse(&cfg.rule).ok_or_else(|| format!("bad rule `{}`", cfg.rule))?;
-    let ds = registry::resolve(&cfg.dataset, cfg.scale, model.expected_task())?;
+    let storage = crate::linalg::Storage::parse(&cfg.storage)
+        .ok_or_else(|| format!("bad storage `{}` (dense | csr | auto)", cfg.storage))?;
+    let ds = registry::resolve_storage(&cfg.dataset, cfg.scale, model.expected_task(), storage)?;
     if ds.task != model.expected_task() {
         return Err(format!(
             "dataset `{}` is a {:?} set but model `{}` expects {:?}",
@@ -117,6 +119,7 @@ mod tests {
             dataset: dataset.into(),
             scale: 0.05,
             rule: rule.into(),
+            storage: "auto".into(),
             grid: GridConfig { c_min: 0.01, c_max: 10.0, points: 6 },
             solver: SolverConfig { tol: 1e-6, max_outer: 50_000, ..Default::default() },
             use_pjrt: false,

@@ -140,6 +140,7 @@ mod tests {
                 dataset: dataset.into(),
                 scale: 0.03,
                 rule: "dvi".into(),
+                storage: "auto".into(),
                 grid: GridConfig { c_min: 0.01, c_max: 10.0, points: 4 },
                 solver: SolverConfig { tol: 1e-5, ..Default::default() },
                 use_pjrt: false,

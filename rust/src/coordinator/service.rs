@@ -7,7 +7,7 @@
 //! ```json
 //! {"dataset": "toy1", "model": "svm", "rule": "dvi",
 //!  "scale": 0.1, "points": 20, "c_min": 0.01, "c_max": 10.0,
-//!  "threads": 4, "validate": true}
+//!  "threads": 4, "storage": "auto", "validate": true}
 //! ```
 //!
 //! `threads` selects the sharded scan/validation engine for the job
@@ -79,17 +79,23 @@ impl ScreeningService {
                     }
                     cfg.solver.threads = t as usize;
                 }
+                "storage" => {
+                    let s = v.as_str().ok_or("storage: string")?;
+                    if crate::linalg::Storage::parse(s).is_none() {
+                        return Err(format!("storage must be dense|csr|auto, got `{s}`"));
+                    }
+                    cfg.storage = s.to_string();
+                }
                 "validate" => cfg.validate = v.as_bool().ok_or("validate: bool")?,
                 "use_pjrt" => cfg.use_pjrt = v.as_bool().ok_or("use_pjrt: bool")?,
                 other => return Err(format!("unknown request field `{other}`")),
             }
         }
-        if cfg.grid.c_max <= cfg.grid.c_min {
-            return Err(format!(
-                "need c_min < c_max, got [{}, {}]",
-                cfg.grid.c_min, cfg.grid.c_max
-            ));
-        }
+        // shared semantic validation (model/rule/storage vocabulary, grid
+        // ordering, scale ∈ (0,1], tol > 0) — without the scale bound a
+        // request like {"scale": 1e18} would reach the worker and abort
+        // it inside the dataset generator's allocation
+        cfg.validate_semantics().map_err(|e| e.to_string())?;
         Ok(cfg)
     }
 
@@ -227,6 +233,13 @@ mod tests {
             r#"{"dataset": "toy1", "c_max": -2.5}"#,
             r#"{"dataset": "toy1", "c_min": 5.0, "c_max": 0.5}"#,
             r#"{"dataset": "toy1", "threads": -1}"#,
+            // scale outside (0,1] must not reach the worker's dataset
+            // generator (an absurd scale aborts it inside the allocation)
+            r#"{"dataset": "toy1", "scale": 1e18}"#,
+            r#"{"dataset": "toy1", "scale": 0.0}"#,
+            r#"{"dataset": "toy1", "scale": -0.5}"#,
+            r#"{"dataset": "toy1", "model": "nope"}"#,
+            r#"{"dataset": "toy1", "rule": "nope"}"#,
         ] {
             let e = ScreeningService::parse_request(bad);
             assert!(e.is_err(), "accepted `{bad}`");
@@ -238,6 +251,23 @@ mod tests {
         .unwrap();
         assert_eq!(ok.grid.points, 2);
         assert_eq!(ok.solver.threads, 0);
+    }
+
+    #[test]
+    fn parse_request_storage() {
+        let cfg = ScreeningService::parse_request(
+            r#"{"dataset": "toy1", "storage": "csr"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.storage, "csr");
+        assert!(ScreeningService::parse_request(
+            r#"{"dataset": "toy1", "storage": "sparse"}"#
+        )
+        .is_err());
+        assert_eq!(
+            ScreeningService::parse_request(r#"{"dataset": "toy1"}"#).unwrap().storage,
+            "auto"
+        );
     }
 
     #[test]

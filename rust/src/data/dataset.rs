@@ -1,6 +1,9 @@
-//! The dataset container shared by every layer of the system.
+//! The dataset container shared by every layer of the system. Instances
+//! live in storage-polymorphic [`Rows`] — dense for the synthetic
+//! generators, CSR for sparse libsvm loads — and every consumer works
+//! through that interface.
 
-use crate::linalg::RowMatrix;
+use crate::linalg::{Rows, Storage};
 
 /// What the responses mean.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -11,20 +14,21 @@ pub enum Task {
     Regression,
 }
 
-/// A dense supervised data set: l instances × n features plus responses.
+/// A supervised data set: l instances × n features plus responses.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     /// Human-readable identifier, used in reports and the artifact cache.
     pub name: String,
     pub task: Task,
-    /// l × n instance matrix X (rows are instances).
-    pub x: RowMatrix,
+    /// l × n instance matrix X (rows are instances), dense or CSR.
+    pub x: Rows,
     /// Responses: labels (±1) for classification, targets for regression.
     pub y: Vec<f64>,
 }
 
 impl Dataset {
-    pub fn new(name: impl Into<String>, task: Task, x: RowMatrix, y: Vec<f64>) -> Self {
+    pub fn new(name: impl Into<String>, task: Task, x: impl Into<Rows>, y: Vec<f64>) -> Self {
+        let x = x.into();
         assert_eq!(x.rows(), y.len(), "instances and responses disagree");
         if task == Task::Classification {
             assert!(
@@ -52,32 +56,84 @@ impl Dataset {
         self.x.cols()
     }
 
-    /// Z-score every feature column in place (guarding zero-variance
-    /// columns). The paper's experiments standardize features; screening
-    /// bounds are scale-sensitive so this keeps norms comparable.
+    /// Standardize features in place. Dense storage gets the full z-score
+    /// (center + scale, guarding zero-variance columns) the paper's
+    /// experiments use. CSR storage gets *scale-only* standardization
+    /// (divide by the exact column std, computed over zeros too, without
+    /// centering) — centering would shift every structural zero to
+    /// −μ/σ and densify the matrix, so sparse pipelines follow the
+    /// standard sparse practice (scikit-learn's `with_mean=False`).
     pub fn standardize(&mut self) {
         let (l, n) = (self.len(), self.dim());
         if l == 0 {
             return;
         }
-        for j in 0..n {
-            let mut s = 0.0;
-            for i in 0..l {
-                s += self.x.get(i, j);
+        match &mut self.x {
+            Rows::Dense(x) => {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for i in 0..l {
+                        s += x.get(i, j);
+                    }
+                    let mu = s / l as f64;
+                    let mut v = 0.0;
+                    for i in 0..l {
+                        let d = x.get(i, j) - mu;
+                        v += d * d;
+                    }
+                    let sd = (v / l as f64).sqrt();
+                    let inv = if sd > 1e-12 { 1.0 / sd } else { 1.0 };
+                    for i in 0..l {
+                        let val = (x.get(i, j) - mu) * inv;
+                        x.set(i, j, val);
+                    }
+                }
             }
-            let mu = s / l as f64;
-            let mut v = 0.0;
-            for i in 0..l {
-                let d = self.x.get(i, j) - mu;
-                v += d * d;
-            }
-            let sd = (v / l as f64).sqrt();
-            let inv = if sd > 1e-12 { 1.0 / sd } else { 1.0 };
-            for i in 0..l {
-                let val = (self.x.get(i, j) - mu) * inv;
-                self.x.set(i, j, val);
+            Rows::Sparse(x) => {
+                // per-column Σv and Σv² over stored entries; zeros
+                // contribute 0 to both, so the population moments are
+                // exact: μ = Σv/l, var = Σv²/l − μ²
+                let mut sum = vec![0.0f64; n];
+                let mut sum_sq = vec![0.0f64; n];
+                for i in 0..l {
+                    let (idx, val) = x.row(i);
+                    for (&j, &v) in idx.iter().zip(val) {
+                        sum[j as usize] += v;
+                        sum_sq[j as usize] += v * v;
+                    }
+                }
+                let factors: Vec<f64> = (0..n)
+                    .map(|j| {
+                        let mu = sum[j] / l as f64;
+                        let var = (sum_sq[j] / l as f64 - mu * mu).max(0.0);
+                        let sd = var.sqrt();
+                        if sd > 1e-12 {
+                            1.0 / sd
+                        } else {
+                            1.0
+                        }
+                    })
+                    .collect();
+                x.scale_cols(&factors);
             }
         }
+    }
+
+    /// Stored entries in X (l·n for dense).
+    pub fn nnz(&self) -> usize {
+        self.x.nnz()
+    }
+
+    /// Stored-entry fraction of X.
+    pub fn density(&self) -> f64 {
+        self.x.density()
+    }
+
+    /// Convert X to the requested storage (no-op when already there;
+    /// `auto` picks CSR at or below the density threshold).
+    pub fn into_storage(mut self, storage: Storage) -> Dataset {
+        self.x = self.x.into_storage(storage);
+        self
     }
 
     /// Center regression targets (LAD has no intercept in problem (29);
@@ -165,6 +221,39 @@ mod tests {
         let mut d = Dataset::new("r", Task::Regression, x, vec![1.0, 2.0, 3.0]);
         d.center_targets();
         assert!((d.y.iter().sum::<f64>()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_standardize_is_scale_only() {
+        use crate::linalg::Storage;
+        let x = RowMatrix::from_flat(4, 2, vec![2.0, 0.0, 0.0, 0.0, -2.0, 0.0, 0.0, 4.0]);
+        let mut d = Dataset::new("sp", Task::Regression, x, vec![0.0; 4]).into_storage(Storage::Csr);
+        assert!(d.x.is_sparse());
+        let nnz_before = d.nnz();
+        d.standardize();
+        // sparsity pattern unchanged, columns divided by their exact std
+        assert_eq!(d.nnz(), nnz_before);
+        let sd0 = (2.0f64).sqrt(); // col0: {2,0,-2,0} → var 2
+        let sd1 = (3.0f64).sqrt(); // col1: {0,0,0,4} → var 3
+        assert!((d.x.get(0, 0) - 2.0 / sd0).abs() < 1e-12);
+        assert!((d.x.get(2, 0) + 2.0 / sd0).abs() < 1e-12);
+        assert!((d.x.get(3, 1) - 4.0 / sd1).abs() < 1e-12);
+        assert_eq!(d.x.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn storage_conversion_roundtrip() {
+        use crate::linalg::Storage;
+        let d = tiny();
+        let sparse = d.clone().into_storage(Storage::Csr);
+        assert!(sparse.x.is_sparse());
+        assert!(sparse.density() < 1.0); // tiny() has a structural zero
+        let back = sparse.into_storage(Storage::Dense);
+        for i in 0..d.len() {
+            for j in 0..d.dim() {
+                assert_eq!(back.x.get(i, j), d.x.get(i, j));
+            }
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! own data to the CLI.
 
 use super::dataset::{Dataset, Task};
-use crate::linalg::RowMatrix;
+use crate::linalg::{CsrMatrix, Storage};
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
@@ -45,9 +45,24 @@ impl From<std::io::Error> for IoError {
     }
 }
 
-/// Parse a libsvm file. Feature dimension is the max index seen (or
-/// `min_dim` if larger). `task` controls label validation.
+/// Parse a libsvm file with [`Storage::Auto`] selection: the parsed
+/// nonzeros become CSR when the density is at or below the auto
+/// threshold, dense otherwise. Feature dimension is the max index seen
+/// (or `min_dim` if larger). `task` controls label validation.
 pub fn read_libsvm(path: &Path, task: Task, min_dim: usize) -> Result<Dataset, IoError> {
+    read_libsvm_storage(path, task, min_dim, Storage::Auto)
+}
+
+/// [`read_libsvm`] with explicit storage selection. The file is parsed
+/// straight into per-row index/value lists and assembled as CSR — a dense
+/// l×n buffer is only ever materialized when `storage` resolves to
+/// dense (explicitly, or by `auto` on a dense-enough file).
+pub fn read_libsvm_storage(
+    path: &Path,
+    task: Task,
+    min_dim: usize,
+    storage: Storage,
+) -> Result<Dataset, IoError> {
     let f = File::open(path)?;
     let reader = BufReader::new(f);
     let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
@@ -65,6 +80,14 @@ pub fn read_libsvm(path: &Path, task: Task, min_dim: usize) -> Result<Dataset, I
             .ok_or_else(|| IoError::Parse { line: lineno + 1, msg: "missing label".into() })?
             .parse()
             .map_err(|e| IoError::Parse { line: lineno + 1, msg: format!("label: {e}") })?;
+        // non-finite labels would panic in label normalization's sort;
+        // reject them with a located error instead
+        if !lab.is_finite() {
+            return Err(IoError::Parse {
+                line: lineno + 1,
+                msg: format!("non-finite label {lab}"),
+            });
+        }
         let mut feats = Vec::new();
         for tok in parts {
             let (i, v) = tok.split_once(':').ok_or_else(|| IoError::Parse {
@@ -83,6 +106,15 @@ pub fn read_libsvm(path: &Path, task: Task, min_dim: usize) -> Result<Dataset, I
             let v: f64 = v
                 .parse()
                 .map_err(|e| IoError::Parse { line: lineno + 1, msg: format!("value: {e}") })?;
+            // non-finite values poison dense kernels (0·inf = NaN) while
+            // sparse intersection kernels skip them — rejecting here keeps
+            // the dense↔CSR equivalence guarantee honest
+            if !v.is_finite() {
+                return Err(IoError::Parse {
+                    line: lineno + 1,
+                    msg: format!("non-finite value {v} at index {i}"),
+                });
+            }
             max_idx = max_idx.max(i);
             feats.push((i - 1, v));
         }
@@ -93,48 +125,57 @@ pub fn read_libsvm(path: &Path, task: Task, min_dim: usize) -> Result<Dataset, I
         return Err(IoError::Empty);
     }
     let n = max_idx.max(min_dim);
-    let mut x = RowMatrix::zeros(rows.len(), n);
-    for (r, feats) in rows.iter().enumerate() {
-        for &(j, v) in feats {
-            x.set(r, j, v);
-        }
-    }
+    // assemble straight into CSR (the parse already is index/value pairs);
+    // densify only if the requested storage resolves to dense
+    let x = CsrMatrix::from_rows(rows, n);
     if task == Task::Classification {
-        // map arbitrary two-class labels onto ±1 (common: 0/1, 1/2)
-        let mut uniq: Vec<f64> = labels.clone();
-        uniq.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        uniq.dedup();
-        if uniq.len() != 2 && !(uniq.len() == 1 && (uniq[0] == 1.0 || uniq[0] == -1.0)) {
-            if uniq != vec![-1.0, 1.0] {
-                return Err(IoError::Parse {
-                    line: 0,
-                    msg: format!("expected 2 classes, got {:?}", uniq),
-                });
-            }
-        }
-        if uniq.len() == 2 && uniq != vec![-1.0, 1.0] {
-            let lo = uniq[0];
-            for l in &mut labels {
-                *l = if *l == lo { -1.0 } else { 1.0 };
-            }
-        }
+        normalize_two_class_labels(&mut labels)?;
     }
     Ok(Dataset::new(
         path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
         task,
         x,
         labels,
-    ))
+    )
+    .into_storage(storage))
 }
 
-/// Write a dataset in libsvm format (dense — all features emitted; zeros
-/// skipped to keep files small).
+/// Map arbitrary two-class labels onto ±1 in place (common encodings:
+/// 0/1, 1/2). Accepts: labels already in {−1, +1} (including a single
+/// class — degenerate but well-formed), or exactly two distinct values
+/// (the smaller becomes −1). Anything else — a single class not encoded
+/// ±1, or three or more classes — is rejected.
+fn normalize_two_class_labels(labels: &mut [f64]) -> Result<(), IoError> {
+    let mut uniq: Vec<f64> = labels.to_vec();
+    uniq.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    uniq.dedup();
+    match uniq.len() {
+        1 if uniq[0] == 1.0 || uniq[0] == -1.0 => Ok(()),
+        2 => {
+            if uniq != [-1.0, 1.0] {
+                let lo = uniq[0];
+                for l in labels {
+                    *l = if *l == lo { -1.0 } else { 1.0 };
+                }
+            }
+            Ok(())
+        }
+        _ => Err(IoError::Parse {
+            line: 0,
+            msg: format!("expected 2 classes, got {uniq:?}"),
+        }),
+    }
+}
+
+/// Write a dataset in libsvm format. Only nonzeros are emitted: CSR rows
+/// stream their stored entries directly, dense rows filter zeros — both
+/// storages produce identical files for the same data.
 pub fn write_libsvm(ds: &Dataset, path: &Path) -> Result<(), IoError> {
     let f = File::create(path)?;
     let mut w = BufWriter::new(f);
     for i in 0..ds.len() {
         write!(w, "{}", format_num(ds.y[i]))?;
-        for (j, &v) in ds.x.row(i).iter().enumerate() {
+        for (j, v) in ds.x.row(i).iter() {
             if v != 0.0 {
                 write!(w, " {}:{}", j + 1, format_num(v))?;
             }
@@ -208,6 +249,77 @@ mod tests {
     }
 
     #[test]
+    fn storage_selection_on_read() {
+        // 3 rows × 10 cols, 1 nonzero each → density 0.1 ≤ auto threshold
+        let p = tmpfile("storage.svm");
+        std::fs::write(&p, "1 10:1.0\n-1 3:2.0\n1 7:0.5\n").unwrap();
+        let auto = read_libsvm(&p, Task::Classification, 0).unwrap();
+        assert!(auto.x.is_sparse(), "auto must pick CSR at density 0.1");
+        assert_eq!(auto.nnz(), 3);
+        let dense = read_libsvm_storage(&p, Task::Classification, 0, Storage::Dense).unwrap();
+        assert!(!dense.x.is_sparse());
+        let csr = read_libsvm_storage(&p, Task::Classification, 0, Storage::Csr).unwrap();
+        assert!(csr.x.is_sparse());
+        for i in 0..3 {
+            for j in 0..10 {
+                assert_eq!(dense.x.get(i, j), csr.x.get(i, j));
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn sparse_write_matches_dense_write() {
+        let ds = synth::sparse_classes(11, 20, 12, 0.2);
+        let dense = ds.clone().into_storage(Storage::Dense);
+        let (p1, p2) = (tmpfile("w_sparse.svm"), tmpfile("w_dense.svm"));
+        write_libsvm(&ds, &p1).unwrap();
+        write_libsvm(&dense, &p2).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn label_normalization_cases() {
+        // single-class ±1: accepted as-is
+        let mut l = vec![1.0, 1.0];
+        assert!(normalize_two_class_labels(&mut l).is_ok());
+        assert_eq!(l, vec![1.0, 1.0]);
+        let mut l = vec![-1.0];
+        assert!(normalize_two_class_labels(&mut l).is_ok());
+        // single-class not ±1: rejected
+        let mut l = vec![0.0, 0.0];
+        assert!(normalize_two_class_labels(&mut l).is_err());
+        // 0/1 → ±1
+        let mut l = vec![0.0, 1.0, 0.0];
+        assert!(normalize_two_class_labels(&mut l).is_ok());
+        assert_eq!(l, vec![-1.0, 1.0, -1.0]);
+        // 1/2 → ±1
+        let mut l = vec![2.0, 1.0];
+        assert!(normalize_two_class_labels(&mut l).is_ok());
+        assert_eq!(l, vec![1.0, -1.0]);
+        // already ±1 untouched
+        let mut l = vec![1.0, -1.0];
+        assert!(normalize_two_class_labels(&mut l).is_ok());
+        assert_eq!(l, vec![1.0, -1.0]);
+        // 3 classes: rejected
+        let mut l = vec![0.0, 1.0, 2.0];
+        assert!(normalize_two_class_labels(&mut l).is_err());
+    }
+
+    #[test]
+    fn three_class_file_rejected() {
+        let p = tmpfile("3cls.svm");
+        std::fs::write(&p, "0 1:1\n1 1:2\n2 1:3\n").unwrap();
+        assert!(matches!(
+            read_libsvm(&p, Task::Classification, 0),
+            Err(IoError::Parse { .. })
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
     fn rejects_zero_index() {
         let p = tmpfile("zero.svm");
         std::fs::write(&p, "1 0:1.0\n").unwrap();
@@ -223,6 +335,22 @@ mod tests {
         let p = tmpfile("empty.svm");
         std::fs::write(&p, "\n# nothing\n").unwrap();
         assert!(matches!(read_libsvm(&p, Task::Regression, 0), Err(IoError::Empty)));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_non_finite_labels_and_values() {
+        let p = tmpfile("nonfinite.svm");
+        for contents in ["nan 1:1.0\n1 1:2.0\n", "1 5:inf\n-1 1:1.0\n", "1 2:-inf\n"] {
+            std::fs::write(&p, contents).unwrap();
+            assert!(
+                matches!(
+                    read_libsvm(&p, Task::Classification, 0),
+                    Err(IoError::Parse { .. })
+                ),
+                "accepted {contents:?}"
+            );
+        }
         std::fs::remove_file(&p).ok();
     }
 

@@ -4,39 +4,62 @@
 
 use super::dataset::{Dataset, Task};
 use super::{io, simreal, synth};
+use crate::linalg::Storage;
 use std::path::Path;
 
-/// Resolve a dataset name.
+/// Resolve a dataset name with automatic storage selection (sparse libsvm
+/// files load as CSR, dense synthetics stay dense).
 ///
 /// * `toy1`/`toy2`/`toy3` — the paper's §7.1 synthetics (1000/class);
 /// * `ijcnn1`, `wine`, `covertype`, `magic`, `computer`, `houses` — the
 ///   simulated analogs of the paper's real sets (scaled by `scale`);
-/// * `gauss:<l>:<n>` / `linreg:<l>:<n>` — parameterized synthetics;
+/// * `gauss:<l>:<n>` / `linreg:<l>:<n>` / `sparse:<l>:<n>` /
+///   `sparsereg:<l>:<n>` — parameterized synthetics (the sparse pair
+///   generates 5%-density CSR data);
 /// * `file:<path>` — libsvm file; task from `task` hint.
 pub fn resolve(name: &str, scale: f64, task_hint: Task) -> Result<Dataset, String> {
-    match name {
-        "toy1" => Ok(synth::toy_gaussian(1, scaled_per_class(scale), 1.5, 0.75)),
-        "toy2" => Ok(synth::toy_gaussian(2, scaled_per_class(scale), 0.75, 0.75)),
-        "toy3" => Ok(synth::toy_gaussian(3, scaled_per_class(scale), 0.5, 0.75)),
+    resolve_storage(name, scale, task_hint, Storage::Auto)
+}
+
+/// [`resolve`] with explicit storage selection: the resolved dataset is
+/// converted to the requested storage (generated sets included, so
+/// `--storage csr` can drive the whole pipeline through the sparse path
+/// on any dataset). libsvm files parse straight into CSR and are only
+/// densified when `storage` resolves to dense.
+pub fn resolve_storage(
+    name: &str,
+    scale: f64,
+    task_hint: Task,
+    storage: Storage,
+) -> Result<Dataset, String> {
+    let ds = match name {
+        "toy1" => synth::toy_gaussian(1, scaled_per_class(scale), 1.5, 0.75),
+        "toy2" => synth::toy_gaussian(2, scaled_per_class(scale), 0.75, 0.75),
+        "toy3" => synth::toy_gaussian(3, scaled_per_class(scale), 0.5, 0.75),
         _ => {
             if let Some(ds) = simreal::by_name(name, scale) {
-                return Ok(ds);
-            }
-            if let Some(rest) = name.strip_prefix("gauss:") {
+                ds
+            } else if let Some(rest) = name.strip_prefix("gauss:") {
                 let (l, n) = parse_l_n(rest)?;
-                return Ok(synth::gaussian_classes(0xA11CE, l, n, 1.0, 1.0, 0.5, 1.0));
-            }
-            if let Some(rest) = name.strip_prefix("linreg:") {
+                synth::gaussian_classes(0xA11CE, l, n, 1.0, 1.0, 0.5, 1.0)
+            } else if let Some(rest) = name.strip_prefix("linreg:") {
                 let (l, n) = parse_l_n(rest)?;
-                return Ok(synth::linear_regression(0xB0B, l, n, 0.2, 0.05, 10.0));
-            }
-            if let Some(path) = name.strip_prefix("file:") {
-                return io::read_libsvm(Path::new(path), task_hint, 0)
+                synth::linear_regression(0xB0B, l, n, 0.2, 0.05, 10.0)
+            } else if let Some(rest) = name.strip_prefix("sparse:") {
+                let (l, n) = parse_l_n(rest)?;
+                synth::sparse_classes(0x5BA5E, l, n, 0.05)
+            } else if let Some(rest) = name.strip_prefix("sparsereg:") {
+                let (l, n) = parse_l_n(rest)?;
+                synth::sparse_regression(0x5BA5F, l, n, 0.05, 0.2)
+            } else if let Some(path) = name.strip_prefix("file:") {
+                return io::read_libsvm_storage(Path::new(path), task_hint, 0, storage)
                     .map_err(|e| format!("read {path}: {e}"));
+            } else {
+                return Err(format!("unknown dataset `{name}`"));
             }
-            Err(format!("unknown dataset `{name}`"))
         }
-    }
+    };
+    Ok(ds.into_storage(storage))
 }
 
 fn scaled_per_class(scale: f64) -> usize {
@@ -88,6 +111,39 @@ mod tests {
         let name = format!("file:{}", p.display());
         let back = resolve(&name, 1.0, Task::Classification).unwrap();
         assert_eq!(back.len(), 20);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn sparse_parameterized_resolve() {
+        let d = resolve("sparse:60:40", 1.0, Task::Classification).unwrap();
+        assert_eq!((d.len(), d.dim()), (60, 40));
+        assert!(d.x.is_sparse());
+        let r = resolve("sparsereg:30:20", 1.0, Task::Regression).unwrap();
+        assert_eq!(r.task, Task::Regression);
+        assert!(r.x.is_sparse());
+    }
+
+    #[test]
+    fn storage_override_applies_to_generated_sets() {
+        let csr = resolve_storage("toy1", 0.05, Task::Classification, Storage::Csr).unwrap();
+        assert!(csr.x.is_sparse());
+        let dense =
+            resolve_storage("sparse:40:30", 1.0, Task::Classification, Storage::Dense).unwrap();
+        assert!(!dense.x.is_sparse());
+    }
+
+    #[test]
+    fn file_resolve_respects_storage() {
+        let ds = synth::sparse_classes(9, 30, 50, 0.05);
+        let mut p = std::env::temp_dir();
+        p.push(format!("dvi_registry_sparse_{}.svm", std::process::id()));
+        io::write_libsvm(&ds, &p).unwrap();
+        let name = format!("file:{}", p.display());
+        let auto = resolve(&name, 1.0, Task::Classification).unwrap();
+        assert!(auto.x.is_sparse(), "5% density file must auto-load as CSR");
+        let dense = resolve_storage(&name, 1.0, Task::Classification, Storage::Dense).unwrap();
+        assert!(!dense.x.is_sparse());
         std::fs::remove_file(&p).ok();
     }
 

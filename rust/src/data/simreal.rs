@@ -277,7 +277,7 @@ mod tests {
     fn deterministic() {
         let a = wine(0.01);
         let b = wine(0.01);
-        assert_eq!(a.x.flat(), b.x.flat());
+        assert_eq!(a.x, b.x);
         assert_eq!(a.y, b.y);
     }
 }

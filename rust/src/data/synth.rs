@@ -9,7 +9,7 @@
 
 use super::dataset::{Dataset, Task};
 use super::rng::Rng;
-use crate::linalg::RowMatrix;
+use crate::linalg::{CsrMatrix, RowMatrix};
 
 /// The paper's 2-D two-gaussian toys. `toy_id` only names the set
 /// (Toy1/2/3); pass `mu` = 1.5 / 0.75 / 0.5 and `sigma` = 0.75 for the
@@ -101,6 +101,63 @@ pub fn linear_regression(
     Dataset::new(format!("linreg{seed}"), Task::Regression, x, y)
 }
 
+/// Per-row nonzero entries for a random sparse design: each of the `n`
+/// features is present with probability `density`, values N(0, 1).
+fn sparse_design(rng: &mut Rng, l: usize, n: usize, density: f64) -> Vec<Vec<(usize, f64)>> {
+    let mut rows = Vec::with_capacity(l);
+    for _ in 0..l {
+        let mut feats = Vec::new();
+        for j in 0..n {
+            if rng.bernoulli(density) {
+                feats.push((j, rng.normal(0.0, 1.0)));
+            }
+        }
+        rows.push(feats);
+    }
+    rows
+}
+
+/// Randomized sparse two-class set in CSR storage (the shape of the
+/// paper's real libsvm benchmarks): features present with probability
+/// `density`, labels from a dense random hyperplane with a noise margin
+/// so both classes occur and the problem is learnable but not separable.
+pub fn sparse_classes(seed: u64, l: usize, n: usize, density: f64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let w0: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+    let rows = sparse_design(&mut rng, l, n, density);
+    let x = CsrMatrix::from_rows(rows, n);
+    let y: Vec<f64> = (0..l)
+        .map(|i| {
+            let (idx, val) = x.row(i);
+            let s: f64 = idx.iter().zip(val).map(|(&j, &v)| v * w0[j as usize]).sum();
+            let noisy = s + rng.normal(0.0, 0.3);
+            if noisy >= 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        })
+        .collect();
+    Dataset::new(format!("sparse{seed}"), Task::Classification, x, y)
+}
+
+/// Randomized sparse regression set in CSR storage: y = ⟨w°, x⟩ + ε over
+/// a `density`-sparse design.
+pub fn sparse_regression(seed: u64, l: usize, n: usize, density: f64, noise: f64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let w0: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+    let rows = sparse_design(&mut rng, l, n, density);
+    let x = CsrMatrix::from_rows(rows, n);
+    let y: Vec<f64> = (0..l)
+        .map(|i| {
+            let (idx, val) = x.row(i);
+            let s: f64 = idx.iter().zip(val).map(|(&j, &v)| v * w0[j as usize]).sum();
+            s + rng.normal(0.0, noise)
+        })
+        .collect();
+    Dataset::new(format!("sparsereg{seed}"), Task::Regression, x, y)
+}
+
 /// Small random classification problem for unit/property tests.
 pub fn random_classification(rng: &mut Rng, l: usize, n: usize) -> Dataset {
     let mu = rng.uniform_in(0.2, 2.0);
@@ -142,8 +199,26 @@ mod tests {
     fn toys_are_reproducible() {
         let a = toy_gaussian(2, 100, 0.75, 0.75);
         let b = toy_gaussian(2, 100, 0.75, 0.75);
-        assert_eq!(a.x.flat(), b.x.flat());
+        assert_eq!(a.x, b.x);
         assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn sparse_generators_shapes_and_storage() {
+        let c = sparse_classes(5, 200, 40, 0.1);
+        assert!(c.x.is_sparse());
+        assert_eq!((c.len(), c.dim()), (200, 40));
+        // expected nnz ≈ 200·40·0.1 = 800
+        assert!((c.nnz() as f64 - 800.0).abs() < 200.0, "nnz {}", c.nnz());
+        let pf = c.positive_fraction();
+        assert!(pf > 0.1 && pf < 0.9, "degenerate label balance {pf}");
+        // reproducible
+        assert_eq!(sparse_classes(5, 200, 40, 0.1).x, c.x);
+
+        let r = sparse_regression(6, 100, 30, 0.2, 0.1);
+        assert!(r.x.is_sparse());
+        assert_eq!(r.task, Task::Regression);
+        assert_eq!((r.len(), r.dim()), (100, 30));
     }
 
     #[test]

@@ -29,6 +29,11 @@ pub struct ExpOptions {
     pub use_pjrt: bool,
     /// Per-step full-KKT validation (slower; for the test suite).
     pub validate: bool,
+    /// Worker threads for the sharded scan/Gram/validation engine
+    /// (crate convention: 1 = serial, 0 = auto-detect, n = n workers).
+    /// Table/figure regeneration at paper scale should run 0 (auto) so
+    /// the ParScan engine is exploited; results are identical either way.
+    pub threads: usize,
 }
 
 impl Default for ExpOptions {
@@ -40,6 +45,7 @@ impl Default for ExpOptions {
             out_dir: PathBuf::from("results"),
             use_pjrt: false,
             validate: false,
+            threads: 1,
         }
     }
 }
@@ -47,7 +53,11 @@ impl Default for ExpOptions {
 impl ExpOptions {
     fn path_config(&self, c_min: f64, c_max: f64) -> PathConfig {
         PathConfig::log_grid(c_min, c_max, self.points)
-            .with_solver(SolverConfig { tol: self.tol, ..Default::default() })
+            .with_solver(SolverConfig {
+                tol: self.tol,
+                threads: self.threads,
+                ..Default::default()
+            })
             .with_validation(self.validate)
     }
 
@@ -408,6 +418,7 @@ pub fn ablation_grid_density(opts: &ExpOptions) -> String {
         let cfg = || {
             PathConfig::log_grid(1e-2, 10.0, points).with_solver(SolverConfig {
                 tol: opts.tol,
+                threads: opts.threads,
                 ..Default::default()
             })
         };
@@ -444,6 +455,7 @@ mod tests {
             out_dir: dir,
             use_pjrt: false,
             validate: false,
+            threads: 2, // exercise the sharded engine in the harness tests
         }
     }
 

@@ -24,8 +24,8 @@
 //!   service: the L3 entry point that examples and the CLI drive.
 //! * [`data`], [`linalg`], [`config`], [`report`], [`validation`],
 //!   [`metrics`], [`testutil`] — substrates (dataset generators and IO,
-//!   dense kernels, config parsing, table/figure emitters, safety
-//!   validation, metrics, property-test helpers).
+//!   storage-polymorphic dense/CSR kernels, config parsing, table/figure
+//!   emitters, safety validation, metrics, property-test helpers).
 //!
 //! ## Quickstart
 //!

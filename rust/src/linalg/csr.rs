@@ -1,0 +1,455 @@
+//! Compressed sparse row (CSR) matrix — the sparse sibling of
+//! [`super::RowMatrix`].
+//!
+//! libsvm inputs are overwhelmingly sparse; storing only the nonzeros
+//! multiplies the effective bandwidth of every row-wise pass (the DVI
+//! scan, the Gram build, the CD gradient sweep) by `1/density`.
+//!
+//! **Bit-compatibility contract.** Every kernel here reproduces the exact
+//! floating-point result of its dense counterpart in [`super`]: the dense
+//! 8-way-unrolled `dot` assigns position `j` to accumulator `j % 8` (for
+//! `j` below the 8-aligned limit) and sums the ragged tail sequentially,
+//! and a zero term is an additive identity — so striping the *nonzeros*
+//! into the same accumulators in ascending-index order yields the same
+//! partial sums, the same final reduction, and therefore bit-identical
+//! screening decisions and solver iterates on sparse and dense storage of
+//! the same data. The equivalence suite (`tests/integration_storage.rs`)
+//! locks this in end-to-end.
+
+use super::matrix::RowMatrix;
+
+/// CSR sparse matrix: `indptr` (len `rows + 1`) delimits each row's slice
+/// of `indices`/`values`; indices are strictly ascending within a row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from per-row `(col, value)` entry lists (the shape a libsvm
+    /// parse produces). Entries may be unordered; duplicate columns keep
+    /// the *last* value, matching dense `set` overwrite semantics.
+    pub fn from_rows(entries: Vec<Vec<(usize, f64)>>, cols: usize) -> CsrMatrix {
+        assert!(cols <= u32::MAX as usize, "column count exceeds u32 index range");
+        let rows = entries.len();
+        let mut indptr = Vec::with_capacity(rows + 1);
+        indptr.push(0usize);
+        let nnz_hint: usize = entries.iter().map(|r| r.len()).sum();
+        let mut indices = Vec::with_capacity(nnz_hint);
+        let mut values = Vec::with_capacity(nnz_hint);
+        for mut feats in entries {
+            feats.sort_by_key(|&(j, _)| j); // stable: file order kept per column
+            let mut k = 0;
+            while k < feats.len() {
+                let (j, mut v) = feats[k];
+                assert!(j < cols, "column index {j} out of range (cols = {cols})");
+                // last duplicate wins (dense overwrite semantics)
+                while k + 1 < feats.len() && feats[k + 1].0 == j {
+                    k += 1;
+                    v = feats[k].1;
+                }
+                indices.push(j as u32);
+                values.push(v);
+                k += 1;
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix { rows, cols, indptr, indices, values }
+    }
+
+    /// Compress a dense matrix (drops exact zeros).
+    pub fn from_dense(m: &RowMatrix) -> CsrMatrix {
+        assert!(m.cols() <= u32::MAX as usize, "column count exceeds u32 index range");
+        let (rows, cols) = (m.rows(), m.cols());
+        let mut indptr = Vec::with_capacity(rows + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..rows {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix { rows, cols, indptr, indices, values }
+    }
+
+    /// Materialize as dense (the only place sparse storage allocates an
+    /// l×n buffer — callers opt in explicitly).
+    pub fn to_dense(&self) -> RowMatrix {
+        let mut m = RowMatrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            let r = m.row_mut(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                r[j as usize] = v;
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored-entry count.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Cumulative row nonzero counts (len `rows + 1`) — the natural
+    /// weight vector for area-balanced sharding of row-wise passes.
+    #[inline]
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    /// Row i as (indices, values) slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Stored entries in row i.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// Element accessor (binary search within the row).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (idx, val) = self.row(i);
+        match idx.binary_search(&(j as u32)) {
+            Ok(k) => val[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// out[i] = ⟨row_i, v⟩ — bit-identical to the dense matvec.
+    pub fn matvec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for (i, o) in out.iter_mut().enumerate() {
+            let (idx, val) = self.row(i);
+            *o = striped_sparse_dot(idx, val, v, self.cols);
+        }
+    }
+
+    /// out = Mᵀ v — bit-identical to the dense t_matvec (which skips
+    /// zero coefficients and axpy-accumulates rows in ascending order).
+    pub fn t_matvec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for (i, &vi) in v.iter().enumerate() {
+            if vi != 0.0 {
+                let (idx, val) = self.row(i);
+                sparse_axpy(vi, idx, val, out);
+            }
+        }
+    }
+
+    /// Squared norm of every row — bit-identical to the dense version.
+    pub fn row_norms_sq(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| {
+                let (idx, val) = self.row(i);
+                striped_sparse_self_dot(idx, val, self.cols)
+            })
+            .collect()
+    }
+
+    /// Gram entry G[i,j] = ⟨row_i, row_j⟩ — bit-identical to the dense
+    /// dot (zero products are additive identities; the intersection merge
+    /// feeds the same stripe accumulators in the same order).
+    pub fn gram(&self, i: usize, j: usize) -> f64 {
+        let (ai, av) = self.row(i);
+        let (bi, bv) = self.row(j);
+        striped_sparse_sparse_dot(ai, av, bi, bv, self.cols)
+    }
+
+    /// Sub-matrix of the given rows (copies).
+    pub fn select_rows(&self, idx: &[usize]) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(idx.len() + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for &i in idx {
+            let (ri, rv) = self.row(i);
+            indices.extend_from_slice(ri);
+            values.extend_from_slice(rv);
+            indptr.push(indices.len());
+        }
+        CsrMatrix { rows: idx.len(), cols: self.cols, indptr, indices, values }
+    }
+
+    /// Scale row i in place by s.
+    pub fn scale_row(&mut self, i: usize, s: f64) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        for v in &mut self.values[a..b] {
+            *v *= s;
+        }
+    }
+
+    /// Scale column j in place by s (sparsity-preserving).
+    pub fn scale_col(&mut self, j: usize, s: f64) {
+        let j = j as u32;
+        for (idx, v) in self.indices.iter().zip(self.values.iter_mut()) {
+            if *idx == j {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Scale every column j by `factors[j]` in one pass over the stored
+    /// values (sparsity-preserving; used by scale-only standardization of
+    /// sparse datasets).
+    pub fn scale_cols(&mut self, factors: &[f64]) {
+        assert_eq!(factors.len(), self.cols, "one factor per column");
+        for (idx, v) in self.indices.iter().zip(self.values.iter_mut()) {
+            *v *= factors[*idx as usize];
+        }
+    }
+
+    /// New matrix with the same sparsity pattern and transformed values;
+    /// `f(row, col, value)` is called per stored entry. This is how an
+    /// [`crate::problem::Instance`] builds Z = −yᵢ·xᵢ without densifying.
+    pub fn map_values(&self, mut f: impl FnMut(usize, usize, f64) -> f64) -> CsrMatrix {
+        let mut values = Vec::with_capacity(self.values.len());
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                values.push(f(i, j as usize, v));
+            }
+        }
+        CsrMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: self.indptr.clone(),
+            indices: self.indices.clone(),
+            values,
+        }
+    }
+}
+
+/// ⟨sparse row, dense y⟩ striped into the dense `dot`'s accumulator
+/// layout: position `j` below the 8-aligned limit feeds accumulator
+/// `j % 8`, the ragged tail sums sequentially, and the final reduction
+/// tree matches — bit-identical to `linalg::dot(dense_row, y)`.
+#[inline]
+pub fn striped_sparse_dot(indices: &[u32], values: &[f64], y: &[f64], cols: usize) -> f64 {
+    debug_assert_eq!(y.len(), cols);
+    let limit = (cols / 8) * 8;
+    let mut s = [0.0f64; 8];
+    let mut tail = 0.0;
+    for (&j, &v) in indices.iter().zip(values) {
+        let j = j as usize;
+        if j < limit {
+            s[j % 8] += v * y[j];
+        } else {
+            tail += v * y[j];
+        }
+    }
+    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])) + tail
+}
+
+/// ⟨row, row⟩ with the same striping — bit-identical to
+/// `linalg::dot(dense_row, dense_row)`.
+#[inline]
+pub fn striped_sparse_self_dot(indices: &[u32], values: &[f64], cols: usize) -> f64 {
+    let limit = (cols / 8) * 8;
+    let mut s = [0.0f64; 8];
+    let mut tail = 0.0;
+    for (&j, &v) in indices.iter().zip(values) {
+        if (j as usize) < limit {
+            s[j as usize % 8] += v * v;
+        } else {
+            tail += v * v;
+        }
+    }
+    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])) + tail
+}
+
+/// ⟨sparse a, sparse b⟩ over the index intersection (ascending merge),
+/// striped identically — bit-identical to the dense Gram dot.
+#[inline]
+pub fn striped_sparse_sparse_dot(
+    ai: &[u32],
+    av: &[f64],
+    bi: &[u32],
+    bv: &[f64],
+    cols: usize,
+) -> f64 {
+    let limit = (cols / 8) * 8;
+    let mut s = [0.0f64; 8];
+    let mut tail = 0.0;
+    let (mut p, mut q) = (0usize, 0usize);
+    while p < ai.len() && q < bi.len() {
+        match ai[p].cmp(&bi[q]) {
+            std::cmp::Ordering::Less => p += 1,
+            std::cmp::Ordering::Greater => q += 1,
+            std::cmp::Ordering::Equal => {
+                let j = ai[p] as usize;
+                let prod = av[p] * bv[q];
+                if j < limit {
+                    s[j % 8] += prod;
+                } else {
+                    tail += prod;
+                }
+                p += 1;
+                q += 1;
+            }
+        }
+    }
+    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])) + tail
+}
+
+/// out += a·row for a sparse row — same per-component additions (in
+/// ascending index order) as the dense `axpy`, which adds an exact zero
+/// everywhere the sparse row has no entry.
+#[inline]
+pub fn sparse_axpy(a: f64, indices: &[u32], values: &[f64], out: &mut [f64]) {
+    for (&j, &v) in indices.iter().zip(values) {
+        out[j as usize] += a * v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+
+    fn sample() -> CsrMatrix {
+        // 3×5: [[1,0,2,0,0],[0,0,0,0,3],[0,-1,0,4,0]]
+        CsrMatrix::from_rows(
+            vec![
+                vec![(0, 1.0), (2, 2.0)],
+                vec![(4, 3.0)],
+                vec![(3, 4.0), (1, -1.0)], // unordered on purpose
+            ],
+            5,
+        )
+    }
+
+    #[test]
+    fn construction_sorts_and_dedups() {
+        let m = sample();
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 5);
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.row(2), (&[1u32, 3][..], &[-1.0, 4.0][..]));
+        // duplicate column: last value wins (dense overwrite semantics)
+        let d = CsrMatrix::from_rows(vec![vec![(1, 5.0), (1, 7.0)]], 3);
+        assert_eq!(d.nnz(), 1);
+        assert_eq!(d.get(0, 1), 7.0);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = sample();
+        let d = m.to_dense();
+        assert_eq!(d.row(0), &[1.0, 0.0, 2.0, 0.0, 0.0]);
+        assert_eq!(CsrMatrix::from_dense(&d), m);
+    }
+
+    #[test]
+    fn get_and_row_nnz() {
+        let m = sample();
+        assert_eq!(m.get(0, 2), 2.0);
+        assert_eq!(m.get(0, 1), 0.0);
+        assert_eq!(m.row_nnz(1), 1);
+        assert_eq!(m.indptr(), &[0, 2, 3, 5]);
+    }
+
+    #[test]
+    fn ops_bit_identical_to_dense() {
+        // randomized wide matrix so the 8-aligned limit and ragged tail
+        // are both exercised
+        let mut rng = crate::data::Rng::new(42);
+        let (l, n) = (17usize, 27usize);
+        let mut entries = Vec::new();
+        for _ in 0..l {
+            let mut row = Vec::new();
+            for j in 0..n {
+                if rng.bernoulli(0.3) {
+                    row.push((j, rng.normal(0.0, 1.0)));
+                }
+            }
+            entries.push(row);
+        }
+        let sp = CsrMatrix::from_rows(entries, n);
+        let de = sp.to_dense();
+
+        let v: Vec<f64> = (0..n).map(|j| (j as f64 * 0.7).sin()).collect();
+        let (mut a, mut b) = (vec![0.0; l], vec![0.0; l]);
+        sp.matvec(&v, &mut a);
+        de.matvec(&v, &mut b);
+        assert_eq!(a, b, "matvec must be bit-identical");
+
+        let w: Vec<f64> = (0..l).map(|i| if i % 3 == 0 { 0.0 } else { (i as f64).cos() }).collect();
+        let (mut ua, mut ub) = (vec![0.0; n], vec![0.0; n]);
+        sp.t_matvec(&w, &mut ua);
+        de.t_matvec(&w, &mut ub);
+        assert_eq!(ua, ub, "t_matvec must be bit-identical");
+
+        assert_eq!(sp.row_norms_sq(), de.row_norms_sq(), "row norms must be bit-identical");
+        for i in 0..l {
+            for j in 0..l {
+                assert_eq!(sp.gram(i, j), de.gram(i, j), "gram({i},{j})");
+            }
+        }
+        for i in 0..l {
+            let (idx, val) = sp.row(i);
+            assert_eq!(
+                striped_sparse_dot(idx, val, &v, n),
+                linalg::dot(de.row(i), &v),
+                "row dot {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn select_and_scale() {
+        let mut m = sample();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.rows(), 2);
+        assert_eq!(s.get(0, 3), 4.0);
+        assert_eq!(s.get(1, 0), 1.0);
+        m.scale_row(0, -2.0);
+        assert_eq!(m.get(0, 2), -4.0);
+        m.scale_col(4, 0.5);
+        assert_eq!(m.get(1, 4), 1.5);
+        m.scale_cols(&[2.0, 1.0, 1.0, 1.0, 2.0]);
+        assert_eq!(m.get(0, 0), -4.0);
+        assert_eq!(m.get(1, 4), 3.0);
+    }
+
+    #[test]
+    fn map_values_preserves_pattern() {
+        let m = sample();
+        let neg = m.map_values(|_, _, v| -v);
+        assert_eq!(neg.indptr(), m.indptr());
+        assert_eq!(neg.get(2, 3), -4.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_index() {
+        CsrMatrix::from_rows(vec![vec![(5, 1.0)]], 5);
+    }
+}

@@ -7,10 +7,14 @@
 //! `chunks_exact`). These are the L3 hot paths profiled in
 //! `EXPERIMENTS.md §Perf`.
 
+pub mod csr;
 pub mod matrix;
 pub mod par;
+pub mod rows;
 
+pub use csr::CsrMatrix;
 pub use matrix::RowMatrix;
+pub use rows::{RowView, Rows, Storage};
 
 /// Dot product ⟨x, y⟩ with 8 independent accumulators (breaks the FP
 /// dependency chain so LLVM emits vector FMAs).

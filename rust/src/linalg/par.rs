@@ -52,6 +52,33 @@ pub fn shard_ranges(items: usize, shards: usize) -> Vec<Range<usize>> {
     out
 }
 
+/// Split rows into `shards` contiguous ranges balanced by a cumulative
+/// weight vector `cum` (length `rows + 1`, non-decreasing, `cum[0] = 0`) —
+/// e.g. a CSR `indptr`, so each shard carries a near-equal *nonzero*
+/// count rather than a near-equal row count. Ranges cover `0..rows` in
+/// order; a pathologically heavy row can leave neighbouring ranges empty.
+pub fn cumulative_ranges(cum: &[usize], shards: usize) -> Vec<Range<usize>> {
+    assert!(shards >= 1, "need at least one shard");
+    assert!(!cum.is_empty() && cum[0] == 0, "cum must start at 0");
+    let rows = cum.len() - 1;
+    let total = cum[rows] as u128;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    for k in 1..=shards {
+        let end = if k == shards {
+            rows
+        } else {
+            let target = total * k as u128 / shards as u128;
+            cum.partition_point(|&c| (c as u128) < target)
+                .min(rows)
+                .max(start)
+        };
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
 /// Row boundaries (length `shards + 1`) that split the upper triangle of
 /// an l×l matrix into row blocks of near-equal area: row i contributes
 /// `l − i` entries, so early rows are "heavier" and equal-row splits would
@@ -87,8 +114,19 @@ where
         return Vec::new();
     }
     let t = effective_threads(threads, items);
-    let ranges = shard_ranges(items, t);
-    if t == 1 {
+    run_sharded_ranges(shard_ranges(items, t), f)
+}
+
+/// Like [`run_sharded`], but over caller-supplied contiguous ranges (e.g.
+/// nonzero-balanced shards from [`cumulative_ranges`] or
+/// [`crate::linalg::Rows::balanced_shards`]). One range runs serially in
+/// the calling thread; results come back in range order.
+pub fn run_sharded_ranges<T, F>(ranges: Vec<Range<usize>>, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    if ranges.len() <= 1 {
         return ranges.into_iter().map(f).collect();
     }
     std::thread::scope(|s| {
@@ -174,6 +212,58 @@ mod tests {
         // an absurd request degrades instead of trying to spawn that many
         let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         assert!(effective_threads(500_000, 1_000_000) <= 4 * hw);
+    }
+
+    #[test]
+    fn cumulative_ranges_cover_and_balance() {
+        // uneven weights: row i carries i+1 units
+        for rows in [1usize, 7, 64, 103] {
+            let mut cum = vec![0usize];
+            for i in 0..rows {
+                cum.push(cum[i] + i + 1);
+            }
+            for shards in [1usize, 2, 4, 7] {
+                let rs = cumulative_ranges(&cum, shards);
+                assert_eq!(rs.len(), shards);
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next);
+                    assert!(r.end >= r.start);
+                    next = r.end;
+                }
+                assert_eq!(next, rows);
+                if rows >= 32 && shards > 1 {
+                    let total = cum[rows];
+                    for r in &rs {
+                        let area = cum[r.end] - cum[r.start];
+                        // each shard within one max-row-weight of ideal
+                        assert!(
+                            area <= total / shards + rows + 1,
+                            "area {area} of {total} in {shards} shards"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cumulative_ranges_uniform_matches_even_split() {
+        let cum: Vec<usize> = (0..=20).map(|i| i * 3).collect();
+        let rs = cumulative_ranges(&cum, 4);
+        let sizes: Vec<usize> = rs.iter().map(|r| r.end - r.start).collect();
+        assert_eq!(sizes, vec![5, 5, 5, 5]);
+    }
+
+    #[test]
+    fn run_sharded_ranges_preserves_order() {
+        let cum: Vec<usize> = (0..=11).map(|i| i * i).collect();
+        let ranges = cumulative_ranges(&cum, 4);
+        let flat: Vec<usize> = run_sharded_ranges(ranges, |r| r.collect::<Vec<usize>>())
+            .into_iter()
+            .flatten()
+            .collect();
+        assert_eq!(flat, (0..11).collect::<Vec<usize>>());
     }
 
     #[test]

@@ -1,0 +1,464 @@
+//! Storage-polymorphic row matrix: the load-bearing data interface of the
+//! crate. Every hot path (DVI scan, Gram upper triangle, KKT validation,
+//! CD sweep) and every constructor site works through [`Rows`] /
+//! [`RowView`] instead of assuming a dense `&[f64]` row.
+//!
+//! The two storages are interchangeable by construction: the CSR kernels
+//! ([`super::csr`]) reproduce the dense kernels' floating-point results
+//! bit-for-bit, so screening decisions and solver iterates are identical
+//! whichever storage holds the data.
+
+use super::csr::{self, CsrMatrix};
+use super::matrix::RowMatrix;
+
+/// Storage selection for loaded/converted datasets. `Auto` picks CSR when
+/// the density is at or below [`Storage::AUTO_DENSITY_THRESHOLD`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Storage {
+    Dense,
+    Csr,
+    Auto,
+}
+
+impl Storage {
+    /// Auto-selection switches to CSR at or below this density — sparse
+    /// row traversal carries an index per value (50% overhead at f64 +
+    /// u32), so the crossover sits well below one-half.
+    pub const AUTO_DENSITY_THRESHOLD: f64 = 0.25;
+
+    pub fn parse(s: &str) -> Option<Storage> {
+        match s {
+            "dense" => Some(Storage::Dense),
+            "csr" => Some(Storage::Csr),
+            "auto" => Some(Storage::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Storage::Dense => "dense",
+            Storage::Csr => "csr",
+            Storage::Auto => "auto",
+        }
+    }
+}
+
+/// A row matrix in either dense or CSR storage.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Rows {
+    Dense(RowMatrix),
+    Sparse(CsrMatrix),
+}
+
+impl From<RowMatrix> for Rows {
+    fn from(m: RowMatrix) -> Rows {
+        Rows::Dense(m)
+    }
+}
+
+impl From<CsrMatrix> for Rows {
+    fn from(m: CsrMatrix) -> Rows {
+        Rows::Sparse(m)
+    }
+}
+
+impl Rows {
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            Rows::Dense(m) => m.rows(),
+            Rows::Sparse(m) => m.rows(),
+        }
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            Rows::Dense(m) => m.cols(),
+            Rows::Sparse(m) => m.cols(),
+        }
+    }
+
+    /// Stored-entry count (rows·cols for dense).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Rows::Dense(m) => m.rows() * m.cols(),
+            Rows::Sparse(m) => m.nnz(),
+        }
+    }
+
+    /// Fraction of stored entries (1.0 for dense, even if zeros occur).
+    pub fn density(&self) -> f64 {
+        let cells = self.rows() * self.cols();
+        if cells == 0 {
+            1.0
+        } else {
+            self.nnz() as f64 / cells as f64
+        }
+    }
+
+    #[inline]
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Rows::Sparse(_))
+    }
+
+    pub fn storage_name(&self) -> &'static str {
+        match self {
+            Rows::Dense(_) => "dense",
+            Rows::Sparse(_) => "csr",
+        }
+    }
+
+    /// Convert to the requested storage (no-op when already there; `Auto`
+    /// decides by stored density — a dense matrix re-measures its true
+    /// nonzero fraction first so synthetic dense data stays dense).
+    pub fn into_storage(self, storage: Storage) -> Rows {
+        match storage {
+            Storage::Dense => match self {
+                Rows::Dense(_) => self,
+                Rows::Sparse(m) => Rows::Dense(m.to_dense()),
+            },
+            Storage::Csr => match self {
+                Rows::Sparse(_) => self,
+                Rows::Dense(m) => Rows::Sparse(CsrMatrix::from_dense(&m)),
+            },
+            Storage::Auto => {
+                let true_density = match &self {
+                    Rows::Sparse(_) => self.density(),
+                    Rows::Dense(m) => {
+                        let cells = m.rows() * m.cols();
+                        if cells == 0 {
+                            1.0
+                        } else {
+                            let nz = m.flat().iter().filter(|&&v| v != 0.0).count();
+                            nz as f64 / cells as f64
+                        }
+                    }
+                };
+                if true_density <= Storage::AUTO_DENSITY_THRESHOLD {
+                    self.into_storage(Storage::Csr)
+                } else {
+                    self.into_storage(Storage::Dense)
+                }
+            }
+        }
+    }
+
+    /// Borrow row i as a storage-polymorphic view.
+    #[inline]
+    pub fn row(&self, i: usize) -> RowView<'_> {
+        match self {
+            Rows::Dense(m) => RowView::Dense(m.row(i)),
+            Rows::Sparse(m) => {
+                let (indices, values) = m.row(i);
+                RowView::Sparse { cols: m.cols(), indices, values }
+            }
+        }
+    }
+
+    /// Element accessor (O(1) dense, O(log nnz_row) sparse).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        match self {
+            Rows::Dense(m) => m.get(i, j),
+            Rows::Sparse(m) => m.get(i, j),
+        }
+    }
+
+    /// Element setter — dense storage only; CSR cannot grow its pattern
+    /// in place (convert with [`Rows::into_storage`] first).
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        match self {
+            Rows::Dense(m) => m.set(i, j, v),
+            Rows::Sparse(_) => panic!("element-wise set is not supported on CSR storage"),
+        }
+    }
+
+    /// out[i] = ⟨row_i, v⟩.
+    pub fn matvec(&self, v: &[f64], out: &mut [f64]) {
+        match self {
+            Rows::Dense(m) => m.matvec(v, out),
+            Rows::Sparse(m) => m.matvec(v, out),
+        }
+    }
+
+    /// out = Mᵀ v.
+    pub fn t_matvec(&self, v: &[f64], out: &mut [f64]) {
+        match self {
+            Rows::Dense(m) => m.t_matvec(v, out),
+            Rows::Sparse(m) => m.t_matvec(v, out),
+        }
+    }
+
+    /// Squared norm of every row.
+    pub fn row_norms_sq(&self) -> Vec<f64> {
+        match self {
+            Rows::Dense(m) => m.row_norms_sq(),
+            Rows::Sparse(m) => m.row_norms_sq(),
+        }
+    }
+
+    /// Gram entry G[i,j] = ⟨row_i, row_j⟩.
+    #[inline]
+    pub fn gram(&self, i: usize, j: usize) -> f64 {
+        match self {
+            Rows::Dense(m) => m.gram(i, j),
+            Rows::Sparse(m) => m.gram(i, j),
+        }
+    }
+
+    /// Sub-matrix of the given rows (copies, same storage).
+    pub fn select_rows(&self, idx: &[usize]) -> Rows {
+        match self {
+            Rows::Dense(m) => Rows::Dense(m.select_rows(idx)),
+            Rows::Sparse(m) => Rows::Sparse(m.select_rows(idx)),
+        }
+    }
+
+    /// Scale row i in place by s.
+    pub fn scale_row(&mut self, i: usize, s: f64) {
+        match self {
+            Rows::Dense(m) => m.scale_row(i, s),
+            Rows::Sparse(m) => m.scale_row(i, s),
+        }
+    }
+
+    /// Contiguous row shards for `shards` workers, area-balanced by the
+    /// *stored-entry* count: uniform for dense, nonzero-weighted (via
+    /// `indptr`) for CSR, so sparse shards with wildly uneven row lengths
+    /// still carry near-equal work. Results of sharded row-wise maps are
+    /// independent of the boundaries, so balancing never changes output.
+    pub fn balanced_shards(&self, shards: usize) -> Vec<std::ops::Range<usize>> {
+        match self {
+            Rows::Dense(m) => super::par::shard_ranges(m.rows(), shards),
+            Rows::Sparse(m) => super::par::cumulative_ranges(m.indptr(), shards),
+        }
+    }
+}
+
+/// Borrowed view of one row in either storage.
+#[derive(Clone, Copy, Debug)]
+pub enum RowView<'a> {
+    Dense(&'a [f64]),
+    Sparse {
+        cols: usize,
+        indices: &'a [u32],
+        values: &'a [f64],
+    },
+}
+
+impl<'a> RowView<'a> {
+    /// Logical length (the feature dimension n, both storages).
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            RowView::Dense(r) => r.len(),
+            RowView::Sparse { cols, .. } => *cols,
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stored-entry count.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        match self {
+            RowView::Dense(r) => r.len(),
+            RowView::Sparse { values, .. } => values.len(),
+        }
+    }
+
+    /// ⟨row, y⟩ — bit-identical across storages (see [`super::csr`]).
+    #[inline]
+    pub fn dot(&self, y: &[f64]) -> f64 {
+        match self {
+            RowView::Dense(r) => super::dot(r, y),
+            RowView::Sparse { cols, indices, values } => {
+                csr::striped_sparse_dot(indices, values, y, *cols)
+            }
+        }
+    }
+
+    /// ‖row‖² — bit-identical across storages.
+    #[inline]
+    pub fn norm_sq(&self) -> f64 {
+        match self {
+            RowView::Dense(r) => super::norm_sq(r),
+            RowView::Sparse { cols, indices, values } => {
+                csr::striped_sparse_self_dot(indices, values, *cols)
+            }
+        }
+    }
+
+    /// out += a·row — bit-identical across storages.
+    #[inline]
+    pub fn axpy_into(&self, a: f64, out: &mut [f64]) {
+        match self {
+            RowView::Dense(r) => super::axpy(a, r, out),
+            RowView::Sparse { indices, values, .. } => csr::sparse_axpy(a, indices, values, out),
+        }
+    }
+
+    /// Iterate the *stored* entries as `(col, value)` in ascending column
+    /// order. Dense rows yield every entry (including zeros); callers that
+    /// want nonzeros only should filter.
+    pub fn iter(&self) -> RowViewIter<'a> {
+        match self {
+            RowView::Dense(r) => RowViewIter::Dense(r.iter().enumerate()),
+            RowView::Sparse { indices, values, .. } => {
+                RowViewIter::Sparse(indices.iter().zip(values.iter()))
+            }
+        }
+    }
+
+    /// Densified copy (tests and cold paths only).
+    pub fn to_vec(&self) -> Vec<f64> {
+        match self {
+            RowView::Dense(r) => r.to_vec(),
+            RowView::Sparse { cols, indices, values } => {
+                let mut out = vec![0.0; *cols];
+                for (&j, &v) in indices.iter().zip(*values) {
+                    out[j as usize] = v;
+                }
+                out
+            }
+        }
+    }
+}
+
+impl PartialEq for RowView<'_> {
+    fn eq(&self, other: &Self) -> bool {
+        self.len() == other.len() && self.to_vec() == other.to_vec()
+    }
+}
+
+/// Iterator over a row view's stored `(col, value)` entries.
+pub enum RowViewIter<'a> {
+    Dense(std::iter::Enumerate<std::slice::Iter<'a, f64>>),
+    Sparse(std::iter::Zip<std::slice::Iter<'a, u32>, std::slice::Iter<'a, f64>>),
+}
+
+impl Iterator for RowViewIter<'_> {
+    type Item = (usize, f64);
+
+    fn next(&mut self) -> Option<(usize, f64)> {
+        match self {
+            RowViewIter::Dense(it) => it.next().map(|(j, &v)| (j, v)),
+            RowViewIter::Sparse(it) => it.next().map(|(&j, &v)| (j as usize, v)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn both() -> (Rows, Rows) {
+        let d = RowMatrix::from_flat(3, 4, vec![
+            1.0, 0.0, 2.0, 0.0, //
+            0.0, 0.0, 0.0, 3.0, //
+            -1.0, 4.0, 0.0, 0.5,
+        ]);
+        let s = Rows::Dense(d.clone()).into_storage(Storage::Csr);
+        (Rows::Dense(d), s)
+    }
+
+    #[test]
+    fn storage_parse_and_names() {
+        assert_eq!(Storage::parse("csr"), Some(Storage::Csr));
+        assert_eq!(Storage::parse("dense"), Some(Storage::Dense));
+        assert_eq!(Storage::parse("auto"), Some(Storage::Auto));
+        assert_eq!(Storage::parse("sparse"), None);
+        assert_eq!(Storage::Csr.name(), "csr");
+    }
+
+    #[test]
+    fn conversions_roundtrip() {
+        let (d, s) = both();
+        assert!(s.is_sparse());
+        assert_eq!(s.nnz(), 6);
+        assert_eq!(s.clone().into_storage(Storage::Dense), d);
+        assert_eq!(d.clone().into_storage(Storage::Csr), s);
+        // auto: 6/12 = 0.5 density > threshold → dense either way
+        assert_eq!(s.clone().into_storage(Storage::Auto).storage_name(), "dense");
+        assert_eq!(d.clone().into_storage(Storage::Auto).storage_name(), "dense");
+    }
+
+    #[test]
+    fn auto_picks_csr_when_sparse_enough() {
+        let mut m = RowMatrix::zeros(10, 10);
+        m.set(3, 7, 1.0);
+        let r = Rows::Dense(m).into_storage(Storage::Auto);
+        assert_eq!(r.storage_name(), "csr");
+        assert_eq!(r.nnz(), 1);
+    }
+
+    #[test]
+    fn views_agree_across_storage() {
+        let (d, s) = both();
+        let y = [0.5, -1.0, 2.0, 1.5];
+        for i in 0..3 {
+            assert_eq!(d.row(i).dot(&y), s.row(i).dot(&y), "row {i} dot");
+            assert_eq!(d.row(i).norm_sq(), s.row(i).norm_sq(), "row {i} norm");
+            assert_eq!(d.row(i), s.row(i), "row {i} view eq");
+            let mut a = vec![1.0; 4];
+            let mut b = vec![1.0; 4];
+            d.row(i).axpy_into(2.0, &mut a);
+            s.row(i).axpy_into(2.0, &mut b);
+            assert_eq!(a, b, "row {i} axpy");
+            for j in 0..4 {
+                assert_eq!(d.get(i, j), s.get(i, j));
+            }
+        }
+        assert_eq!(d.row_norms_sq(), s.row_norms_sq());
+        assert_eq!(d.gram(0, 2), s.gram(0, 2));
+        let (mut u1, mut u2) = (vec![0.0; 4], vec![0.0; 4]);
+        d.t_matvec(&[1.0, 0.0, -2.0], &mut u1);
+        s.t_matvec(&[1.0, 0.0, -2.0], &mut u2);
+        assert_eq!(u1, u2);
+    }
+
+    #[test]
+    fn iter_yields_stored_entries() {
+        let (_, s) = both();
+        let nz: Vec<(usize, f64)> = s.row(2).iter().collect();
+        assert_eq!(nz, vec![(0, -1.0), (1, 4.0), (3, 0.5)]);
+        let (d, _) = both();
+        assert_eq!(d.row(1).iter().count(), 4); // dense yields zeros too
+    }
+
+    #[test]
+    fn select_preserves_storage() {
+        let (d, s) = both();
+        assert_eq!(d.select_rows(&[2]).storage_name(), "dense");
+        let ss = s.select_rows(&[2, 0]);
+        assert_eq!(ss.storage_name(), "csr");
+        assert_eq!(ss.get(0, 1), 4.0);
+        assert_eq!(ss.get(1, 2), 2.0);
+    }
+
+    #[test]
+    fn balanced_shards_cover() {
+        let (d, s) = both();
+        for shards in [1usize, 2, 3] {
+            for r in [&d, &s] {
+                let ranges = r.balanced_shards(shards);
+                assert_eq!(ranges.first().unwrap().start, 0);
+                assert_eq!(ranges.last().unwrap().end, 3);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not supported on CSR")]
+    fn sparse_set_panics() {
+        let (_, mut s) = both();
+        s.set(0, 0, 9.0);
+    }
+}

@@ -310,7 +310,7 @@ impl PathRunner {
                 let delta = target - theta0[i];
                 if delta != 0.0 {
                     theta0[i] = target;
-                    crate::linalg::axpy(delta, inst.z.row(i), &mut u0);
+                    inst.z.row(i).axpy_into(delta, &mut u0);
                 }
             }
             let free = report.free_indices();

@@ -13,7 +13,7 @@ use crate::screening::RuleKind;
 
 /// Predict raw scores wᵀx for every instance.
 pub fn scores(w: &[f64], ds: &Dataset) -> Vec<f64> {
-    (0..ds.len()).map(|i| crate::linalg::dot(w, ds.x.row(i))).collect()
+    (0..ds.len()).map(|i| ds.x.row(i).dot(w)).collect()
 }
 
 /// Classification accuracy of sign(wᵀx) against ±1 labels.

@@ -1,7 +1,7 @@
 //! Materialized problem instance: `(Z, ȳ, box)` plus cached row norms.
 
 use crate::data::{Dataset, Task};
-use crate::linalg::{self, RowMatrix};
+use crate::linalg::{self, RowMatrix, Rows};
 
 /// Which special case of problem (3) to instantiate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,8 +39,9 @@ impl Model {
 pub struct Instance {
     pub model: Model,
     pub name: String,
-    /// Z (l×n): row i is zᵢ = aᵢ·xᵢ.
-    pub z: RowMatrix,
+    /// Z (l×n): row i is zᵢ = aᵢ·xᵢ. Inherits the dataset's storage
+    /// (dense or CSR — Z has exactly X's sparsity pattern).
+    pub z: Rows,
     /// ȳᵢ = bᵢ·yᵢ.
     pub ybar: Vec<f64>,
     /// Per-coordinate lower bound α (uniform for SVM/LAD).
@@ -61,29 +62,33 @@ impl Instance {
             "dataset task does not match model"
         );
         let (l, n) = (ds.len(), ds.dim());
-        let mut z = RowMatrix::zeros(l, n);
-        let mut ybar = vec![0.0; l];
-        match model {
-            Model::Svm | Model::WeightedSvm => {
-                // zᵢ = −yᵢxᵢ, ȳᵢ = yᵢ² = 1
+        // Z keeps X's storage: dense builds a dense buffer, CSR maps the
+        // stored values in place (same indptr/indices — no densify).
+        let z: Rows = match &ds.x {
+            Rows::Dense(x) => {
+                let mut z = RowMatrix::zeros(l, n);
                 for i in 0..l {
-                    let yi = ds.y[i];
-                    for (j, &v) in ds.x.row(i).iter().enumerate() {
-                        z.set(i, j, -yi * v);
+                    // zᵢ = −yᵢxᵢ for (weighted) SVM, −xᵢ for LAD
+                    let a = match model {
+                        Model::Svm | Model::WeightedSvm => -ds.y[i],
+                        Model::Lad => -1.0,
+                    };
+                    for (j, &v) in x.row(i).iter().enumerate() {
+                        z.set(i, j, a * v);
                     }
-                    ybar[i] = 1.0;
                 }
+                Rows::Dense(z)
             }
-            Model::Lad => {
-                // zᵢ = −xᵢ, ȳᵢ = yᵢ
-                for i in 0..l {
-                    for (j, &v) in ds.x.row(i).iter().enumerate() {
-                        z.set(i, j, -v);
-                    }
-                    ybar[i] = ds.y[i];
-                }
-            }
-        }
+            Rows::Sparse(x) => Rows::Sparse(x.map_values(|i, _, v| match model {
+                Model::Svm | Model::WeightedSvm => -ds.y[i] * v,
+                Model::Lad => -v,
+            })),
+        };
+        let ybar: Vec<f64> = match model {
+            // ȳᵢ = yᵢ² = 1 for (weighted) SVM, yᵢ for LAD
+            Model::Svm | Model::WeightedSvm => vec![1.0; l],
+            Model::Lad => ds.y.clone(),
+        };
         let (lo, hi) = match model {
             Model::Svm => (vec![0.0; l], vec![1.0; l]),
             Model::Lad => (vec![-1.0; l], vec![1.0; l]),
@@ -151,7 +156,7 @@ impl Instance {
     pub fn primal_objective(&self, c: f64, w: &[f64]) -> f64 {
         let mut loss = 0.0;
         for i in 0..self.len() {
-            let t = linalg::dot(w, self.z.row(i)) + self.ybar[i];
+            let t = self.z.row(i).dot(w) + self.ybar[i];
             let phi = match self.model {
                 Model::Svm => t.max(0.0),
                 Model::Lad => t.abs(),
@@ -237,6 +242,32 @@ mod tests {
     }
 
     #[test]
+    fn sparse_instance_matches_dense() {
+        use crate::linalg::Storage;
+        for model in [Model::Svm, Model::WeightedSvm] {
+            let ds = synth::sparse_classes(3, 40, 25, 0.15);
+            let dense_ds = ds.clone().into_storage(Storage::Dense);
+            let a = Instance::from_dataset(model, &ds);
+            let b = Instance::from_dataset(model, &dense_ds);
+            assert!(a.z.is_sparse() && !b.z.is_sparse());
+            assert_eq!(a.z_norms_sq, b.z_norms_sq, "norms must be bit-identical");
+            for i in 0..a.len() {
+                for j in 0..a.dim() {
+                    assert_eq!(a.z.get(i, j), b.z.get(i, j));
+                }
+            }
+            let theta: Vec<f64> = (0..a.len()).map(|i| (i % 3) as f64 * 0.5).collect();
+            assert_eq!(a.u_from_theta(&theta), b.u_from_theta(&theta));
+            assert_eq!((a.lo, a.hi), (b.lo, b.hi));
+        }
+        let rds = synth::sparse_regression(4, 30, 20, 0.2, 0.1);
+        let a = Instance::from_dataset(Model::Lad, &rds);
+        let b = Instance::from_dataset(Model::Lad, &rds.clone().into_storage(Storage::Dense));
+        assert_eq!(a.z_norms_sq, b.z_norms_sq);
+        assert_eq!(a.ybar, b.ybar);
+    }
+
+    #[test]
     #[should_panic]
     fn task_mismatch_panics() {
         let ds = synth::toy_gaussian(1, 5, 1.0, 0.5);
@@ -297,7 +328,7 @@ mod tests {
         let ds = synth::toy_gaussian(6, 7, 1.0, 0.75);
         let inst = Instance::from_dataset(Model::Svm, &ds);
         for i in 0..inst.len() {
-            let manual = crate::linalg::norm_sq(inst.z.row(i));
+            let manual = inst.z.row(i).norm_sq();
             assert!((inst.z_norms_sq[i] - manual).abs() < 1e-12);
         }
     }

@@ -10,7 +10,6 @@
 //! Both R and L are *non-support* vectors in the paper's terminology.
 
 use super::instance::Instance;
-use crate::linalg;
 
 /// Membership of one instance.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -48,7 +47,7 @@ impl Membership {
 pub fn classify_kkt(inst: &Instance, w: &[f64], tol: f64) -> Membership {
     let classes = (0..inst.len())
         .map(|i| {
-            let s = -linalg::dot(w, inst.z.row(i)); // −⟨w, zᵢ⟩
+            let s = -inst.z.row(i).dot(w); // −⟨w, zᵢ⟩
             if s > inst.ybar[i] + tol {
                 KktClass::R
             } else if s < inst.ybar[i] - tol {

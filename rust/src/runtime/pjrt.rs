@@ -124,12 +124,12 @@ impl PjrtScreener {
             .clone();
         let (lp, np) = (bucket.l, bucket.n);
 
-        // z padded (lp × np), row-major f32
+        // z padded (lp × np), row-major f32 — scatter the stored entries
+        // so CSR instances never densify on the host side
         let mut zf = vec![0.0f32; lp * np];
         for i in 0..l {
-            let row = inst.z.row(i);
-            for j in 0..n {
-                zf[i * np + j] = row[j] as f32;
+            for (j, v) in inst.z.row(i).iter() {
+                zf[i * np + j] = v as f32;
             }
         }
         let mut ybar = vec![0.0f32; lp];

@@ -156,14 +156,19 @@ pub fn dvi_scan(inst: &Instance, mid: f64, rad: f64, u: &[f64]) -> Vec<Decision>
 
 /// Sharded multi-threaded variant of [`dvi_scan`]: the l rows are split
 /// into contiguous shards evaluated on `std::thread::scope` workers and
-/// the per-shard decision vectors are merged in shard order. `‖u‖` is
-/// computed once and every per-row expression is identical to the serial
-/// scan, so the result is byte-identical to [`dvi_scan`] for any thread
-/// count (`threads`: 0 = auto-detect, 1 = serial).
+/// the per-shard decision vectors are merged in shard order. Shards are
+/// area-balanced by *stored-entry* count ([`crate::linalg::Rows::balanced_shards`]):
+/// row-count splits on CSR data with uneven row lengths would starve some
+/// workers, since a shard's cost is its nonzero count, not its row count.
+/// `‖u‖` is computed once and every per-row expression is identical to
+/// the serial scan, so the result is byte-identical to [`dvi_scan`] for
+/// any thread count and either storage (`threads`: 0 = auto-detect,
+/// 1 = serial).
 pub fn dvi_scan_par(inst: &Instance, mid: f64, rad: f64, u: &[f64], threads: usize) -> Vec<Decision> {
     assert_eq!(u.len(), inst.dim());
     let u_norm = linalg::norm(u);
-    let shards = par::run_sharded(inst.len(), threads, |r| {
+    let t = par::effective_threads(threads, inst.len());
+    let shards = par::run_sharded_ranges(inst.z.balanced_shards(t), |r| {
         dvi_scan_range(inst, mid, rad, u, u_norm, r)
     });
     let mut out = Vec::with_capacity(inst.len());
@@ -185,7 +190,7 @@ fn dvi_scan_range(
 ) -> Vec<Decision> {
     let mut out = Vec::with_capacity(rows.end - rows.start);
     for i in rows {
-        let p = linalg::dot(u, inst.z.row(i)); // ⟨u, zᵢ⟩
+        let p = inst.z.row(i).dot(u); // ⟨u, zᵢ⟩
         let zn = inst.z_norms_sq[i].sqrt();
         let slack = rad * u_norm * zn;
         out.push(decide(mid * p, slack, inst.ybar[i]));
@@ -354,6 +359,29 @@ mod tests {
             let got = dvi_scan_par(&inst, 0.55, 0.15, &r.u, threads);
             assert_eq!(got, want, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn sparse_scan_matches_dense_scan_exactly() {
+        use crate::linalg::Storage;
+        let ds = synth::sparse_classes(17, 151, 33, 0.12); // prime l, uneven rows
+        let dense_ds = ds.clone().into_storage(Storage::Dense);
+        let sp = Instance::from_dataset(Model::Svm, &ds);
+        let de = Instance::from_dataset(Model::Svm, &dense_ds);
+        let r = solve(&de, 0.4);
+        let want = dvi_scan(&de, 0.55, 0.15, &r.u);
+        assert_eq!(dvi_scan(&sp, 0.55, 0.15, &r.u), want, "serial sparse scan");
+        for threads in [1usize, 2, 4, 7, 0] {
+            assert_eq!(
+                dvi_scan_par(&sp, 0.55, 0.15, &r.u, threads),
+                want,
+                "sparse threads={threads}"
+            );
+        }
+        // θ-form over a sparse Gram build agrees too
+        let a = Dvi::new_theta(&de).screen(&de, 0.4, 0.7, &r.theta, &r.u);
+        let b = Dvi::new_theta_threads(&sp, 3).screen(&sp, 0.4, 0.7, &r.theta, &r.u);
+        assert_eq!(a.decisions, b.decisions);
     }
 
     #[test]

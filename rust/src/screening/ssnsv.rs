@@ -32,7 +32,7 @@
 //! experiments); the constructor rejects LAD instances.
 
 use super::{Decision, ScreenReport};
-use crate::linalg::{self};
+use crate::linalg::{self, RowView};
 use crate::problem::{Instance, Model};
 
 /// Inputs for one SSNSV/ESSNSV screening application.
@@ -87,9 +87,21 @@ impl Ssnsv {
         let mut decisions = Vec::with_capacity(l);
         let mut xbar = vec![0.0; inst.dim()];
         for i in 0..l {
-            // x̄ᵢ = yᵢxᵢ = −zᵢ for (weighted) SVM.
-            for (x, z) in xbar.iter_mut().zip(inst.z.row(i)) {
-                *x = -z;
+            // x̄ᵢ = yᵢxᵢ = −zᵢ for (weighted) SVM. Dense rows overwrite
+            // every position directly (no reset pass); sparse rows reset
+            // then scatter their stored entries, never densifying.
+            match inst.z.row(i) {
+                RowView::Dense(r) => {
+                    for (x, z) in xbar.iter_mut().zip(r) {
+                        *x = -z;
+                    }
+                }
+                sparse => {
+                    xbar.iter_mut().for_each(|x| *x = 0.0);
+                    for (j, z) in sparse.iter() {
+                        xbar[j] = -z;
+                    }
+                }
             }
             let lower = match &cone {
                 Some(c) => lemma20_min(&xbar, &c.u, c.d, &o, r),

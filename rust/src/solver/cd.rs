@@ -140,7 +140,7 @@ impl CdSolver {
             for &i in &active {
                 let zi = inst.z.row(i);
                 stats.grad_evals += 1;
-                let g = c * linalg::dot(zi, &u) - inst.ybar[i];
+                let g = c * zi.dot(&u) - inst.ybar[i];
                 let (lo, hi) = (inst.lo[i], inst.hi[i]);
                 let th = theta[i];
 
@@ -171,7 +171,7 @@ impl CdSolver {
                     let delta = new - th;
                     if delta != 0.0 {
                         theta[i] = new;
-                        linalg::axpy(delta, zi, &mut u);
+                        zi.axpy_into(delta, &mut u);
                         stats.coord_updates += 1;
                     }
                 }
@@ -231,11 +231,14 @@ impl CdSolver {
         if t <= 1 {
             return Self::kkt_violation(inst, c, theta);
         }
-        let partials = crate::linalg::par::run_sharded(l, t, |rows| {
+        // shards are balanced by stored-entry count (nnz for CSR), since
+        // both passes cost O(shard nnz)
+        let shards = inst.z.balanced_shards(t);
+        let partials = crate::linalg::par::run_sharded_ranges(shards.clone(), |rows| {
             let mut u = vec![0.0; inst.dim()];
             for i in rows {
                 if theta[i] != 0.0 {
-                    linalg::axpy(theta[i], inst.z.row(i), &mut u);
+                    inst.z.row(i).axpy_into(theta[i], &mut u);
                 }
             }
             u
@@ -246,9 +249,11 @@ impl CdSolver {
                 *a += *b;
             }
         }
-        crate::linalg::par::run_sharded(l, t, |rows| Self::violation_rows(inst, c, theta, &u, rows))
-            .into_iter()
-            .fold(0.0, f64::max)
+        crate::linalg::par::run_sharded_ranges(shards, |rows| {
+            Self::violation_rows(inst, c, theta, &u, rows)
+        })
+        .into_iter()
+        .fold(0.0, f64::max)
     }
 
     /// Projected-gradient violation over one contiguous row range — shared
@@ -262,7 +267,7 @@ impl CdSolver {
     ) -> f64 {
         let mut worst = 0.0f64;
         for i in rows {
-            let g = c * linalg::dot(inst.z.row(i), u) - inst.ybar[i];
+            let g = c * inst.z.row(i).dot(u) - inst.ybar[i];
             let pg = if theta[i] <= inst.lo[i] + 1e-12 {
                 g.min(0.0)
             } else if theta[i] >= inst.hi[i] - 1e-12 {

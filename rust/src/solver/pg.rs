@@ -33,7 +33,7 @@ impl PgSolver {
             let u = inst.u_from_theta(&theta);
             // ∇g = C·Z·u − ȳ
             for i in 0..l {
-                grad[i] = c * linalg::dot(inst.z.row(i), &u) - inst.ybar[i];
+                grad[i] = c * inst.z.row(i).dot(&u) - inst.ybar[i];
             }
             // projected-gradient optimality measure
             let mut viol = 0.0f64;

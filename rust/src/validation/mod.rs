@@ -62,7 +62,7 @@ pub fn check_safety(
         };
         n_screened += 1;
         if truth.classes[i] != expected {
-            let s = -crate::linalg::dot(&w, inst.z.row(i));
+            let s = -inst.z.row(i).dot(&w);
             violations.push(SafetyViolation {
                 index: i,
                 decided: *d,

@@ -10,6 +10,7 @@ fn quick(dataset: &str, model: &str, rule: &str) -> RunConfig {
         dataset: dataset.into(),
         scale: 0.03,
         rule: rule.into(),
+        storage: "auto".into(),
         grid: GridConfig { c_min: 0.01, c_max: 10.0, points: 5 },
         solver: SolverConfig { tol: 1e-5, max_outer: 20_000, ..Default::default() },
         use_pjrt: false,

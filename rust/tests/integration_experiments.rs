@@ -18,6 +18,7 @@ fn opts(tag: &str) -> ExpOptions {
         out_dir: dir,
         use_pjrt: false,
         validate: false,
+        threads: 2, // exercise the sharded engine through the harness
     }
 }
 

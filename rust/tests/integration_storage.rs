@@ -1,0 +1,150 @@
+//! Dense ↔ CSR equivalence suite — the acceptance gate for the
+//! storage-polymorphic data layer.
+//!
+//! The CSR kernels are constructed to be *bit-identical* to their dense
+//! counterparts (same accumulator striping, same addition order over the
+//! stored entries — see `linalg::csr`), so this suite asserts the
+//! strongest possible property: randomized sparse datasets pushed through
+//! the full path runner (screen → reduce → solve over the whole C-grid)
+//! produce identical screened sets, identical rejection rates, and
+//! identical solver iterates on both storages, for the serial scan and
+//! the sharded ParScan at 1, 2, and 4 threads.
+
+use dvi_screen::config::SolverConfig;
+use dvi_screen::data::io::{read_libsvm_storage, write_libsvm};
+use dvi_screen::data::{synth, Dataset, Task};
+use dvi_screen::linalg::Storage;
+use dvi_screen::path::{PathConfig, PathOutput, PathRunner};
+use dvi_screen::problem::{Instance, Model};
+use dvi_screen::screening::dvi::{dvi_scan, dvi_scan_par};
+use dvi_screen::screening::RuleKind;
+
+fn path_cfg(points: usize, threads: usize) -> PathConfig {
+    PathConfig::log_grid(1e-2, 10.0, points)
+        .with_solver(SolverConfig {
+            tol: 1e-7,
+            max_outer: 50_000,
+            threads,
+            ..Default::default()
+        })
+        .with_validation(true)
+}
+
+fn run(model: Model, ds: &Dataset, rule: RuleKind, threads: usize) -> PathOutput {
+    PathRunner::new(model, path_cfg(10, threads), rule).run(ds)
+}
+
+/// Assert two path outputs are equivalent: identical screened sets per
+/// step (the lo/hi splits and the surviving free count), identical
+/// rejection rates, and final θ within tolerance (we assert exact
+/// equality — the kernels are bit-compatible by construction).
+fn assert_paths_equivalent(a: &PathOutput, b: &PathOutput, tag: &str) {
+    assert_eq!(a.steps.len(), b.steps.len(), "{tag}: step counts");
+    for (sa, sb) in a.steps.iter().zip(&b.steps) {
+        assert_eq!(sa.c, sb.c, "{tag}: grid mismatch");
+        assert_eq!(
+            (sa.n_lo, sa.n_hi, sa.free),
+            (sb.n_lo, sb.n_hi, sb.free),
+            "{tag}: screened sets differ at C={}",
+            sa.c
+        );
+    }
+    assert_eq!(
+        a.mean_rejection(),
+        b.mean_rejection(),
+        "{tag}: rejection rates differ"
+    );
+    assert_eq!(a.final_theta, b.final_theta, "{tag}: final theta differs");
+    // both runs validated full-problem KKT along the way
+    assert!(a.worst_violation().unwrap() < 1e-5, "{tag}: dense-side KKT");
+    assert!(b.worst_violation().unwrap() < 1e-5, "{tag}: csr-side KKT");
+}
+
+#[test]
+fn svm_path_equivalent_across_storage_and_threads() {
+    let sparse = synth::sparse_classes(101, 180, 60, 0.08);
+    assert!(sparse.x.is_sparse());
+    let dense = sparse.clone().into_storage(Storage::Dense);
+    let base = run(Model::Svm, &dense, RuleKind::DviW, 1);
+    assert!(base.mean_rejection() > 0.0, "toy too hard: nothing screened");
+    for threads in [1usize, 2, 4] {
+        let d = run(Model::Svm, &dense, RuleKind::DviW, threads);
+        let s = run(Model::Svm, &sparse, RuleKind::DviW, threads);
+        assert_paths_equivalent(&base, &d, &format!("svm dense t={threads}"));
+        assert_paths_equivalent(&base, &s, &format!("svm csr t={threads}"));
+    }
+}
+
+#[test]
+fn weighted_svm_path_equivalent() {
+    let sparse = synth::sparse_classes(202, 150, 50, 0.1);
+    let dense = sparse.clone().into_storage(Storage::Dense);
+    for threads in [1usize, 2, 4] {
+        let d = run(Model::WeightedSvm, &dense, RuleKind::DviW, threads);
+        let s = run(Model::WeightedSvm, &sparse, RuleKind::DviW, threads);
+        assert_paths_equivalent(&d, &s, &format!("wsvm t={threads}"));
+    }
+}
+
+#[test]
+fn lad_path_equivalent() {
+    let sparse = synth::sparse_regression(303, 160, 40, 0.12, 0.2);
+    let dense = sparse.clone().into_storage(Storage::Dense);
+    for threads in [1usize, 2, 4] {
+        let d = run(Model::Lad, &dense, RuleKind::DviW, threads);
+        let s = run(Model::Lad, &sparse, RuleKind::DviW, threads);
+        assert_paths_equivalent(&d, &s, &format!("lad t={threads}"));
+    }
+}
+
+#[test]
+fn theta_form_and_baseline_rules_equivalent() {
+    // Gram-based DVI (θ-form) and the SSNSV/ESSNSV baselines also run on
+    // the polymorphic interface
+    let sparse = synth::sparse_classes(404, 120, 40, 0.1);
+    let dense = sparse.clone().into_storage(Storage::Dense);
+    for rule in [RuleKind::DviTheta, RuleKind::Ssnsv, RuleKind::Essnsv] {
+        let d = run(Model::Svm, &dense, rule, 2);
+        let s = run(Model::Svm, &sparse, rule, 2);
+        assert_paths_equivalent(&d, &s, rule.name());
+    }
+}
+
+#[test]
+fn raw_scan_decisions_identical() {
+    // the scan itself, outside the runner: serial and sharded, both
+    // storages, decisions byte-identical
+    let sparse = synth::sparse_classes(505, 211, 64, 0.07); // prime l
+    let dense = sparse.clone().into_storage(Storage::Dense);
+    let si = Instance::from_dataset(Model::Svm, &sparse);
+    let di = Instance::from_dataset(Model::Svm, &dense);
+    assert_eq!(si.z_norms_sq, di.z_norms_sq);
+    let u: Vec<f64> = (0..si.dim()).map(|j| (j as f64 * 0.31).sin()).collect();
+    let want = dvi_scan(&di, 1.1, 0.1, &u);
+    assert_eq!(dvi_scan(&si, 1.1, 0.1, &u), want);
+    for threads in [1usize, 2, 4] {
+        assert_eq!(dvi_scan_par(&di, 1.1, 0.1, &u, threads), want, "dense t={threads}");
+        assert_eq!(dvi_scan_par(&si, 1.1, 0.1, &u, threads), want, "csr t={threads}");
+    }
+}
+
+#[test]
+fn libsvm_roundtrip_preserves_equivalence() {
+    // write a sparse set, load it back as CSR and as dense, and run the
+    // full path on both loads: the file is the single source of truth and
+    // the storages must agree
+    let ds = synth::sparse_classes(606, 100, 45, 0.1);
+    let mut p = std::env::temp_dir();
+    p.push(format!("dvi_storage_equiv_{}.svm", std::process::id()));
+    write_libsvm(&ds, &p).unwrap();
+    let as_csr = read_libsvm_storage(&p, Task::Classification, 0, Storage::Csr).unwrap();
+    let as_dense = read_libsvm_storage(&p, Task::Classification, 0, Storage::Dense).unwrap();
+    let as_auto = read_libsvm_storage(&p, Task::Classification, 0, Storage::Auto).unwrap();
+    std::fs::remove_file(&p).ok();
+    assert!(as_csr.x.is_sparse());
+    assert!(!as_dense.x.is_sparse());
+    assert!(as_auto.x.is_sparse(), "10% density must auto-select CSR");
+    let a = run(Model::Svm, &as_dense, RuleKind::DviW, 2);
+    let b = run(Model::Svm, &as_csr, RuleKind::DviW, 2);
+    assert_paths_equivalent(&a, &b, "libsvm roundtrip");
+}
