@@ -1,6 +1,11 @@
-//! The coordinator as a service: submit a batch of heterogeneous
-//! screening/path jobs through the line-JSON front-end (exactly what
-//! `dvi serve` exposes on stdin/stdout) and consume the streamed results.
+//! The coordinator as a service: submit heterogeneous screening/path jobs
+//! through the line-JSON front-end (exactly what `dvi serve` exposes on
+//! stdin/stdout) and consume the ordered results.
+//!
+//! Demonstrates the three request shapes — single path runs, a
+//! `{"batch": [...]}` fan-out, and the lightweight `"screen"` kind — and
+//! the resident instance cache amortizing construction across jobs that
+//! name the same dataset.
 //!
 //! Run: `cargo run --release --example screening_service`
 
@@ -8,6 +13,9 @@ use dvi_screen::config::parse_json;
 use dvi_screen::coordinator::ScreeningService;
 
 fn main() {
+    // --- session 1: independent request lines ---------------------------
+    // three rules on ONE dataset: the pool builds the toy2 instance once
+    // and shares it (watch instance_cache_misses/hits below)
     let requests = r#"
 # SVM rule comparison on a toy (miniature scale)
 {"dataset": "toy2", "rule": "ssnsv",  "scale": 0.2, "points": 25}
@@ -52,7 +60,63 @@ fn main() {
             );
         }
     }
-    println!("\ncoordinator metrics:\n{}", svc.metrics().render());
     assert_eq!(oks, 5, "five good jobs expected");
+
+    // --- session 2: one batch line, mixing path + screen kinds ----------
+    // the screen job reuses the toy2 instance already resident from
+    // session 1 and runs one DVI scan per (c_prev, c) pair
+    let batch = r#"{"batch": [
+        {"dataset": "toy2", "rule": "dvi", "scale": 0.2, "points": 10},
+        {"kind": "screen", "dataset": "toy2", "scale": 0.2,
+         "pairs": [[0.1, 0.2], [0.2, 0.5], [0.5, 2.0]], "tol": 1e-6},
+        {"dataset": "toy2", "rule": "none", "scale": 0.2, "points": 10}
+    ]}"#
+        .replace('\n', " ");
+    let mut out = Vec::new();
+    svc.serve(batch.as_bytes(), &mut out).expect("serve batch");
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 1, "a batch answers with one ordered line");
+    let j = parse_json(lines[0]).expect("batch json");
+    let entries = j.get("batch").unwrap().as_array().unwrap();
+    assert_eq!(entries.len(), 3);
+
+    println!("\nbatch response ({} entries):", entries.len());
+    for e in entries {
+        let ok = e.get("ok").and_then(|v| v.as_bool()).unwrap_or(false);
+        assert!(ok, "batch entry failed: {e:?}");
+        match e.get("kind").and_then(|v| v.as_str()) {
+            Some("screen") => {
+                let pairs = e.get("pairs").unwrap().as_array().unwrap();
+                let sweep: Vec<String> = pairs
+                    .iter()
+                    .map(|p| {
+                        format!(
+                            "C={:.1}: {} screened",
+                            p.get("c").unwrap().as_float().unwrap(),
+                            p.get("n_lo").unwrap().as_int().unwrap()
+                                + p.get("n_hi").unwrap().as_int().unwrap()
+                        )
+                    })
+                    .collect();
+                println!("  screen  toy2  {} ({} anchor solves)",
+                    sweep.join(", "),
+                    e.get("anchor_solves").unwrap().as_int().unwrap());
+            }
+            _ => println!(
+                "  path    {}/{}  mean rejection {:.1}%",
+                e.get("dataset").unwrap().as_str().unwrap(),
+                e.get("rule").unwrap().as_str().unwrap(),
+                100.0 * e.get("mean_rejection").unwrap().as_float().unwrap()
+            ),
+        }
+    }
+
+    // the five toy2 jobs across both sessions shared ONE construction
+    let misses = svc.metrics().counter("instance_cache_misses").get();
+    let hits = svc.metrics().counter("instance_cache_hits").get();
+    assert!(hits >= 4, "expected ≥4 cache hits, got {hits}");
+    println!("\ninstance cache: {misses} builds, {hits} hits");
+    println!("\ncoordinator metrics:\n{}", svc.metrics().render());
     svc.shutdown();
 }

@@ -114,6 +114,46 @@ fn main() {
         }
     }
 
+    // ---- instance cache: cold construction vs resident hit ----------------
+    // The serving-layer amortization series: a cold `get_or_build` pays
+    // dataset resolution + z-transform + row norms; a warm one clones an
+    // Arc. The gap is what the coordinator's cache saves per request —
+    // on CSR data construction costs more than the scan it feeds.
+    {
+        use dvi_screen::coordinator::{CacheKey, InstanceCache};
+        use dvi_screen::linalg::Storage;
+        use dvi_screen::metrics::Registry;
+        println!("\n# instance cache: cold build vs resident hit (coordinator cache)");
+        let max_l = common::arg_usize("max-l", 1_000_000);
+        let reg = Registry::default();
+        for l in [10_000usize, 100_000] {
+            if l > max_l {
+                println!("instance_cache_{l} skipped (--max-l {max_l})");
+                continue;
+            }
+            for (name, storage, tag) in [
+                (format!("gauss:{l}:50"), Storage::Dense, "dense"),
+                (format!("sparse:{l}:200"), Storage::Csr, "csr"),
+            ] {
+                let key = CacheKey::new(&name, Model::Svm, storage, 1.0);
+                // zero-budget cache: every call is a full cold build
+                let transient = InstanceCache::new(0);
+                let cold = bench(&format!("instance_build_cold_{tag}_{l}"), 3, 0.3, || {
+                    transient.get_or_build(&key, &reg).unwrap().len()
+                });
+                let resident = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+                resident.get_or_build(&key, &reg).unwrap();
+                let warm = bench(&format!("instance_cache_hit_{tag}_{l}"), 3, 0.3, || {
+                    resident.get_or_build(&key, &reg).unwrap().len()
+                });
+                println!(
+                    "    -> hit is {:.0}x cheaper than cold construction",
+                    cold.min_s / warm.min_s.max(1e-12)
+                );
+            }
+        }
+    }
+
     // ---- PJRT scan -------------------------------------------------------
     match dvi_screen::runtime::PjrtScreener::from_default_dir() {
         Ok(mut screener) => {

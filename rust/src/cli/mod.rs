@@ -20,10 +20,20 @@ USAGE:
            [--scale S] [--points N] [--tol F] [--out DIR] [--threads N] [--pjrt]
   dvi cv   [--dataset NAME] [--model svm|lad] [--folds K] [--scale S]
            [--points N] [--rule dvi|none]     cross-validated C selection
-  dvi serve [--workers N]            line-JSON requests on stdin
+  dvi serve [--workers N] [--cache-mb MB]   line-JSON requests on stdin
   dvi gen-data --dataset NAME --out FILE [--scale S]
   dvi info                           runtime + artifact status
   dvi help
+
+SERVE:
+  The service reads one JSON request per line and answers one JSON line
+  per request, in input order. Three request shapes: a path run (the
+  default), {"kind": "screen", ...} for batch DVI screening of
+  (c_prev, c) pairs against one resident instance, and {"batch": [...]}
+  to fan a list of either across the pool and get one ordered response
+  line back. Instances are cached in an LRU keyed by
+  (dataset, model, storage, scale); --cache-mb sets its byte budget
+  (default 256, 0 disables). See README.md § Screening service.
 
 STORAGE:
   --storage picks the instance-matrix layout: `dense` (row-major buffer),
@@ -140,11 +150,12 @@ fn cmd_path(args: &[String]) -> Result<(), String> {
     cfg.validate = cfg.validate || flags.contains_key("validate");
     cfg.use_pjrt = cfg.use_pjrt || flags.contains_key("pjrt");
 
-    let spec = crate::coordinator::JobSpec { id: 0, run: cfg };
+    let spec = crate::coordinator::JobSpec::path(0, cfg);
     let outcome = crate::coordinator::run_job(&spec);
     match outcome.result {
         Err(e) => Err(e),
-        Ok(s) => {
+        Ok(reply) => {
+            let s = reply.as_path().expect("path jobs return path summaries");
             println!(
                 "dataset={} model={} rule={} l={} steps={}",
                 s.dataset, s.model, s.rule, s.l, s.steps
@@ -219,7 +230,9 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
 fn cmd_serve(args: &[String]) -> Result<(), String> {
     let (_, flags) = parse_flags(args)?;
     let workers = get_usize(&flags, "workers", 2)?;
-    let mut svc = ScreeningService::new(workers);
+    // instance-cache budget in MiB; 0 disables residency entirely
+    let cache_mb = get_usize(&flags, "cache-mb", 256)?;
+    let mut svc = ScreeningService::with_cache(workers, cache_mb.saturating_mul(1024 * 1024));
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     svc.serve(stdin.lock(), stdout.lock()).map_err(|e| e.to_string())?;

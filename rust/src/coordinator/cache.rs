@@ -1,0 +1,379 @@
+//! Resident instance cache: the amortization layer that turns the
+//! per-request experiment harness into a screening server.
+//!
+//! The paper's selling point is that a DVI screening pass costs one scan —
+//! negligible next to the solve — but a service that re-parses the dataset
+//! and re-builds the [`Instance`] (the z-transform, row norms, box) on
+//! every request pays more for construction than for the scan, especially
+//! on CSR data where the scan is cheap but the parse/convert is not. The
+//! cache keeps built instances resident, keyed by everything construction
+//! depends on — `(dataset, model, storage, scale)` — and hands out
+//! `Arc<Instance>` so concurrent jobs share one copy.
+//!
+//! Properties:
+//!
+//! * **Exactly-once construction.** Concurrent requests for the same key
+//!   serialize on a per-key build slot: the first locker builds, the rest
+//!   block and receive the same `Arc`. A batch of B same-dataset requests
+//!   fanned across the worker pool constructs the instance once (asserted
+//!   by the batch integration tests via the hit/miss counters).
+//! * **LRU eviction under a byte budget.** Entries are charged
+//!   [`Instance::approx_bytes`] (dense `l·n·8`, CSR `nnz·12 + indptr`).
+//!   When an insert pushes the resident total over the budget, least-
+//!   recently-used entries are evicted until it fits; the entry just
+//!   inserted is never evicted by its own insert, so one oversized
+//!   instance stays resident (and becomes evictable by the next insert).
+//!   Evicted `Arc`s stay alive until in-flight jobs drop them. A zero
+//!   budget disables caching entirely (every call builds transiently).
+//! * **Metrics.** `instance_cache_hits` / `instance_cache_misses` (=
+//!   successful constructions) / `instance_cache_errors` /
+//!   `instance_cache_evictions` counters plus `instance_cache_bytes` /
+//!   `instance_cache_entries` gauges in the pool's [`Registry`].
+//! * **Errors are not cached.** A failed resolve (unknown dataset,
+//!   task/model mismatch, unreadable file) is reported to every waiter
+//!   and retried on the next request.
+
+use crate::data::registry;
+use crate::linalg::Storage;
+use crate::metrics::Registry;
+use crate::problem::{Instance, Model};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Everything [`Instance`] construction depends on. `scale` participates
+/// as its bit pattern so the key stays `Eq + Hash` (requests are parsed
+/// from text, so two requests meaning the same scale carry identical
+/// bits).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub dataset: String,
+    pub model: Model,
+    pub storage: Storage,
+    scale_bits: u64,
+}
+
+impl CacheKey {
+    pub fn new(dataset: &str, model: Model, storage: Storage, scale: f64) -> CacheKey {
+        CacheKey { dataset: dataset.to_string(), model, storage, scale_bits: scale.to_bits() }
+    }
+
+    pub fn scale(&self) -> f64 {
+        f64::from_bits(self.scale_bits)
+    }
+}
+
+/// Per-key build slot: the mutex serializes construction, the option
+/// holds the built instance.
+struct Slot {
+    built: Mutex<Option<Arc<Instance>>>,
+}
+
+struct Entry {
+    slot: Arc<Slot>,
+    /// Recency tick of the last `get_or_build` touch.
+    last_used: u64,
+    /// [`Instance::approx_bytes`] once built; 0 while building (unbuilt
+    /// entries are never evicted — they hold no bytes yet).
+    bytes: usize,
+}
+
+struct CacheState {
+    entries: HashMap<CacheKey, Entry>,
+    tick: u64,
+    resident_bytes: usize,
+}
+
+/// `(dataset, model, storage, scale)`-keyed LRU cache of built
+/// [`Instance`]s, shared by every worker in a pool.
+pub struct InstanceCache {
+    budget_bytes: usize,
+    state: Mutex<CacheState>,
+}
+
+impl InstanceCache {
+    /// Default byte budget for pools that don't configure one
+    /// (`dvi serve --cache-mb` overrides): 256 MiB holds e.g. a dense
+    /// 1M×32 instance or a ~20M-nonzero CSR one with room to spare.
+    pub const DEFAULT_BUDGET_BYTES: usize = 256 * 1024 * 1024;
+
+    /// `budget_bytes = 0` disables residency: every call constructs a
+    /// transient instance (still counted as a miss).
+    pub fn new(budget_bytes: usize) -> InstanceCache {
+        InstanceCache {
+            budget_bytes,
+            state: Mutex::new(CacheState {
+                entries: HashMap::new(),
+                tick: 0,
+                resident_bytes: 0,
+            }),
+        }
+    }
+
+    /// Number of resident (built) entries.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().entries.values().filter(|e| e.bytes > 0).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total bytes charged against the budget.
+    pub fn resident_bytes(&self) -> usize {
+        self.state.lock().unwrap().resident_bytes
+    }
+
+    /// Fetch the instance for `key`, constructing it if absent. Counts a
+    /// hit when the built instance is already resident and a miss when
+    /// this call had to construct one — so `instance_cache_misses` equals
+    /// the number of instances ever built and the batch acceptance test
+    /// can assert "B same-dataset requests, exactly one construction".
+    /// Failed builds count `instance_cache_errors` instead. Concurrent
+    /// misses on one key build exactly once: the builder counts the miss,
+    /// the waiters blocked on the slot count hits once the instance
+    /// appears.
+    pub fn get_or_build(&self, key: &CacheKey, metrics: &Registry) -> Result<Arc<Instance>, String> {
+        if self.budget_bytes == 0 {
+            return match build_instance(key) {
+                Ok(inst) => {
+                    metrics.counter("instance_cache_misses").inc();
+                    Ok(Arc::new(inst))
+                }
+                Err(e) => {
+                    metrics.counter("instance_cache_errors").inc();
+                    Err(e)
+                }
+            };
+        }
+        let slot = {
+            let mut st = self.state.lock().unwrap();
+            st.tick += 1;
+            let tick = st.tick;
+            match st.entries.get_mut(key) {
+                Some(e) => {
+                    e.last_used = tick;
+                    e.slot.clone()
+                }
+                None => {
+                    let slot = Arc::new(Slot { built: Mutex::new(None) });
+                    st.entries.insert(
+                        key.clone(),
+                        Entry { slot: slot.clone(), last_used: tick, bytes: 0 },
+                    );
+                    slot
+                }
+            }
+        };
+        let mut built = slot.built.lock().unwrap();
+        if let Some(inst) = built.as_ref() {
+            metrics.counter("instance_cache_hits").inc();
+            return Ok(inst.clone());
+        }
+        match build_instance(key) {
+            Ok(inst) => {
+                metrics.counter("instance_cache_misses").inc();
+                let inst = Arc::new(inst);
+                *built = Some(inst.clone());
+                drop(built);
+                self.charge_and_evict(key, &slot, inst.approx_bytes(), metrics);
+                Ok(inst)
+            }
+            Err(e) => {
+                metrics.counter("instance_cache_errors").inc();
+                drop(built);
+                self.forget_failed(key, &slot);
+                Err(e)
+            }
+        }
+    }
+
+    /// Record the built entry's size, then evict LRU entries until the
+    /// resident total fits the budget again. The entry just inserted is
+    /// exempt from its own eviction pass; unbuilt entries (a concurrent
+    /// build mid-flight) hold no bytes and are skipped.
+    fn charge_and_evict(&self, key: &CacheKey, slot: &Arc<Slot>, bytes: usize, metrics: &Registry) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(e) = st.entries.get_mut(key) {
+            // only charge if this is still our entry (a failed build may
+            // have been forgotten and re-created by another thread)
+            if Arc::ptr_eq(&e.slot, slot) && e.bytes == 0 {
+                e.bytes = bytes;
+                st.resident_bytes += bytes;
+            }
+        }
+        while st.resident_bytes > self.budget_bytes {
+            let victim = st
+                .entries
+                .iter()
+                .filter(|(k, e)| e.bytes > 0 && *k != key)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some(e) = st.entries.remove(&k) {
+                        st.resident_bytes -= e.bytes;
+                        metrics.counter("instance_cache_evictions").inc();
+                    }
+                }
+                None => break, // only the fresh entry remains; keep it
+            }
+        }
+        metrics.gauge("instance_cache_bytes").set(st.resident_bytes as u64);
+        metrics
+            .gauge("instance_cache_entries")
+            .set(st.entries.values().filter(|e| e.bytes > 0).count() as u64);
+    }
+
+    /// Drop the placeholder entry for a failed build (only if it is still
+    /// ours — a concurrent retry may have replaced it).
+    fn forget_failed(&self, key: &CacheKey, slot: &Arc<Slot>) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(e) = st.entries.get(key) {
+            if Arc::ptr_eq(&e.slot, slot) && e.bytes == 0 {
+                st.entries.remove(key);
+            }
+        }
+    }
+}
+
+/// Resolve the dataset and build the instance — the single construction
+/// path the cache guards. Mirrors what a per-request job used to do
+/// inline.
+fn build_instance(key: &CacheKey) -> Result<Instance, String> {
+    let ds = registry::resolve_storage(
+        &key.dataset,
+        key.scale(),
+        key.model.expected_task(),
+        key.storage,
+    )?;
+    if ds.task != key.model.expected_task() {
+        return Err(format!(
+            "dataset `{}` is a {:?} set but model {:?} expects {:?}",
+            key.dataset,
+            ds.task,
+            key.model,
+            key.model.expected_task()
+        ));
+    }
+    Ok(Instance::from_dataset(key.model, &ds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(dataset: &str, scale: f64) -> CacheKey {
+        CacheKey::new(dataset, Model::Svm, Storage::Auto, scale)
+    }
+
+    #[test]
+    fn hit_after_miss_shares_one_arc() {
+        let cache = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+        let m = Registry::default();
+        let a = cache.get_or_build(&key("toy1", 0.05), &m).unwrap();
+        let b = cache.get_or_build(&key("toy1", 0.05), &m).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(m.counter("instance_cache_misses").get(), 1);
+        assert_eq!(m.counter("instance_cache_hits").get(), 1);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.resident_bytes(), a.approx_bytes());
+    }
+
+    #[test]
+    fn key_fields_separate_entries() {
+        let cache = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+        let m = Registry::default();
+        cache.get_or_build(&key("toy1", 0.05), &m).unwrap();
+        cache.get_or_build(&key("toy1", 0.06), &m).unwrap();
+        cache.get_or_build(&key("toy2", 0.05), &m).unwrap();
+        cache
+            .get_or_build(&CacheKey::new("toy1", Model::Svm, Storage::Csr, 0.05), &m)
+            .unwrap();
+        cache
+            .get_or_build(&CacheKey::new("toy1", Model::WeightedSvm, Storage::Auto, 0.05), &m)
+            .unwrap();
+        assert_eq!(m.counter("instance_cache_misses").get(), 5);
+        assert_eq!(m.counter("instance_cache_hits").get(), 0);
+        assert_eq!(cache.len(), 5);
+    }
+
+    #[test]
+    fn zero_budget_disables_residency() {
+        let cache = InstanceCache::new(0);
+        let m = Registry::default();
+        let a = cache.get_or_build(&key("toy1", 0.05), &m).unwrap();
+        let b = cache.get_or_build(&key("toy1", 0.05), &m).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(m.counter("instance_cache_misses").get(), 2);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_recency() {
+        let m = Registry::default();
+        // size the budget to hold exactly two toy instances
+        let probe = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+        let one = probe.get_or_build(&key("toy1", 0.05), &m).unwrap().approx_bytes();
+        let cache = InstanceCache::new(2 * one + one / 2);
+        let m = Registry::default();
+        cache.get_or_build(&key("toy1", 0.05), &m).unwrap();
+        cache.get_or_build(&key("toy2", 0.05), &m).unwrap();
+        // touch toy1 so toy2 is the LRU
+        cache.get_or_build(&key("toy1", 0.05), &m).unwrap();
+        cache.get_or_build(&key("toy3", 0.05), &m).unwrap();
+        assert_eq!(m.counter("instance_cache_evictions").get(), 1);
+        assert_eq!(cache.len(), 2);
+        // toy1 survived (recently used), toy2 was evicted
+        cache.get_or_build(&key("toy1", 0.05), &m).unwrap();
+        assert_eq!(m.counter("instance_cache_hits").get(), 2);
+        cache.get_or_build(&key("toy2", 0.05), &m).unwrap();
+        assert_eq!(m.counter("instance_cache_misses").get(), 4, "toy2 must rebuild");
+    }
+
+    #[test]
+    fn oversized_entry_stays_until_next_insert() {
+        let m = Registry::default();
+        let cache = InstanceCache::new(1); // smaller than any instance
+        cache.get_or_build(&key("toy1", 0.05), &m).unwrap();
+        assert_eq!(cache.len(), 1, "fresh entry is never evicted by its own insert");
+        cache.get_or_build(&key("toy2", 0.05), &m).unwrap();
+        // the toy2 insert evicts toy1, then toy2 itself stays
+        assert_eq!(cache.len(), 1);
+        assert_eq!(m.counter("instance_cache_evictions").get(), 1);
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let cache = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+        let m = Registry::default();
+        assert!(cache.get_or_build(&key("no-such-set", 0.05), &m).is_err());
+        assert!(cache.get_or_build(&key("no-such-set", 0.05), &m).is_err());
+        assert_eq!(m.counter("instance_cache_errors").get(), 2, "errors retry");
+        assert_eq!(m.counter("instance_cache_misses").get(), 0, "a miss means a build");
+        assert_eq!(cache.len(), 0);
+        // task mismatch is an error, not a panic
+        let bad = CacheKey::new("houses", Model::Svm, Storage::Auto, 0.05);
+        let e = cache.get_or_build(&bad, &m);
+        assert!(e.is_err(), "houses is a regression set");
+    }
+
+    #[test]
+    fn concurrent_same_key_builds_once() {
+        let cache = Arc::new(InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES));
+        let m = Arc::new(Registry::default());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let cache = cache.clone();
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                cache.get_or_build(&key("toy2", 0.05), &m).unwrap().len()
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("instance_cache_misses").get(), 1, "exactly one build");
+        assert_eq!(m.counter("instance_cache_hits").get(), 7);
+    }
+}

@@ -1,23 +1,105 @@
-//! Job definition and execution: one job = one path run.
+//! Job definition and execution: a job is either a full path run or a
+//! lightweight batch-screening pass against a cached instance.
 
-use crate::config::RunConfig;
-use crate::data::registry;
+use super::cache::{CacheKey, InstanceCache};
+use crate::config::{RunConfig, SolverConfig};
+use crate::metrics::Registry;
 use crate::path::{PathConfig, PathOutput, PathRunner};
-use crate::problem::Model;
-use crate::screening::RuleKind;
+use crate::problem::{Instance, Model};
+use crate::screening::{dvi, RuleKind};
+use crate::solver::CdSolver;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What a job does.
+#[derive(Clone, Debug)]
+pub enum JobKind {
+    /// Screen → reduce → solve along a full C-grid (the original job).
+    Path(RunConfig),
+    /// Many DVI screening passes against one cached instance.
+    Screen(ScreenSpec),
+}
 
 /// A scheduled unit of work.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
     pub id: u64,
-    pub run: RunConfig,
+    pub kind: JobKind,
+    /// Emit wall-clock fields in the response. The service's
+    /// `"timings": false` turns this off so responses are byte-for-byte
+    /// deterministic (the batch/single equivalence the protocol promises
+    /// — and the smoke test diffs — only holds for deterministic bytes).
+    pub timings: bool,
+}
+
+impl JobSpec {
+    pub fn path(id: u64, run: RunConfig) -> JobSpec {
+        JobSpec { id, kind: JobKind::Path(run), timings: true }
+    }
+
+    pub fn screen(id: u64, spec: ScreenSpec) -> JobSpec {
+        JobSpec { id, kind: JobKind::Screen(spec), timings: true }
+    }
+}
+
+/// A batch-screening job: screen each `(c_prev, c_next)` pair against the
+/// cached `(dataset, model, storage, scale)` instance. The anchor dual
+/// point θ*(c_prev) comes from `theta` (caller-supplied, anchored at the
+/// first pair's `c_prev`) or from the solver (anchors are solved on
+/// demand, warm-starting from the most recent one, and reused across
+/// pairs sharing a `c_prev` via a small bounded LRU memo). This is the
+/// paper's sequential-path amortization as a service primitive: one
+/// resident instance, many screening scans.
+#[derive(Clone, Debug)]
+pub struct ScreenSpec {
+    pub dataset: String,
+    pub model: Model,
+    pub scale: f64,
+    pub storage: crate::linalg::Storage,
+    /// `(c_prev, c_next)` pairs, each requiring `0 < c_prev < c_next`.
+    pub pairs: Vec<(f64, f64)>,
+    /// Optional θ*(pairs[0].0) warm start (length l). Screening safety
+    /// holds when this is the optimum at that C — the service trusts the
+    /// caller (e.g. a θ returned by an earlier screen response).
+    pub theta: Option<Vec<f64>>,
+    /// tol/threads for anchor solves and the sharded scan.
+    pub solver: SolverConfig,
+    /// Echo the most advanced anchor θ in the response (l floats — off by
+    /// default to keep lines small).
+    pub return_theta: bool,
 }
 
 /// Result envelope (jobs never panic the pool; failures are data).
 #[derive(Clone, Debug)]
 pub struct JobOutcome {
     pub id: u64,
-    pub result: Result<JobSummary, String>,
+    /// Copied from [`JobSpec::timings`] so the response encoder knows
+    /// whether to emit wall-clock fields.
+    pub timings: bool,
+    pub result: Result<JobReply, String>,
+}
+
+/// Successful job payload, by kind.
+#[derive(Clone, Debug)]
+pub enum JobReply {
+    Path(JobSummary),
+    Screen(ScreenSummary),
+}
+
+impl JobReply {
+    pub fn as_path(&self) -> Option<&JobSummary> {
+        match self {
+            JobReply::Path(s) => Some(s),
+            JobReply::Screen(_) => None,
+        }
+    }
+
+    pub fn as_screen(&self) -> Option<&ScreenSummary> {
+        match self {
+            JobReply::Screen(s) => Some(s),
+            JobReply::Path(_) => None,
+        }
+    }
 }
 
 /// What the coordinator keeps from a finished path run (the full
@@ -46,7 +128,7 @@ impl JobSummary {
         let (lo, hi) = out.rejection_series();
         JobSummary {
             dataset: out.dataset.clone(),
-            model: format!("{:?}", out.model).to_lowercase(),
+            model: out.model.name().to_string(),
             rule: out.rule.name().to_string(),
             l: out.l,
             steps: out.steps.len(),
@@ -63,34 +145,84 @@ impl JobSummary {
     }
 }
 
-/// Build the runner from a config and execute. `use_pjrt` is honored when
-/// the artifacts are present; otherwise the job falls back to the native
-/// backend (recorded in the summary via the runner's backend name).
-pub fn run_job(spec: &JobSpec) -> JobOutcome {
-    let result = run_inner(&spec.run);
-    JobOutcome { id: spec.id, result }
+/// One screened pair's outcome.
+#[derive(Clone, Debug)]
+pub struct ScreenPairResult {
+    pub c_prev: f64,
+    pub c_next: f64,
+    pub n_lo: usize,
+    pub n_hi: usize,
+    pub free: usize,
 }
 
-fn run_inner(cfg: &RunConfig) -> Result<JobSummary, String> {
+/// What a screening job returns.
+#[derive(Clone, Debug)]
+pub struct ScreenSummary {
+    pub dataset: String,
+    pub model: String,
+    pub l: usize,
+    pub pairs: Vec<ScreenPairResult>,
+    /// Anchor solves this job paid for (0 when every pair reused the
+    /// supplied θ).
+    pub anchor_solves: usize,
+    pub solve_secs: f64,
+    pub screen_secs: f64,
+    /// θ*(c_prev) of the last pair processed, when `return_theta` — lets
+    /// a client chain screening sessions without re-solving.
+    pub theta: Option<Vec<f64>>,
+    /// The C the returned θ anchors at.
+    pub theta_c: Option<f64>,
+}
+
+impl ScreenSummary {
+    pub fn mean_rejection(&self) -> f64 {
+        if self.pairs.is_empty() || self.l == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .pairs
+            .iter()
+            .map(|p| (p.n_lo + p.n_hi) as f64 / self.l as f64)
+            .sum();
+        sum / self.pairs.len() as f64
+    }
+}
+
+/// Execute a job without a resident cache: a transient zero-budget cache
+/// makes this path identical to the pooled one minus residency. The CLI's
+/// one-shot `dvi path` uses it.
+pub fn run_job(spec: &JobSpec) -> JobOutcome {
+    run_job_cached(spec, &InstanceCache::new(0), &Registry::default())
+}
+
+/// Execute a job against the pool's resident cache.
+pub fn run_job_cached(spec: &JobSpec, cache: &InstanceCache, metrics: &Registry) -> JobOutcome {
+    let result = match &spec.kind {
+        JobKind::Path(cfg) => run_path(cfg, cache, metrics).map(JobReply::Path),
+        JobKind::Screen(s) => run_screen(s, cache, metrics).map(JobReply::Screen),
+    };
+    JobOutcome { id: spec.id, timings: spec.timings, result }
+}
+
+/// Build the runner from a config and execute. `use_pjrt` is honored when
+/// the artifacts are present; otherwise the job falls back to the native
+/// backend.
+fn run_path(
+    cfg: &RunConfig,
+    cache: &InstanceCache,
+    metrics: &Registry,
+) -> Result<JobSummary, String> {
     let model = Model::parse(&cfg.model).ok_or_else(|| format!("bad model `{}`", cfg.model))?;
     let rule = RuleKind::parse(&cfg.rule).ok_or_else(|| format!("bad rule `{}`", cfg.rule))?;
     let storage = crate::linalg::Storage::parse(&cfg.storage)
         .ok_or_else(|| format!("bad storage `{}` (dense | csr | auto)", cfg.storage))?;
-    let ds = registry::resolve_storage(&cfg.dataset, cfg.scale, model.expected_task(), storage)?;
-    if ds.task != model.expected_task() {
-        return Err(format!(
-            "dataset `{}` is a {:?} set but model `{}` expects {:?}",
-            cfg.dataset,
-            ds.task,
-            cfg.model,
-            model.expected_task()
-        ));
-    }
     if rule == RuleKind::Ssnsv || rule == RuleKind::Essnsv {
         if model == Model::Lad {
             return Err("SSNSV/ESSNSV are SVM-only rules".into());
         }
     }
+    let key = CacheKey::new(&cfg.dataset, model, storage, cfg.scale);
+    let inst = cache.get_or_build(&key, metrics)?;
     let path_cfg = PathConfig {
         grid: cfg.grid.values(),
         solver: cfg.solver.clone(),
@@ -104,14 +236,124 @@ fn run_inner(cfg: &RunConfig) -> Result<JobSummary, String> {
             Err(e) => eprintln!("[job] pjrt unavailable ({e}); using native scan"),
         }
     }
-    let out = runner.run(&ds);
+    let out = runner.run_shared(&inst);
     Ok(JobSummary::from_output(&out))
+}
+
+/// Execute a screening job: fetch the cached instance once, then for each
+/// `(c_prev, c_next)` pair resolve the anchor θ*(c_prev) (supplied, or
+/// solved and memoized) and run the sharded w-form DVI scan.
+fn run_screen(
+    spec: &ScreenSpec,
+    cache: &InstanceCache,
+    metrics: &Registry,
+) -> Result<ScreenSummary, String> {
+    if spec.pairs.is_empty() {
+        return Err("screen: `pairs` must be non-empty".into());
+    }
+    for &(a, b) in &spec.pairs {
+        if !(a.is_finite() && b.is_finite() && a > 0.0 && b > a) {
+            return Err(format!("screen: pair ({a}, {b}) must satisfy 0 < c_prev < c_next"));
+        }
+    }
+    let key = CacheKey::new(&spec.dataset, spec.model, spec.storage, spec.scale);
+    let inst: Arc<Instance> = cache.get_or_build(&key, metrics)?;
+    let l = inst.len();
+
+    // Anchors solved or supplied so far, most-recently-used last:
+    // (c_prev, θ, u = Zᵀθ). The memo is BOUNDED — each entry holds 2l
+    // floats, so an unbounded memo over a max-size pairs list would hold
+    // O(pairs·l) memory; only the latest anchor ever seeds a warm start,
+    // and re-solving an evicted c_prev is merely slower, never wrong.
+    const MAX_ANCHORS: usize = 8;
+    let mut anchors: Vec<(f64, Vec<f64>, Vec<f64>)> = Vec::new();
+    if let Some(t0) = &spec.theta {
+        if t0.len() != l {
+            return Err(format!("screen: theta has {} entries, instance has {l}", t0.len()));
+        }
+        if t0.iter().any(|v| !v.is_finite()) {
+            return Err("screen: theta must be finite".into());
+        }
+        if !inst.in_box(t0, 1e-6) {
+            return Err("screen: theta leaves the dual box [lo, hi]".into());
+        }
+        let u = inst.u_from_theta(t0);
+        anchors.push((spec.pairs[0].0, t0.clone(), u));
+    }
+
+    let solver = CdSolver::new(spec.solver.clone());
+    let mut anchor_solves = 0usize;
+    let mut solve_secs = 0.0;
+    let mut screen_secs = 0.0;
+    let mut results = Vec::with_capacity(spec.pairs.len());
+
+    for &(c_prev, c_next) in &spec.pairs {
+        if let Some(i) = anchors.iter().position(|(c, _, _)| *c == c_prev) {
+            // mark most-recently-used by moving to the back
+            let a = anchors.remove(i);
+            anchors.push(a);
+        } else {
+            // warm-start from the most recent anchor (projected into the
+            // box — it is feasible for every C)
+            let warm = match anchors.last() {
+                Some((_, t, _)) => {
+                    let mut t = t.clone();
+                    inst.project_box(&mut t);
+                    t
+                }
+                None => inst.cold_start(),
+            };
+            let t = Instant::now();
+            let r = solver.solve(&inst, c_prev, warm);
+            solve_secs += t.elapsed().as_secs_f64();
+            anchor_solves += 1;
+            // recompute u = Zᵀθ exactly (the solver maintains its u
+            // incrementally, with low-bit drift): the scan is then a
+            // pure function of θ, so a θ echoed over the wire and fed
+            // back reproduces decisions bit-for-bit
+            let u = inst.u_from_theta(&r.theta);
+            anchors.push((c_prev, r.theta, u));
+            if anchors.len() > MAX_ANCHORS {
+                anchors.remove(0); // least-recently-used
+            }
+        }
+        let (_, _, u) = anchors.last().expect("anchor just ensured");
+        let t = Instant::now();
+        let report = dvi::screen_w_par(&inst, c_prev, c_next, u, spec.solver.threads);
+        screen_secs += t.elapsed().as_secs_f64();
+        results.push(ScreenPairResult {
+            c_prev,
+            c_next,
+            n_lo: report.n_lo,
+            n_hi: report.n_hi,
+            free: l - report.n_lo - report.n_hi,
+        });
+    }
+
+    let (theta, theta_c) = if spec.return_theta {
+        let (c, t, _) = anchors.last().expect("pairs is non-empty");
+        (Some(t.clone()), Some(*c))
+    } else {
+        (None, None)
+    };
+    Ok(ScreenSummary {
+        dataset: spec.dataset.clone(),
+        model: spec.model.name().to_string(),
+        l,
+        pairs: results,
+        anchor_solves,
+        solve_secs,
+        screen_secs,
+        theta,
+        theta_c,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{GridConfig, SolverConfig};
+    use crate::linalg::Storage;
 
     fn quick_run(dataset: &str, model: &str, rule: &str) -> RunConfig {
         RunConfig {
@@ -127,10 +369,24 @@ mod tests {
         }
     }
 
+    fn quick_screen(dataset: &str, pairs: Vec<(f64, f64)>) -> ScreenSpec {
+        ScreenSpec {
+            dataset: dataset.into(),
+            model: Model::Svm,
+            scale: 0.05,
+            storage: Storage::Auto,
+            pairs,
+            theta: None,
+            solver: SolverConfig { tol: 1e-6, ..Default::default() },
+            return_theta: false,
+        }
+    }
+
     #[test]
     fn svm_job_runs() {
-        let out = run_job(&JobSpec { id: 1, run: quick_run("toy1", "svm", "dvi") });
-        let s = out.result.expect("job failed");
+        let out = run_job(&JobSpec::path(1, quick_run("toy1", "svm", "dvi")));
+        let r = out.result.expect("job failed");
+        let s = r.as_path().unwrap();
         assert_eq!(s.steps, 6);
         assert!(s.mean_rejection > 0.0);
         assert!(s.worst_violation.unwrap() < 1e-4);
@@ -140,8 +396,9 @@ mod tests {
     fn lad_job_runs() {
         let mut run = quick_run("houses", "lad", "dvi");
         run.grid.points = 16; // finer grid so DVI's radius is meaningful
-        let out = run_job(&JobSpec { id: 2, run });
-        let s = out.result.expect("job failed");
+        let out = run_job(&JobSpec::path(2, run));
+        let r = out.result.expect("job failed");
+        let s = r.as_path().unwrap();
         assert_eq!(s.model, "lad");
         assert!(s.mean_rejection > 0.0, "rejection {}", s.mean_rejection);
     }
@@ -150,16 +407,135 @@ mod tests {
     fn bad_config_is_error_not_panic() {
         let mut cfg = quick_run("toy1", "svm", "dvi");
         cfg.dataset = "no-such-set".into();
-        let out = run_job(&JobSpec { id: 3, run: cfg });
+        let out = run_job(&JobSpec::path(3, cfg));
         assert!(out.result.is_err());
     }
 
     #[test]
     fn ssnsv_on_lad_is_error() {
-        // SSNSV is SVM-only; the instance builder panics, but job
-        // resolution catches the model/task mismatch first for LAD sets —
-        // exercise the rule mismatch path with an SVM dataset instead.
-        let out = run_job(&JobSpec { id: 4, run: quick_run("magic", "svm", "ssnsv") });
+        // SSNSV is SVM-only; the rule check fires before instance
+        // resolution, and the regression-set/SVM mismatch errors cleanly
+        // from the cache build either way.
+        let out = run_job(&JobSpec::path(4, quick_run("magic", "svm", "ssnsv")));
         assert!(out.result.is_err()); // magic is a regression set
+    }
+
+    #[test]
+    fn path_jobs_share_the_cached_instance() {
+        let cache = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+        let m = Registry::default();
+        for (id, rule) in ["dvi", "dvi-theta", "none"].iter().enumerate() {
+            let out = run_job_cached(
+                &JobSpec::path(id as u64, quick_run("toy1", "svm", rule)),
+                &cache,
+                &m,
+            );
+            assert!(out.result.is_ok(), "{rule}: {:?}", out.result);
+        }
+        assert_eq!(m.counter("instance_cache_misses").get(), 1);
+        assert_eq!(m.counter("instance_cache_hits").get(), 2);
+    }
+
+    #[test]
+    fn screen_job_matches_direct_scan() {
+        let cache = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+        let m = Registry::default();
+        let spec = quick_screen("toy1", vec![(0.5, 0.8), (0.8, 1.6)]);
+        let out = run_job_cached(&JobSpec::screen(0, spec.clone()), &cache, &m);
+        let reply = out.result.expect("screen job failed");
+        let s = reply.as_screen().unwrap();
+        assert_eq!(s.pairs.len(), 2);
+        assert_eq!(s.anchor_solves, 2, "two distinct c_prev anchors");
+
+        // ground truth straight from the library with the same settings
+        // (the job recomputes u = Zᵀθ per anchor, so mirror that)
+        let key = CacheKey::new("toy1", Model::Svm, Storage::Auto, 0.05);
+        let inst = cache.get_or_build(&key, &m).unwrap();
+        let solver = CdSolver::new(spec.solver.clone());
+        let r0 = solver.solve(&inst, 0.5, inst.cold_start());
+        let u0 = inst.u_from_theta(&r0.theta);
+        let rep0 = crate::screening::Dvi::new_w().screen(&inst, 0.5, 0.8, &r0.theta, &u0);
+        assert_eq!((s.pairs[0].n_lo, s.pairs[0].n_hi), (rep0.n_lo, rep0.n_hi));
+        // the job's second anchor warm-starts from the first — confirm
+        // against the same warm-started solve
+        let mut warm = r0.theta.clone();
+        inst.project_box(&mut warm);
+        let r1 = solver.solve(&inst, 0.8, warm);
+        let u1 = inst.u_from_theta(&r1.theta);
+        let rep1 = crate::screening::Dvi::new_w().screen(&inst, 0.8, 1.6, &r1.theta, &u1);
+        assert_eq!((s.pairs[1].n_lo, s.pairs[1].n_hi), (rep1.n_lo, rep1.n_hi));
+        assert!(s.mean_rejection() > 0.0);
+    }
+
+    #[test]
+    fn screen_job_reuses_anchor_for_shared_c_prev() {
+        let spec = quick_screen("toy1", vec![(0.5, 0.6), (0.5, 1.0), (0.5, 5.0)]);
+        let out = run_job(&JobSpec::screen(0, spec));
+        let reply = out.result.unwrap();
+        let s = reply.as_screen().unwrap();
+        assert_eq!(s.anchor_solves, 1, "one anchor serves all three pairs");
+        // closer targets screen no less than far ones (Theorem 6 radius)
+        let rej: Vec<usize> = s.pairs.iter().map(|p| p.n_lo + p.n_hi).collect();
+        assert!(rej[0] >= rej[2], "{rej:?}");
+    }
+
+    #[test]
+    fn screen_anchor_memo_is_bounded_but_complete() {
+        // 12 distinct ascending anchors exercise the LRU eviction path;
+        // every pair still gets screened and answered
+        let pairs: Vec<(f64, f64)> = (0..12)
+            .map(|k| {
+                let c = 0.1 + 0.05 * k as f64;
+                (c, c + 0.02)
+            })
+            .collect();
+        let out = run_job(&JobSpec::screen(0, quick_screen("toy1", pairs)));
+        let reply = out.result.unwrap();
+        let s = reply.as_screen().unwrap();
+        assert_eq!(s.pairs.len(), 12);
+        assert_eq!(s.anchor_solves, 12);
+    }
+
+    #[test]
+    fn screen_job_with_supplied_theta_skips_solves() {
+        let cache = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+        let m = Registry::default();
+        let key = CacheKey::new("toy1", Model::Svm, Storage::Auto, 0.05);
+        let inst = cache.get_or_build(&key, &m).unwrap();
+        let solver = CdSolver::new(SolverConfig { tol: 1e-6, ..Default::default() });
+        let r = solver.solve(&inst, 0.5, inst.cold_start());
+
+        let mut spec = quick_screen("toy1", vec![(0.5, 0.8)]);
+        spec.theta = Some(r.theta.clone());
+        spec.return_theta = true;
+        let out = run_job_cached(&JobSpec::screen(0, spec), &cache, &m);
+        let reply = out.result.unwrap();
+        let s = reply.as_screen().unwrap();
+        assert_eq!(s.anchor_solves, 0);
+        assert_eq!(s.theta.as_ref().unwrap(), &r.theta);
+        assert_eq!(s.theta_c, Some(0.5));
+        let u = inst.u_from_theta(&r.theta);
+        let want = crate::screening::Dvi::new_w().screen(&inst, 0.5, 0.8, &r.theta, &u);
+        assert_eq!((s.pairs[0].n_lo, s.pairs[0].n_hi), (want.n_lo, want.n_hi));
+    }
+
+    #[test]
+    fn screen_job_rejects_bad_input() {
+        // reversed pair
+        let out = run_job(&JobSpec::screen(0, quick_screen("toy1", vec![(1.0, 0.5)])));
+        assert!(out.result.is_err());
+        // empty pairs
+        let out = run_job(&JobSpec::screen(1, quick_screen("toy1", vec![])));
+        assert!(out.result.is_err());
+        // wrong θ length
+        let mut spec = quick_screen("toy1", vec![(0.5, 0.8)]);
+        spec.theta = Some(vec![0.0; 3]);
+        let out = run_job(&JobSpec::screen(2, spec));
+        assert!(out.result.is_err());
+        // θ outside the box
+        let mut spec = quick_screen("toy1", vec![(0.5, 0.8)]);
+        spec.theta = Some(vec![7.0; 100]);
+        let out = run_job(&JobSpec::screen(3, spec));
+        assert!(out.result.is_err());
     }
 }

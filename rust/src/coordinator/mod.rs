@@ -1,12 +1,18 @@
 //! L3 coordinator: turns [`crate::config::RunConfig`]s into scheduled
-//! path-run jobs on a thread worker pool, tracks metrics, and exposes a
-//! line-oriented JSON service (the "screening service" the examples and
-//! the CLI drive).
+//! path-run or batch-screening jobs on a thread worker pool backed by a
+//! resident [`cache::InstanceCache`], tracks metrics, and exposes a
+//! line-oriented JSON service with single, screen, and batch request
+//! kinds (the "screening service" the examples and the CLI drive).
 
+pub mod cache;
 pub mod job;
 pub mod pool;
 pub mod service;
 
-pub use job::{run_job, JobOutcome, JobSpec};
+pub use cache::{CacheKey, InstanceCache};
+pub use job::{
+    run_job, run_job_cached, JobKind, JobOutcome, JobReply, JobSpec, JobSummary, ScreenSpec,
+    ScreenSummary,
+};
 pub use pool::WorkerPool;
 pub use service::ScreeningService;

@@ -3,10 +3,21 @@
 //! std-only (no tokio offline): a bounded mpsc work queue feeding N worker
 //! threads, results collected on a shared channel. Jobs that panic are
 //! caught (`catch_unwind`) and surfaced as failed outcomes — one bad run
-//! must not take down an experiment sweep.
+//! must not take down an experiment sweep. A per-message guard backstops
+//! even panics outside the job body (metrics, channel plumbing): every
+//! accepted job produces exactly one [`JobOutcome`], so the service never
+//! loses a response line. The pool owns the resident [`InstanceCache`]
+//! workers resolve instances through, so jobs naming the same dataset
+//! share one `Arc<Instance>` instead of rebuilding per request.
+//!
+//! Shutdown is deterministic: dropping the pool (or calling
+//! [`WorkerPool::shutdown`]) enqueues one shutdown message per worker
+//! *behind* any queued jobs — FIFO order means workers drain the queue
+//! first — then joins every worker thread.
 
-use super::job::{run_job, JobOutcome, JobSpec};
-use crate::metrics::Registry;
+use super::cache::InstanceCache;
+use super::job::{run_job_cached, JobOutcome, JobSpec};
+use crate::metrics::{Counter, Registry};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -17,24 +28,77 @@ enum Msg {
     Shutdown,
 }
 
-/// Fixed-size worker pool.
+/// Fixed-size worker pool with a shared resident instance cache.
 pub struct WorkerPool {
     tx: Sender<Msg>,
     results_rx: Receiver<JobOutcome>,
     workers: Vec<JoinHandle<()>>,
     pending: Arc<AtomicU64>,
     pub metrics: Arc<Registry>,
+    pub cache: Arc<InstanceCache>,
+}
+
+/// Guarantees exactly one outcome — delivered AND counted — per accepted
+/// job: if the worker unwinds anywhere in the processing block (even
+/// outside the `catch_unwind` around the job body), the guard's drop
+/// still delivers a failure outcome, bumps the jobs_done/jobs_failed
+/// counters, and releases the pending slot before the thread dies. The
+/// counters are pre-resolved `Arc<Counter>` handles so the drop path
+/// only touches atomics — it cannot trip over a registry mutex poisoned
+/// by the very panic it is cleaning up after.
+struct ResultGuard<'a> {
+    id: u64,
+    results_tx: &'a Sender<JobOutcome>,
+    pending: &'a AtomicU64,
+    jobs_done: &'a Counter,
+    jobs_failed: &'a Counter,
+    done: bool,
+}
+
+impl ResultGuard<'_> {
+    fn complete(mut self, outcome: JobOutcome) {
+        self.done = true;
+        self.jobs_done.inc();
+        if outcome.result.is_err() {
+            self.jobs_failed.inc();
+        }
+        self.pending.fetch_sub(1, Ordering::SeqCst);
+        // receiver may be gone during shutdown
+        let _ = self.results_tx.send(outcome);
+    }
+}
+
+impl Drop for ResultGuard<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            self.jobs_done.inc();
+            self.jobs_failed.inc();
+            self.pending.fetch_sub(1, Ordering::SeqCst);
+            let _ = self.results_tx.send(JobOutcome {
+                id: self.id,
+                timings: true,
+                result: Err("worker crashed while finalizing the job".into()),
+            });
+        }
+    }
 }
 
 impl WorkerPool {
-    /// Spawn `n_workers` threads (≥1).
+    /// Spawn `n_workers` threads (≥1) with the default cache budget.
     pub fn new(n_workers: usize) -> WorkerPool {
+        Self::with_cache(n_workers, InstanceCache::DEFAULT_BUDGET_BYTES)
+    }
+
+    /// Spawn `n_workers` threads sharing an instance cache of
+    /// `cache_bytes` (0 disables residency).
+    pub fn with_cache(n_workers: usize, cache_bytes: usize) -> WorkerPool {
         let n = n_workers.max(1);
         let (tx, rx) = channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
         let (results_tx, results_rx) = channel::<JobOutcome>();
         let pending = Arc::new(AtomicU64::new(0));
         let metrics = Arc::new(Registry::default());
+        let cache = Arc::new(InstanceCache::new(cache_bytes));
 
         let mut workers = Vec::with_capacity(n);
         for wid in 0..n {
@@ -42,41 +106,54 @@ impl WorkerPool {
             let results_tx = results_tx.clone();
             let pending = pending.clone();
             let metrics = metrics.clone();
+            let cache = cache.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("dvi-worker-{wid}"))
-                    .spawn(move || loop {
-                        let msg = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match msg {
-                            Ok(Msg::Job(spec)) => {
-                                let hist = metrics.histogram("job_secs");
-                                let t = std::time::Instant::now();
-                                let outcome = std::panic::catch_unwind(
-                                    std::panic::AssertUnwindSafe(|| run_job(&spec)),
-                                )
-                                .unwrap_or_else(|p| JobOutcome {
-                                    id: spec.id,
-                                    result: Err(panic_msg(p)),
-                                });
-                                hist.record(t.elapsed());
-                                metrics.counter("jobs_done").inc();
-                                if outcome.result.is_err() {
-                                    metrics.counter("jobs_failed").inc();
+                    .spawn(move || {
+                        // resolve the shared metric handles once, up
+                        // front: the per-job path (and the guard's drop)
+                        // then only touches atomics
+                        let hist = metrics.histogram("job_secs");
+                        let jobs_done = metrics.counter("jobs_done");
+                        let jobs_failed = metrics.counter("jobs_failed");
+                        loop {
+                            let msg = {
+                                let guard = rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            match msg {
+                                Ok(Msg::Job(spec)) => {
+                                    let guard = ResultGuard {
+                                        id: spec.id,
+                                        results_tx: &results_tx,
+                                        pending: &pending,
+                                        jobs_done: &jobs_done,
+                                        jobs_failed: &jobs_failed,
+                                        done: false,
+                                    };
+                                    let t = std::time::Instant::now();
+                                    let outcome = std::panic::catch_unwind(
+                                        std::panic::AssertUnwindSafe(|| {
+                                            run_job_cached(&spec, &cache, &metrics)
+                                        }),
+                                    )
+                                    .unwrap_or_else(|p| JobOutcome {
+                                        id: spec.id,
+                                        timings: spec.timings,
+                                        result: Err(panic_msg(p)),
+                                    });
+                                    hist.record(t.elapsed());
+                                    guard.complete(outcome);
                                 }
-                                pending.fetch_sub(1, Ordering::SeqCst);
-                                // receiver may be gone during shutdown
-                                let _ = results_tx.send(outcome);
+                                Ok(Msg::Shutdown) | Err(_) => break,
                             }
-                            Ok(Msg::Shutdown) | Err(_) => break,
                         }
                     })
                     .expect("spawn worker"),
             );
         }
-        WorkerPool { tx, results_rx, workers, pending, metrics }
+        WorkerPool { tx, results_rx, workers, pending, metrics, cache }
     }
 
     /// Enqueue a job.
@@ -106,8 +183,21 @@ impl WorkerPool {
         out
     }
 
-    /// Graceful shutdown (waits for workers to exit).
-    pub fn shutdown(mut self) {
+    /// Graceful shutdown: drains queued jobs and joins every worker
+    /// (equivalent to dropping the pool — see [`Drop`]).
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Deterministic teardown even when the pool is dropped early (e.g. a
+    /// panicking test): shutdown messages queue *behind* in-flight jobs,
+    /// so workers finish and report every accepted job, then exit, then
+    /// the drop joins them. The results receiver stays alive (it is a
+    /// field of `self`) for the whole drain, so no worker ever blocks on
+    /// a closed channel.
+    fn drop(&mut self) {
         for _ in 0..self.workers.len() {
             let _ = self.tx.send(Msg::Shutdown);
         }
@@ -133,9 +223,9 @@ mod tests {
     use crate::config::{GridConfig, RunConfig, SolverConfig};
 
     fn spec(id: u64, dataset: &str) -> JobSpec {
-        JobSpec {
+        JobSpec::path(
             id,
-            run: RunConfig {
+            RunConfig {
                 model: "svm".into(),
                 dataset: dataset.into(),
                 scale: 0.03,
@@ -146,7 +236,7 @@ mod tests {
                 use_pjrt: false,
                 validate: false,
             },
-        }
+        )
     }
 
     #[test]
@@ -180,6 +270,49 @@ mod tests {
         assert!(outcomes[0].result.is_err());
         assert!(outcomes[1].result.is_ok());
         assert!(outcomes[2].result.is_err());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn same_dataset_jobs_build_instance_once() {
+        let pool = WorkerPool::new(4);
+        let outcomes =
+            pool.run_all(vec![spec(0, "toy1"), spec(1, "toy1"), spec(2, "toy1"), spec(3, "toy1")]);
+        assert!(outcomes.iter().all(|o| o.result.is_ok()));
+        assert_eq!(pool.metrics.counter("instance_cache_misses").get(), 1);
+        assert_eq!(pool.metrics.counter("instance_cache_hits").get(), 3);
+        assert_eq!(pool.cache.len(), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn drop_without_shutdown_joins_workers_and_drains_queue() {
+        let pool = WorkerPool::new(2);
+        for i in 0..4 {
+            pool.submit(spec(i, "toy1"));
+        }
+        // drop immediately: queued jobs still run to completion before the
+        // workers see their shutdown messages (FIFO queue), and the drop
+        // blocks until every worker has exited
+        drop(pool);
+    }
+
+    #[test]
+    fn panicked_job_still_yields_its_response() {
+        // a degenerate grid (c_min == c_max) trips the GridConfig assert
+        // inside the worker; catch_unwind must turn it into an error
+        // outcome while the next queued job still completes
+        let mut bad = spec(0, "toy1");
+        if let super::super::job::JobKind::Path(run) = &mut bad.kind {
+            run.grid = GridConfig { c_min: 1.0, c_max: 1.0, points: 2 };
+        }
+        let pool = WorkerPool::new(1);
+        let outcomes = pool.run_all(vec![bad, spec(1, "toy1")]);
+        assert_eq!(outcomes.len(), 2, "no response line may be lost");
+        assert!(outcomes[0].result.is_err(), "panic must surface as an error outcome");
+        assert!(outcomes[1].result.is_ok());
+        assert_eq!(pool.metrics.counter("jobs_failed").get(), 1);
+        assert_eq!(pool.pending(), 0);
         pool.shutdown();
     }
 }

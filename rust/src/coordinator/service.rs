@@ -1,26 +1,75 @@
 //! The screening service: a line-oriented JSON front-end over the worker
-//! pool. Each request line is a JSON object describing a run; each
-//! response line is the job summary (or error). This is the long-running
-//! L3 process the `screening_service` example drives end-to-end.
+//! pool. Each request line is a JSON object describing a job (or a batch
+//! of jobs); each response line answers it. This is the long-running L3
+//! process the `screening_service` example drives end-to-end.
 //!
-//! Request schema (all fields optional except dataset):
+//! ## Path requests (the default kind)
+//!
 //! ```json
 //! {"dataset": "toy1", "model": "svm", "rule": "dvi",
 //!  "scale": 0.1, "points": 20, "c_min": 0.01, "c_max": 10.0,
-//!  "threads": 4, "storage": "auto", "validate": true}
+//!  "threads": 4, "storage": "auto", "validate": true, "timings": false}
 //! ```
 //!
 //! `threads` selects the sharded scan/validation engine for the job
 //! (1 = serial, 0 = auto-detect); decisions are byte-identical either way.
-//! Numeric fields are validated here so malformed requests produce an
-//! error response line instead of a worker panic.
+//! `timings` (default true) controls whether wall-clock fields appear in
+//! the response; turning it off makes responses byte-for-byte
+//! deterministic.
+//!
+//! ## Screen requests
+//!
+//! ```json
+//! {"kind": "screen", "dataset": "toy1", "model": "svm", "scale": 0.1,
+//!  "pairs": [[0.1, 0.2], [0.2, 0.4]], "theta": [0.0, 1.0],
+//!  "tol": 1e-6, "threads": 0, "return_theta": true}
+//! ```
+//!
+//! A screen job runs the w-form DVI scan for each `(c_prev, c_next)` pair
+//! against ONE resident instance. The anchor θ*(c_prev) is the supplied
+//! `theta` (valid for the first pair's `c_prev`) or is solved on demand
+//! and memoized across pairs. This is the protocol for amortizing one
+//! prepared problem over many screening queries.
+//!
+//! ## Batch requests
+//!
+//! ```json
+//! {"batch": [{...}, {...}, {...}]}
+//! ```
+//!
+//! Entries are any mix of path/screen requests; they fan out across the
+//! worker pool (sharing the instance cache — B entries naming the same
+//! dataset build it once) and come back as ONE response line,
+//! `{"batch": [...]}`, in entry order. Errors are isolated per entry: a
+//! malformed or failed entry yields its error object in place, and with
+//! `"timings": false` each entry's object is byte-identical to what the
+//! same request would produce as its own line.
+//!
+//! Responses are written in *input order* once EOF is reached (jobs still
+//! execute concurrently in between), so a scripted session's output is
+//! reproducible. Numeric fields are validated at parse so malformed
+//! requests produce an error response line instead of a worker panic.
 
-use super::job::{JobOutcome, JobSpec};
+use super::cache::InstanceCache;
+use super::job::{JobKind, JobOutcome, JobReply, JobSpec, ScreenSpec};
 use super::pool::WorkerPool;
 use crate::config::json::{parse_json, Json};
-use crate::config::RunConfig;
-use std::collections::BTreeMap;
+use crate::config::{RunConfig, SolverConfig};
+use crate::problem::Model;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, Write};
+
+/// Cap on batch entries per line and screen pairs per job: a huge request
+/// must degrade to an error line, not an OOM.
+const MAX_BATCH: usize = 10_000;
+const MAX_PAIRS: usize = 100_000;
+
+/// One parsed request object: the job plus its response options.
+#[derive(Clone, Debug)]
+pub struct ParsedRequest {
+    pub kind: JobKind,
+    pub timings: bool,
+}
 
 /// Service wrapping a pool with JSON request/response framing.
 pub struct ScreeningService {
@@ -28,21 +77,71 @@ pub struct ScreeningService {
     next_id: u64,
 }
 
+/// A response owed for one input line (or one batch entry).
+enum Pending {
+    /// Already answerable (parse/validation error).
+    Ready(Json),
+    /// Awaiting the outcome of job `id`.
+    Job(u64),
+}
+
+enum LineSlot {
+    Single(Pending),
+    Batch(Vec<Pending>),
+}
+
 impl ScreeningService {
+    /// `workers` threads over the default-size instance cache.
     pub fn new(workers: usize) -> ScreeningService {
-        ScreeningService { pool: WorkerPool::new(workers), next_id: 0 }
+        Self::with_cache(workers, InstanceCache::DEFAULT_BUDGET_BYTES)
     }
 
-    /// Parse one request line into a RunConfig. Numeric fields are
-    /// range-checked here: a negative `points` cast straight to `usize`
-    /// would wrap to a gigantic grid, and non-finite/non-positive C bounds
-    /// would panic inside the worker instead of producing an error line.
+    /// `workers` threads sharing a `cache_bytes`-budget instance cache
+    /// (0 disables residency — every job rebuilds, like the pre-cache
+    /// service).
+    pub fn with_cache(workers: usize, cache_bytes: usize) -> ScreeningService {
+        ScreeningService { pool: WorkerPool::with_cache(workers, cache_bytes), next_id: 0 }
+    }
+
+    /// Parse one request line into a path-run config (legacy surface;
+    /// screen/batch lines are handled by [`Self::serve`]). Numeric fields
+    /// are range-checked here: a negative `points` cast straight to
+    /// `usize` would wrap to a gigantic grid, and non-finite/non-positive
+    /// C bounds would panic inside the worker instead of producing an
+    /// error line.
     pub fn parse_request(line: &str) -> Result<RunConfig, String> {
         let j = parse_json(line).map_err(|e| e.to_string())?;
         let obj = j.as_object().ok_or("request must be a JSON object")?;
+        match Self::parse_object(obj)? {
+            ParsedRequest { kind: JobKind::Path(cfg), .. } => Ok(cfg),
+            _ => Err("not a path request (use serve() for screen/batch lines)".into()),
+        }
+    }
+
+    /// Parse one request object (path or screen kind — batch nesting is
+    /// handled a level up by [`Self::serve`]).
+    pub fn parse_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
+        if obj.contains_key("batch") {
+            return Err("batch requests cannot nest".into());
+        }
+        let kind = match obj.get("kind") {
+            None => "path",
+            Some(v) => v.as_str().ok_or("kind: string")?,
+        };
+        match kind {
+            "path" => Self::parse_path_object(obj),
+            "screen" => Self::parse_screen_object(obj),
+            other => Err(format!("unknown request kind `{other}` (path | screen)")),
+        }
+    }
+
+    fn parse_path_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
         let mut cfg = RunConfig::default();
+        let mut timings = true;
         for (k, v) in obj {
             match k.as_str() {
+                "kind" => {} // dispatched by the caller
+                "timings" => timings = v.as_bool().ok_or("timings: bool")?,
                 "dataset" => cfg.dataset = v.as_str().ok_or("dataset: string")?.to_string(),
                 "model" => cfg.model = v.as_str().ok_or("model: string")?.to_string(),
                 "rule" => cfg.rule = v.as_str().ok_or("rule: string")?.to_string(),
@@ -72,13 +171,7 @@ impl ScreeningService {
                     cfg.grid.c_max = x;
                 }
                 "tol" => cfg.solver.tol = v.as_float().ok_or("tol: number")?,
-                "threads" => {
-                    let t = v.as_int().ok_or("threads: int")?;
-                    if t < 0 {
-                        return Err(format!("threads must be >= 0 (0 = auto), got {t}"));
-                    }
-                    cfg.solver.threads = t as usize;
-                }
+                "threads" => cfg.solver.threads = parse_threads(v)?,
                 "storage" => {
                     let s = v.as_str().ok_or("storage: string")?;
                     if crate::linalg::Storage::parse(s).is_none() {
@@ -96,14 +189,109 @@ impl ScreeningService {
         // request like {"scale": 1e18} would reach the worker and abort
         // it inside the dataset generator's allocation
         cfg.validate_semantics().map_err(|e| e.to_string())?;
-        Ok(cfg)
+        Ok(ParsedRequest { kind: JobKind::Path(cfg), timings })
     }
 
-    /// Submit a run; returns its job id.
+    fn parse_screen_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
+        let mut spec = ScreenSpec {
+            dataset: String::new(),
+            model: Model::Svm,
+            scale: 1.0,
+            storage: crate::linalg::Storage::Auto,
+            pairs: Vec::new(),
+            theta: None,
+            solver: SolverConfig::default(),
+            return_theta: false,
+        };
+        let mut timings = true;
+        for (k, v) in obj {
+            match k.as_str() {
+                "kind" => {}
+                "timings" => timings = v.as_bool().ok_or("timings: bool")?,
+                "dataset" => spec.dataset = v.as_str().ok_or("dataset: string")?.to_string(),
+                "model" => {
+                    let s = v.as_str().ok_or("model: string")?;
+                    spec.model =
+                        Model::parse(s).ok_or_else(|| format!("unknown model `{s}`"))?;
+                }
+                "scale" => {
+                    let x = v.as_float().ok_or("scale: number")?;
+                    if !(x > 0.0 && x <= 1.0) {
+                        return Err(format!("scale must be in (0, 1], got {x}"));
+                    }
+                    spec.scale = x;
+                }
+                "storage" => {
+                    let s = v.as_str().ok_or("storage: string")?;
+                    spec.storage = crate::linalg::Storage::parse(s)
+                        .ok_or_else(|| format!("storage must be dense|csr|auto, got `{s}`"))?;
+                }
+                "tol" => {
+                    let x = v.as_float().ok_or("tol: number")?;
+                    if !(x > 0.0) {
+                        return Err(format!("tol must be positive, got {x}"));
+                    }
+                    spec.solver.tol = x;
+                }
+                "threads" => spec.solver.threads = parse_threads(v)?,
+                "pairs" => {
+                    let arr = v.as_array().ok_or("pairs: array of [c_prev, c_next]")?;
+                    if arr.len() > MAX_PAIRS {
+                        return Err(format!("pairs is capped at {MAX_PAIRS} entries"));
+                    }
+                    let mut pairs = Vec::with_capacity(arr.len());
+                    for p in arr {
+                        let pp = p.as_array().filter(|a| a.len() == 2).ok_or_else(|| {
+                            "each pair must be a [c_prev, c_next] array".to_string()
+                        })?;
+                        let a = pp[0].as_float().ok_or("c_prev: number")?;
+                        let b = pp[1].as_float().ok_or("c_next: number")?;
+                        if !(a.is_finite() && b.is_finite() && a > 0.0 && b > a) {
+                            return Err(format!(
+                                "pair ({a}, {b}) must satisfy 0 < c_prev < c_next"
+                            ));
+                        }
+                        pairs.push((a, b));
+                    }
+                    spec.pairs = pairs;
+                }
+                "theta" => {
+                    let arr = v.as_array().ok_or("theta: array of numbers")?;
+                    let mut t = Vec::with_capacity(arr.len());
+                    for x in arr {
+                        let f = x.as_float().ok_or("theta entries must be numbers")?;
+                        if !f.is_finite() {
+                            return Err("theta must be finite".into());
+                        }
+                        t.push(f);
+                    }
+                    spec.theta = Some(t);
+                }
+                "return_theta" => {
+                    spec.return_theta = v.as_bool().ok_or("return_theta: bool")?
+                }
+                other => return Err(format!("unknown screen field `{other}`")),
+            }
+        }
+        if spec.dataset.is_empty() {
+            return Err("screen: `dataset` is required".into());
+        }
+        if spec.pairs.is_empty() {
+            return Err("screen: `pairs` must be a non-empty array".into());
+        }
+        Ok(ParsedRequest { kind: JobKind::Screen(spec), timings })
+    }
+
+    /// Submit a path run; returns its job id.
     pub fn submit(&mut self, run: RunConfig) -> u64 {
+        self.submit_kind(JobKind::Path(run), true)
+    }
+
+    /// Submit any job kind; returns its job id.
+    pub fn submit_kind(&mut self, kind: JobKind, timings: bool) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.pool.submit(JobSpec { id, run });
+        self.pool.submit(JobSpec { id, kind, timings });
         id
     }
 
@@ -114,6 +302,11 @@ impl ScreeningService {
 
     /// Encode an outcome as a JSON response line.
     pub fn encode_response(outcome: &JobOutcome) -> String {
+        Self::encode_response_json(outcome).to_string()
+    }
+
+    /// Encode an outcome as a JSON value (batch entries embed these).
+    pub fn encode_response_json(outcome: &JobOutcome) -> Json {
         let mut o = BTreeMap::new();
         o.insert("id".to_string(), Json::Int(outcome.id as i64));
         match &outcome.result {
@@ -121,7 +314,7 @@ impl ScreeningService {
                 o.insert("ok".into(), Json::Bool(false));
                 o.insert("error".into(), Json::Str(e.clone()));
             }
-            Ok(s) => {
+            Ok(JobReply::Path(s)) => {
                 o.insert("ok".into(), Json::Bool(true));
                 o.insert("dataset".into(), Json::Str(s.dataset.clone()));
                 o.insert("model".into(), Json::Str(s.model.clone()));
@@ -129,9 +322,11 @@ impl ScreeningService {
                 o.insert("l".into(), Json::Int(s.l as i64));
                 o.insert("steps".into(), Json::Int(s.steps as i64));
                 o.insert("mean_rejection".into(), Json::Float(s.mean_rejection));
-                o.insert("init_secs".into(), Json::Float(s.init_secs));
-                o.insert("screen_secs".into(), Json::Float(s.screen_secs));
-                o.insert("total_secs".into(), Json::Float(s.total_secs));
+                if outcome.timings {
+                    o.insert("init_secs".into(), Json::Float(s.init_secs));
+                    o.insert("screen_secs".into(), Json::Float(s.screen_secs));
+                    o.insert("total_secs".into(), Json::Float(s.total_secs));
+                }
                 o.insert("total_updates".into(), Json::Int(s.total_updates as i64));
                 if let Some(v) = s.worst_violation {
                     o.insert("worst_violation".into(), Json::Float(v));
@@ -145,13 +340,49 @@ impl ScreeningService {
                     Json::Array(s.rejection_hi.iter().map(|&v| Json::Float(v)).collect()),
                 );
             }
+            Ok(JobReply::Screen(s)) => {
+                o.insert("ok".into(), Json::Bool(true));
+                o.insert("kind".into(), Json::Str("screen".into()));
+                o.insert("dataset".into(), Json::Str(s.dataset.clone()));
+                o.insert("model".into(), Json::Str(s.model.clone()));
+                o.insert("l".into(), Json::Int(s.l as i64));
+                o.insert("mean_rejection".into(), Json::Float(s.mean_rejection()));
+                o.insert("anchor_solves".into(), Json::Int(s.anchor_solves as i64));
+                if outcome.timings {
+                    o.insert("solve_secs".into(), Json::Float(s.solve_secs));
+                    o.insert("screen_secs".into(), Json::Float(s.screen_secs));
+                }
+                let pairs: Vec<Json> = s
+                    .pairs
+                    .iter()
+                    .map(|p| {
+                        let mut m = BTreeMap::new();
+                        m.insert("c".to_string(), Json::Float(p.c_next));
+                        m.insert("c_prev".to_string(), Json::Float(p.c_prev));
+                        m.insert("n_lo".to_string(), Json::Int(p.n_lo as i64));
+                        m.insert("n_hi".to_string(), Json::Int(p.n_hi as i64));
+                        m.insert("free".to_string(), Json::Int(p.free as i64));
+                        Json::Object(m)
+                    })
+                    .collect();
+                o.insert("pairs".into(), Json::Array(pairs));
+                if let Some(t) = &s.theta {
+                    o.insert(
+                        "theta".into(),
+                        Json::Array(t.iter().map(|&v| Json::Float(v)).collect()),
+                    );
+                    o.insert("theta_c".into(), Json::Float(s.theta_c.unwrap_or(0.0)));
+                }
+            }
         }
-        Json::Object(o).to_string()
+        Json::Object(o)
     }
 
-    /// Serve until EOF: one JSON request per line in, one JSON response
-    /// per line out. Responses are written in completion order with ids.
+    /// Serve until EOF: one JSON request (or batch) per line in, one JSON
+    /// response per line out, *in input order* — jobs run concurrently on
+    /// the pool in between, but the emitted session is reproducible.
     pub fn serve<R: BufRead, W: Write>(&mut self, input: R, mut output: W) -> std::io::Result<()> {
+        let mut slots: Vec<LineSlot> = Vec::new();
         let mut submitted = 0u64;
         for line in input.lines() {
             let line = line?;
@@ -159,36 +390,138 @@ impl ScreeningService {
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
-            match Self::parse_request(line) {
-                Ok(cfg) => {
-                    self.submit(cfg);
-                    submitted += 1;
-                }
-                Err(e) => {
-                    let mut o = BTreeMap::new();
-                    o.insert("ok".to_string(), Json::Bool(false));
-                    o.insert("error".to_string(), Json::Str(e));
-                    writeln!(output, "{}", Json::Object(o).to_string())?;
-                }
-            }
+            slots.push(self.accept_line(line, &mut submitted));
         }
+        // drain every accepted job, then answer in input order
+        let mut results: HashMap<u64, Json> = HashMap::new();
         for _ in 0..submitted {
             if let Some(outcome) = self.recv() {
-                writeln!(output, "{}", Self::encode_response(&outcome))?;
-                output.flush()?;
+                results.insert(outcome.id, Self::encode_response_json(&outcome));
             }
+        }
+        for slot in slots {
+            let json = match slot {
+                LineSlot::Single(p) => resolve_pending(p, &mut results),
+                LineSlot::Batch(ps) => {
+                    let entries: Vec<Json> = ps
+                        .into_iter()
+                        .map(|p| resolve_pending(p, &mut results))
+                        .collect();
+                    let mut o = BTreeMap::new();
+                    o.insert("batch".to_string(), Json::Array(entries));
+                    Json::Object(o)
+                }
+            };
+            writeln!(output, "{}", json.to_string())?;
+            output.flush()?;
         }
         Ok(())
     }
 
-    /// Shut the pool down.
+    /// Parse one input line into its response slot, submitting any jobs
+    /// it contains.
+    fn accept_line(&mut self, line: &str, submitted: &mut u64) -> LineSlot {
+        let j = match parse_json(line) {
+            Ok(j) => j,
+            Err(e) => return LineSlot::Single(Pending::Ready(error_json(e.to_string()))),
+        };
+        let Some(obj) = j.as_object() else {
+            return LineSlot::Single(Pending::Ready(error_json(
+                "request must be a JSON object".into(),
+            )));
+        };
+        if let Some(batch) = obj.get("batch") {
+            if obj.len() != 1 {
+                return LineSlot::Single(Pending::Ready(error_json(
+                    "a batch request must contain only the `batch` field".into(),
+                )));
+            }
+            let Some(entries) = batch.as_array() else {
+                return LineSlot::Single(Pending::Ready(error_json(
+                    "batch must be an array of request objects".into(),
+                )));
+            };
+            if entries.len() > MAX_BATCH {
+                return LineSlot::Single(Pending::Ready(error_json(format!(
+                    "batch is capped at {MAX_BATCH} entries"
+                ))));
+            }
+            self.pool.metrics.counter("service_batches").inc();
+            let pending = entries
+                .iter()
+                .map(|e| {
+                    let parsed = e
+                        .as_object()
+                        .ok_or("batch entry must be a request object".to_string())
+                        .and_then(Self::parse_object);
+                    match parsed {
+                        Ok(req) => {
+                            *submitted += 1;
+                            self.pool.metrics.counter("service_requests").inc();
+                            Pending::Job(self.submit_kind(req.kind, req.timings))
+                        }
+                        Err(msg) => Pending::Ready(error_json(msg)),
+                    }
+                })
+                .collect();
+            LineSlot::Batch(pending)
+        } else {
+            match Self::parse_object(obj) {
+                Ok(req) => {
+                    *submitted += 1;
+                    self.pool.metrics.counter("service_requests").inc();
+                    LineSlot::Single(Pending::Job(self.submit_kind(req.kind, req.timings)))
+                }
+                Err(msg) => LineSlot::Single(Pending::Ready(error_json(msg))),
+            }
+        }
+    }
+
+    /// Shut the pool down (drains queued jobs, joins workers).
     pub fn shutdown(self) {
         self.pool.shutdown();
     }
 
-    /// Metrics registry (jobs_done, jobs_failed, job_secs).
+    /// Metrics registry (jobs_done, jobs_failed, job_secs,
+    /// instance_cache_hits/misses/evictions/bytes, service_*).
     pub fn metrics(&self) -> &crate::metrics::Registry {
         &self.pool.metrics
+    }
+
+    /// The pool's resident instance cache.
+    pub fn cache(&self) -> &InstanceCache {
+        &self.pool.cache
+    }
+}
+
+fn parse_threads(v: &Json) -> Result<usize, String> {
+    let t = v.as_int().ok_or("threads: int")?;
+    if t < 0 {
+        return Err(format!("threads must be >= 0 (0 = auto), got {t}"));
+    }
+    Ok(t as usize)
+}
+
+fn error_json(msg: String) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("ok".to_string(), Json::Bool(false));
+    o.insert("error".to_string(), Json::Str(msg));
+    Json::Object(o)
+}
+
+/// Answer one pending slot from the drained results. A job whose worker
+/// died without reporting (the guard makes this near-impossible) still
+/// yields an error object instead of a hole in the session.
+fn resolve_pending(p: Pending, results: &mut HashMap<u64, Json>) -> Json {
+    match p {
+        Pending::Ready(j) => j,
+        Pending::Job(id) => results.remove(&id).unwrap_or_else(|| {
+            let mut o = BTreeMap::new();
+            o.insert("id".to_string(), Json::Int(id as i64));
+            o.insert("ok".to_string(), Json::Bool(false));
+            o.insert("error".to_string(), Json::Str("job result lost".into()));
+            Json::Object(o)
+        }),
     }
 }
 
@@ -218,6 +551,8 @@ mod tests {
         assert!(ScreeningService::parse_request(r#"{"datafoo": 1}"#).is_err());
         assert!(ScreeningService::parse_request("not json").is_err());
         assert!(ScreeningService::parse_request(r#"{"scale": "big"}"#).is_err());
+        assert!(ScreeningService::parse_request(r#"{"kind": "nope", "dataset": "toy1"}"#)
+            .is_err());
     }
 
     #[test]
@@ -279,6 +614,56 @@ mod tests {
         assert_eq!(cfg.solver.threads, 4);
     }
 
+    fn parse_line(line: &str) -> Result<ParsedRequest, String> {
+        let j = parse_json(line).map_err(|e| e.to_string())?;
+        let obj = j.as_object().ok_or("not an object")?;
+        ScreeningService::parse_object(obj)
+    }
+
+    #[test]
+    fn parse_screen_request() {
+        let r = parse_line(
+            r#"{"kind": "screen", "dataset": "toy1", "scale": 0.1,
+                "pairs": [[0.1, 0.2], [0.2, 0.4]], "tol": 1e-7,
+                "threads": 2, "return_theta": true, "timings": false}"#,
+        )
+        .unwrap();
+        assert!(!r.timings);
+        let JobKind::Screen(s) = r.kind else { panic!("expected screen kind") };
+        assert_eq!(s.dataset, "toy1");
+        assert_eq!(s.pairs, vec![(0.1, 0.2), (0.2, 0.4)]);
+        assert_eq!(s.solver.threads, 2);
+        assert!(s.return_theta);
+        assert!(s.theta.is_none());
+    }
+
+    #[test]
+    fn parse_screen_rejects_bad_input() {
+        for bad in [
+            // no dataset
+            r#"{"kind": "screen", "pairs": [[0.1, 0.2]]}"#,
+            // no pairs
+            r#"{"kind": "screen", "dataset": "toy1"}"#,
+            r#"{"kind": "screen", "dataset": "toy1", "pairs": []}"#,
+            // malformed pairs
+            r#"{"kind": "screen", "dataset": "toy1", "pairs": [[0.1]]}"#,
+            r#"{"kind": "screen", "dataset": "toy1", "pairs": [[0.2, 0.1]]}"#,
+            r#"{"kind": "screen", "dataset": "toy1", "pairs": [[0.0, 0.1]]}"#,
+            r#"{"kind": "screen", "dataset": "toy1", "pairs": [["a", "b"]]}"#,
+            // screen jobs have no grid fields
+            r#"{"kind": "screen", "dataset": "toy1", "pairs": [[0.1, 0.2]], "points": 5}"#,
+            // bad theta
+            r#"{"kind": "screen", "dataset": "toy1", "pairs": [[0.1, 0.2]], "theta": ["x"]}"#,
+        ] {
+            assert!(parse_line(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn parse_object_rejects_nested_batch() {
+        assert!(parse_line(r#"{"batch": []}"#).is_err());
+    }
+
     #[test]
     fn serve_round_trip() {
         let mut svc = ScreeningService::new(2);
@@ -302,10 +687,40 @@ mod tests {
     }
 
     #[test]
+    fn serve_answers_in_input_order() {
+        let mut svc = ScreeningService::new(3);
+        // a heavyweight first job and featherweight later ones: with
+        // completion-order framing the cheap jobs would answer first
+        let input = br#"
+{"dataset": "toy1", "scale": 0.2, "points": 12, "tol": 1e-7, "timings": false}
+{"dataset": "toy2", "scale": 0.03, "points": 4, "tol": 1e-4, "timings": false}
+{"not json
+{"dataset": "toy3", "scale": 0.03, "points": 4, "tol": 1e-4, "timings": false}
+"#;
+        let mut out = Vec::new();
+        svc.serve(&input[..], &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4, "{text}");
+        let ds = |l: &str| {
+            parse_json(l)
+                .unwrap()
+                .get("dataset")
+                .and_then(|v| v.as_str().map(str::to_string))
+        };
+        assert_eq!(ds(lines[0]).as_deref(), Some("toy1"));
+        assert_eq!(ds(lines[1]).as_deref(), Some("toy2"));
+        assert_eq!(ds(lines[2]), None, "parse error line");
+        assert_eq!(ds(lines[3]).as_deref(), Some("toy3"));
+        svc.shutdown();
+    }
+
+    #[test]
     fn encode_response_contains_series() {
         let outcome = JobOutcome {
             id: 7,
-            result: Ok(super::super::job::JobSummary {
+            timings: true,
+            result: Ok(JobReply::Path(super::super::job::JobSummary {
                 dataset: "d".into(),
                 model: "svm".into(),
                 rule: "dvi".into(),
@@ -320,12 +735,22 @@ mod tests {
                 total_secs: 0.05,
                 total_updates: 123,
                 worst_violation: Some(1e-9),
-            }),
+            })),
         };
         let s = ScreeningService::encode_response(&outcome);
         let j = parse_json(&s).unwrap();
         assert_eq!(j.get("id").unwrap().as_int(), Some(7));
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("rejection_lo").unwrap().as_array().unwrap().len(), 2);
+        assert!(j.get("total_secs").is_some());
+
+        // timings off strips every wall-clock field
+        let mut quiet = outcome.clone();
+        quiet.timings = false;
+        let j = parse_json(&ScreeningService::encode_response(&quiet)).unwrap();
+        assert!(j.get("total_secs").is_none());
+        assert!(j.get("init_secs").is_none());
+        assert!(j.get("screen_secs").is_none());
+        assert!(j.get("mean_rejection").is_some());
     }
 }

@@ -102,6 +102,39 @@ pub fn triangle_bounds(l: usize, shards: usize) -> Vec<usize> {
     bounds
 }
 
+/// Like [`triangle_bounds`], but with a per-row weight vector: entry
+/// (i,j) of the upper triangle (j ≥ i) is assumed to cost
+/// `weights[i] + weights[j]` — the nnzᵢ+nnzⱼ cost of a CSR Gram dot — so
+/// row i's block costs `(l−i)·weights[i] + Σ_{j≥i} weights[j]`. Uniform
+/// weights degrade to an area-balanced split (up to integer-division
+/// boundary rounding vs [`triangle_bounds`]). Accumulation is u128 so
+/// huge nnz totals cannot overflow.
+pub fn weighted_triangle_bounds(weights: &[usize], shards: usize) -> Vec<usize> {
+    assert!(shards >= 1, "need at least one shard");
+    let l = weights.len();
+    let mut row_cost = vec![0u128; l];
+    let mut suffix = 0u128;
+    for i in (0..l).rev() {
+        suffix += weights[i] as u128;
+        row_cost[i] = (l - i) as u128 * weights[i] as u128 + suffix;
+    }
+    let total: u128 = row_cost.iter().sum();
+    let mut bounds = Vec::with_capacity(shards + 1);
+    bounds.push(0usize);
+    let mut acc: u128 = 0;
+    let mut i = 0usize;
+    for k in 1..shards {
+        let target = total * k as u128 / shards as u128;
+        while i < l && acc < target {
+            acc += row_cost[i];
+            i += 1;
+        }
+        bounds.push(i);
+    }
+    bounds.push(l);
+    bounds
+}
+
 /// Evaluate `f` over contiguous shards of `0..items` on scoped worker
 /// threads; results are returned in shard order. `threads` follows the
 /// crate convention (0 = auto, 1 = serial in the calling thread).
@@ -287,6 +320,58 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn weighted_triangle_bounds_cover_and_balance() {
+        // heavy head: row 0 carries 1000 nonzeros, the rest 1 each — an
+        // area split would give the row-0 shard ~1000× the work
+        let mut w = vec![1usize; 64];
+        w[0] = 1000;
+        let b = weighted_triangle_bounds(&w, 4);
+        assert_eq!(b.len(), 5);
+        assert_eq!((b[0], b[4]), (0, 64));
+        assert!(b.windows(2).all(|x| x[0] <= x[1]), "{b:?}");
+        // the heavy row must sit alone (its block cost already exceeds a
+        // quarter of the total)
+        assert_eq!(b[1], 1, "{b:?}");
+        // per-block cost within one max-row of the ideal quarter
+        let l = w.len();
+        let cost = |i: usize| (l - i) * w[i] + (i..l).map(|j| w[j]).sum::<usize>();
+        let total: usize = (0..l).map(cost).sum();
+        for k in 1..4 {
+            let area: usize = (b[k]..b[k + 1]).map(cost).sum();
+            assert!(area <= total / 4 + cost(b[k].min(l - 1)), "block {k}: {area} of {total}");
+        }
+    }
+
+    #[test]
+    fn weighted_triangle_bounds_uniform_is_area_balanced() {
+        for l in [1usize, 7, 64, 103] {
+            for shards in [1usize, 2, 4, 7] {
+                let w = vec![5usize; l];
+                let b = weighted_triangle_bounds(&w, shards);
+                assert_eq!(b.len(), shards + 1);
+                assert_eq!((b[0], b[shards]), (0, l), "l={l} shards={shards}");
+                assert!(b.windows(2).all(|x| x[0] <= x[1]), "{b:?}");
+                // uniform weights ⇒ block areas near-equal for larger l
+                if l >= 32 && shards > 1 {
+                    let total = l * (l + 1) / 2;
+                    for x in b.windows(2) {
+                        let area: usize = (x[0]..x[1]).map(|i| l - i).sum();
+                        assert!(area <= 2 * total / shards + l, "area {area} of {total}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_triangle_bounds_degenerate() {
+        assert_eq!(weighted_triangle_bounds(&[], 3), vec![0, 0, 0, 0]);
+        let b = weighted_triangle_bounds(&[0, 0, 0], 2);
+        assert_eq!((b[0], b[2]), (0, 3));
+        assert!(b.windows(2).all(|x| x[0] <= x[1]));
     }
 
     #[test]

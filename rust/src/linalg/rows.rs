@@ -13,7 +13,7 @@ use super::matrix::RowMatrix;
 
 /// Storage selection for loaded/converted datasets. `Auto` picks CSR when
 /// the density is at or below [`Storage::AUTO_DENSITY_THRESHOLD`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Storage {
     Dense,
     Csr,
@@ -85,6 +85,17 @@ impl Rows {
         match self {
             Rows::Dense(m) => m.rows() * m.cols(),
             Rows::Sparse(m) => m.nnz(),
+        }
+    }
+
+    /// Approximate buffer footprint in bytes: the full `l·n·8` payload for
+    /// dense, `nnz·(8 + 4)` values+indices plus the `(l+1)·8` indptr for
+    /// CSR. The coordinator's instance cache budgets resident entries with
+    /// this estimate.
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            Rows::Dense(m) => m.rows() * m.cols() * 8,
+            Rows::Sparse(m) => m.nnz() * (8 + 4) + (m.rows() + 1) * 8,
         }
     }
 
@@ -232,6 +243,25 @@ impl Rows {
         match self {
             Rows::Dense(m) => super::par::shard_ranges(m.rows(), shards),
             Rows::Sparse(m) => super::par::cumulative_ranges(m.indptr(), shards),
+        }
+    }
+
+    /// Row boundaries (length `shards + 1`) splitting the θ-form Gram
+    /// upper triangle into row blocks of near-equal *cost*: entry (i,j)
+    /// costs nnzᵢ + nnzⱼ, so on CSR data with uneven row lengths an
+    /// area-balanced split would still pile heavy rows onto one worker.
+    /// Dense rows all carry n nonzeros, where the cost model reduces to
+    /// plain upper-triangle area. The bounds only partition work — every
+    /// Gram entry is the same dot either way — so the built matrix is
+    /// identical for any boundary choice.
+    pub fn gram_triangle_bounds(&self, shards: usize) -> Vec<usize> {
+        match self {
+            Rows::Dense(m) => super::par::triangle_bounds(m.rows(), shards),
+            Rows::Sparse(m) => {
+                let ip = m.indptr();
+                let nnz: Vec<usize> = ip.windows(2).map(|w| w[1] - w[0]).collect();
+                super::par::weighted_triangle_bounds(&nnz, shards)
+            }
         }
     }
 }
@@ -451,6 +481,26 @@ mod tests {
                 for w in ranges.windows(2) {
                     assert_eq!(w[0].end, w[1].start);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn approx_bytes_by_storage() {
+        let (d, s) = both();
+        assert_eq!(d.approx_bytes(), 3 * 4 * 8);
+        assert_eq!(s.approx_bytes(), 6 * 12 + 4 * 8);
+    }
+
+    #[test]
+    fn gram_triangle_bounds_cover() {
+        let (d, s) = both();
+        for shards in [1usize, 2, 3] {
+            for r in [&d, &s] {
+                let b = r.gram_triangle_bounds(shards);
+                assert_eq!(b.len(), shards + 1);
+                assert_eq!((b[0], b[shards]), (0, 3));
+                assert!(b.windows(2).all(|w| w[0] <= w[1]), "{b:?}");
             }
         }
     }

@@ -23,6 +23,19 @@ impl Counter {
     }
 }
 
+/// Last-write-wins gauge (e.g. resident cache bytes).
+#[derive(Default, Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Duration histogram with exact storage (sample counts here are small —
 /// thousands of path steps, not millions of RPCs).
 #[derive(Default, Debug)]
@@ -91,12 +104,22 @@ impl Drop for Timer<'_> {
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
 impl Registry {
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
             .lock()
             .unwrap()
             .entry(name.to_string())
@@ -118,6 +141,9 @@ impl Registry {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{name} = {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{name} = {}\n", g.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!(
@@ -197,5 +223,14 @@ mod tests {
         let s = r.render();
         assert!(s.contains("jobs = 2"));
         assert!(s.contains("lat: n=1"));
+    }
+
+    #[test]
+    fn gauge_last_write_wins() {
+        let r = Registry::default();
+        r.gauge("bytes").set(100);
+        r.gauge("bytes").set(42);
+        assert_eq!(r.gauge("bytes").get(), 42);
+        assert!(r.render().contains("bytes = 42"));
     }
 }

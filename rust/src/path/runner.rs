@@ -164,13 +164,21 @@ impl PathRunner {
         self
     }
 
-    /// Run the full path on a dataset.
+    /// Run the full path on a dataset (constructs a transient instance;
+    /// servers should prefer [`Self::run_shared`] over a cached one).
     pub fn run(&mut self, ds: &Dataset) -> PathOutput {
         let inst = Instance::from_dataset(self.model, ds);
         self.run_instance(&inst)
     }
 
-    /// Run on a pre-built instance.
+    /// Run on a cache-resident instance: the runner only ever borrows, so
+    /// an `Arc<Instance>` shared across concurrent jobs is never cloned —
+    /// this is the entry point the coordinator's instance cache feeds.
+    pub fn run_shared(&mut self, inst: &std::sync::Arc<Instance>) -> PathOutput {
+        self.run_instance(inst)
+    }
+
+    /// Run on a pre-built (externally owned) instance.
     pub fn run_instance(&mut self, inst: &Instance) -> PathOutput {
         let grid = &self.cfg.grid;
         assert!(grid.len() >= 2, "need at least two grid points");
@@ -244,8 +252,7 @@ impl PathRunner {
             let report: ScreenReport = match self.rule {
                 RuleKind::None => ScreenReport::keep_all(l),
                 RuleKind::DviW => {
-                    let mid = 0.5 * (c_next + c_prev);
-                    let rad = 0.5 * (c_next - c_prev);
+                    let (mid, rad) = crate::screening::dvi::ball_params(c_prev, c_next);
                     ScreenReport::from_decisions(self.backend.scan(inst, mid, rad, &cur.u))
                 }
                 RuleKind::DviTheta => dvi_rule

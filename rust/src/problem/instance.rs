@@ -4,7 +4,7 @@ use crate::data::{Dataset, Task};
 use crate::linalg::{self, RowMatrix, Rows};
 
 /// Which special case of problem (3) to instantiate.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Model {
     /// Hinge-loss SVM, Eq. (24). Dual box [0, 1].
     Svm,
@@ -29,6 +29,16 @@ impl Model {
         match self {
             Model::Svm | Model::WeightedSvm => Task::Classification,
             Model::Lad => Task::Regression,
+        }
+    }
+
+    /// Canonical name — the token [`Model::parse`] accepts, so names
+    /// echoed in service responses round-trip into follow-up requests.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Model::Svm => "svm",
+            Model::Lad => "lad",
+            Model::WeightedSvm => "wsvm",
         }
     }
 }
@@ -129,6 +139,16 @@ impl Instance {
     #[inline]
     pub fn dim(&self) -> usize {
         self.z.cols()
+    }
+
+    /// Approximate resident size in bytes — the Z storage footprint
+    /// ([`Rows::approx_bytes`]) plus the four l-length side vectors. The
+    /// coordinator's instance cache charges entries against its byte
+    /// budget with this estimate.
+    pub fn approx_bytes(&self) -> usize {
+        self.z.approx_bytes()
+            + 8 * (self.ybar.len() + self.lo.len() + self.hi.len() + self.z_norms_sq.len())
+            + std::mem::size_of::<Instance>()
     }
 
     /// u = Zᵀθ (n-vector). w*(C) = −C·u at the optimum.
@@ -321,6 +341,25 @@ mod tests {
         assert!(inst.in_box(&theta, 1e-12));
         assert_eq!(theta[0], 0.0);
         assert_eq!(theta[2], 1.0);
+    }
+
+    #[test]
+    fn model_name_round_trips_through_parse() {
+        for m in [Model::Svm, Model::Lad, Model::WeightedSvm] {
+            assert_eq!(Model::parse(m.name()), Some(m));
+        }
+    }
+
+    #[test]
+    fn approx_bytes_tracks_storage() {
+        use crate::linalg::Storage;
+        let ds = synth::sparse_classes(8, 50, 40, 0.1);
+        let sp = Instance::from_dataset(Model::Svm, &ds);
+        let de = Instance::from_dataset(Model::Svm, &ds.clone().into_storage(Storage::Dense));
+        // dense charges the full l·n buffer; CSR only the stored entries
+        assert!(de.approx_bytes() > sp.approx_bytes());
+        assert!(de.approx_bytes() >= 50 * 40 * 8);
+        assert!(sp.approx_bytes() >= sp.z.nnz() * 12);
     }
 
     #[test]

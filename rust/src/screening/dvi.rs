@@ -54,10 +54,14 @@ impl Dvi {
     }
 
     /// θ-form with a sharded Gram build: the upper triangle is split into
-    /// contiguous row blocks of near-equal area (row i contributes l−i
-    /// entries) and computed on `std::thread::scope` workers. Every entry
-    /// is the same `⟨zᵢ, zⱼ⟩` dot the serial build evaluates, so the
-    /// matrix is identical for any thread count (0 = auto, 1 = serial).
+    /// contiguous row blocks of near-equal *cost* and computed on
+    /// `std::thread::scope` workers. Dense rows cost their area (row i
+    /// contributes l−i entries); CSR rows weight entry (i,j) by nnzᵢ+nnzⱼ
+    /// via the indptr prefix sums ([`crate::linalg::Rows::gram_triangle_bounds`]),
+    /// so a few heavy rows no longer skew the shards. Every entry is the
+    /// same `⟨zᵢ, zⱼ⟩` dot the serial build evaluates, so the matrix is
+    /// identical for any thread count (0 = auto, 1 = serial) and any
+    /// shard boundaries.
     pub fn new_theta_threads(inst: &Instance, threads: usize) -> Dvi {
         let l = inst.len();
         // the l·l product itself can overflow usize on 32-bit targets
@@ -79,7 +83,7 @@ impl Dvi {
                 }
             }
         } else {
-            let bounds = par::triangle_bounds(l, t);
+            let bounds = inst.z.gram_triangle_bounds(t);
             par::run_sharded_mut(&mut data, l, &bounds, |rows, block| {
                 let lo = rows.start;
                 for i in rows {
@@ -112,10 +116,8 @@ impl Dvi {
         theta_prev: &[f64],
         u_prev: &[f64],
     ) -> ScreenReport {
-        assert!(c_next > c_prev && c_prev > 0.0, "need C_next > C_prev > 0");
         assert_eq!(theta_prev.len(), inst.len());
-        let mid = 0.5 * (c_next + c_prev);
-        let rad = 0.5 * (c_next - c_prev);
+        let (mid, rad) = ball_params(c_prev, c_next);
         let decisions = match self.form {
             DviForm::W => self.screen_w(inst, mid, rad, u_prev),
             DviForm::Theta => self.screen_theta(inst, mid, rad, theta_prev),
@@ -143,6 +145,33 @@ impl Dvi {
         }
         out
     }
+}
+
+/// The Theorem 6 ball in (mid, rad) form — THE screening-safety mapping
+/// from a solved C_prev and a target C_next to the scan's parameters:
+/// mid = (C_next+C_prev)/2, rad = (C_next−C_prev)/2. Every screening
+/// site (the θ/w rule dispatch above, the path runner's backend scan,
+/// the coordinator's screen jobs) derives its parameters here, so the
+/// formula cannot silently diverge between them.
+#[inline]
+pub fn ball_params(c_prev: f64, c_next: f64) -> (f64, f64) {
+    assert!(c_next > c_prev && c_prev > 0.0, "need C_next > C_prev > 0");
+    (0.5 * (c_next + c_prev), 0.5 * (c_next - c_prev))
+}
+
+/// w-form screening with the sharded scan: the same `ball_params`
+/// mapping as [`Dvi::screen`], evaluated by [`dvi_scan_par`] (`threads`:
+/// 0 = auto, 1 = serial; decisions byte-identical throughout). The
+/// coordinator's screen jobs call this.
+pub fn screen_w_par(
+    inst: &Instance,
+    c_prev: f64,
+    c_next: f64,
+    u_prev: &[f64],
+    threads: usize,
+) -> ScreenReport {
+    let (mid, rad) = ball_params(c_prev, c_next);
+    ScreenReport::from_decisions(dvi_scan_par(inst, mid, rad, u_prev, threads))
 }
 
 /// The streaming DVI scan (w-form, Corollary 9): one O(l·n) pass
@@ -349,6 +378,22 @@ mod tests {
     }
 
     #[test]
+    fn screen_w_par_matches_rule_screen() {
+        let ds = synth::toy_gaussian(37, 60, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let r = solve(&inst, 0.5);
+        let u = inst.u_from_theta(&r.theta);
+        let want = Dvi::new_w().screen(&inst, 0.5, 0.8, &r.theta, &u);
+        for threads in [1usize, 3, 0] {
+            let got = screen_w_par(&inst, 0.5, 0.8, &u, threads);
+            assert_eq!(got.decisions, want.decisions, "threads={threads}");
+        }
+        let (mid, rad) = ball_params(0.5, 0.8);
+        assert_eq!(mid, 0.5 * (0.8 + 0.5));
+        assert_eq!(rad, 0.5 * (0.8 - 0.5));
+    }
+
+    #[test]
     fn par_scan_matches_serial_scan_exactly() {
         // l = 103 is prime, so no thread count divides it evenly
         let ds = synth::gaussian_classes(40, 103, 5, 1.0, 1.0, 0.5, 1.0);
@@ -400,6 +445,24 @@ mod tests {
             let a = serial.screen(&inst, 0.5, 0.8, &r.theta, &r.u);
             let b = par_rule.screen(&inst, 0.5, 0.8, &r.theta, &r.u);
             assert_eq!(a.decisions, b.decisions);
+        }
+    }
+
+    #[test]
+    fn sparse_parallel_gram_build_matches_serial() {
+        // prime l and random row lengths: the nnz-weighted triangle
+        // bounds differ from the area bounds, the built matrix must not
+        let ds = synth::sparse_classes(21, 97, 30, 0.15);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        assert!(inst.z.is_sparse());
+        let serial = Dvi::new_theta(&inst);
+        for threads in [2usize, 3, 7, 0] {
+            let par_rule = Dvi::new_theta_threads(&inst, threads);
+            assert_eq!(
+                serial.gram.as_ref().unwrap().flat(),
+                par_rule.gram.as_ref().unwrap().flat(),
+                "threads={threads}"
+            );
         }
     }
 

@@ -1,5 +1,5 @@
 //! Coordinator end-to-end: pool scheduling, service framing, failure
-//! isolation, and metrics accounting.
+//! isolation, metrics accounting, and instance-cache sharing.
 
 use dvi_screen::config::{GridConfig, RunConfig, SolverConfig};
 use dvi_screen::coordinator::{JobSpec, ScreeningService, WorkerPool};
@@ -25,7 +25,7 @@ fn pool_runs_the_paper_matrix() {
     let mut id = 0;
     for ds in ["toy1", "toy2", "toy3"] {
         for rule in ["none", "dvi", "dvi-theta", "ssnsv", "essnsv"] {
-            specs.push(JobSpec { id, run: quick(ds, "svm", rule) });
+            specs.push(JobSpec::path(id, quick(ds, "svm", rule)));
             id += 1;
         }
     }
@@ -35,20 +35,25 @@ fn pool_runs_the_paper_matrix() {
         // miniature matrix inside a (generous) iteration cap
         run.grid = GridConfig { c_min: 0.01, c_max: 1.0, points: 5 };
         run.solver.max_outer = 300_000;
-        specs.push(JobSpec { id, run });
+        specs.push(JobSpec::path(id, run));
         id += 1;
     }
     let pool = WorkerPool::new(4);
     let outcomes = pool.run_all(specs);
     assert_eq!(outcomes.len(), 18);
     for o in &outcomes {
-        let s = o.result.as_ref().unwrap_or_else(|e| panic!("job {}: {e}", o.id));
+        let r = o.result.as_ref().unwrap_or_else(|e| panic!("job {}: {e}", o.id));
+        let s = r.as_path().unwrap();
         if let Some(v) = s.worst_violation {
             assert!(v < 1e-4, "job {} violation {v}", o.id);
         }
     }
     assert_eq!(pool.metrics.counter("jobs_done").get(), 18);
     assert_eq!(pool.metrics.counter("jobs_failed").get(), 0);
+    // the matrix names 6 distinct (dataset, model) pairs at one scale and
+    // storage each — five rules per toy share a single resident instance
+    assert_eq!(pool.metrics.counter("instance_cache_misses").get(), 6);
+    assert_eq!(pool.metrics.counter("instance_cache_hits").get(), 12);
     pool.shutdown();
 }
 
@@ -89,7 +94,8 @@ fn service_reports_rejection_series_lengths() {
     .unwrap());
     let outcome = svc.recv().unwrap();
     assert_eq!(outcome.id, id);
-    let s = outcome.result.unwrap();
+    let reply = outcome.result.unwrap();
+    let s = reply.as_path().unwrap();
     assert_eq!(s.rejection_lo.len(), 7);
     assert_eq!(s.grid.len(), 7);
     assert!(s.grid.windows(2).all(|w| w[0] < w[1]));
@@ -98,18 +104,17 @@ fn service_reports_rejection_series_lengths() {
 
 #[test]
 fn pool_survives_panicking_job() {
-    // A dataset name that reaches the panicking assert inside Instance
-    // construction is hard to fabricate through the safe config path, so
-    // exercise the catch_unwind wiring via a poisoned run: points ≥ 2 with
-    // c grid degenerate triggers the runner's assert.
+    // a degenerate grid (c_min == c_max) trips the GridConfig assert
+    // inside the worker; the pool must surface it as a failed outcome and
+    // keep serving
     let mut run = quick("toy1", "svm", "dvi");
-    run.grid = GridConfig { c_min: 1.0, c_max: 1.0 + 1e-12, points: 2 };
+    run.grid = GridConfig { c_min: 1.0, c_max: 1.0, points: 2 };
     let pool = WorkerPool::new(1);
     let outcomes = pool.run_all(vec![
-        JobSpec { id: 0, run },
-        JobSpec { id: 1, run: quick("toy1", "svm", "dvi") },
+        JobSpec::path(0, run),
+        JobSpec::path(1, quick("toy1", "svm", "dvi")),
     ]);
-    // job 0 may fail (panic caught) — job 1 must still succeed
+    assert!(outcomes[0].result.is_err());
     assert!(outcomes[1].result.is_ok());
     pool.shutdown();
 }

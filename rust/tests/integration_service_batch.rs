@@ -1,0 +1,189 @@
+//! Batch protocol semantics: a batch of B requests must behave exactly
+//! like B independent single-request lines — same response objects (byte
+//! for byte with `"timings": false`), same error isolation, same θ — and
+//! must construct each named instance exactly once via the pool's
+//! resident cache, cold or warm.
+
+use dvi_screen::config::parse_json;
+use dvi_screen::config::Json;
+use dvi_screen::coordinator::ScreeningService;
+
+/// The mixed session used throughout: three path runs naming the SAME
+/// dataset (different rules), one screen job on that dataset, one job
+/// error (unknown dataset), and one parse error (bad points). All
+/// deterministic (`timings: false`).
+const ENTRIES: [&str; 6] = [
+    r#"{"dataset": "toy1", "scale": 0.05, "points": 5, "rule": "dvi", "tol": 1e-6, "timings": false}"#,
+    r#"{"dataset": "toy1", "scale": 0.05, "points": 5, "rule": "essnsv", "tol": 1e-6, "timings": false}"#,
+    r#"{"dataset": "toy1", "scale": 0.05, "points": 5, "rule": "none", "tol": 1e-6, "timings": false}"#,
+    r#"{"kind": "screen", "dataset": "toy1", "scale": 0.05, "pairs": [[0.5, 0.8], [0.8, 1.6]], "tol": 1e-6, "timings": false}"#,
+    r#"{"dataset": "no-such-set", "points": 4, "timings": false}"#,
+    r#"{"dataset": "toy1", "points": 0}"#,
+];
+
+fn batch_line() -> String {
+    format!("{{\"batch\": [{}]}}", ENTRIES.join(", "))
+}
+
+fn serve_lines(svc: &mut ScreeningService, input: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    svc.serve(input.as_bytes(), &mut out).unwrap();
+    String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
+}
+
+#[test]
+fn batch_is_byte_identical_to_singles() {
+    // session A: the entries as independent lines
+    let mut single_svc = ScreeningService::new(3);
+    let singles = serve_lines(&mut single_svc, &ENTRIES.join("\n"));
+    assert_eq!(singles.len(), ENTRIES.len());
+    single_svc.shutdown();
+
+    // session B: the same entries as one batch line
+    let mut batch_svc = ScreeningService::new(3);
+    let lines = serve_lines(&mut batch_svc, &batch_line());
+    assert_eq!(lines.len(), 1, "a batch answers with ONE response line");
+    let j = parse_json(&lines[0]).unwrap();
+    let entries = j.get("batch").unwrap().as_array().unwrap();
+    assert_eq!(entries.len(), ENTRIES.len());
+
+    // every batch entry serializes to exactly the single-request line
+    // (ids align because both sessions number jobs from 0 in input order)
+    for (i, (entry, single)) in entries.iter().zip(&singles).enumerate() {
+        assert_eq!(&entry.to_string(), single, "entry {i} diverged");
+    }
+
+    // per-entry error isolation: 4 ok, 2 errors, in place
+    let oks: Vec<bool> = entries
+        .iter()
+        .map(|e| e.get("ok").unwrap().as_bool().unwrap())
+        .collect();
+    assert_eq!(oks, vec![true, true, true, true, false, false]);
+
+    // acceptance: B requests naming one dataset constructed the instance
+    // exactly once (1 miss), everyone else hit
+    let m = batch_svc.metrics();
+    assert_eq!(m.counter("instance_cache_misses").get(), 1);
+    assert_eq!(m.counter("instance_cache_hits").get(), 3);
+    assert_eq!(batch_svc.cache().len(), 1);
+    batch_svc.shutdown();
+}
+
+#[test]
+fn batch_cold_then_warm_is_identical() {
+    // the same batch twice through ONE service: the first run builds the
+    // instance (cold), the second hits the cache (warm) — responses other
+    // than ids must be identical, proving residency changes nothing
+    let mut svc = ScreeningService::new(2);
+    let input = format!("{}\n{}\n", batch_line(), batch_line());
+    let lines = serve_lines(&mut svc, &input);
+    assert_eq!(lines.len(), 2);
+
+    let strip_ids = |line: &str| -> Vec<String> {
+        let j = parse_json(line).unwrap();
+        j.get("batch")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|e| match e {
+                Json::Object(o) => {
+                    let mut o = o.clone();
+                    o.remove("id");
+                    Json::Object(o).to_string()
+                }
+                other => other.to_string(),
+            })
+            .collect()
+    };
+    assert_eq!(strip_ids(&lines[0]), strip_ids(&lines[1]));
+
+    // both batches' submitted jobs share one construction; the service
+    // interleaves the two batches' jobs on the pool, so cold/warm split
+    // is scheduling-dependent — but the total is exact
+    let m = svc.metrics();
+    assert_eq!(m.counter("instance_cache_misses").get(), 1);
+    assert_eq!(m.counter("instance_cache_hits").get(), 7);
+    svc.shutdown();
+}
+
+#[test]
+fn screen_theta_round_trips_through_the_wire() {
+    // ask a screen job for its anchor θ, feed it back as the supplied
+    // warm start: the second job must pay zero solves and reproduce the
+    // first job's decisions exactly
+    let mut svc = ScreeningService::new(1);
+    let first = serve_lines(
+        &mut svc,
+        r#"{"kind": "screen", "dataset": "toy2", "scale": 0.05, "pairs": [[0.5, 0.9]], "tol": 1e-6, "return_theta": true, "timings": false}"#,
+    );
+    let j = parse_json(&first[0]).unwrap();
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(j.get("anchor_solves").unwrap().as_int(), Some(1));
+    assert_eq!(j.get("theta_c").unwrap().as_float(), Some(0.5));
+    let theta = j.get("theta").unwrap();
+    let pairs_out = j.get("pairs").unwrap().to_string();
+
+    let req2 = format!(
+        r#"{{"kind": "screen", "dataset": "toy2", "scale": 0.05, "pairs": [[0.5, 0.9]], "tol": 1e-6, "theta": {}, "timings": false}}"#,
+        theta.to_string()
+    );
+    let second = serve_lines(&mut svc, &req2);
+    let j2 = parse_json(&second[0]).unwrap();
+    assert_eq!(j2.get("ok").unwrap().as_bool(), Some(true), "{second:?}");
+    assert_eq!(j2.get("anchor_solves").unwrap().as_int(), Some(0), "supplied θ skips the solve");
+    assert_eq!(j2.get("pairs").unwrap().to_string(), pairs_out);
+    svc.shutdown();
+}
+
+#[test]
+fn screen_batch_amortizes_one_instance_over_many_scans() {
+    // a batch of screen jobs with distinct pairs against one dataset:
+    // exactly one construction, every job otherwise scan-only
+    let entries: Vec<String> = (0..5)
+        .map(|k| {
+            let c0 = 0.2 + 0.1 * k as f64;
+            format!(
+                r#"{{"kind": "screen", "dataset": "toy1", "scale": 0.05, "pairs": [[{c0}, {}]], "tol": 1e-5, "timings": false}}"#,
+                c0 + 0.3
+            )
+        })
+        .collect();
+    let mut svc = ScreeningService::new(4);
+    let lines = serve_lines(&mut svc, &format!("{{\"batch\": [{}]}}", entries.join(", ")));
+    let j = parse_json(&lines[0]).unwrap();
+    let arr = j.get("batch").unwrap().as_array().unwrap();
+    assert_eq!(arr.len(), 5);
+    for e in arr {
+        assert_eq!(e.get("ok").unwrap().as_bool(), Some(true), "{e:?}");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.counter("instance_cache_misses").get(), 1);
+    assert_eq!(m.counter("instance_cache_hits").get(), 4);
+    svc.shutdown();
+}
+
+#[test]
+fn malformed_batch_lines_answer_as_errors() {
+    let mut svc = ScreeningService::new(1);
+    let input = r#"
+{"batch": "not an array"}
+{"batch": [], "extra": 1}
+{"batch": []}
+{"batch": [{"batch": []}]}
+"#;
+    let lines = serve_lines(&mut svc, input);
+    assert_eq!(lines.len(), 4);
+    let j0 = parse_json(&lines[0]).unwrap();
+    assert_eq!(j0.get("ok").unwrap().as_bool(), Some(false));
+    let j1 = parse_json(&lines[1]).unwrap();
+    assert_eq!(j1.get("ok").unwrap().as_bool(), Some(false));
+    // an empty batch is a legal no-op
+    let j2 = parse_json(&lines[2]).unwrap();
+    assert_eq!(j2.get("batch").unwrap().as_array().unwrap().len(), 0);
+    // nesting is rejected per entry, inside the batch envelope
+    let j3 = parse_json(&lines[3]).unwrap();
+    let inner = &j3.get("batch").unwrap().as_array().unwrap()[0];
+    assert_eq!(inner.get("ok").unwrap().as_bool(), Some(false));
+    svc.shutdown();
+}

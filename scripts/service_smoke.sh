@@ -1,0 +1,84 @@
+#!/usr/bin/env bash
+# Service smoke test: pipe a scripted batch session through `dvi serve`
+# and hold the responses to the protocol's defining invariants:
+#
+#   1. determinism  — the same session served twice yields byte-identical
+#                     output (responses use "timings": false);
+#   2. batch ≡ singles — the {"batch": [...]} response contains exactly
+#                     the objects the same requests produce as
+#                     independent lines (checked with python3 when
+#                     available);
+#   3. golden diff  — if examples/service_smoke.golden exists, the batch
+#                     session's output must match it byte for byte.
+#                     Regenerate with `scripts/service_smoke.sh --bless`
+#                     after an intentional protocol change.
+#
+# The screening_service example runs last as an end-to-end sanity check
+# (it asserts its own expectations internally).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+GOLDEN=examples/service_smoke.golden
+WORK=$(mktemp -d)
+trap 'rm -rf "$WORK"' EXIT
+
+cargo build --release --quiet
+BIN=target/release/dvi
+
+# The scripted session: three same-dataset path runs (one construction —
+# the cache test), a screen job, a job error, and a parse error. All
+# deterministic.
+cat > "$WORK/singles.jsonl" <<'EOF'
+{"dataset": "toy1", "scale": 0.05, "points": 5, "rule": "dvi", "tol": 1e-6, "timings": false}
+{"dataset": "toy1", "scale": 0.05, "points": 5, "rule": "essnsv", "tol": 1e-6, "timings": false}
+{"dataset": "toy1", "scale": 0.05, "points": 5, "rule": "none", "tol": 1e-6, "timings": false}
+{"kind": "screen", "dataset": "toy1", "scale": 0.05, "pairs": [[0.5, 0.8], [0.8, 1.6]], "tol": 1e-6, "timings": false}
+{"dataset": "no-such-set", "points": 4, "timings": false}
+{"dataset": "toy1", "points": 0}
+EOF
+# the same six requests as one batch line
+awk 'BEGIN{printf "{\"batch\": ["} {printf "%s%s", (NR>1?", ":""), $0} END{print "]}"}' \
+  "$WORK/singles.jsonl" > "$WORK/batch.jsonl"
+
+run_serve() { "$BIN" serve --workers 3 < "$1" 2> "$WORK/metrics.$2"; }
+
+run_serve "$WORK/batch.jsonl"   batch1 > "$WORK/out.batch1"
+run_serve "$WORK/batch.jsonl"   batch2 > "$WORK/out.batch2"
+run_serve "$WORK/singles.jsonl" single > "$WORK/out.singles"
+
+echo "== determinism: identical sessions must serve identical bytes"
+diff "$WORK/out.batch1" "$WORK/out.batch2"
+
+echo "== cache: the batch names one dataset -> exactly one construction"
+grep -q "^instance_cache_misses = 1$" "$WORK/metrics.batch1" || {
+  echo "expected instance_cache_misses = 1:"; cat "$WORK/metrics.batch1"; exit 1; }
+
+echo "== batch entries must equal the independent single-line responses"
+if command -v python3 > /dev/null; then
+  python3 - "$WORK/out.batch1" "$WORK/out.singles" <<'EOF'
+import json, sys
+batch = json.load(open(sys.argv[1]))["batch"]
+singles = [json.loads(l) for l in open(sys.argv[2]) if l.strip()]
+assert len(batch) == len(singles), (len(batch), len(singles))
+for i, (b, s) in enumerate(zip(batch, singles)):
+    assert b == s, f"entry {i} diverged:\n batch: {b}\n single: {s}"
+print(f"   {len(batch)} entries identical")
+EOF
+else
+  echo "   (python3 unavailable; skipping structural comparison)"
+fi
+
+if [[ "${1:-}" == "--bless" ]]; then
+  cp "$WORK/out.batch1" "$GOLDEN"
+  echo "== blessed $GOLDEN"
+elif [[ -f "$GOLDEN" ]]; then
+  echo "== golden diff"
+  diff "$GOLDEN" "$WORK/out.batch1"
+else
+  echo "== no $GOLDEN committed yet; run with --bless to create it"
+fi
+
+echo "== screening_service example"
+cargo run --release --quiet --example screening_service > /dev/null
+
+echo "service smoke: OK"
