@@ -154,6 +154,54 @@ fn main() {
         }
     }
 
+    // ---- predict throughput -----------------------------------------------
+    // The model-artifact serving series: batch ∈ {1, 64, 4096} rows,
+    // dense vs CSR input, full-w vs support-only scoring. Scores are
+    // bit-identical across all four cells; the series shows the
+    // per-request floor (batch 1), the amortized rate (batch 4096), the
+    // CSR bandwidth win, and that support-only's one-time w
+    // reconstruction is noise once the batch is non-trivial.
+    {
+        use dvi_screen::linalg::Storage;
+        use dvi_screen::model::{PredictOptions, TrainedModel};
+        println!("\n# predict throughput: batch size x storage x scoring path");
+        for (storage, density, tag) in
+            [(Storage::Dense, 1.0f64, "dense"), (Storage::Csr, 0.05, "csr")]
+        {
+            let (l, n) = (20_000usize, 100usize);
+            let ds = if storage == Storage::Csr {
+                synth::sparse_classes(0xBEEF, l, n, density)
+            } else {
+                synth::gaussian_classes(0xBEEF, l, n, 1.0, 1.0, 0.5, 1.0)
+            };
+            let inst = Instance::from_dataset(Model::Svm, &ds);
+            let solver = CdSolver::new(SolverConfig { tol: 1e-5, ..Default::default() });
+            let r = solver.solve(&inst, 0.5, inst.cold_start());
+            let tm = TrainedModel::from_solution(&inst, "bench", 1.0, 0.5, 1e-5, &r.theta);
+            println!(
+                "model[{tag}]: l={l} n={n} support={} active={}",
+                tm.support.len(),
+                tm.active.len()
+            );
+            for batch in [1usize, 64, 4096] {
+                let idx: Vec<usize> = (0..batch).map(|k| k % l).collect();
+                let rows = ds.x.select_rows(&idx);
+                let bytes = (rows.nnz() * if storage == Storage::Csr { 12 } else { 8 }) as f64;
+                for (path, support_only) in [("full-w", false), ("support", true)] {
+                    let opts = PredictOptions { threads: 1, support_only };
+                    let s = bench(&format!("predict_{tag}_b{batch}_{path}"), 3, 0.2, || {
+                        dvi_screen::model::scores(&tm, &rows, &opts).unwrap().len()
+                    });
+                    println!(
+                        "    -> {:.1} Mrow/s, {:.2} GB/s effective",
+                        batch as f64 / s.min_s / 1e6,
+                        bytes / s.min_s / 1e9
+                    );
+                }
+            }
+        }
+    }
+
     // ---- PJRT scan -------------------------------------------------------
     match dvi_screen::runtime::PjrtScreener::from_default_dir() {
         Ok(mut screener) => {

@@ -20,20 +20,45 @@ USAGE:
            [--scale S] [--points N] [--tol F] [--out DIR] [--threads N] [--pjrt]
   dvi cv   [--dataset NAME] [--model svm|lad] [--folds K] [--scale S]
            [--points N] [--rule dvi|none]     cross-validated C selection
-  dvi serve [--workers N] [--cache-mb MB]   line-JSON requests on stdin
+  dvi train [--dataset NAME] [--model svm|lad|wsvm] --c F [--scale S]
+           [--tol F] [--threads N] [--storage dense|csr|auto] [--out FILE]
+  dvi predict --model FILE --dataset NAME [--scale S] [--storage ...]
+           [--threads N] [--support-only] [--out FILE]
+  dvi serve [--workers N] [--cache-mb MB] [--model-cache-mb MB]
+           [--preload ds1,ds2 [--preload-scale S]]
+           line-JSON requests on stdin
   dvi gen-data --dataset NAME --out FILE [--scale S]
   dvi info                           runtime + artifact status
   dvi help
 
 SERVE:
   The service reads one JSON request per line and answers one JSON line
-  per request, in input order. Three request shapes: a path run (the
-  default), {"kind": "screen", ...} for batch DVI screening of
-  (c_prev, c) pairs against one resident instance, and {"batch": [...]}
-  to fan a list of either across the pool and get one ordered response
-  line back. Instances are cached in an LRU keyed by
-  (dataset, model, storage, scale); --cache-mb sets its byte budget
-  (default 256, 0 disables). See README.md § Screening service.
+  per request, in input order. Request shapes: a path run (the default),
+  {"kind": "screen", ...} for batch DVI screening of (c_prev, c) pairs
+  against one resident instance, {"kind": "train", ...} /
+  {"kind": "predict", ...} for the model-artifact loop,
+  {"kind": "cache", ...} to list/evict resident cache entries, and
+  {"batch": [...]} to fan a list of any of these across the pool and get
+  one ordered response line back. Instances are cached in an LRU keyed
+  by (dataset, model, storage, scale); --cache-mb sets its byte budget
+  (default 256, 0 disables) and --model-cache-mb the trained-model
+  cache's (default 64). --preload builds the named registry datasets
+  into the instance cache before serving (at --preload-scale, default
+  1.0), logging per-dataset build time. See README.md.
+
+MODEL:
+  `dvi train` solves one (dataset, model, C) problem and writes a
+  versioned `.pallas-model` artifact (--out): magic + header + w +
+  support set + the θ-form active rows + checksum; save -> load
+  round-trips bit-identically and corrupt files are rejected. `dvi
+  predict` scores a registry dataset (or `file:<path>` libsvm rows)
+  against an artifact, one score per line, byte-identical for any
+  --threads and --storage; --support-only scores via w re-derived from
+  the stored active rows (bit-identical to the stored w). The serve
+  kinds "train"/"predict" expose the same loop as a service: train
+  responses carry a deterministic model_id that predict requests can
+  address while the model is resident, or use "model_file" to load an
+  artifact from disk.
 
 STORAGE:
   --storage picks the instance-matrix layout: `dense` (row-major buffer),
@@ -58,7 +83,7 @@ fn parse_flags(args: &[String]) -> Result<(Vec<String>, BTreeMap<String, String>
         let a = &args[i];
         if let Some(key) = a.strip_prefix("--") {
             // boolean flags
-            if matches!(key, "validate" | "pjrt" | "help") {
+            if matches!(key, "validate" | "pjrt" | "help" | "support-only") {
                 flags.insert(key.to_string(), "true".to_string());
                 i += 1;
                 continue;
@@ -115,6 +140,8 @@ fn run(args: &[String]) -> Result<(), String> {
         "path" => cmd_path(rest),
         "cv" => cmd_cv(rest),
         "experiment" => cmd_experiment(rest),
+        "train" => cmd_train(rest),
+        "predict" => cmd_predict(rest),
         "serve" => cmd_serve(rest),
         "gen-data" => cmd_gen_data(rest),
         "info" => cmd_info(),
@@ -227,12 +254,141 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_train(args: &[String]) -> Result<(), String> {
+    use crate::coordinator::{JobSpec, TrainSpec};
+    use crate::linalg::Storage;
+    use crate::problem::Model;
+    let (_, flags) = parse_flags(args)?;
+    let c = get_f64(&flags, "c", f64::NAN)?;
+    if c.is_nan() {
+        return Err("--c is required (the C to solve at)".into());
+    }
+    // same validity envelope as the service's train parser: a bad value
+    // must not be baked into an artifact (and its id) with exit code 0
+    if !(c.is_finite() && c > 0.0) {
+        return Err(format!("--c must be finite and > 0, got {c}"));
+    }
+    let scale = get_f64(&flags, "scale", 1.0)?;
+    if !(scale > 0.0 && scale <= 1.0) {
+        return Err(format!("--scale must be in (0, 1], got {scale}"));
+    }
+    let tol = get_f64(&flags, "tol", 1e-6)?;
+    if !(tol.is_finite() && tol > 0.0) {
+        return Err(format!("--tol must be finite and > 0, got {tol}"));
+    }
+    let spec = TrainSpec {
+        dataset: flags.get("dataset").cloned().unwrap_or_else(|| "toy1".into()),
+        model: Model::parse(flags.get("model").map(String::as_str).unwrap_or("svm"))
+            .ok_or("bad --model (svm | lad | wsvm)")?,
+        scale,
+        storage: Storage::parse(flags.get("storage").map(String::as_str).unwrap_or("auto"))
+            .ok_or("bad --storage (dense | csr | auto)")?,
+        c,
+        solver: crate::config::SolverConfig {
+            tol,
+            threads: get_usize(&flags, "threads", 1)?,
+            ..Default::default()
+        },
+        save: flags.get("out").cloned(),
+    };
+    let outcome = crate::coordinator::run_job(&JobSpec::train(0, spec));
+    let reply = outcome.result?;
+    let s = reply.as_train().expect("train jobs return train summaries");
+    println!(
+        "trained {} (model={} dataset={} C={} storage={})",
+        s.model_id,
+        s.model.wire_name(),
+        s.dataset,
+        s.c,
+        s.storage.name()
+    );
+    println!(
+        "l={} n={}  support={} ({:.1}%)  active={}  artifact {} bytes  solve {:.3}s",
+        s.l,
+        s.n,
+        s.support,
+        100.0 * s.support as f64 / s.l.max(1) as f64,
+        s.active,
+        s.artifact_bytes,
+        s.solve_secs
+    );
+    match &s.saved {
+        Some(p) => println!("saved {p}"),
+        None => println!("(not persisted — pass --out FILE to write the artifact)"),
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &[String]) -> Result<(), String> {
+    use crate::coordinator::{JobSpec, ModelRef, PredictInput, PredictSpec};
+    use crate::linalg::Storage;
+    let (_, flags) = parse_flags(args)?;
+    let model_file = flags.get("model").cloned().ok_or("--model FILE is required")?;
+    let dataset = flags
+        .get("dataset")
+        .cloned()
+        .ok_or("--dataset NAME is required (registry name or file:<path>)")?;
+    let scale = get_f64(&flags, "scale", 1.0)?;
+    if !(scale > 0.0 && scale <= 1.0) {
+        return Err(format!("--scale must be in (0, 1], got {scale}"));
+    }
+    let spec = PredictSpec {
+        model: ModelRef::File(model_file),
+        input: PredictInput::Dataset {
+            name: dataset,
+            scale,
+            storage: Storage::parse(flags.get("storage").map(String::as_str).unwrap_or("auto"))
+                .ok_or("bad --storage (dense | csr | auto)")?,
+        },
+        threads: get_usize(&flags, "threads", 1)?,
+        support_only: flags.contains_key("support-only"),
+    };
+    let outcome = crate::coordinator::run_job(&JobSpec::predict(0, spec));
+    let reply = outcome.result?;
+    let s = reply.as_predict().expect("predict jobs return predict summaries");
+    // one score per line, formatted exactly like the service's JSON
+    // floats, so CLI output and service `scores` entries are directly
+    // comparable byte for byte
+    let mut text = String::with_capacity(s.scores.len() * 24);
+    for &v in &s.scores {
+        text.push_str(&crate::config::Json::Float(v).to_string());
+        text.push('\n');
+    }
+    match flags.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text).map_err(|e| format!("write {path}: {e}"))?;
+            eprintln!("wrote {} scores to {path} (model {})", s.rows, s.model_id);
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &[String]) -> Result<(), String> {
     let (_, flags) = parse_flags(args)?;
     let workers = get_usize(&flags, "workers", 2)?;
     // instance-cache budget in MiB; 0 disables residency entirely
     let cache_mb = get_usize(&flags, "cache-mb", 256)?;
-    let mut svc = ScreeningService::with_cache(workers, cache_mb.saturating_mul(1024 * 1024));
+    // trained-model cache budget in MiB
+    let model_cache_mb = get_usize(&flags, "model-cache-mb", 64)?;
+    let mut svc = ScreeningService::with_caches(
+        workers,
+        cache_mb.saturating_mul(1024 * 1024),
+        model_cache_mb.saturating_mul(1024 * 1024),
+    );
+    if let Some(list) = flags.get("preload") {
+        let scale = get_f64(&flags, "preload-scale", 1.0)?;
+        let names: Vec<&str> = list.split(',').collect();
+        for (name, result) in svc.preload(&names, scale) {
+            match result {
+                Ok((model, secs, bytes)) => eprintln!(
+                    "[serve] preloaded {name} ({}, scale {scale}) in {secs:.3}s ({bytes} bytes)",
+                    model.wire_name()
+                ),
+                Err(e) => eprintln!("[serve] preload {name} failed: {e}"),
+            }
+        }
+    }
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     svc.serve(stdin.lock(), stdout.lock()).map_err(|e| e.to_string())?;
@@ -339,6 +495,80 @@ mod tests {
             .map(|s| s.to_string())
             .collect();
         assert_eq!(dispatch(&bad), 1);
+    }
+
+    #[test]
+    fn cmd_train_then_predict_roundtrip() {
+        let pid = std::process::id();
+        let mut model = std::env::temp_dir();
+        model.push(format!("dvi_cli_train_{pid}.pallas-model"));
+        let mut scores_a = std::env::temp_dir();
+        scores_a.push(format!("dvi_cli_scores_a_{pid}.txt"));
+        let mut scores_b = std::env::temp_dir();
+        scores_b.push(format!("dvi_cli_scores_b_{pid}.txt"));
+
+        let train: Vec<String> = [
+            "train", "--dataset", "toy1", "--scale", "0.03", "--c", "0.5", "--tol", "1e-6",
+            "--out", model.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&train), 0);
+        assert!(model.exists());
+
+        let predict = |support_only: bool, threads: &str, out: &std::path::Path| {
+            let mut args: Vec<String> = [
+                "predict", "--model", model.to_str().unwrap(), "--dataset", "toy1",
+                "--scale", "0.03", "--threads", threads, "--out", out.to_str().unwrap(),
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+            if support_only {
+                args.push("--support-only".into());
+            }
+            assert_eq!(dispatch(&args), 0);
+        };
+        predict(false, "1", &scores_a);
+        predict(true, "3", &scores_b);
+        let a = std::fs::read_to_string(&scores_a).unwrap();
+        let b = std::fs::read_to_string(&scores_b).unwrap();
+        assert_eq!(a, b, "support-only and threaded scoring are byte-identical");
+        assert_eq!(a.lines().count(), 60, "one score per toy1 row at scale 0.03");
+        assert!(a.lines().all(|l| l.parse::<f64>().is_ok()), "{a}");
+
+        for p in [&model, &scores_a, &scores_b] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn cmd_train_and_predict_reject_bad_flags() {
+        // train without --c
+        let args: Vec<String> =
+            ["train", "--dataset", "toy1"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(dispatch(&args), 1);
+        // out-of-envelope values error instead of training junk
+        for bad in [
+            vec!["train", "--dataset", "toy1", "--c", "-1"],
+            vec!["train", "--dataset", "toy1", "--c", "0.5", "--tol", "-1e-6"],
+            vec!["train", "--dataset", "toy1", "--c", "0.5", "--tol", "0"],
+            vec!["train", "--dataset", "toy1", "--c", "0.5", "--scale", "5.0"],
+        ] {
+            let args: Vec<String> = bad.iter().map(|s| s.to_string()).collect();
+            assert_eq!(dispatch(&args), 1, "{bad:?}");
+        }
+        // predict without a model file
+        let args: Vec<String> =
+            ["predict", "--dataset", "toy1"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(dispatch(&args), 1);
+        // predict against a missing artifact
+        let args: Vec<String> = ["predict", "--model", "/no/such.pallas-model", "--dataset", "toy1"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(dispatch(&args), 1);
     }
 
     #[test]

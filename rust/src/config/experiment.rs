@@ -239,8 +239,10 @@ impl RunConfig {
         if !(self.scale > 0.0 && self.scale <= 1.0) {
             return bad("scale must be in (0, 1]".into());
         }
-        if self.solver.tol <= 0.0 {
-            return bad("solver.tol must be positive".into());
+        if !(self.solver.tol.is_finite() && self.solver.tol > 0.0) {
+            // an infinite tol (e.g. a JSON/TOML `1e400` overflowing to
+            // inf) would make any solve "converge" instantly
+            return bad("solver.tol must be finite and positive".into());
         }
         Ok(())
     }

@@ -36,8 +36,10 @@
 use crate::data::registry;
 use crate::linalg::Storage;
 use crate::metrics::Registry;
+use crate::model::{format, TrainedModel};
 use crate::problem::{Instance, Model};
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 /// Everything [`Instance`] construction depends on. `scale` participates
@@ -75,6 +77,20 @@ struct Entry {
     /// [`Instance::approx_bytes`] once built; 0 while building (unbuilt
     /// entries are never evicted — they hold no bytes yet).
     bytes: usize,
+    /// Resident-hit count (the `"kind": "cache"` introspection surface).
+    hits: u64,
+}
+
+/// One resident instance entry, as reported by the `"kind": "cache"`
+/// introspection request.
+#[derive(Clone, Debug)]
+pub struct InstanceEntryInfo {
+    pub dataset: String,
+    pub model: Model,
+    pub storage: Storage,
+    pub scale: f64,
+    pub bytes: usize,
+    pub hits: u64,
 }
 
 struct CacheState {
@@ -107,6 +123,11 @@ impl InstanceCache {
                 resident_bytes: 0,
             }),
         }
+    }
+
+    /// Configured byte budget (0 = residency disabled).
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
     }
 
     /// Number of resident (built) entries.
@@ -152,13 +173,24 @@ impl InstanceCache {
             match st.entries.get_mut(key) {
                 Some(e) => {
                     e.last_used = tick;
+                    // resident-hit bookkeeping rides the lock we already
+                    // hold: bytes > 0 means built, so this touch WILL hit
+                    // on the slot below. (Waiters that arrive mid-build —
+                    // bytes still 0 — count a metrics hit once the slot
+                    // yields but not an entry hit; the introspection
+                    // counter may undercount by those rare waiters, which
+                    // is the price of not re-taking the global lock on
+                    // the hot hit path.)
+                    if e.bytes > 0 {
+                        e.hits += 1;
+                    }
                     e.slot.clone()
                 }
                 None => {
                     let slot = Arc::new(Slot { built: Mutex::new(None) });
                     st.entries.insert(
                         key.clone(),
-                        Entry { slot: slot.clone(), last_used: tick, bytes: 0 },
+                        Entry { slot: slot.clone(), last_used: tick, bytes: 0, hits: 0 },
                     );
                     slot
                 }
@@ -234,6 +266,54 @@ impl InstanceCache {
             }
         }
     }
+
+    /// Snapshot of the resident (built) entries, deterministically sorted
+    /// by key — the `"kind": "cache"` list surface.
+    pub fn snapshot(&self) -> Vec<InstanceEntryInfo> {
+        let st = self.state.lock().unwrap();
+        let mut out: Vec<InstanceEntryInfo> = st
+            .entries
+            .iter()
+            .filter(|(_, e)| e.bytes > 0)
+            .map(|(k, e)| InstanceEntryInfo {
+                dataset: k.dataset.clone(),
+                model: k.model,
+                storage: k.storage,
+                scale: k.scale(),
+                bytes: e.bytes,
+                hits: e.hits,
+            })
+            .collect();
+        out.sort_by(|a, b| {
+            (&a.dataset, a.model.name(), a.storage.name(), a.scale.to_bits()).cmp(&(
+                &b.dataset,
+                b.model.name(),
+                b.storage.name(),
+                b.scale.to_bits(),
+            ))
+        });
+        out
+    }
+
+    /// Explicitly evict one built entry (the `"kind": "cache"` evict
+    /// surface). Returns whether an entry was removed; entries still
+    /// building are left alone (their builder will charge them, and a
+    /// follow-up evict can then remove them).
+    pub fn evict_key(&self, key: &CacheKey, metrics: &Registry) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let evictable = st.entries.get(key).map_or(false, |e| e.bytes > 0);
+        if !evictable {
+            return false;
+        }
+        let e = st.entries.remove(key).expect("checked above");
+        st.resident_bytes -= e.bytes;
+        metrics.counter("instance_cache_evictions").inc();
+        metrics.gauge("instance_cache_bytes").set(st.resident_bytes as u64);
+        metrics
+            .gauge("instance_cache_entries")
+            .set(st.entries.values().filter(|e| e.bytes > 0).count() as u64);
+        true
+    }
 }
 
 /// Resolve the dataset and build the instance — the single construction
@@ -256,6 +336,187 @@ fn build_instance(key: &CacheKey) -> Result<Instance, String> {
         ));
     }
     Ok(Instance::from_dataset(key.model, &ds))
+}
+
+struct ModelEntry {
+    model: Arc<TrainedModel>,
+    last_used: u64,
+    bytes: usize,
+    hits: u64,
+}
+
+struct ModelState {
+    entries: HashMap<String, ModelEntry>,
+    tick: u64,
+    resident_bytes: usize,
+}
+
+/// One resident model entry, as reported by `"kind": "cache"`.
+#[derive(Clone, Debug)]
+pub struct ModelEntryInfo {
+    pub id: String,
+    pub bytes: usize,
+    pub hits: u64,
+}
+
+/// Resident cache of [`TrainedModel`]s keyed by their deterministic id —
+/// the instance cache's sibling on the serving side of the train →
+/// predict loop. Same shape: LRU under a byte budget
+/// ([`TrainedModel::approx_bytes`] per entry, the just-inserted entry
+/// exempt from its own eviction pass), `model_cache_{hits,misses,loads,
+/// evictions,errors}` counters plus `model_cache_{bytes,entries}` gauges,
+/// zero budget disables residency. Unlike instances, models enter by
+/// *insertion* (a train job) or by *loading* an artifact file — there is
+/// no per-key build slot because neither path has the instance cache's
+/// expensive-concurrent-rebuild problem: inserts are cheap, and a rare
+/// duplicate concurrent file load is just a second read. The LRU core
+/// deliberately mirrors [`InstanceCache`]'s rather than sharing a
+/// generic with it (ROADMAP: model artifact follow-ons) — keep the two
+/// eviction loops in sync when touching either.
+pub struct ModelCache {
+    budget_bytes: usize,
+    state: Mutex<ModelState>,
+}
+
+impl ModelCache {
+    /// Default byte budget (models are far smaller than instances: w plus
+    /// the active rows).
+    pub const DEFAULT_BUDGET_BYTES: usize = 64 * 1024 * 1024;
+
+    /// `budget_bytes = 0` disables residency: inserts are dropped and
+    /// every file reference loads transiently.
+    pub fn new(budget_bytes: usize) -> ModelCache {
+        ModelCache {
+            budget_bytes,
+            state: Mutex::new(ModelState {
+                entries: HashMap::new(),
+                tick: 0,
+                resident_bytes: 0,
+            }),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.state.lock().unwrap().resident_bytes
+    }
+
+    /// Insert (or refresh) a model under its deterministic id; returns
+    /// the id. Then evicts LRU entries until the budget fits again — the
+    /// entry just inserted is exempt from its own pass, mirroring
+    /// [`InstanceCache`].
+    pub fn insert(&self, model: Arc<TrainedModel>, metrics: &Registry) -> String {
+        let id = model.id();
+        if self.budget_bytes == 0 {
+            return id;
+        }
+        let bytes = model.approx_bytes();
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        // a refresh (re-train, predict-by-file reload) keeps the entry's
+        // hit history — ids are content digests, so same id ⇒ same model
+        let mut hits = 0;
+        if let Some(old) = st.entries.remove(&id) {
+            st.resident_bytes -= old.bytes;
+            hits = old.hits;
+        }
+        st.resident_bytes += bytes;
+        st.entries.insert(id.clone(), ModelEntry { model, last_used: tick, bytes, hits });
+        while st.resident_bytes > self.budget_bytes {
+            let victim = st
+                .entries
+                .iter()
+                .filter(|(k, _)| *k != &id)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some(e) = st.entries.remove(&k) {
+                        st.resident_bytes -= e.bytes;
+                        metrics.counter("model_cache_evictions").inc();
+                    }
+                }
+                None => break, // only the fresh entry remains; keep it
+            }
+        }
+        metrics.gauge("model_cache_bytes").set(st.resident_bytes as u64);
+        metrics.gauge("model_cache_entries").set(st.entries.len() as u64);
+        id
+    }
+
+    /// Fetch a resident model by id (hit/miss counted).
+    pub fn get(&self, id: &str, metrics: &Registry) -> Option<Arc<TrainedModel>> {
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        match st.entries.get_mut(id) {
+            Some(e) => {
+                e.last_used = tick;
+                e.hits += 1;
+                metrics.counter("model_cache_hits").inc();
+                Some(e.model.clone())
+            }
+            None => {
+                metrics.counter("model_cache_misses").inc();
+                None
+            }
+        }
+    }
+
+    /// Load a `.pallas-model` artifact from disk and make it resident
+    /// (every call reads the file — `model_cache_loads` counts them; a
+    /// client that wants the cached path should address the model by the
+    /// id a train/load response reported). Load failures count
+    /// `model_cache_errors` and are never cached.
+    pub fn get_or_load(&self, path: &Path, metrics: &Registry) -> Result<Arc<TrainedModel>, String> {
+        match format::load(path) {
+            Ok(m) => {
+                metrics.counter("model_cache_loads").inc();
+                let m = Arc::new(m);
+                self.insert(m.clone(), metrics);
+                Ok(m)
+            }
+            Err(e) => {
+                metrics.counter("model_cache_errors").inc();
+                Err(format!("load {}: {e}", path.display()))
+            }
+        }
+    }
+
+    /// Explicitly evict one model (the `"kind": "cache"` evict surface).
+    pub fn evict(&self, id: &str, metrics: &Registry) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match st.entries.remove(id) {
+            Some(e) => {
+                st.resident_bytes -= e.bytes;
+                metrics.counter("model_cache_evictions").inc();
+                metrics.gauge("model_cache_bytes").set(st.resident_bytes as u64);
+                metrics.gauge("model_cache_entries").set(st.entries.len() as u64);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Snapshot of resident models, sorted by id.
+    pub fn snapshot(&self) -> Vec<ModelEntryInfo> {
+        let st = self.state.lock().unwrap();
+        let mut out: Vec<ModelEntryInfo> = st
+            .entries
+            .iter()
+            .map(|(k, e)| ModelEntryInfo { id: k.clone(), bytes: e.bytes, hits: e.hits })
+            .collect();
+        out.sort_by(|a, b| a.id.cmp(&b.id));
+        out
+    }
 }
 
 #[cfg(test)]
@@ -356,6 +617,109 @@ mod tests {
         let bad = CacheKey::new("houses", Model::Svm, Storage::Auto, 0.05);
         let e = cache.get_or_build(&bad, &m);
         assert!(e.is_err(), "houses is a regression set");
+    }
+
+    #[test]
+    fn snapshot_and_evict_key() {
+        let cache = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+        let m = Registry::default();
+        cache.get_or_build(&key("toy1", 0.05), &m).unwrap();
+        cache.get_or_build(&key("toy2", 0.05), &m).unwrap();
+        cache.get_or_build(&key("toy1", 0.05), &m).unwrap(); // hit
+        let snap = cache.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].dataset, "toy1");
+        assert_eq!(snap[0].hits, 1);
+        assert_eq!(snap[1].dataset, "toy2");
+        assert_eq!(snap[1].hits, 0);
+        assert!(snap.iter().all(|e| e.bytes > 0));
+
+        assert!(cache.evict_key(&key("toy1", 0.05), &m));
+        assert!(!cache.evict_key(&key("toy1", 0.05), &m), "already gone");
+        assert!(!cache.evict_key(&key("no-such", 0.05), &m));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(m.counter("instance_cache_evictions").get(), 1);
+        assert_eq!(
+            m.gauge("instance_cache_bytes").get() as usize,
+            cache.resident_bytes()
+        );
+    }
+
+    fn toy_model(c: f64) -> Arc<crate::model::TrainedModel> {
+        let mut m = crate::model::trained::trained_toy(crate::linalg::Storage::Dense);
+        m.c = c; // distinct c ⇒ distinct id
+        Arc::new(m)
+    }
+
+    #[test]
+    fn model_cache_insert_get_hit_miss() {
+        let cache = ModelCache::new(ModelCache::DEFAULT_BUDGET_BYTES);
+        let m = Registry::default();
+        let model = toy_model(0.5);
+        let id = cache.insert(model.clone(), &m);
+        assert_eq!(id, model.id());
+        let got = cache.get(&id, &m).expect("resident");
+        assert!(Arc::ptr_eq(&got, &model));
+        assert!(cache.get("nope", &m).is_none());
+        assert_eq!(m.counter("model_cache_hits").get(), 1);
+        assert_eq!(m.counter("model_cache_misses").get(), 1);
+        let snap = cache.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].id, id);
+        assert_eq!(snap[0].hits, 1);
+        assert_eq!(cache.resident_bytes(), model.approx_bytes());
+        // re-inserting the same id replaces, never double-charges
+        cache.insert(model.clone(), &m);
+        assert_eq!(cache.resident_bytes(), model.approx_bytes());
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn model_cache_lru_eviction_and_explicit_evict() {
+        let a = toy_model(0.3);
+        let b = toy_model(0.5);
+        let c = toy_model(0.9);
+        let one = a.approx_bytes();
+        let cache = ModelCache::new(2 * one + one / 2);
+        let m = Registry::default();
+        cache.insert(a.clone(), &m);
+        cache.insert(b.clone(), &m);
+        cache.get(&a.id(), &m); // touch a so b is LRU
+        cache.insert(c.clone(), &m);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(m.counter("model_cache_evictions").get(), 1);
+        assert!(cache.get(&b.id(), &m).is_none(), "b was the LRU victim");
+        assert!(cache.get(&a.id(), &m).is_some());
+
+        assert!(cache.evict(&a.id(), &m));
+        assert!(!cache.evict(&a.id(), &m));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(m.gauge("model_cache_entries").get(), 1);
+    }
+
+    #[test]
+    fn model_cache_zero_budget_and_file_load() {
+        let cache = ModelCache::new(0);
+        let m = Registry::default();
+        let model = toy_model(0.4);
+        cache.insert(model.clone(), &m);
+        assert_eq!(cache.len(), 0, "zero budget stores nothing");
+
+        let mut p = std::env::temp_dir();
+        p.push(format!("dvi_model_cache_{}.pallas-model", std::process::id()));
+        crate::model::format::save(&model, &p).unwrap();
+        let loaded = cache.get_or_load(&p, &m).unwrap();
+        assert_eq!(loaded.id(), model.id());
+        assert_eq!(m.counter("model_cache_loads").get(), 1);
+        assert_eq!(cache.len(), 0);
+
+        // a resident cache makes the load resident
+        let resident = ModelCache::new(ModelCache::DEFAULT_BUDGET_BYTES);
+        resident.get_or_load(&p, &m).unwrap();
+        assert!(resident.get(&model.id(), &m).is_some());
+        std::fs::remove_file(&p).ok();
+        assert!(cache.get_or_load(Path::new("/no/such/file"), &m).is_err());
+        assert_eq!(m.counter("model_cache_errors").get(), 1);
     }
 
     #[test]

@@ -1,9 +1,13 @@
-//! Job definition and execution: a job is either a full path run or a
-//! lightweight batch-screening pass against a cached instance.
+//! Job definition and execution: a job is a full path run, a lightweight
+//! batch-screening pass against a cached instance, a one-C train that
+//! persists a model artifact, a batch prediction against a cached model,
+//! or a cache introspection op.
 
-use super::cache::{CacheKey, InstanceCache};
+use super::cache::{CacheKey, InstanceCache, InstanceEntryInfo, ModelCache, ModelEntryInfo};
 use crate::config::{RunConfig, SolverConfig};
+use crate::linalg::Storage;
 use crate::metrics::Registry;
+use crate::model::{self, format as model_format, PredictOptions, TrainedModel};
 use crate::path::{PathConfig, PathOutput, PathRunner};
 use crate::problem::{Instance, Model};
 use crate::screening::{dvi, RuleKind};
@@ -18,6 +22,13 @@ pub enum JobKind {
     Path(RunConfig),
     /// Many DVI screening passes against one cached instance.
     Screen(ScreenSpec),
+    /// Solve at one C, extract a [`TrainedModel`], make it resident (and
+    /// optionally persist the `.pallas-model` artifact).
+    Train(TrainSpec),
+    /// Score a batch of rows against a resident or on-disk model.
+    Predict(PredictSpec),
+    /// Introspect/evict the instance and model caches.
+    Cache(CacheSpec),
 }
 
 /// A scheduled unit of work.
@@ -39,6 +50,14 @@ impl JobSpec {
 
     pub fn screen(id: u64, spec: ScreenSpec) -> JobSpec {
         JobSpec { id, kind: JobKind::Screen(spec), timings: true }
+    }
+
+    pub fn train(id: u64, spec: TrainSpec) -> JobSpec {
+        JobSpec { id, kind: JobKind::Train(spec), timings: true }
+    }
+
+    pub fn predict(id: u64, spec: PredictSpec) -> JobSpec {
+        JobSpec { id, kind: JobKind::Predict(spec), timings: true }
     }
 }
 
@@ -84,20 +103,44 @@ pub struct JobOutcome {
 pub enum JobReply {
     Path(JobSummary),
     Screen(ScreenSummary),
+    Train(TrainSummary),
+    Predict(PredictSummary),
+    Cache(CacheSummary),
 }
 
 impl JobReply {
     pub fn as_path(&self) -> Option<&JobSummary> {
         match self {
             JobReply::Path(s) => Some(s),
-            JobReply::Screen(_) => None,
+            _ => None,
         }
     }
 
     pub fn as_screen(&self) -> Option<&ScreenSummary> {
         match self {
             JobReply::Screen(s) => Some(s),
-            JobReply::Path(_) => None,
+            _ => None,
+        }
+    }
+
+    pub fn as_train(&self) -> Option<&TrainSummary> {
+        match self {
+            JobReply::Train(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_predict(&self) -> Option<&PredictSummary> {
+        match self {
+            JobReply::Predict(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_cache(&self) -> Option<&CacheSummary> {
+        match self {
+            JobReply::Cache(s) => Some(s),
+            _ => None,
         }
     }
 }
@@ -128,7 +171,7 @@ impl JobSummary {
         let (lo, hi) = out.rejection_series();
         JobSummary {
             dataset: out.dataset.clone(),
-            model: out.model.name().to_string(),
+            model: out.model.wire_name(),
             rule: out.rule.name().to_string(),
             l: out.l,
             steps: out.steps.len(),
@@ -188,18 +231,145 @@ impl ScreenSummary {
     }
 }
 
-/// Execute a job without a resident cache: a transient zero-budget cache
-/// makes this path identical to the pooled one minus residency. The CLI's
-/// one-shot `dvi path` uses it.
-pub fn run_job(spec: &JobSpec) -> JobOutcome {
-    run_job_cached(spec, &InstanceCache::new(0), &Registry::default())
+/// A train job: solve the boxed QP at one C against the cached instance,
+/// extract the [`TrainedModel`], insert it into the pool's model cache,
+/// and optionally persist the `.pallas-model` artifact.
+#[derive(Clone, Debug)]
+pub struct TrainSpec {
+    pub dataset: String,
+    pub model: Model,
+    pub scale: f64,
+    pub storage: Storage,
+    /// The regularization parameter to solve at (finite, > 0).
+    pub c: f64,
+    /// tol/threads for the solve (tol doubles as the KKT dead-band that
+    /// classifies support vectors).
+    pub solver: SolverConfig,
+    /// Persist the artifact here after training.
+    pub save: Option<String>,
 }
 
-/// Execute a job against the pool's resident cache.
-pub fn run_job_cached(spec: &JobSpec, cache: &InstanceCache, metrics: &Registry) -> JobOutcome {
+/// What a train job reports.
+#[derive(Clone, Debug)]
+pub struct TrainSummary {
+    /// Deterministic model id ([`TrainedModel::id`]) — the handle predict
+    /// requests address the resident model by.
+    pub model_id: String,
+    pub dataset: String,
+    pub model: Model,
+    /// Storage as REQUESTED — i.e. the instance-cache key's storage — so
+    /// a `"kind": "cache"` evict built from this response matches the
+    /// resident entry (the artifact's own resolved storage is part of
+    /// the model id's digest and the `.pallas-model` header).
+    pub storage: Storage,
+    pub c: f64,
+    pub l: usize,
+    pub n: usize,
+    /// Margin support vectors (KKT E-set) — the paper's "the classifier
+    /// depends on few instances" number.
+    pub support: usize,
+    /// Rows with θᵢ ≠ 0 (what the artifact stores in θ-form).
+    pub active: usize,
+    /// Encoded artifact size in bytes.
+    pub artifact_bytes: usize,
+    /// Where the artifact was persisted, when requested.
+    pub saved: Option<String>,
+    pub solve_secs: f64,
+}
+
+/// Which model a predict job scores against.
+#[derive(Clone, Debug)]
+pub enum ModelRef {
+    /// A model resident in the pool's cache (trained earlier, or loaded).
+    Id(String),
+    /// A `.pallas-model` artifact on disk (loaded, then made resident).
+    File(String),
+}
+
+/// What a predict job scores.
+#[derive(Clone, Debug)]
+pub enum PredictInput {
+    /// Inline dense rows, already flattened row-major (`width` > 0
+    /// columns; rectangularity and finiteness validated at parse — the
+    /// flat form avoids a 100k-row batch carrying 100k Vec headers
+    /// through every JobSpec clone plus a second full copy at scoring).
+    Rows { flat: Vec<f64>, width: usize },
+    /// A registry dataset (resolved in the requested storage; only its X
+    /// matrix is used).
+    Dataset { name: String, scale: f64, storage: Storage },
+}
+
+/// A predict job: score a batch against a model.
+#[derive(Clone, Debug)]
+pub struct PredictSpec {
+    pub model: ModelRef,
+    pub input: PredictInput,
+    /// Sharded-scoring worker threads (scores identical for any value).
+    pub threads: usize,
+    /// Score via the θ-form support payload (bit-identical; see
+    /// [`crate::model::PredictOptions`]).
+    pub support_only: bool,
+}
+
+/// What a predict job reports. Scores are in input-row order and
+/// byte-deterministic (independent of threads, storage, and residency).
+#[derive(Clone, Debug)]
+pub struct PredictSummary {
+    pub model_id: String,
+    pub model: Model,
+    pub rows: usize,
+    pub support_only: bool,
+    pub scores: Vec<f64>,
+    /// ±1 labels for classification models, absent for LAD.
+    pub labels: Option<Vec<i8>>,
+    pub predict_secs: f64,
+}
+
+/// Cache introspection ops (`"kind": "cache"`).
+#[derive(Clone, Debug)]
+pub enum CacheOp {
+    /// List resident entries of both caches.
+    List,
+    /// Evict one instance entry by its full key.
+    EvictInstance(CacheKey),
+    /// Evict one model by id.
+    EvictModel(String),
+}
+
+#[derive(Clone, Debug)]
+pub struct CacheSpec {
+    pub op: CacheOp,
+}
+
+/// What a cache job reports: the (post-op) resident entries, plus
+/// whether an evict op actually removed something.
+#[derive(Clone, Debug)]
+pub struct CacheSummary {
+    pub instances: Vec<InstanceEntryInfo>,
+    pub models: Vec<ModelEntryInfo>,
+    pub evicted: Option<bool>,
+}
+
+/// Execute a job without resident caches: transient zero-budget caches
+/// make this path identical to the pooled one minus residency. The CLI's
+/// one-shot `dvi path` / `dvi train` / `dvi predict` use it.
+pub fn run_job(spec: &JobSpec) -> JobOutcome {
+    run_job_cached(spec, &InstanceCache::new(0), &ModelCache::new(0), &Registry::default())
+}
+
+/// Execute a job against the pool's resident caches.
+pub fn run_job_cached(
+    spec: &JobSpec,
+    cache: &InstanceCache,
+    models: &ModelCache,
+    metrics: &Registry,
+) -> JobOutcome {
     let result = match &spec.kind {
         JobKind::Path(cfg) => run_path(cfg, cache, metrics).map(JobReply::Path),
         JobKind::Screen(s) => run_screen(s, cache, metrics).map(JobReply::Screen),
+        JobKind::Train(s) => run_train(s, cache, models, metrics).map(JobReply::Train),
+        JobKind::Predict(s) => run_predict(s, models, metrics).map(JobReply::Predict),
+        JobKind::Cache(s) => run_cache(s, cache, models, metrics).map(JobReply::Cache),
     };
     JobOutcome { id: spec.id, timings: spec.timings, result }
 }
@@ -338,7 +508,7 @@ fn run_screen(
     };
     Ok(ScreenSummary {
         dataset: spec.dataset.clone(),
-        model: spec.model.name().to_string(),
+        model: spec.model.wire_name(),
         l,
         pairs: results,
         anchor_solves,
@@ -347,6 +517,141 @@ fn run_screen(
         theta,
         theta_c,
     })
+}
+
+/// Execute a train job: resolve the cached instance, solve at C (cold
+/// start — one C, no path), extract the artifact, persist/cache it.
+fn run_train(
+    spec: &TrainSpec,
+    cache: &InstanceCache,
+    models: &ModelCache,
+    metrics: &Registry,
+) -> Result<TrainSummary, String> {
+    if !(spec.c.is_finite() && spec.c > 0.0) {
+        return Err(format!("train: C must be finite and positive, got {}", spec.c));
+    }
+    let key = CacheKey::new(&spec.dataset, spec.model, spec.storage, spec.scale);
+    let inst: Arc<Instance> = cache.get_or_build(&key, metrics)?;
+    let t = Instant::now();
+    let r = CdSolver::new(spec.solver.clone()).solve(&inst, spec.c, inst.cold_start());
+    let solve_secs = t.elapsed().as_secs_f64();
+    let trained = TrainedModel::from_solution(
+        &inst,
+        &spec.dataset,
+        spec.scale,
+        spec.c,
+        spec.solver.tol,
+        &r.theta,
+    );
+    let encoded = model_format::encode(&trained);
+    if let Some(path) = &spec.save {
+        std::fs::write(path, &encoded).map_err(|e| format!("train: save {path}: {e}"))?;
+    }
+    let summary = TrainSummary {
+        model_id: trained.id(),
+        dataset: spec.dataset.clone(),
+        model: trained.model,
+        storage: spec.storage,
+        c: spec.c,
+        l: trained.l,
+        n: trained.n(),
+        support: trained.support.len(),
+        active: trained.active.len(),
+        artifact_bytes: encoded.len(),
+        saved: spec.save.clone(),
+        solve_secs,
+    };
+    models.insert(Arc::new(trained), metrics);
+    Ok(summary)
+}
+
+/// Execute a predict job: resolve the model (cache or artifact file),
+/// materialize the input batch, run the sharded scoring pass.
+fn run_predict(
+    spec: &PredictSpec,
+    models: &ModelCache,
+    metrics: &Registry,
+) -> Result<PredictSummary, String> {
+    // resolve the model AND the id to echo: a by-id request already
+    // carries the id string (the cache key it just matched), so only the
+    // file path pays the O(n + active) content digest
+    let (model, model_id): (Arc<TrainedModel>, String) = match &spec.model {
+        ModelRef::Id(id) => (
+            models.get(id, metrics).ok_or_else(|| {
+                format!(
+                    "predict: model `{id}` is not resident (train it first, \
+                     or supply model_file)"
+                )
+            })?,
+            id.clone(),
+        ),
+        ModelRef::File(path) => {
+            let m = models.get_or_load(std::path::Path::new(path), metrics)?;
+            let id = m.id();
+            (m, id)
+        }
+    };
+    let opts = PredictOptions { threads: spec.threads, support_only: spec.support_only };
+    let t = Instant::now();
+    let (scores, n_rows) = match &spec.input {
+        // inline batches score straight off the parsed flat buffer —
+        // zero copies on the serving path (scores_flat re-checks width)
+        PredictInput::Rows { flat, width } => {
+            let scores = model::scores_flat(&model, flat, *width, &opts)
+                .map_err(|e| format!("predict: {e}"))?;
+            let n = scores.len();
+            (scores, n)
+        }
+        PredictInput::Dataset { name, scale, storage } => {
+            // only the X matrix is scored, so resolution must not impose
+            // the model's task on the input: the Regression hint accepts
+            // any numeric labels (the hint only matters for `file:`
+            // loads, where a Classification hint would reject a file
+            // whose labels aren't ±1)
+            let ds = crate::data::registry::resolve_storage(
+                name,
+                *scale,
+                crate::data::Task::Regression,
+                *storage,
+            )?;
+            let n = ds.x.rows();
+            (model::scores(&model, &ds.x, &opts)?, n)
+        }
+    };
+    // a non-finite score (input magnitudes overflowing f64) would
+    // serialize as JSON null with ok:true and print as a literal "null"
+    // line from the CLI — fail the request with a real error instead
+    if let Some(i) = scores.iter().position(|s| !s.is_finite()) {
+        return Err(format!(
+            "predict: score for row {i} is not finite ({}) — input magnitudes overflow f64",
+            scores[i]
+        ));
+    }
+    let labels = model::predict::is_classifier(&model).then(|| model::labels(&scores));
+    Ok(PredictSummary {
+        model_id,
+        model: model.model,
+        rows: n_rows,
+        support_only: spec.support_only,
+        scores,
+        labels,
+        predict_secs: t.elapsed().as_secs_f64(),
+    })
+}
+
+/// Execute a cache introspection/evict op against both resident caches.
+fn run_cache(
+    spec: &CacheSpec,
+    cache: &InstanceCache,
+    models: &ModelCache,
+    metrics: &Registry,
+) -> Result<CacheSummary, String> {
+    let evicted = match &spec.op {
+        CacheOp::List => None,
+        CacheOp::EvictInstance(key) => Some(cache.evict_key(key, metrics)),
+        CacheOp::EvictModel(id) => Some(models.evict(id, metrics)),
+    };
+    Ok(CacheSummary { instances: cache.snapshot(), models: models.snapshot(), evicted })
 }
 
 #[cfg(test)]
@@ -423,11 +728,13 @@ mod tests {
     #[test]
     fn path_jobs_share_the_cached_instance() {
         let cache = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+        let models = ModelCache::new(ModelCache::DEFAULT_BUDGET_BYTES);
         let m = Registry::default();
         for (id, rule) in ["dvi", "dvi-theta", "none"].iter().enumerate() {
             let out = run_job_cached(
                 &JobSpec::path(id as u64, quick_run("toy1", "svm", rule)),
                 &cache,
+                &models,
                 &m,
             );
             assert!(out.result.is_ok(), "{rule}: {:?}", out.result);
@@ -439,9 +746,10 @@ mod tests {
     #[test]
     fn screen_job_matches_direct_scan() {
         let cache = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+        let models = ModelCache::new(0);
         let m = Registry::default();
         let spec = quick_screen("toy1", vec![(0.5, 0.8), (0.8, 1.6)]);
-        let out = run_job_cached(&JobSpec::screen(0, spec.clone()), &cache, &m);
+        let out = run_job_cached(&JobSpec::screen(0, spec.clone()), &cache, &models, &m);
         let reply = out.result.expect("screen job failed");
         let s = reply.as_screen().unwrap();
         assert_eq!(s.pairs.len(), 2);
@@ -508,7 +816,7 @@ mod tests {
         let mut spec = quick_screen("toy1", vec![(0.5, 0.8)]);
         spec.theta = Some(r.theta.clone());
         spec.return_theta = true;
-        let out = run_job_cached(&JobSpec::screen(0, spec), &cache, &m);
+        let out = run_job_cached(&JobSpec::screen(0, spec), &cache, &ModelCache::new(0), &m);
         let reply = out.result.unwrap();
         let s = reply.as_screen().unwrap();
         assert_eq!(s.anchor_solves, 0);
@@ -517,6 +825,183 @@ mod tests {
         let u = inst.u_from_theta(&r.theta);
         let want = crate::screening::Dvi::new_w().screen(&inst, 0.5, 0.8, &r.theta, &u);
         assert_eq!((s.pairs[0].n_lo, s.pairs[0].n_hi), (want.n_lo, want.n_hi));
+    }
+
+    fn quick_train(dataset: &str, c: f64) -> TrainSpec {
+        TrainSpec {
+            dataset: dataset.into(),
+            model: Model::Svm,
+            scale: 0.05,
+            storage: Storage::Auto,
+            c,
+            solver: SolverConfig { tol: 1e-7, ..Default::default() },
+            save: None,
+        }
+    }
+
+    #[test]
+    fn train_then_predict_matches_direct_scoring() {
+        let cache = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+        let models = ModelCache::new(ModelCache::DEFAULT_BUDGET_BYTES);
+        let m = Registry::default();
+        let out = run_job_cached(&JobSpec::train(0, quick_train("toy1", 0.5)), &cache, &models, &m);
+        let reply = out.result.expect("train failed");
+        let t = reply.as_train().unwrap();
+        assert_eq!(t.model, Model::Svm);
+        assert_eq!(Model::parse(&t.model.wire_name()), Some(t.model), "name round-trips");
+        assert!(t.support > 0 && t.support < t.l);
+        assert!(t.artifact_bytes > 0);
+        assert_eq!(models.len(), 1, "trained model is resident");
+
+        // predict against the resident model by id, inline rows
+        let spec = PredictSpec {
+            model: ModelRef::Id(t.model_id.clone()),
+            input: PredictInput::Rows { flat: vec![1.0, 1.0, -1.0, -1.0], width: 2 },
+            threads: 2,
+            support_only: false,
+        };
+        let out = run_job_cached(&JobSpec::predict(1, spec), &cache, &models, &m);
+        let p = out.result.expect("predict failed");
+        let p = p.as_predict().unwrap();
+        assert_eq!(p.rows, 2);
+        assert_eq!(p.scores.len(), 2);
+        // ground truth straight from the cached model's w
+        let model = models.get(&t.model_id, &m).unwrap();
+        let want0 = crate::linalg::dot(&[1.0, 1.0], &model.w);
+        assert_eq!(p.scores[0].to_bits(), want0.to_bits());
+        let labels = p.labels.as_ref().expect("svm is a classifier");
+        assert_eq!(labels.len(), 2);
+        assert_eq!(labels[0], -labels[1], "separable toy: opposite corners disagree");
+    }
+
+    #[test]
+    fn predict_by_dataset_and_support_only_agree_bitwise() {
+        let cache = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+        let models = ModelCache::new(ModelCache::DEFAULT_BUDGET_BYTES);
+        let m = Registry::default();
+        let out = run_job_cached(&JobSpec::train(0, quick_train("toy1", 0.5)), &cache, &models, &m);
+        let id = out.result.unwrap().as_train().unwrap().model_id.clone();
+        let mk = |support_only: bool, threads: usize| PredictSpec {
+            model: ModelRef::Id(id.clone()),
+            input: PredictInput::Dataset {
+                name: "toy2".into(),
+                scale: 0.05,
+                storage: Storage::Auto,
+            },
+            threads,
+            support_only,
+        };
+        let full = run_job_cached(&JobSpec::predict(1, mk(false, 1)), &cache, &models, &m);
+        let full = full.result.unwrap();
+        let full = full.as_predict().unwrap().scores.clone();
+        for (support_only, threads) in [(false, 3), (true, 1), (true, 4)] {
+            let got =
+                run_job_cached(&JobSpec::predict(2, mk(support_only, threads)), &cache, &models, &m);
+            let got = got.result.unwrap();
+            let got = &got.as_predict().unwrap().scores;
+            let a: Vec<u64> = full.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "support_only={support_only} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn predict_errors_are_data() {
+        let cache = InstanceCache::new(0);
+        let models = ModelCache::new(0);
+        let m = Registry::default();
+        // unknown resident id
+        let spec = PredictSpec {
+            model: ModelRef::Id("svm-ffffffffffffffff".into()),
+            input: PredictInput::Rows { flat: vec![0.0, 0.0], width: 2 },
+            threads: 1,
+            support_only: false,
+        };
+        assert!(run_job_cached(&JobSpec::predict(0, spec), &cache, &models, &m).result.is_err());
+        // missing artifact file
+        let spec = PredictSpec {
+            model: ModelRef::File("/no/such/artifact.pallas-model".into()),
+            input: PredictInput::Rows { flat: vec![0.0, 0.0], width: 2 },
+            threads: 1,
+            support_only: false,
+        };
+        assert!(run_job_cached(&JobSpec::predict(1, spec), &cache, &models, &m).result.is_err());
+        // bad C on train
+        let out = run_job(&JobSpec::train(2, quick_train("toy1", -1.0)));
+        assert!(out.result.is_err());
+        let t = run_job_cached(&JobSpec::train(3, quick_train("toy1", 0.5)), &cache, &models, &m);
+        assert!(t.result.is_ok());
+        // zero-budget model cache: the model is NOT resident afterwards
+        let spec = PredictSpec {
+            model: ModelRef::Id(t.result.unwrap().as_train().unwrap().model_id.clone()),
+            input: PredictInput::Rows { flat: vec![0.0, 0.0], width: 2 },
+            threads: 1,
+            support_only: false,
+        };
+        assert!(run_job_cached(&JobSpec::predict(4, spec), &cache, &models, &m).result.is_err());
+    }
+
+    #[test]
+    fn train_save_and_predict_from_file() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dvi_job_train_{}.pallas-model", std::process::id()));
+        let mut spec = quick_train("toy1", 0.5);
+        spec.save = Some(p.to_str().unwrap().to_string());
+        let out = run_job(&JobSpec::train(0, spec));
+        let reply = out.result.expect("train failed");
+        assert_eq!(reply.as_train().unwrap().saved.as_deref(), Some(p.to_str().unwrap()));
+        assert!(p.exists());
+
+        // a fresh transient context can serve predictions from the file
+        let spec = PredictSpec {
+            model: ModelRef::File(p.to_str().unwrap().into()),
+            input: PredictInput::Rows { flat: vec![0.5, -0.5], width: 2 },
+            threads: 1,
+            support_only: true,
+        };
+        let out = run_job(&JobSpec::predict(1, spec));
+        let r = out.result.expect("predict from file failed");
+        assert_eq!(r.as_predict().unwrap().scores.len(), 1);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn cache_job_lists_and_evicts() {
+        let cache = InstanceCache::new(InstanceCache::DEFAULT_BUDGET_BYTES);
+        let models = ModelCache::new(ModelCache::DEFAULT_BUDGET_BYTES);
+        let m = Registry::default();
+        run_job_cached(&JobSpec::train(0, quick_train("toy1", 0.5)), &cache, &models, &m)
+            .result
+            .unwrap();
+        let list = JobSpec { id: 1, kind: JobKind::Cache(CacheSpec { op: CacheOp::List }), timings: false };
+        let out = run_job_cached(&list, &cache, &models, &m).result.unwrap();
+        let s = out.as_cache().unwrap();
+        assert_eq!(s.instances.len(), 1);
+        assert_eq!(s.models.len(), 1);
+        assert!(s.evicted.is_none());
+        let model_id = s.models[0].id.clone();
+
+        let evict = JobSpec {
+            id: 2,
+            kind: JobKind::Cache(CacheSpec { op: CacheOp::EvictModel(model_id) }),
+            timings: false,
+        };
+        let out = run_job_cached(&evict, &cache, &models, &m).result.unwrap();
+        let s = out.as_cache().unwrap();
+        assert_eq!(s.evicted, Some(true));
+        assert!(s.models.is_empty());
+        assert_eq!(s.instances.len(), 1, "instance cache untouched");
+
+        let evict_inst = JobSpec {
+            id: 3,
+            kind: JobKind::Cache(CacheSpec {
+                op: CacheOp::EvictInstance(CacheKey::new("toy1", Model::Svm, Storage::Auto, 0.05)),
+            }),
+            timings: false,
+        };
+        let out = run_job_cached(&evict_inst, &cache, &models, &m).result.unwrap();
+        assert_eq!(out.as_cache().unwrap().evicted, Some(true));
+        assert!(out.as_cache().unwrap().instances.is_empty());
     }
 
     #[test]

@@ -1,18 +1,22 @@
 //! L3 coordinator: turns [`crate::config::RunConfig`]s into scheduled
-//! path-run or batch-screening jobs on a thread worker pool backed by a
-//! resident [`cache::InstanceCache`], tracks metrics, and exposes a
-//! line-oriented JSON service with single, screen, and batch request
-//! kinds (the "screening service" the examples and the CLI drive).
+//! path-run, batch-screening, train, predict, or cache-introspection
+//! jobs on a thread worker pool backed by a resident
+//! [`cache::InstanceCache`] and a sibling [`cache::ModelCache`] of
+//! trained models, tracks metrics, and exposes a line-oriented JSON
+//! service with single, screen, train, predict, cache, and batch
+//! request kinds (the "screening service" the examples and the CLI
+//! drive).
 
 pub mod cache;
 pub mod job;
 pub mod pool;
 pub mod service;
 
-pub use cache::{CacheKey, InstanceCache};
+pub use cache::{CacheKey, InstanceCache, InstanceEntryInfo, ModelCache, ModelEntryInfo};
 pub use job::{
-    run_job, run_job_cached, JobKind, JobOutcome, JobReply, JobSpec, JobSummary, ScreenSpec,
-    ScreenSummary,
+    run_job, run_job_cached, CacheOp, CacheSpec, CacheSummary, JobKind, JobOutcome, JobReply,
+    JobSpec, JobSummary, ModelRef, PredictInput, PredictSpec, PredictSummary, ScreenSpec,
+    ScreenSummary, TrainSpec, TrainSummary,
 };
 pub use pool::WorkerPool;
 pub use service::ScreeningService;

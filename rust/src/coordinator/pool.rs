@@ -15,7 +15,7 @@
 //! *behind* any queued jobs — FIFO order means workers drain the queue
 //! first — then joins every worker thread.
 
-use super::cache::InstanceCache;
+use super::cache::{InstanceCache, ModelCache};
 use super::job::{run_job_cached, JobOutcome, JobSpec};
 use crate::metrics::{Counter, Registry};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -36,6 +36,8 @@ pub struct WorkerPool {
     pending: Arc<AtomicU64>,
     pub metrics: Arc<Registry>,
     pub cache: Arc<InstanceCache>,
+    /// Resident trained-model cache (train inserts, predict resolves).
+    pub models: Arc<ModelCache>,
 }
 
 /// Guarantees exactly one outcome — delivered AND counted — per accepted
@@ -90,8 +92,15 @@ impl WorkerPool {
     }
 
     /// Spawn `n_workers` threads sharing an instance cache of
-    /// `cache_bytes` (0 disables residency).
+    /// `cache_bytes` (0 disables residency) and a default-budget model
+    /// cache.
     pub fn with_cache(n_workers: usize, cache_bytes: usize) -> WorkerPool {
+        Self::with_caches(n_workers, cache_bytes, ModelCache::DEFAULT_BUDGET_BYTES)
+    }
+
+    /// Spawn `n_workers` threads with explicit byte budgets for both the
+    /// instance cache and the trained-model cache (0 disables either).
+    pub fn with_caches(n_workers: usize, cache_bytes: usize, model_bytes: usize) -> WorkerPool {
         let n = n_workers.max(1);
         let (tx, rx) = channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
@@ -99,6 +108,7 @@ impl WorkerPool {
         let pending = Arc::new(AtomicU64::new(0));
         let metrics = Arc::new(Registry::default());
         let cache = Arc::new(InstanceCache::new(cache_bytes));
+        let models = Arc::new(ModelCache::new(model_bytes));
 
         let mut workers = Vec::with_capacity(n);
         for wid in 0..n {
@@ -107,6 +117,7 @@ impl WorkerPool {
             let pending = pending.clone();
             let metrics = metrics.clone();
             let cache = cache.clone();
+            let models = models.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("dvi-worker-{wid}"))
@@ -135,7 +146,7 @@ impl WorkerPool {
                                     let t = std::time::Instant::now();
                                     let outcome = std::panic::catch_unwind(
                                         std::panic::AssertUnwindSafe(|| {
-                                            run_job_cached(&spec, &cache, &metrics)
+                                            run_job_cached(&spec, &cache, &models, &metrics)
                                         }),
                                     )
                                     .unwrap_or_else(|p| JobOutcome {
@@ -153,7 +164,7 @@ impl WorkerPool {
                     .expect("spawn worker"),
             );
         }
-        WorkerPool { tx, results_rx, workers, pending, metrics, cache }
+        WorkerPool { tx, results_rx, workers, pending, metrics, cache, models }
     }
 
     /// Enqueue a job.
@@ -282,6 +293,45 @@ mod tests {
         assert_eq!(pool.metrics.counter("instance_cache_misses").get(), 1);
         assert_eq!(pool.metrics.counter("instance_cache_hits").get(), 3);
         assert_eq!(pool.cache.len(), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn train_then_predict_share_the_model_cache_across_workers() {
+        use super::super::job::{ModelRef, PredictInput, PredictSpec, TrainSpec};
+        use crate::linalg::Storage;
+        use crate::problem::Model;
+        let pool = WorkerPool::new(2);
+        // train must complete before predict-by-id is submitted: jobs on
+        // the pool run concurrently, so the client sequences them
+        pool.submit(JobSpec::train(
+            0,
+            TrainSpec {
+                dataset: "toy1".into(),
+                model: Model::Svm,
+                scale: 0.03,
+                storage: Storage::Auto,
+                c: 0.5,
+                solver: SolverConfig { tol: 1e-6, ..Default::default() },
+                save: None,
+            },
+        ));
+        let trained = pool.recv().unwrap().result.unwrap();
+        let id = trained.as_train().unwrap().model_id.clone();
+        assert_eq!(pool.models.len(), 1);
+
+        pool.submit(JobSpec::predict(
+            1,
+            PredictSpec {
+                model: ModelRef::Id(id),
+                input: PredictInput::Rows { flat: vec![1.0, 1.0], width: 2 },
+                threads: 1,
+                support_only: false,
+            },
+        ));
+        let out = pool.recv().unwrap().result.unwrap();
+        assert_eq!(out.as_predict().unwrap().scores.len(), 1);
+        assert_eq!(pool.metrics.counter("model_cache_hits").get(), 1);
         pool.shutdown();
     }
 

@@ -45,13 +45,53 @@
 //! `"timings": false` each entry's object is byte-identical to what the
 //! same request would produce as its own line.
 //!
+//! ## Train and predict requests
+//!
+//! ```json
+//! {"kind": "train", "dataset": "toy1", "model": "svm", "scale": 0.1,
+//!  "c": 0.5, "tol": 1e-6, "save": "toy1.pallas-model", "timings": false}
+//! {"kind": "predict", "model_id": "svm-…", "rows": [[0.5, -1.0]]}
+//! {"kind": "predict", "model_file": "toy1.pallas-model",
+//!  "dataset": "toy2", "scale": 0.1, "support_only": true}
+//! ```
+//!
+//! A train job solves the boxed QP at ONE C against the cached instance,
+//! extracts the trained-model artifact (w, support set, θ-form active
+//! rows), makes it resident in the pool's model cache, optionally
+//! persists the `.pallas-model` file, and reports the deterministic
+//! `model_id`. A predict job scores inline rows or a registry dataset
+//! against a model addressed by `model_id` (resident) or `model_file`
+//! (loaded from disk, then resident); scores are byte-deterministic for
+//! any `threads`/storage/`support_only` setting. NOTE: jobs on one
+//! session line-set run concurrently — a predict-by-id that depends on a
+//! train in the *same* session is only ordered with `--workers 1`; use
+//! `model_file`, or train in an earlier session, otherwise. The same
+//! caveat applies to `"kind": "cache"` introspection: its snapshot races
+//! whatever jobs are in flight, so its listing (and hit counters) are
+//! only reproducible with `--workers 1` or in a session of their own.
+//!
+//! ## Cache requests
+//!
+//! ```json
+//! {"kind": "cache"}
+//! {"kind": "cache", "op": "evict", "target": "model", "model_id": "svm-…"}
+//! {"kind": "cache", "op": "evict", "target": "instance",
+//!  "dataset": "toy1", "model": "svm", "scale": 0.1, "storage": "auto"}
+//! ```
+//!
+//! Lists both resident caches (key, bytes, hits per entry); the evict op
+//! removes one entry and reports whether it existed.
+//!
 //! Responses are written in *input order* once EOF is reached (jobs still
 //! execute concurrently in between), so a scripted session's output is
 //! reproducible. Numeric fields are validated at parse so malformed
 //! requests produce an error response line instead of a worker panic.
 
-use super::cache::InstanceCache;
-use super::job::{JobKind, JobOutcome, JobReply, JobSpec, ScreenSpec};
+use super::cache::{CacheKey, InstanceCache, ModelCache};
+use super::job::{
+    CacheOp, CacheSpec, JobKind, JobOutcome, JobReply, JobSpec, ModelRef, PredictInput,
+    PredictSpec, ScreenSpec, TrainSpec,
+};
 use super::pool::WorkerPool;
 use crate::config::json::{parse_json, Json};
 use crate::config::{RunConfig, SolverConfig};
@@ -63,6 +103,9 @@ use std::io::{BufRead, Write};
 /// must degrade to an error line, not an OOM.
 const MAX_BATCH: usize = 10_000;
 const MAX_PAIRS: usize = 100_000;
+/// Caps on inline predict batches (rows and total floats).
+const MAX_PREDICT_ROWS: usize = 100_000;
+const MAX_PREDICT_FLOATS: usize = 8_000_000;
 
 /// One parsed request object: the job plus its response options.
 #[derive(Clone, Debug)]
@@ -103,6 +146,61 @@ impl ScreeningService {
         ScreeningService { pool: WorkerPool::with_cache(workers, cache_bytes), next_id: 0 }
     }
 
+    /// Explicit byte budgets for both the instance cache and the
+    /// trained-model cache (`dvi serve --cache-mb/--model-cache-mb`).
+    pub fn with_caches(workers: usize, cache_bytes: usize, model_bytes: usize) -> ScreeningService {
+        ScreeningService {
+            pool: WorkerPool::with_caches(workers, cache_bytes, model_bytes),
+            next_id: 0,
+        }
+    }
+
+    /// Warm the instance cache before serving (`dvi serve --preload`):
+    /// resolve and build each named registry dataset into the resident
+    /// cache at `scale`. The model for the cache key comes from
+    /// [`crate::data::registry::peek_task`] — classification sets warm under the SVM
+    /// key, regression sets under LAD, and unknown names (including
+    /// `file:` paths, whose task the content decides) default to SVM —
+    /// so a preload never pays (or mis-counts as `instance_cache_errors`)
+    /// a trial construction under the wrong model. Returns per-dataset
+    /// `(name, Ok((model, secs, bytes)) | Err)` for the caller to log.
+    pub fn preload(
+        &self,
+        names: &[&str],
+        scale: f64,
+    ) -> Vec<(String, Result<(Model, f64, usize), String>)> {
+        use crate::data::{registry, Task};
+        let mut out = Vec::with_capacity(names.len());
+        for &name in names {
+            let name = name.trim();
+            if name.is_empty() {
+                continue;
+            }
+            // with residency disabled a build would be paid and instantly
+            // dropped — logging "preloaded" would be a lie
+            if self.pool.cache.budget_bytes() == 0 {
+                out.push((
+                    name.to_string(),
+                    Err("instance cache is disabled (--cache-mb 0); preload skipped".into()),
+                ));
+                continue;
+            }
+            let model = match registry::peek_task(name) {
+                Some(Task::Regression) => Model::Lad,
+                _ => Model::Svm,
+            };
+            let key = CacheKey::new(name, model, crate::linalg::Storage::Auto, scale);
+            let t = std::time::Instant::now();
+            let result = self
+                .pool
+                .cache
+                .get_or_build(&key, &self.pool.metrics)
+                .map(|inst| (model, t.elapsed().as_secs_f64(), inst.approx_bytes()));
+            out.push((name.to_string(), result));
+        }
+        out
+    }
+
     /// Parse one request line into a path-run config (legacy surface;
     /// screen/batch lines are handled by [`Self::serve`]). Numeric fields
     /// are range-checked here: a negative `points` cast straight to
@@ -131,7 +229,12 @@ impl ScreeningService {
         match kind {
             "path" => Self::parse_path_object(obj),
             "screen" => Self::parse_screen_object(obj),
-            other => Err(format!("unknown request kind `{other}` (path | screen)")),
+            "train" => Self::parse_train_object(obj),
+            "predict" => Self::parse_predict_object(obj),
+            "cache" => Self::parse_cache_object(obj),
+            other => Err(format!(
+                "unknown request kind `{other}` (path | screen | train | predict | cache)"
+            )),
         }
     }
 
@@ -228,8 +331,8 @@ impl ScreeningService {
                 }
                 "tol" => {
                     let x = v.as_float().ok_or("tol: number")?;
-                    if !(x > 0.0) {
-                        return Err(format!("tol must be positive, got {x}"));
+                    if !(x.is_finite() && x > 0.0) {
+                        return Err(format!("tol must be finite and positive, got {x}"));
                     }
                     spec.solver.tol = x;
                 }
@@ -280,6 +383,255 @@ impl ScreeningService {
             return Err("screen: `pairs` must be a non-empty array".into());
         }
         Ok(ParsedRequest { kind: JobKind::Screen(spec), timings })
+    }
+
+    fn parse_train_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
+        let mut spec = TrainSpec {
+            dataset: String::new(),
+            model: Model::Svm,
+            scale: 1.0,
+            storage: crate::linalg::Storage::Auto,
+            c: f64::NAN,
+            solver: SolverConfig::default(),
+            save: None,
+        };
+        let mut timings = true;
+        for (k, v) in obj {
+            match k.as_str() {
+                "kind" => {}
+                "timings" => timings = v.as_bool().ok_or("timings: bool")?,
+                "dataset" => spec.dataset = v.as_str().ok_or("dataset: string")?.to_string(),
+                "model" => {
+                    let s = v.as_str().ok_or("model: string")?;
+                    spec.model =
+                        Model::parse(s).ok_or_else(|| format!("unknown model `{s}`"))?;
+                }
+                "scale" => {
+                    let x = v.as_float().ok_or("scale: number")?;
+                    if !(x > 0.0 && x <= 1.0) {
+                        return Err(format!("scale must be in (0, 1], got {x}"));
+                    }
+                    spec.scale = x;
+                }
+                "storage" => {
+                    let s = v.as_str().ok_or("storage: string")?;
+                    spec.storage = crate::linalg::Storage::parse(s)
+                        .ok_or_else(|| format!("storage must be dense|csr|auto, got `{s}`"))?;
+                }
+                "c" => {
+                    let x = v.as_float().ok_or("c: number")?;
+                    if !(x.is_finite() && x > 0.0) {
+                        return Err(format!("c must be finite and > 0, got {x}"));
+                    }
+                    spec.c = x;
+                }
+                "tol" => {
+                    let x = v.as_float().ok_or("tol: number")?;
+                    if !(x.is_finite() && x > 0.0) {
+                        // an infinite tol "converges" instantly and
+                        // would persist a garbage artifact with ok:true
+                        return Err(format!("tol must be finite and positive, got {x}"));
+                    }
+                    spec.solver.tol = x;
+                }
+                "threads" => spec.solver.threads = parse_threads(v)?,
+                "save" => spec.save = Some(v.as_str().ok_or("save: string")?.to_string()),
+                other => return Err(format!("unknown train field `{other}`")),
+            }
+        }
+        if spec.dataset.is_empty() {
+            return Err("train: `dataset` is required".into());
+        }
+        if spec.c.is_nan() {
+            return Err("train: `c` is required".into());
+        }
+        Ok(ParsedRequest { kind: JobKind::Train(spec), timings })
+    }
+
+    fn parse_predict_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
+        let mut model_id: Option<String> = None;
+        let mut model_file: Option<String> = None;
+        let mut rows: Option<(Vec<f64>, usize)> = None; // (flat, width)
+        let mut dataset: Option<String> = None;
+        let mut scale = 1.0f64;
+        let mut storage = crate::linalg::Storage::Auto;
+        let mut dataset_fields = false; // scale/storage seen explicitly
+        let mut threads = 1usize;
+        let mut support_only = false;
+        let mut timings = true;
+        for (k, v) in obj {
+            match k.as_str() {
+                "kind" => {}
+                "timings" => timings = v.as_bool().ok_or("timings: bool")?,
+                "model_id" => model_id = Some(v.as_str().ok_or("model_id: string")?.to_string()),
+                "model_file" => {
+                    model_file = Some(v.as_str().ok_or("model_file: string")?.to_string())
+                }
+                "dataset" => dataset = Some(v.as_str().ok_or("dataset: string")?.to_string()),
+                "scale" => {
+                    let x = v.as_float().ok_or("scale: number")?;
+                    if !(x > 0.0 && x <= 1.0) {
+                        return Err(format!("scale must be in (0, 1], got {x}"));
+                    }
+                    scale = x;
+                    dataset_fields = true;
+                }
+                "storage" => {
+                    let s = v.as_str().ok_or("storage: string")?;
+                    storage = crate::linalg::Storage::parse(s)
+                        .ok_or_else(|| format!("storage must be dense|csr|auto, got `{s}`"))?;
+                    dataset_fields = true;
+                }
+                "threads" => threads = parse_threads(v)?,
+                "support_only" => support_only = v.as_bool().ok_or("support_only: bool")?,
+                "rows" => {
+                    let arr = v.as_array().ok_or("rows: array of number arrays")?;
+                    if arr.is_empty() {
+                        return Err("rows must be non-empty".into());
+                    }
+                    if arr.len() > MAX_PREDICT_ROWS {
+                        return Err(format!("rows is capped at {MAX_PREDICT_ROWS} entries"));
+                    }
+                    // parse straight into the flat row-major buffer the
+                    // scoring engine wants — no per-row Vec allocations
+                    let width = arr[0].as_array().ok_or("each row must be a number array")?.len();
+                    if width == 0 {
+                        return Err("rows must have at least one feature".into());
+                    }
+                    if arr.len().saturating_mul(width) > MAX_PREDICT_FLOATS {
+                        return Err(format!(
+                            "rows payload is capped at {MAX_PREDICT_FLOATS} numbers"
+                        ));
+                    }
+                    let mut flat = Vec::with_capacity(arr.len() * width);
+                    for (i, r) in arr.iter().enumerate() {
+                        let rr = r.as_array().ok_or("each row must be a number array")?;
+                        if rr.len() != width {
+                            return Err(format!(
+                                "row {i} has {} entries but row 0 has {width} (rows must be rectangular)",
+                                rr.len()
+                            ));
+                        }
+                        for x in rr {
+                            let f = x.as_float().ok_or("row entries must be numbers")?;
+                            if !f.is_finite() {
+                                return Err("row entries must be finite".into());
+                            }
+                            flat.push(f);
+                        }
+                    }
+                    rows = Some((flat, width));
+                }
+                other => return Err(format!("unknown predict field `{other}`")),
+            }
+        }
+        let model = match (model_id, model_file) {
+            (Some(id), None) => ModelRef::Id(id),
+            (None, Some(f)) => ModelRef::File(f),
+            (Some(_), Some(_)) => {
+                return Err("predict: supply model_id or model_file, not both".into())
+            }
+            (None, None) => return Err("predict: model_id or model_file is required".into()),
+        };
+        let input = match (rows, dataset) {
+            (Some((flat, width)), None) => {
+                // silently ignoring these would make the scores differ
+                // from what the client asked for
+                if dataset_fields {
+                    return Err(
+                        "predict: scale/storage apply to dataset inputs, not inline rows".into(),
+                    );
+                }
+                PredictInput::Rows { flat, width }
+            }
+            (None, Some(name)) => PredictInput::Dataset { name, scale, storage },
+            (Some(_), Some(_)) => {
+                return Err("predict: supply rows or dataset, not both".into())
+            }
+            (None, None) => return Err("predict: rows or dataset is required".into()),
+        };
+        Ok(ParsedRequest {
+            kind: JobKind::Predict(PredictSpec { model, input, threads, support_only }),
+            timings,
+        })
+    }
+
+    fn parse_cache_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
+        let mut op = "list".to_string();
+        let mut target: Option<String> = None;
+        let mut model_id: Option<String> = None;
+        let mut dataset: Option<String> = None;
+        let mut model = Model::Svm;
+        let mut storage = crate::linalg::Storage::Auto;
+        let mut scale = 1.0f64;
+        let mut instance_fields = false; // model/storage/scale seen
+        let mut timings = true;
+        for (k, v) in obj {
+            match k.as_str() {
+                "kind" => {}
+                "timings" => timings = v.as_bool().ok_or("timings: bool")?,
+                "op" => op = v.as_str().ok_or("op: string")?.to_string(),
+                "target" => target = Some(v.as_str().ok_or("target: string")?.to_string()),
+                "model_id" => model_id = Some(v.as_str().ok_or("model_id: string")?.to_string()),
+                "dataset" => dataset = Some(v.as_str().ok_or("dataset: string")?.to_string()),
+                "model" => {
+                    let s = v.as_str().ok_or("model: string")?;
+                    model = Model::parse(s).ok_or_else(|| format!("unknown model `{s}`"))?;
+                    instance_fields = true;
+                }
+                "storage" => {
+                    let s = v.as_str().ok_or("storage: string")?;
+                    storage = crate::linalg::Storage::parse(s)
+                        .ok_or_else(|| format!("storage must be dense|csr|auto, got `{s}`"))?;
+                    instance_fields = true;
+                }
+                "scale" => {
+                    scale = v.as_float().ok_or("scale: number")?;
+                    instance_fields = true;
+                }
+                other => return Err(format!("unknown cache field `{other}`")),
+            }
+        }
+        // every selector must belong to the chosen op — a typo'd evict
+        // (e.g. a bare `model_id` with no "op") must NOT silently degrade
+        // to a list that reports ok:true while doing nothing
+        let op = match op.as_str() {
+            "list" => {
+                if target.is_some()
+                    || model_id.is_some()
+                    || dataset.is_some()
+                    || instance_fields
+                {
+                    return Err(
+                        "cache list takes no selector fields (did you mean \"op\": \"evict\"?)"
+                            .into(),
+                    );
+                }
+                CacheOp::List
+            }
+            "evict" => match target.as_deref() {
+                Some("model") => {
+                    if dataset.is_some() || instance_fields {
+                        return Err(
+                            "cache evict model: dataset/model/storage/scale do not apply".into(),
+                        );
+                    }
+                    CacheOp::EvictModel(
+                        model_id.ok_or("cache evict model: `model_id` is required")?,
+                    )
+                }
+                Some("instance") => {
+                    if model_id.is_some() {
+                        return Err("cache evict instance: `model_id` does not apply".into());
+                    }
+                    let ds = dataset.ok_or("cache evict instance: `dataset` is required")?;
+                    CacheOp::EvictInstance(CacheKey::new(&ds, model, storage, scale))
+                }
+                _ => return Err("cache evict: `target` must be instance | model".into()),
+            },
+            other => return Err(format!("unknown cache op `{other}` (list | evict)")),
+        };
+        Ok(ParsedRequest { kind: JobKind::Cache(CacheSpec { op }), timings })
     }
 
     /// Submit a path run; returns its job id.
@@ -372,6 +724,81 @@ impl ScreeningService {
                         Json::Array(t.iter().map(|&v| Json::Float(v)).collect()),
                     );
                     o.insert("theta_c".into(), Json::Float(s.theta_c.unwrap_or(0.0)));
+                }
+            }
+            Ok(JobReply::Train(s)) => {
+                o.insert("ok".into(), Json::Bool(true));
+                o.insert("kind".into(), Json::Str("train".into()));
+                o.insert("model_id".into(), Json::Str(s.model_id.clone()));
+                o.insert("dataset".into(), Json::Str(s.dataset.clone()));
+                o.insert("model".into(), Json::Str(s.model.wire_name()));
+                o.insert("storage".into(), Json::Str(s.storage.name().into()));
+                o.insert("c".into(), Json::Float(s.c));
+                o.insert("l".into(), Json::Int(s.l as i64));
+                o.insert("n".into(), Json::Int(s.n as i64));
+                o.insert("support".into(), Json::Int(s.support as i64));
+                o.insert("active".into(), Json::Int(s.active as i64));
+                o.insert("artifact_bytes".into(), Json::Int(s.artifact_bytes as i64));
+                if let Some(p) = &s.saved {
+                    o.insert("saved".into(), Json::Str(p.clone()));
+                }
+                if outcome.timings {
+                    o.insert("solve_secs".into(), Json::Float(s.solve_secs));
+                }
+            }
+            Ok(JobReply::Predict(s)) => {
+                o.insert("ok".into(), Json::Bool(true));
+                o.insert("kind".into(), Json::Str("predict".into()));
+                o.insert("model_id".into(), Json::Str(s.model_id.clone()));
+                o.insert("model".into(), Json::Str(s.model.wire_name()));
+                o.insert("rows".into(), Json::Int(s.rows as i64));
+                o.insert("support_only".into(), Json::Bool(s.support_only));
+                o.insert(
+                    "scores".into(),
+                    Json::Array(s.scores.iter().map(|&v| Json::Float(v)).collect()),
+                );
+                if let Some(labels) = &s.labels {
+                    o.insert(
+                        "labels".into(),
+                        Json::Array(labels.iter().map(|&v| Json::Int(v as i64)).collect()),
+                    );
+                }
+                if outcome.timings {
+                    o.insert("predict_secs".into(), Json::Float(s.predict_secs));
+                }
+            }
+            Ok(JobReply::Cache(s)) => {
+                o.insert("ok".into(), Json::Bool(true));
+                o.insert("kind".into(), Json::Str("cache".into()));
+                let instances: Vec<Json> = s
+                    .instances
+                    .iter()
+                    .map(|e| {
+                        let mut m = BTreeMap::new();
+                        m.insert("dataset".to_string(), Json::Str(e.dataset.clone()));
+                        m.insert("model".to_string(), Json::Str(e.model.wire_name()));
+                        m.insert("storage".to_string(), Json::Str(e.storage.name().into()));
+                        m.insert("scale".to_string(), Json::Float(e.scale));
+                        m.insert("bytes".to_string(), Json::Int(e.bytes as i64));
+                        m.insert("hits".to_string(), Json::Int(e.hits as i64));
+                        Json::Object(m)
+                    })
+                    .collect();
+                o.insert("instances".into(), Json::Array(instances));
+                let models: Vec<Json> = s
+                    .models
+                    .iter()
+                    .map(|e| {
+                        let mut m = BTreeMap::new();
+                        m.insert("id".to_string(), Json::Str(e.id.clone()));
+                        m.insert("bytes".to_string(), Json::Int(e.bytes as i64));
+                        m.insert("hits".to_string(), Json::Int(e.hits as i64));
+                        Json::Object(m)
+                    })
+                    .collect();
+                o.insert("models".into(), Json::Array(models));
+                if let Some(e) = s.evicted {
+                    o.insert("evicted".into(), Json::Bool(e));
                 }
             }
         }
@@ -492,6 +919,11 @@ impl ScreeningService {
     pub fn cache(&self) -> &InstanceCache {
         &self.pool.cache
     }
+
+    /// The pool's resident trained-model cache.
+    pub fn models(&self) -> &ModelCache {
+        &self.pool.models
+    }
 }
 
 fn parse_threads(v: &Json) -> Result<usize, String> {
@@ -575,6 +1007,7 @@ mod tests {
             r#"{"dataset": "toy1", "scale": -0.5}"#,
             r#"{"dataset": "toy1", "model": "nope"}"#,
             r#"{"dataset": "toy1", "rule": "nope"}"#,
+            r#"{"dataset": "toy1", "tol": 1e400}"#,
         ] {
             let e = ScreeningService::parse_request(bad);
             assert!(e.is_err(), "accepted `{bad}`");
@@ -662,6 +1095,251 @@ mod tests {
     #[test]
     fn parse_object_rejects_nested_batch() {
         assert!(parse_line(r#"{"batch": []}"#).is_err());
+    }
+
+    #[test]
+    fn parse_train_request() {
+        let r = parse_line(
+            r#"{"kind": "train", "dataset": "toy1", "model": "wsvm", "scale": 0.2,
+                "c": 0.75, "tol": 1e-7, "threads": 2, "storage": "csr",
+                "save": "/tmp/m.pallas-model", "timings": false}"#,
+        )
+        .unwrap();
+        assert!(!r.timings);
+        let JobKind::Train(s) = r.kind else { panic!("expected train kind") };
+        assert_eq!(s.dataset, "toy1");
+        assert_eq!(s.model, crate::problem::Model::WeightedSvm);
+        assert_eq!(s.c, 0.75);
+        assert_eq!(s.solver.tol, 1e-7);
+        assert_eq!(s.solver.threads, 2);
+        assert_eq!(s.storage, crate::linalg::Storage::Csr);
+        assert_eq!(s.save.as_deref(), Some("/tmp/m.pallas-model"));
+    }
+
+    #[test]
+    fn parse_train_rejects_bad_input() {
+        for bad in [
+            // missing dataset / missing c
+            r#"{"kind": "train", "c": 0.5}"#,
+            r#"{"kind": "train", "dataset": "toy1"}"#,
+            // bad c
+            r#"{"kind": "train", "dataset": "toy1", "c": 0.0}"#,
+            r#"{"kind": "train", "dataset": "toy1", "c": -1.0}"#,
+            r#"{"kind": "train", "dataset": "toy1", "c": "big"}"#,
+            // train has no grid fields
+            r#"{"kind": "train", "dataset": "toy1", "c": 0.5, "points": 5}"#,
+            r#"{"kind": "train", "dataset": "toy1", "c": 0.5, "scale": 2.0}"#,
+            r#"{"kind": "train", "dataset": "toy1", "c": 0.5, "model": "nope"}"#,
+            // 1e400 overflows to inf, which would "converge" instantly
+            r#"{"kind": "train", "dataset": "toy1", "c": 0.5, "tol": 1e400}"#,
+        ] {
+            assert!(parse_line(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn parse_predict_request() {
+        let r = parse_line(
+            r#"{"kind": "predict", "model_id": "svm-abc", "rows": [[1.0, 2.0], [3, 4]],
+                "threads": 0, "support_only": true, "timings": false}"#,
+        )
+        .unwrap();
+        let JobKind::Predict(s) = r.kind else { panic!("expected predict kind") };
+        assert!(matches!(s.model, super::super::job::ModelRef::Id(ref id) if id == "svm-abc"));
+        assert!(s.support_only);
+        assert_eq!(s.threads, 0);
+        let super::super::job::PredictInput::Rows { flat, width } = s.input else {
+            panic!("expected inline rows")
+        };
+        assert_eq!(flat, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(width, 2);
+
+        let r = parse_line(
+            r#"{"kind": "predict", "model_file": "m.pallas-model",
+                "dataset": "toy2", "scale": 0.1, "storage": "dense"}"#,
+        )
+        .unwrap();
+        let JobKind::Predict(s) = r.kind else { panic!("expected predict kind") };
+        assert!(matches!(s.model, super::super::job::ModelRef::File(_)));
+        assert!(matches!(
+            s.input,
+            super::super::job::PredictInput::Dataset { ref name, scale, .. }
+                if name == "toy2" && scale == 0.1
+        ));
+    }
+
+    #[test]
+    fn parse_predict_rejects_bad_input() {
+        for bad in [
+            // no model reference / both
+            r#"{"kind": "predict", "rows": [[1.0]]}"#,
+            r#"{"kind": "predict", "model_id": "a", "model_file": "b", "rows": [[1.0]]}"#,
+            // no input / both
+            r#"{"kind": "predict", "model_id": "a"}"#,
+            r#"{"kind": "predict", "model_id": "a", "rows": [[1.0]], "dataset": "toy1"}"#,
+            // malformed rows
+            r#"{"kind": "predict", "model_id": "a", "rows": []}"#,
+            r#"{"kind": "predict", "model_id": "a", "rows": [[]]}"#,
+            r#"{"kind": "predict", "model_id": "a", "rows": [[1.0], [1.0, 2.0]]}"#,
+            r#"{"kind": "predict", "model_id": "a", "rows": [["x"]]}"#,
+            r#"{"kind": "predict", "model_id": "a", "rows": 5}"#,
+            // dataset-only fields alongside inline rows
+            r#"{"kind": "predict", "model_id": "a", "rows": [[1.0]], "scale": 0.5}"#,
+            r#"{"kind": "predict", "model_id": "a", "rows": [[1.0]], "storage": "csr"}"#,
+            // unknown field
+            r#"{"kind": "predict", "model_id": "a", "rows": [[1.0]], "points": 3}"#,
+        ] {
+            assert!(parse_line(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn parse_cache_request() {
+        let r = parse_line(r#"{"kind": "cache"}"#).unwrap();
+        let JobKind::Cache(s) = r.kind else { panic!("expected cache kind") };
+        assert!(matches!(s.op, super::super::job::CacheOp::List));
+
+        let r = parse_line(
+            r#"{"kind": "cache", "op": "evict", "target": "model", "model_id": "svm-1"}"#,
+        )
+        .unwrap();
+        let JobKind::Cache(s) = r.kind else { panic!("expected cache kind") };
+        assert!(matches!(s.op, super::super::job::CacheOp::EvictModel(ref id) if id == "svm-1"));
+
+        let r = parse_line(
+            r#"{"kind": "cache", "op": "evict", "target": "instance",
+                "dataset": "toy1", "model": "svm", "scale": 0.05}"#,
+        )
+        .unwrap();
+        let JobKind::Cache(s) = r.kind else { panic!("expected cache kind") };
+        assert!(matches!(s.op, super::super::job::CacheOp::EvictInstance(_)));
+
+        for bad in [
+            r#"{"kind": "cache", "op": "flush"}"#,
+            r#"{"kind": "cache", "op": "evict"}"#,
+            r#"{"kind": "cache", "op": "evict", "target": "model"}"#,
+            r#"{"kind": "cache", "op": "evict", "target": "instance"}"#,
+            r#"{"kind": "cache", "nonsense": 1}"#,
+            // selectors that don't belong to the chosen op must not be
+            // silently ignored (a typo'd evict would degrade to a list)
+            r#"{"kind": "cache", "model_id": "svm-1"}"#,
+            r#"{"kind": "cache", "dataset": "toy1", "scale": 0.1}"#,
+            r#"{"kind": "cache", "op": "evict", "target": "model", "model_id": "m", "dataset": "toy1"}"#,
+            r#"{"kind": "cache", "op": "evict", "target": "instance", "dataset": "toy1", "model_id": "m"}"#,
+        ] {
+            assert!(parse_line(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn serve_train_predict_cache_round_trip() {
+        let mut svc = ScreeningService::new(1); // 1 worker ⇒ in-order execution
+        let mut p = std::env::temp_dir();
+        p.push(format!("dvi_svc_train_{}.pallas-model", std::process::id()));
+        let input = format!(
+            concat!(
+                r#"{{"kind": "train", "dataset": "toy1", "scale": 0.03, "c": 0.5, "tol": 1e-6, "save": "{}", "timings": false}}"#,
+                "\n",
+                r#"{{"kind": "cache", "timings": false}}"#,
+                "\n"
+            ),
+            p.display()
+        );
+        let mut out = Vec::new();
+        svc.serve(input.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "{text}");
+        let train = parse_json(lines[0]).unwrap();
+        assert_eq!(train.get("ok").unwrap().as_bool(), Some(true), "{text}");
+        assert_eq!(train.get("kind").unwrap().as_str(), Some("train"));
+        let model_id = train.get("model_id").unwrap().as_str().unwrap().to_string();
+        assert!(train.get("solve_secs").is_none(), "timings stripped");
+        let cache_list = parse_json(lines[1]).unwrap();
+        assert_eq!(cache_list.get("instances").unwrap().as_array().unwrap().len(), 1);
+        assert_eq!(cache_list.get("models").unwrap().as_array().unwrap().len(), 1);
+        assert!(p.exists(), "artifact persisted");
+
+        // predict by resident id AND from the artifact file: identical
+        // scores, byte for byte, and a double-run of the file variant is
+        // byte-identical too
+        let by_id = format!(
+            r#"{{"kind": "predict", "model_id": "{model_id}", "dataset": "toy1", "scale": 0.03, "timings": false}}"#
+        );
+        let by_file = format!(
+            r#"{{"kind": "predict", "model_file": "{}", "dataset": "toy1", "scale": 0.03, "timings": false}}"#,
+            p.display()
+        );
+        let serve_one = |svc: &mut ScreeningService, line: &str| -> String {
+            let mut out = Vec::new();
+            svc.serve(line.as_bytes(), &mut out).unwrap();
+            String::from_utf8(out).unwrap()
+        };
+        let a = serve_one(&mut svc, &by_id);
+        let b = serve_one(&mut svc, &by_file);
+        let c = serve_one(&mut svc, &by_file);
+        // ids increment across submissions; everything else must be
+        // byte-identical between the two file-loaded runs
+        let strip_id = |text: &str| {
+            let Json::Object(mut o) = parse_json(text.lines().next().unwrap()).unwrap() else {
+                panic!("not an object: {text}")
+            };
+            o.remove("id");
+            Json::Object(o).to_string()
+        };
+        assert_eq!(strip_id(&b), strip_id(&c), "double run must be byte-identical");
+        let ja = parse_json(a.lines().next().unwrap()).unwrap();
+        let jb = parse_json(b.lines().next().unwrap()).unwrap();
+        assert_eq!(ja.get("ok").unwrap().as_bool(), Some(true), "{a}");
+        assert_eq!(jb.get("ok").unwrap().as_bool(), Some(true), "{b}");
+        assert_eq!(
+            ja.get("scores").unwrap().to_string(),
+            jb.get("scores").unwrap().to_string(),
+            "resident and file-loaded scoring agree byte for byte"
+        );
+        assert!(ja.get("labels").is_some(), "svm predictions carry labels");
+
+        // evict the model, then predict-by-id fails cleanly
+        let evict = format!(
+            r#"{{"kind": "cache", "op": "evict", "target": "model", "model_id": "{model_id}", "timings": false}}"#
+        );
+        let e = serve_one(&mut svc, &evict);
+        let je = parse_json(e.lines().next().unwrap()).unwrap();
+        assert_eq!(je.get("evicted").unwrap().as_bool(), Some(true));
+        let miss = serve_one(&mut svc, &by_id);
+        let jm = parse_json(miss.lines().next().unwrap()).unwrap();
+        assert_eq!(jm.get("ok").unwrap().as_bool(), Some(false), "{miss}");
+        std::fs::remove_file(&p).ok();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn preload_warms_the_instance_cache() {
+        let svc = ScreeningService::new(1);
+        let report = svc.preload(&["toy1", "houses", "no-such-set"], 0.03);
+        assert_eq!(report.len(), 3);
+        assert!(matches!(report[0].1, Ok((crate::problem::Model::Svm, _, _))), "{report:?}");
+        // houses is a regression set — preloads under the LAD key,
+        // chosen by peek_task, so no failed trial build is ever counted
+        assert!(matches!(report[1].1, Ok((crate::problem::Model::Lad, _, _))), "{report:?}");
+        assert!(report[2].1.is_err());
+        assert_eq!(svc.cache().len(), 2);
+        assert_eq!(
+            svc.metrics().counter("instance_cache_errors").get(),
+            1,
+            "only the genuinely unknown set counts an error"
+        );
+        assert_eq!(svc.metrics().counter("instance_cache_misses").get(), 2);
+        // a follow-up request for the preloaded set hits
+        let before = svc.metrics().counter("instance_cache_hits").get();
+        svc.cache()
+            .get_or_build(
+                &super::CacheKey::new("toy1", crate::problem::Model::Svm, crate::linalg::Storage::Auto, 0.03),
+                svc.metrics(),
+            )
+            .unwrap();
+        assert_eq!(svc.metrics().counter("instance_cache_hits").get(), before + 1);
+        svc.shutdown();
     }
 
     #[test]

@@ -26,6 +26,10 @@ pub fn resolve(name: &str, scale: f64, task_hint: Task) -> Result<Dataset, Strin
 /// `--storage csr` can drive the whole pipeline through the sparse path
 /// on any dataset). libsvm files parse straight into CSR and are only
 /// densified when `storage` resolves to dense.
+///
+/// NOTE: when adding a name here (or to [`simreal::by_name`]), add it to
+/// [`NAMED_DATASETS`] too — `peek_task_matches_resolution` replays that
+/// table against this resolver, so a missing entry fails tests.
 pub fn resolve_storage(
     name: &str,
     scale: f64,
@@ -60,6 +64,42 @@ pub fn resolve_storage(
         }
     };
     Ok(ds.into_storage(storage))
+}
+
+/// Every concrete (non-parameterized, non-`file:`) registry name with
+/// its task — the single table [`peek_task`] consults and
+/// `peek_task_matches_resolution` replays against [`resolve`], so a name
+/// added here without a resolver arm (or vice versa once the test list
+/// of parameterized prefixes is consulted) fails tests instead of
+/// silently diverging.
+pub const NAMED_DATASETS: &[(&str, Task)] = &[
+    ("toy1", Task::Classification),
+    ("toy2", Task::Classification),
+    ("toy3", Task::Classification),
+    ("ijcnn1", Task::Classification),
+    ("wine", Task::Classification),
+    ("covertype", Task::Classification),
+    ("magic", Task::Regression),
+    ("computer", Task::Regression),
+    ("houses", Task::Regression),
+];
+
+/// The task a registry name will resolve to, WITHOUT building the
+/// dataset — `None` when the name is unknown or the task depends on
+/// external content (`file:` paths take a caller hint). Lets callers
+/// like `serve --preload` pick the matching model up front instead of
+/// paying (and mis-counting) a failed trial construction.
+pub fn peek_task(name: &str) -> Option<Task> {
+    if let Some((_, task)) = NAMED_DATASETS.iter().find(|(n, _)| *n == name) {
+        return Some(*task);
+    }
+    if name.starts_with("gauss:") || name.starts_with("sparse:") {
+        Some(Task::Classification)
+    } else if name.starts_with("linreg:") || name.starts_with("sparsereg:") {
+        Some(Task::Regression)
+    } else {
+        None
+    }
 }
 
 fn scaled_per_class(scale: f64) -> usize {
@@ -145,6 +185,27 @@ mod tests {
         let dense = resolve_storage(&name, 1.0, Task::Classification, Storage::Dense).unwrap();
         assert!(!dense.x.is_sparse());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn peek_task_matches_resolution() {
+        // every named dataset, driven from the shared NAMED_DATASETS
+        // table peek_task consults, plus one of each parameterized
+        // prefix: the peeked task must match what resolution produces
+        let mut probes: Vec<(String, f64)> = NAMED_DATASETS
+            .iter()
+            .map(|(n, _)| (n.to_string(), if n.starts_with("toy") { 0.05 } else { 0.005 }))
+            .collect();
+        for p in ["gauss:20:3", "sparse:20:10", "linreg:20:3", "sparsereg:20:10"] {
+            probes.push((p.to_string(), 1.0));
+        }
+        for (name, scale) in probes {
+            let task = peek_task(&name).expect(&name);
+            let ds = resolve(&name, scale, task).unwrap();
+            assert_eq!(ds.task, task, "{name}");
+        }
+        assert_eq!(peek_task("no-such-set"), None);
+        assert_eq!(peek_task("file:/tmp/x.svm"), None, "file content decides");
     }
 
     #[test]

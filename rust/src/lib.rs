@@ -20,6 +20,12 @@
 //! * [`runtime`] — a PJRT client that executes the AOT-compiled JAX/Pallas
 //!   screening graph (built once by `python/compile/aot.py`; Python is
 //!   never on the request path).
+//! * [`model`] — the model artifact subsystem: [`model::TrainedModel`]
+//!   extraction from a solved dual point, the versioned `.pallas-model`
+//!   binary format (save/load round-trips bit-identically, corrupt files
+//!   are rejected with typed errors), and the sharded batch prediction
+//!   engine — the layer that closes train → screen → solve → persist →
+//!   predict.
 //! * [`coordinator`] — a multi-threaded job coordinator and screening
 //!   service: the L3 entry point that examples and the CLI drive.
 //! * [`data`], [`linalg`], [`config`], [`report`], [`validation`],
@@ -49,6 +55,7 @@ pub mod data;
 pub mod experiments;
 pub mod linalg;
 pub mod metrics;
+pub mod model;
 pub mod path;
 pub mod problem;
 pub mod report;

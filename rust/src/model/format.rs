@@ -1,0 +1,521 @@
+//! The versioned `.pallas-model` binary on-disk format (std-only IO).
+//!
+//! Layout (all multi-byte fields little-endian):
+//!
+//! ```text
+//! magic      [8]  b"PALLASMD"
+//! version    u32  FORMAT_VERSION (readers reject anything else)
+//! model      u8   0 = svm, 1 = lad, 2 = wsvm
+//! storage    u8   0 = dense, 1 = csr      (layout of the z_active payload)
+//! reserved   u16  0
+//! l          u64  training rows
+//! n          u64  feature dimension
+//! n_support  u64  E-set size
+//! n_active   u64  θ≠0 row count
+//! c, scale, tol, bias                      4 × f64
+//! dataset    u32 length + utf8 bytes       registry key
+//! w          n × f64
+//! support    n_support × u32               ascending
+//! active     n_active × u32                ascending
+//! theta      n_active × f64
+//! z_active   dense: n_active·n × f64
+//!            csr:   nnz u64, indptr (n_active+1) × u64,
+//!                   indices nnz × u32, values nnz × f64
+//! checksum   u64  FNV-1a 64 over every preceding byte
+//! ```
+//!
+//! Versioning policy: any layout change bumps [`FORMAT_VERSION`]; loaders
+//! reject unknown versions with [`ModelIoError::UnsupportedVersion`]
+//! rather than guessing. Floats are stored as raw IEEE-754 bits, so
+//! `save → load` round-trips every value bit-for-bit. The checksum is
+//! verified before any field is parsed, so a bit-flipped artifact fails
+//! with [`ModelIoError::ChecksumMismatch`] and a truncated one with
+//! [`ModelIoError::Corrupt`] — never a panic or a silently wrong model.
+
+use super::trained::{fnv64, TrainedModel};
+use crate::linalg::{CsrMatrix, RowMatrix, Rows, Storage};
+use crate::problem::Model;
+use std::path::Path;
+
+/// File magic: 8 bytes at offset 0.
+pub const MAGIC: [u8; 8] = *b"PALLASMD";
+
+/// Current (and only) format version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Typed artifact IO errors.
+#[derive(Debug)]
+pub enum ModelIoError {
+    /// Underlying filesystem error.
+    Io(std::io::Error),
+    /// The file does not start with [`MAGIC`].
+    BadMagic,
+    /// The file's version is not [`FORMAT_VERSION`].
+    UnsupportedVersion(u32),
+    /// Structural violation: truncation, counts that do not fit the
+    /// remaining bytes, out-of-range indices, non-monotone indptr, …
+    Corrupt(String),
+    /// The trailing FNV-64 digest does not match the content.
+    ChecksumMismatch { expected: u64, found: u64 },
+}
+
+impl std::fmt::Display for ModelIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelIoError::Io(e) => write!(f, "model io: {e}"),
+            ModelIoError::BadMagic => write!(f, "not a .pallas-model file (bad magic)"),
+            ModelIoError::UnsupportedVersion(v) => {
+                write!(f, "unsupported .pallas-model version {v} (this build reads {FORMAT_VERSION})")
+            }
+            ModelIoError::Corrupt(msg) => write!(f, "corrupt .pallas-model: {msg}"),
+            ModelIoError::ChecksumMismatch { expected, found } => write!(
+                f,
+                "corrupt .pallas-model: checksum mismatch (stored {expected:016x}, content {found:016x})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ModelIoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ModelIoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ModelIoError {
+    fn from(e: std::io::Error) -> Self {
+        ModelIoError::Io(e)
+    }
+}
+
+fn model_tag(m: Model) -> u8 {
+    match m {
+        Model::Svm => 0,
+        Model::Lad => 1,
+        Model::WeightedSvm => 2,
+    }
+}
+
+fn model_from_tag(t: u8) -> Option<Model> {
+    match t {
+        0 => Some(Model::Svm),
+        1 => Some(Model::Lad),
+        2 => Some(Model::WeightedSvm),
+        _ => None,
+    }
+}
+
+/// Serialize a model to its on-disk bytes (checksum included).
+pub fn encode(m: &TrainedModel) -> Vec<u8> {
+    let mut out = Vec::with_capacity(128 + 8 * m.w.len() + 12 * m.active.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.push(model_tag(m.model));
+    out.push(match m.z_active {
+        Rows::Dense(_) => 0u8,
+        Rows::Sparse(_) => 1u8,
+    });
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&(m.l as u64).to_le_bytes());
+    out.extend_from_slice(&(m.n() as u64).to_le_bytes());
+    out.extend_from_slice(&(m.support.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(m.active.len() as u64).to_le_bytes());
+    for v in [m.c, m.scale, m.tol, m.bias] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&(m.dataset.len() as u32).to_le_bytes());
+    out.extend_from_slice(m.dataset.as_bytes());
+    for &v in &m.w {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for &i in &m.support {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    for &i in &m.active {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    for &v in &m.theta_active {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    match &m.z_active {
+        Rows::Dense(d) => {
+            for &v in d.flat() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Rows::Sparse(s) => {
+            out.extend_from_slice(&(s.nnz() as u64).to_le_bytes());
+            for &p in s.indptr() {
+                out.extend_from_slice(&(p as u64).to_le_bytes());
+            }
+            for r in 0..s.rows() {
+                let (idx, _) = s.row(r);
+                for &j in idx {
+                    out.extend_from_slice(&j.to_le_bytes());
+                }
+            }
+            for r in 0..s.rows() {
+                let (_, val) = s.row(r);
+                for &v in val {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+    let sum = fnv64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Write a model artifact to `path`.
+pub fn save(m: &TrainedModel, path: &Path) -> Result<(), ModelIoError> {
+    std::fs::write(path, encode(m))?;
+    Ok(())
+}
+
+/// Read a model artifact from `path`.
+pub fn load(path: &Path) -> Result<TrainedModel, ModelIoError> {
+    decode(&std::fs::read(path)?)
+}
+
+/// Bounds-checked little-endian reader over the artifact bytes.
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, len: usize, what: &str) -> Result<&'a [u8], ModelIoError> {
+        let end = self
+            .pos
+            .checked_add(len)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| ModelIoError::Corrupt(format!("truncated in {what}")))?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, ModelIoError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, ModelIoError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, ModelIoError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, ModelIoError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64, ModelIoError> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// A `count` check that fails *before* any allocation: a corrupt
+    /// count field must produce an error, not an OOM abort.
+    fn usize_count(&mut self, what: &str) -> Result<usize, ModelIoError> {
+        let v = self.u64(what)?;
+        // every counted element occupies ≥ 4 bytes, so a legal count can
+        // never exceed the file length
+        if v > self.b.len() as u64 {
+            return Err(ModelIoError::Corrupt(format!("{what} count {v} exceeds file size")));
+        }
+        Ok(v as usize)
+    }
+
+    fn f64_vec(&mut self, count: usize, what: &str) -> Result<Vec<f64>, ModelIoError> {
+        let bytes = self.take(count.checked_mul(8).ok_or_else(|| {
+            ModelIoError::Corrupt(format!("{what} size overflows"))
+        })?, what)?;
+        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u32_vec(&mut self, count: usize, what: &str) -> Result<Vec<u32>, ModelIoError> {
+        let bytes = self.take(count.checked_mul(4).ok_or_else(|| {
+            ModelIoError::Corrupt(format!("{what} size overflows"))
+        })?, what)?;
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+fn check_indices(idx: &[u32], bound: usize, what: &str) -> Result<(), ModelIoError> {
+    for w in idx.windows(2) {
+        if w[0] >= w[1] {
+            return Err(ModelIoError::Corrupt(format!("{what} indices not strictly ascending")));
+        }
+    }
+    if let Some(&last) = idx.last() {
+        if last as usize >= bound {
+            return Err(ModelIoError::Corrupt(format!(
+                "{what} index {last} out of range (bound {bound})"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Parse artifact bytes. Magic, version, and checksum are verified before
+/// any payload field; every structural invariant the predictor relies on
+/// is re-validated so a corrupt file can never reach the scoring kernels.
+pub fn decode(bytes: &[u8]) -> Result<TrainedModel, ModelIoError> {
+    if bytes.len() < MAGIC.len() + 4 + 8 {
+        return Err(ModelIoError::Corrupt("file shorter than header".into()));
+    }
+    if bytes[..MAGIC.len()] != MAGIC {
+        return Err(ModelIoError::BadMagic);
+    }
+    let content = &bytes[..bytes.len() - 8];
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    let computed = fnv64(content);
+    if stored != computed {
+        return Err(ModelIoError::ChecksumMismatch { expected: stored, found: computed });
+    }
+
+    let mut r = Reader { b: content, pos: MAGIC.len() };
+    let version = r.u32("version")?;
+    if version != FORMAT_VERSION {
+        return Err(ModelIoError::UnsupportedVersion(version));
+    }
+    let model = model_from_tag(r.u8("model tag")?)
+        .ok_or_else(|| ModelIoError::Corrupt("unknown model tag".into()))?;
+    let storage_tag = r.u8("storage tag")?;
+    if storage_tag > 1 {
+        return Err(ModelIoError::Corrupt("unknown storage tag".into()));
+    }
+    let _reserved = r.u16("reserved")?;
+    // l is pure metadata (a model trained on 1M rows with a tiny active
+    // set lives in a small file), so it is only bounded by the u32 index
+    // range the support/active vectors use — unlike the payload counts
+    // below, which must fit the remaining bytes.
+    let l_raw = r.u64("l")?;
+    if l_raw > u32::MAX as u64 {
+        return Err(ModelIoError::Corrupt(format!("l {l_raw} exceeds the u32 index range")));
+    }
+    let l = l_raw as usize;
+    let n = r.usize_count("n")?;
+    let n_support = r.usize_count("support")?;
+    let n_active = r.usize_count("active")?;
+    if n_support > l || n_active > l {
+        return Err(ModelIoError::Corrupt("support/active count exceeds l".into()));
+    }
+    let c = r.f64("c")?;
+    let scale = r.f64("scale")?;
+    let tol = r.f64("tol")?;
+    let bias = r.f64("bias")?;
+    if !(c.is_finite() && c > 0.0) {
+        return Err(ModelIoError::Corrupt(format!("non-positive or non-finite C {c}")));
+    }
+    let ds_len = r.u32("dataset length")? as usize;
+    let dataset = std::str::from_utf8(r.take(ds_len, "dataset")?)
+        .map_err(|_| ModelIoError::Corrupt("dataset key is not utf-8".into()))?
+        .to_string();
+    let w = r.f64_vec(n, "w")?;
+    let support = r.u32_vec(n_support, "support")?;
+    check_indices(&support, l, "support")?;
+    let active = r.u32_vec(n_active, "active")?;
+    check_indices(&active, l, "active")?;
+    let theta_active = r.f64_vec(n_active, "theta")?;
+    let (z_active, storage) = if storage_tag == 0 {
+        let flat = r.f64_vec(
+            n_active.checked_mul(n).ok_or_else(|| {
+                ModelIoError::Corrupt("dense payload size overflows".into())
+            })?,
+            "dense rows",
+        )?;
+        (Rows::Dense(RowMatrix::from_flat(n_active, n, flat)), Storage::Dense)
+    } else {
+        let nnz = r.usize_count("nnz")?;
+        let indptr_raw = {
+            let bytes = r.take(
+                (n_active + 1).checked_mul(8).ok_or_else(|| {
+                    ModelIoError::Corrupt("indptr size overflows".into())
+                })?,
+                "indptr",
+            )?;
+            bytes
+                .chunks_exact(8)
+                .map(|ch| u64::from_le_bytes(ch.try_into().unwrap()) as usize)
+                .collect::<Vec<usize>>()
+        };
+        if indptr_raw.first() != Some(&0) || indptr_raw.last() != Some(&nnz) {
+            return Err(ModelIoError::Corrupt("indptr must run 0..nnz".into()));
+        }
+        if indptr_raw.windows(2).any(|w| w[0] > w[1]) {
+            return Err(ModelIoError::Corrupt("indptr not monotone".into()));
+        }
+        let indices = r.u32_vec(nnz, "csr indices")?;
+        let values = r.f64_vec(nnz, "csr values")?;
+        // rebuild through the validating constructor: per-row entries,
+        // ascending column check included
+        let mut entries: Vec<Vec<(usize, f64)>> = Vec::with_capacity(n_active);
+        for row in 0..n_active {
+            let (a, b) = (indptr_raw[row], indptr_raw[row + 1]);
+            let mut feats = Vec::with_capacity(b - a);
+            let mut prev: Option<u32> = None;
+            for k in a..b {
+                let j = indices[k];
+                if j as usize >= n {
+                    return Err(ModelIoError::Corrupt(format!(
+                        "csr column {j} out of range (n = {n})"
+                    )));
+                }
+                if let Some(p) = prev {
+                    if p >= j {
+                        return Err(ModelIoError::Corrupt(
+                            "csr columns not strictly ascending within a row".into(),
+                        ));
+                    }
+                }
+                prev = Some(j);
+                feats.push((j as usize, values[k]));
+            }
+            entries.push(feats);
+        }
+        (Rows::Sparse(CsrMatrix::from_rows(entries, n)), Storage::Csr)
+    };
+    if r.pos != content.len() {
+        return Err(ModelIoError::Corrupt(format!(
+            "{} trailing bytes after payload",
+            content.len() - r.pos
+        )));
+    }
+    Ok(TrainedModel {
+        model,
+        dataset,
+        storage,
+        scale,
+        c,
+        tol,
+        l,
+        bias,
+        w,
+        support,
+        active,
+        theta_active,
+        z_active,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::trained::trained_toy;
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn encode_decode_round_trips_bit_identically() {
+        for storage in [Storage::Dense, Storage::Csr] {
+            let m = trained_toy(storage);
+            let enc = encode(&m);
+            let back = decode(&enc).expect("decode");
+            assert_eq!(back.model, m.model);
+            assert_eq!(back.dataset, m.dataset);
+            assert_eq!(back.storage, m.storage);
+            assert_eq!(back.l, m.l);
+            assert_eq!(back.scale.to_bits(), m.scale.to_bits());
+            assert_eq!(back.c.to_bits(), m.c.to_bits());
+            assert_eq!(back.tol.to_bits(), m.tol.to_bits());
+            assert_eq!(back.bias.to_bits(), m.bias.to_bits());
+            assert_eq!(bits(&back.w), bits(&m.w));
+            assert_eq!(back.support, m.support);
+            assert_eq!(back.active, m.active);
+            assert_eq!(bits(&back.theta_active), bits(&m.theta_active));
+            assert_eq!(back.z_active, m.z_active);
+            assert_eq!(back.id(), m.id());
+            // a second encode of the decoded model is byte-identical
+            assert_eq!(encode(&back), enc, "storage {storage:?}");
+        }
+    }
+
+    #[test]
+    fn save_load_file_round_trip() {
+        let m = trained_toy(Storage::Dense);
+        let mut p = std::env::temp_dir();
+        p.push(format!("dvi_model_fmt_{}.pallas-model", std::process::id()));
+        save(&m, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(bits(&back.w), bits(&m.w));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncation_at_every_prefix_is_rejected_cleanly() {
+        let enc = encode(&trained_toy(Storage::Csr));
+        // every strict prefix must error (not panic, not succeed);
+        // step 7 keeps the loop fast while hitting unaligned cuts
+        for cut in (0..enc.len()).step_by(7) {
+            let e = decode(&enc[..cut]);
+            assert!(e.is_err(), "prefix of {cut} bytes decoded");
+        }
+        let e = decode(&enc[..enc.len() - 1]);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn bit_flips_are_rejected_by_the_checksum() {
+        let enc = encode(&trained_toy(Storage::Dense));
+        // flip one bit in a spread of positions across header and payload
+        for pos in [8usize, 13, 40, enc.len() / 2, enc.len() - 9] {
+            let mut bad = enc.clone();
+            bad[pos] ^= 0x10;
+            match decode(&bad) {
+                Err(ModelIoError::ChecksumMismatch { .. }) | Err(ModelIoError::BadMagic) => {}
+                other => panic!("flip at {pos}: expected checksum/magic error, got {other:?}"),
+            }
+        }
+        // flipping the stored checksum itself also fails
+        let mut bad = enc.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 1;
+        assert!(matches!(decode(&bad), Err(ModelIoError::ChecksumMismatch { .. })));
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed_errors() {
+        let enc = encode(&trained_toy(Storage::Dense));
+        let mut bad = enc.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode(&bad), Err(ModelIoError::BadMagic)));
+
+        // bump the version and re-seal the checksum so ONLY the version
+        // check can fire
+        let mut v2 = enc.clone();
+        v2[8] = 99;
+        let body_len = v2.len() - 8;
+        let sum = crate::model::trained::fnv64(&v2[..body_len]);
+        v2[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode(&v2), Err(ModelIoError::UnsupportedVersion(99))));
+    }
+
+    #[test]
+    fn corrupt_counts_fail_before_allocation() {
+        let enc = encode(&trained_toy(Storage::Dense));
+        // n lives at offset 8 (magic) + 4 (version) + 4 (tags/reserved)
+        // + 8 (l) = 24; blow it up to a huge count and re-seal
+        let mut bad = enc.clone();
+        bad[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+        let body_len = bad.len() - 8;
+        let sum = crate::model::trained::fnv64(&bad[..body_len]);
+        bad[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode(&bad), Err(ModelIoError::Corrupt(_))));
+    }
+
+    #[test]
+    fn error_messages_render() {
+        let e = ModelIoError::ChecksumMismatch { expected: 1, found: 2 };
+        assert!(e.to_string().contains("checksum"));
+        assert!(ModelIoError::BadMagic.to_string().contains("magic"));
+        assert!(ModelIoError::UnsupportedVersion(9).to_string().contains('9'));
+    }
+}

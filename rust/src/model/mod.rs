@@ -1,0 +1,44 @@
+//! Model artifact subsystem: persist solved classifiers, serve batch
+//! prediction.
+//!
+//! DVI screening's selling point (PAPER.md §1) is that the final
+//! classifier depends only on a small set of instances — yet until this
+//! layer existed, a solved path threw its `(w, θ)` away and nothing in
+//! the system could answer "classify these rows" without re-solving.
+//! Ogawa et al. (*Safe Sample Screening for Support Vector Machines*,
+//! PAPERS.md) make the same observation from the test-phase side: a
+//! screened SVM is cheap to *serve* precisely because it is characterized
+//! by a small support set. This module closes the loop
+//! train → screen → solve → **persist → predict**:
+//!
+//! * [`TrainedModel`] ([`trained`]) — the solved classifier at one C:
+//!   model kind, `w` (= −C·Zᵀθ*), the support-vector index set from the
+//!   KKT classification, the *active* rows (θᵢ ≠ 0) in θ-form, and the
+//!   training metadata (dataset key, C, storage, solver tol, support
+//!   count vs l).
+//! * [`format`] — the versioned `.pallas-model` binary on-disk format:
+//!   magic + version + header + little-endian payload + FNV-64 checksum,
+//!   std-only IO. `save → load` round-trips every float bit-for-bit;
+//!   truncated or bit-flipped artifacts are rejected with typed
+//!   [`ModelIoError`]s, never mis-parsed.
+//! * [`predict`] — the sharded batch prediction engine: scores a
+//!   [`crate::linalg::Rows`] batch (dense or CSR) against a model using
+//!   the 8-accumulator dot kernels on
+//!   [`crate::linalg::par::run_sharded_ranges`] workers. Scores are
+//!   bit-identical for every thread count and storage. The optional
+//!   support-only path re-derives w from just the stored active rows in
+//!   θ-form — bit-identical to the stored w by the same
+//!   accumulation-order argument the CSR kernels rely on.
+//!
+//! The coordinator layers a `ModelCache` (LRU by bytes, a sibling of the
+//! instance cache), `"kind": "train"` / `"kind": "predict"` service
+//! requests, and the `dvi train` / `dvi predict` CLI verbs on top of
+//! this module.
+
+pub mod format;
+pub mod predict;
+pub mod trained;
+
+pub use format::{load, save, ModelIoError, FORMAT_VERSION, MAGIC};
+pub use predict::{labels, scores, scores_flat, PredictOptions};
+pub use trained::TrainedModel;

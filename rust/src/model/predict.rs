@@ -1,0 +1,251 @@
+//! Sharded batch prediction: score a [`Rows`] batch against a
+//! [`TrainedModel`].
+//!
+//! Each row's score is `⟨xᵢ, w⟩` (+ bias when one ever becomes nonzero),
+//! evaluated through [`crate::linalg::RowView::dot`] — the same
+//! 8-accumulator kernels the screening scan uses, bit-identical across
+//! dense and CSR storage of the same data. Batches are split into
+//! contiguous shards balanced by stored-entry count
+//! ([`Rows::balanced_shards`]) and evaluated on
+//! [`par::run_sharded_ranges`] workers; every row's expression is
+//! independent of the shard boundaries, so scores are byte-identical for
+//! any thread count.
+
+use super::trained::TrainedModel;
+use crate::data::Task;
+use crate::linalg::{par, Rows};
+
+/// Prediction options.
+#[derive(Clone, Copy, Debug)]
+pub struct PredictOptions {
+    /// Worker threads for the sharded scoring pass (crate convention:
+    /// 1 = serial, 0 = auto-detect). Scores are identical either way.
+    pub threads: usize,
+    /// Score against w re-derived from the stored support/active rows in
+    /// θ-form instead of the stored w. Bit-identical to full-w scoring
+    /// (see [`TrainedModel::reconstruct_w`]) — this path exists so an
+    /// artifact's θ-form payload is exercised end-to-end and a
+    /// w-stripped artifact variant stays reachable.
+    pub support_only: bool,
+}
+
+impl Default for PredictOptions {
+    fn default() -> Self {
+        PredictOptions { threads: 1, support_only: false }
+    }
+}
+
+/// Score every row of `rows` against `model`. Errors (rather than
+/// panics) on a feature-dimension mismatch — batches arrive over the
+/// wire.
+pub fn scores(
+    model: &TrainedModel,
+    rows: &Rows,
+    opts: &PredictOptions,
+) -> Result<Vec<f64>, String> {
+    if rows.cols() != model.n() {
+        return Err(format!(
+            "rows have {} features but model `{}` expects {}",
+            rows.cols(),
+            model.id(),
+            model.n()
+        ));
+    }
+    let rebuilt;
+    let w: &[f64] = if opts.support_only {
+        rebuilt = model.reconstruct_w();
+        &rebuilt
+    } else {
+        &model.w
+    };
+    Ok(score_rows(rows, w, model.bias, opts.threads))
+}
+
+/// Score a flat row-major dense buffer (`width` columns) without
+/// materializing a [`Rows`] — the zero-copy path for inline service
+/// batches, which arrive already flattened. Bit-identical to wrapping
+/// the same buffer in `Rows::Dense` and calling [`scores`]: each row's
+/// expression is the same `linalg::dot` the dense `RowView` dispatches
+/// to, and uniform sharding is exactly what `balanced_shards` produces
+/// for dense storage.
+pub fn scores_flat(
+    model: &TrainedModel,
+    flat: &[f64],
+    width: usize,
+    opts: &PredictOptions,
+) -> Result<Vec<f64>, String> {
+    if width == 0 || width != model.n() {
+        return Err(format!(
+            "rows have {width} features but model `{}` expects {}",
+            model.id(),
+            model.n()
+        ));
+    }
+    if flat.len() % width != 0 {
+        return Err(format!(
+            "flat buffer of {} values is not a whole number of width-{width} rows",
+            flat.len()
+        ));
+    }
+    let rebuilt;
+    let w: &[f64] = if opts.support_only {
+        rebuilt = model.reconstruct_w();
+        &rebuilt
+    } else {
+        &model.w
+    };
+    let (bias, l) = (model.bias, flat.len() / width);
+    let shards = par::run_sharded(l, opts.threads, |r| {
+        let mut out = Vec::with_capacity(r.end - r.start);
+        for i in r {
+            let s = crate::linalg::dot(&flat[i * width..(i + 1) * width], w);
+            out.push(if bias != 0.0 { s + bias } else { s });
+        }
+        out
+    });
+    let mut out = Vec::with_capacity(l);
+    for mut s in shards {
+        out.append(&mut s);
+    }
+    Ok(out)
+}
+
+/// The scoring kernel: out[i] = ⟨rowᵢ, w⟩ (+ bias when nonzero), sharded
+/// over `threads` workers. Free function so benches and tests can drive
+/// it against an arbitrary w.
+pub fn score_rows(rows: &Rows, w: &[f64], bias: f64, threads: usize) -> Vec<f64> {
+    let l = rows.rows();
+    if l == 0 {
+        return Vec::new();
+    }
+    let t = par::effective_threads(threads, l);
+    let shards = par::run_sharded_ranges(rows.balanced_shards(t), |r| {
+        let mut out = Vec::with_capacity(r.end - r.start);
+        for i in r {
+            let s = rows.row(i).dot(w);
+            // adding a literal 0.0 would flip a −0.0 score's sign bit,
+            // breaking bit-equality with direct ⟨x, w⟩ evaluation
+            out.push(if bias != 0.0 { s + bias } else { s });
+        }
+        out
+    });
+    let mut out = Vec::with_capacity(l);
+    for mut s in shards {
+        out.append(&mut s);
+    }
+    out
+}
+
+/// ±1 labels from scores (classification models; `score > 0 → +1`).
+pub fn labels(scores: &[f64]) -> Vec<i8> {
+    scores.iter().map(|&s| if s > 0.0 { 1 } else { -1 }).collect()
+}
+
+/// Whether this model's scores carry class labels.
+pub fn is_classifier(model: &TrainedModel) -> bool {
+    model.model.expected_task() == Task::Classification
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Storage;
+    use crate::model::trained::trained_toy;
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn batch(storage: Storage) -> Rows {
+        let ds = crate::data::synth::toy_gaussian(23, 40, 1.0, 0.75);
+        ds.x.into_storage(storage)
+    }
+
+    #[test]
+    fn scores_match_direct_dot_bitwise_for_all_threads_and_storages() {
+        let m = trained_toy(Storage::Dense);
+        let dense = batch(Storage::Dense);
+        let direct: Vec<f64> = (0..dense.rows()).map(|i| dense.row(i).dot(&m.w)).collect();
+        for storage in [Storage::Dense, Storage::Csr] {
+            let rows = batch(storage);
+            for threads in [1usize, 2, 4, 0] {
+                let got = scores(&m, &rows, &PredictOptions { threads, support_only: false })
+                    .unwrap();
+                assert_eq!(bits(&got), bits(&direct), "{storage:?} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn support_only_scores_are_bit_identical() {
+        for storage in [Storage::Dense, Storage::Csr] {
+            let m = trained_toy(storage);
+            let rows = batch(Storage::Dense);
+            let full = scores(&m, &rows, &PredictOptions::default()).unwrap();
+            let sup =
+                scores(&m, &rows, &PredictOptions { threads: 2, support_only: true }).unwrap();
+            assert_eq!(bits(&full), bits(&sup), "storage {storage:?}");
+        }
+    }
+
+    #[test]
+    fn scores_flat_matches_rows_path_bitwise() {
+        let m = trained_toy(Storage::Dense);
+        let rows = batch(Storage::Dense);
+        let flat: Vec<f64> = (0..rows.rows()).flat_map(|i| rows.row(i).to_vec()).collect();
+        for (threads, support_only) in [(1usize, false), (3, false), (2, true)] {
+            let opts = PredictOptions { threads, support_only };
+            let via_rows = scores(&m, &rows, &opts).unwrap();
+            let via_flat = scores_flat(&m, &flat, m.n(), &opts).unwrap();
+            assert_eq!(bits(&via_rows), bits(&via_flat), "t={threads} s={support_only}");
+        }
+        assert!(scores_flat(&m, &[], 0, &PredictOptions::default()).is_err());
+        assert!(scores_flat(&m, &[1.0; 6], 3, &PredictOptions::default()).is_err());
+        // ragged buffer is an error, not a silent truncation
+        assert!(scores_flat(&m, &[1.0; 5], m.n(), &PredictOptions::default()).is_err());
+    }
+
+    #[test]
+    fn dimension_mismatch_is_an_error() {
+        let m = trained_toy(Storage::Dense);
+        let wide = Rows::Dense(crate::linalg::RowMatrix::zeros(3, m.n() + 1));
+        assert!(scores(&m, &wide, &PredictOptions::default()).is_err());
+    }
+
+    #[test]
+    fn empty_batch_scores_empty() {
+        let m = trained_toy(Storage::Dense);
+        let empty = Rows::Dense(crate::linalg::RowMatrix::zeros(0, m.n()));
+        assert!(scores(&m, &empty, &PredictOptions::default()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn labels_and_classifier_flag() {
+        assert_eq!(labels(&[0.5, -0.1, 0.0]), vec![1, -1, -1]);
+        let m = trained_toy(Storage::Dense);
+        assert!(is_classifier(&m));
+        // separable toy: the trained model should classify its own
+        // training distribution well above chance
+        let ds = crate::data::synth::toy_gaussian(23, 40, 1.0, 0.75);
+        let s = scores(&m, &ds.x, &PredictOptions::default()).unwrap();
+        let correct = labels(&s)
+            .iter()
+            .zip(&ds.y)
+            .filter(|(&p, &y)| p as f64 * y > 0.0)
+            .count();
+        assert!(correct * 2 > ds.len(), "accuracy {}/{}", correct, ds.len());
+    }
+
+    #[test]
+    fn bias_zero_preserves_negative_zero_scores() {
+        let m = {
+            let mut m = trained_toy(Storage::Dense);
+            m.w = vec![0.0, -0.0];
+            m
+        };
+        let rows = Rows::Dense(crate::linalg::RowMatrix::from_flat(1, 2, vec![1.0, 1.0]));
+        let s = scores(&m, &rows, &PredictOptions::default()).unwrap();
+        let direct = rows.row(0).dot(&m.w);
+        assert_eq!(s[0].to_bits(), direct.to_bits());
+    }
+}

@@ -1,0 +1,320 @@
+//! The trained-model artifact: everything prediction needs, nothing the
+//! training pipeline keeps for itself.
+
+use crate::linalg::{self, Rows, Storage};
+use crate::problem::{classify_kkt, Instance, KktClass, Model};
+
+/// A solved classifier/regressor at one C, extracted from a dual optimum
+/// θ*(C) on a built [`Instance`].
+///
+/// Two redundant representations are stored on purpose:
+///
+/// * `w` — the primal weights −C·Zᵀθ*, exactly as the training solve
+///   produced them (the fast full-w scoring path);
+/// * the *active set* — the rows with θᵢ ≠ 0 (for SVM: E ∪ L in the
+///   paper's KKT partition) together with their θ values and their Z
+///   rows, in the training instance's storage. These are the only rows
+///   that contribute to w, so [`TrainedModel::reconstruct_w`] can replay
+///   u = Σᵢ θᵢ·zᵢ from them alone — **bit-identical** to the stored `w`,
+///   because both [`crate::linalg::RowMatrix::t_matvec`] and
+///   [`crate::linalg::CsrMatrix::t_matvec`] already skip zero
+///   coefficients and accumulate rows in ascending index order through
+///   the same axpy kernels the replay uses.
+///
+/// `support` is the E-set (margin support vectors) from the KKT
+/// classification at tolerance `tol` — the metadata the serving layer
+/// reports as "support count vs l".
+#[derive(Clone, Debug)]
+pub struct TrainedModel {
+    pub model: Model,
+    /// Training dataset registry key (what a client would re-resolve).
+    pub dataset: String,
+    /// Resolved storage of the training instance (`Dense` or `Csr`,
+    /// never `Auto`) — also the storage of `z_active`.
+    pub storage: Storage,
+    /// Dataset scale the instance was built with.
+    pub scale: f64,
+    /// The regularization parameter the model was solved at.
+    pub c: f64,
+    /// Solver tolerance of the training solve (also the KKT dead-band
+    /// used to classify support vectors).
+    pub tol: f64,
+    /// Training rows l.
+    pub l: usize,
+    /// Intercept. Always 0.0 today — problem (3) is interceptless (LAD
+    /// absorbs it by centering targets) — but the format reserves the
+    /// slot so a biased variant is a payload change, not a version bump.
+    pub bias: f64,
+    /// Primal weights w*(C) = −C·Zᵀθ*(C), length n.
+    pub w: Vec<f64>,
+    /// E-set (margin support vector) indices, ascending.
+    pub support: Vec<u32>,
+    /// Indices with θᵢ ≠ 0, ascending — the rows w depends on.
+    pub active: Vec<u32>,
+    /// θ values at the active rows (same order as `active`).
+    pub theta_active: Vec<f64>,
+    /// The active rows of Z, selected in `active` order, in the training
+    /// instance's storage.
+    pub z_active: Rows,
+}
+
+impl TrainedModel {
+    /// Extract the artifact from a solved dual point. `theta` must be the
+    /// optimum of the boxed QP at `c` on `inst` (the caller's solver
+    /// guarantees it to tolerance `tol`); `dataset`/`scale` are the
+    /// registry key the instance was resolved from.
+    pub fn from_solution(
+        inst: &Instance,
+        dataset: &str,
+        scale: f64,
+        c: f64,
+        tol: f64,
+        theta: &[f64],
+    ) -> TrainedModel {
+        assert_eq!(theta.len(), inst.len(), "theta length must equal l");
+        assert!(c.is_finite() && c > 0.0, "C must be finite and positive");
+        assert!(inst.len() <= u32::MAX as usize, "row count exceeds u32 index range");
+        // u recomputed exactly from θ (not the solver's incrementally
+        // maintained copy) so w is a pure function of θ — the same
+        // convention the coordinator's screen jobs follow.
+        let w = inst.w_from_theta(c, theta);
+        let support: Vec<u32> = classify_kkt(inst, &w, tol)
+            .indices_of(KktClass::E)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        let active_usize: Vec<usize> =
+            (0..theta.len()).filter(|&i| theta[i] != 0.0).collect();
+        let theta_active: Vec<f64> = active_usize.iter().map(|&i| theta[i]).collect();
+        let z_active = inst.z.select_rows(&active_usize);
+        let storage = match &inst.z {
+            Rows::Dense(_) => Storage::Dense,
+            Rows::Sparse(_) => Storage::Csr,
+        };
+        TrainedModel {
+            model: inst.model,
+            dataset: dataset.to_string(),
+            storage,
+            scale,
+            c,
+            tol,
+            l: inst.len(),
+            bias: 0.0,
+            w,
+            support,
+            active: active_usize.into_iter().map(|i| i as u32).collect(),
+            theta_active,
+            z_active,
+        }
+    }
+
+    /// Feature dimension n.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Deterministic model identity: the wire name plus an FNV-64 digest
+    /// of the training key (dataset, resolved storage, scale/C/tol bit
+    /// patterns, l) *continued over the solved weights' bit patterns*.
+    /// The content digest matters: solver knobs the key cannot see (seed,
+    /// iteration caps, shrinking, or an artifact produced by a different
+    /// solver build) change w, so two models that would score differently
+    /// can never share an id and silently replace each other in the
+    /// model cache. The CD solver is deterministic, so identical train
+    /// requests still reproduce the same id — which is what lets a
+    /// `predict` request address a model trained by an earlier request,
+    /// and keeps service responses byte-deterministic. Save → load
+    /// preserves every bit, so the id survives the artifact round trip.
+    pub fn id(&self) -> String {
+        let key = format!(
+            "{}|{}|{}|{:016x}|{:016x}|{:016x}|{:016x}|{}|{}|{}",
+            self.model.name(),
+            self.dataset,
+            self.storage.name(),
+            self.scale.to_bits(),
+            self.c.to_bits(),
+            self.tol.to_bits(),
+            // bias is always 0.0 today, but the format reserves the slot:
+            // the moment an artifact carries one, it must not hash like
+            // its zero-bias sibling (same w, different scores)
+            self.bias.to_bits(),
+            self.l,
+            // the payload lengths delimit the undelimited w‖θ byte
+            // stream below: without them, w=[a,b],θ=[c] and w=[a],
+            // θ=[b,c] would hash identically
+            self.w.len(),
+            self.theta_active.len()
+        );
+        let mut h = fnv64(key.as_bytes());
+        for &v in &self.w {
+            h = fnv64_continue(h, &v.to_bits().to_le_bytes());
+        }
+        for &v in &self.theta_active {
+            h = fnv64_continue(h, &v.to_bits().to_le_bytes());
+        }
+        format!("{}-{:016x}", self.model.name(), h)
+    }
+
+    /// Fraction of training rows that are margin support vectors — the
+    /// paper's test-phase selling point in one number.
+    pub fn support_fraction(&self) -> f64 {
+        if self.l == 0 {
+            0.0
+        } else {
+            self.support.len() as f64 / self.l as f64
+        }
+    }
+
+    /// Approximate resident bytes (the model cache charges entries with
+    /// this, mirroring [`crate::problem::Instance::approx_bytes`]).
+    pub fn approx_bytes(&self) -> usize {
+        self.z_active.approx_bytes()
+            + 8 * (self.w.len() + self.theta_active.len())
+            + 4 * (self.support.len() + self.active.len())
+            + self.dataset.len()
+            + std::mem::size_of::<TrainedModel>()
+    }
+
+    /// Re-derive w from the stored active rows alone (the support-only
+    /// path): u = Σₖ θₐ[k]·z_active[k] accumulated in ascending original
+    /// row order, then w = −C·u. This replays exactly the nonzero terms
+    /// `Instance::u_from_theta`'s t_matvec accumulated (both storages
+    /// skip θᵢ = 0 rows), through the same axpy kernels, in the same
+    /// order — so the result is bit-identical to the stored `w`.
+    pub fn reconstruct_w(&self) -> Vec<f64> {
+        let mut u = vec![0.0; self.n()];
+        for (k, &t) in self.theta_active.iter().enumerate() {
+            self.z_active.row(k).axpy_into(t, &mut u);
+        }
+        linalg::scale(-self.c, &mut u);
+        u
+    }
+}
+
+/// FNV-1a 64-bit — the crate-local content digest (std-only; also the
+/// checksum primitive of the on-disk format).
+pub(crate) fn fnv64(bytes: &[u8]) -> u64 {
+    fnv64_continue(0xcbf2_9ce4_8422_2325, bytes)
+}
+
+/// Continue an FNV-1a digest over more bytes (streaming form — feeding
+/// buffers piecewise equals hashing their concatenation).
+pub(crate) fn fnv64_continue(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Test fixture shared by the format/predict unit tests: a small solved
+/// SVM on the toy set in the requested storage.
+#[cfg(test)]
+pub(crate) fn trained_toy(storage: Storage) -> TrainedModel {
+    use crate::config::SolverConfig;
+    use crate::solver::CdSolver;
+    let ds = crate::data::synth::toy_gaussian(11, 60, 1.0, 0.75).into_storage(storage);
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    let r = CdSolver::new(SolverConfig { tol: 1e-8, ..Default::default() })
+        .solve(&inst, 0.5, inst.cold_start());
+    TrainedModel::from_solution(&inst, "toy1", 0.06, 0.5, 1e-8, &r.theta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extraction_shapes_and_metadata() {
+        let m = trained_toy(Storage::Dense);
+        assert_eq!(m.model, Model::Svm);
+        assert_eq!(m.dataset, "toy1");
+        assert_eq!(m.storage, Storage::Dense);
+        assert_eq!(m.l, 120);
+        assert_eq!(m.n(), 2);
+        assert_eq!(m.active.len(), m.theta_active.len());
+        assert_eq!(m.z_active.rows(), m.active.len());
+        assert_eq!(m.z_active.cols(), m.n());
+        // a solved SVM on a separable-ish toy has far fewer margin SVs
+        // than rows, and every support index is in range and ascending
+        assert!(!m.support.is_empty() && m.support.len() < m.l);
+        assert!(m.support.windows(2).all(|w| w[0] < w[1]));
+        assert!(m.active.windows(2).all(|w| w[0] < w[1]));
+        assert!(m.support_fraction() > 0.0 && m.support_fraction() < 1.0);
+        assert_eq!(m.bias, 0.0);
+    }
+
+    #[test]
+    fn reconstructed_w_is_bit_identical() {
+        for storage in [Storage::Dense, Storage::Csr] {
+            let m = trained_toy(storage);
+            let rebuilt = m.reconstruct_w();
+            assert_eq!(rebuilt.len(), m.w.len());
+            for (a, b) in rebuilt.iter().zip(&m.w) {
+                assert_eq!(a.to_bits(), b.to_bits(), "storage {storage:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn id_is_deterministic_and_parameter_sensitive() {
+        let a = trained_toy(Storage::Dense);
+        let b = trained_toy(Storage::Dense);
+        assert_eq!(a.id(), b.id(), "same parameters, same id");
+        assert!(a.id().starts_with("svm-"));
+        let mut c = trained_toy(Storage::Dense);
+        c.c = 0.7;
+        assert_ne!(a.id(), c.id(), "C participates in the id");
+        let d = trained_toy(Storage::Csr);
+        assert_ne!(a.id(), d.id(), "resolved storage participates in the id");
+    }
+
+    #[test]
+    fn id_folds_in_the_solved_weights() {
+        let a = trained_toy(Storage::Dense);
+        let mut b = trained_toy(Storage::Dense);
+        assert_eq!(a.id(), b.id());
+        // same training key, different weights (e.g. another solver
+        // seed/build) must NOT collide
+        b.w[0] += 1.0;
+        assert_ne!(a.id(), b.id(), "content digest must separate the ids");
+        let mut c = trained_toy(Storage::Dense);
+        if let Some(t) = c.theta_active.first_mut() {
+            *t *= 0.5;
+        }
+        assert_ne!(a.id(), c.id(), "θ payload participates too");
+    }
+
+    #[test]
+    fn model_name_in_id_round_trips_through_parse() {
+        let m = trained_toy(Storage::Dense);
+        let prefix = m.id();
+        let name = prefix.split('-').next().unwrap();
+        assert_eq!(Model::parse(name), Some(m.model));
+    }
+
+    #[test]
+    fn approx_bytes_positive_and_storage_sensitive() {
+        let de = trained_toy(Storage::Dense);
+        assert!(de.approx_bytes() > 8 * de.n());
+        let sp = trained_toy(Storage::Csr);
+        assert!(sp.approx_bytes() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "theta length")]
+    fn rejects_wrong_theta_length() {
+        let ds = crate::data::synth::toy_gaussian(12, 10, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        TrainedModel::from_solution(&inst, "toy1", 1.0, 0.5, 1e-6, &[0.0; 3]);
+    }
+
+    #[test]
+    fn fnv64_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -41,6 +41,15 @@ impl Model {
             Model::WeightedSvm => "wsvm",
         }
     }
+
+    /// Owned wire-format name. Every response summary (path, screen,
+    /// train, predict) and the model artifact metadata goes through this
+    /// one helper, so a model name emitted anywhere always round-trips
+    /// through [`Model::parse`] — the bug class PR 3 fixed for screen
+    /// responses cannot regrow a call site at a time.
+    pub fn wire_name(&self) -> String {
+        self.name().to_string()
+    }
 }
 
 /// A dual problem instance:
@@ -347,6 +356,7 @@ mod tests {
     fn model_name_round_trips_through_parse() {
         for m in [Model::Svm, Model::Lad, Model::WeightedSvm] {
             assert_eq!(Model::parse(m.name()), Some(m));
+            assert_eq!(Model::parse(&m.wire_name()), Some(m));
         }
     }
 

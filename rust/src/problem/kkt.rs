@@ -39,6 +39,18 @@ impl Membership {
         }
         (self.count(KktClass::R) + self.count(KktClass::L)) as f64 / self.classes.len() as f64
     }
+
+    /// Ascending indices of the instances in class `k` — the support-set
+    /// extraction the model artifact layer persists (`indices_of(E)` is
+    /// the margin support-vector set).
+    pub fn indices_of(&self, k: KktClass) -> Vec<usize> {
+        self.classes
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c == k)
+            .map(|(i, _)| i)
+            .collect()
+    }
 }
 
 /// Classify every instance by the KKT conditions at (C, w*). `tol` is the
@@ -79,6 +91,9 @@ mod tests {
         assert_eq!(m.classes, vec![KktClass::R, KktClass::E, KktClass::L]);
         assert_eq!(m.count(KktClass::E), 1);
         assert!((m.non_sv_fraction() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.indices_of(KktClass::E), vec![1]);
+        assert_eq!(m.indices_of(KktClass::R), vec![0]);
+        assert_eq!(m.indices_of(KktClass::L), vec![2]);
     }
 
     #[test]

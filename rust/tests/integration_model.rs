@@ -1,0 +1,315 @@
+//! Model-artifact acceptance suite (ISSUE 4): the train → persist →
+//! predict loop end to end.
+//!
+//! * predict ≡ direct in-memory scoring, bit for bit, across dense/CSR
+//!   input batches and 1/2/4 scoring threads;
+//! * save → load → predict round-trips byte-identically (artifact bytes
+//!   AND scores);
+//! * truncated / bit-flipped artifacts are rejected with typed errors;
+//! * the support-only fast path agrees with full-w scoring within 0 ULP
+//!   on SVM and weighted SVM (and LAD);
+//! * the service's `"kind": "train"` / `"kind": "predict"` requests are
+//!   input-order deterministic and their scores match the in-memory
+//!   engine exactly.
+
+use dvi_screen::config::{parse_json, Json, SolverConfig};
+use dvi_screen::coordinator::ScreeningService;
+use dvi_screen::data::synth;
+use dvi_screen::linalg::{Rows, Storage};
+use dvi_screen::model::{self, format, PredictOptions, TrainedModel};
+use dvi_screen::problem::{Instance, Model};
+use dvi_screen::solver::CdSolver;
+
+fn train(model: Model, storage: Storage, c: f64) -> (TrainedModel, Instance) {
+    let ds = match model {
+        Model::Svm | Model::WeightedSvm => {
+            synth::gaussian_classes(5, 140, 6, 1.2, 1.0, 0.4, 1.0).into_storage(storage)
+        }
+        Model::Lad => {
+            let mut rng = dvi_screen::data::Rng::new(7);
+            synth::random_regression(&mut rng, 120, 5).into_storage(storage)
+        }
+    };
+    let inst = Instance::from_dataset(model, &ds);
+    let r = CdSolver::new(SolverConfig { tol: 1e-8, ..Default::default() })
+        .solve(&inst, c, inst.cold_start());
+    let tm = TrainedModel::from_solution(&inst, "acceptance", 1.0, c, 1e-8, &r.theta);
+    (tm, inst)
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn batch(storage: Storage, n: usize) -> Rows {
+    synth::gaussian_classes(99, 73, n, 1.2, 1.0, 0.4, 1.0).x.into_storage(storage)
+}
+
+#[test]
+fn predict_is_bit_identical_to_in_memory_scoring() {
+    let (tm, _) = train(Model::Svm, Storage::Dense, 0.5);
+    let dense = batch(Storage::Dense, tm.n());
+    // ground truth: the plain per-row dot against the model's w
+    let direct: Vec<f64> = (0..dense.rows()).map(|i| dense.row(i).dot(&tm.w)).collect();
+    for storage in [Storage::Dense, Storage::Csr] {
+        let rows = batch(storage, tm.n());
+        for threads in [1usize, 2, 4] {
+            let got =
+                model::scores(&tm, &rows, &PredictOptions { threads, support_only: false })
+                    .unwrap();
+            assert_eq!(bits(&got), bits(&direct), "storage {storage:?} threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn save_load_predict_round_trip_is_byte_identical() {
+    for storage in [Storage::Dense, Storage::Csr] {
+        let (tm, _) = train(Model::Svm, storage, 0.5);
+        let mut p = std::env::temp_dir();
+        p.push(format!(
+            "dvi_integration_model_{}_{}.pallas-model",
+            std::process::id(),
+            storage.name()
+        ));
+        format::save(&tm, &p).unwrap();
+        let loaded = format::load(&p).unwrap();
+        // artifact bytes round-trip exactly
+        assert_eq!(format::encode(&loaded), format::encode(&tm));
+        assert_eq!(loaded.id(), tm.id());
+        assert_eq!(bits(&loaded.w), bits(&tm.w));
+        assert_eq!(bits(&loaded.theta_active), bits(&tm.theta_active));
+        assert_eq!(loaded.support, tm.support);
+        // and predictions from the loaded model match exactly
+        let rows = batch(Storage::Dense, tm.n());
+        let a = model::scores(&tm, &rows, &PredictOptions::default()).unwrap();
+        let b = model::scores(&loaded, &rows, &PredictOptions::default()).unwrap();
+        assert_eq!(bits(&a), bits(&b), "storage {storage:?}");
+        std::fs::remove_file(&p).ok();
+    }
+}
+
+#[test]
+fn corrupt_artifacts_are_rejected() {
+    let (tm, _) = train(Model::Svm, Storage::Csr, 0.5);
+    let enc = format::encode(&tm);
+    // truncation at a spread of prefixes
+    for cut in [0usize, 4, 11, 40, enc.len() / 3, enc.len() - 1] {
+        assert!(format::decode(&enc[..cut]).is_err(), "prefix {cut} decoded");
+    }
+    // a single flipped bit anywhere fails the checksum (or magic)
+    for pos in [9usize, 30, enc.len() / 2, enc.len() - 4] {
+        let mut bad = enc.clone();
+        bad[pos] ^= 0x40;
+        assert!(format::decode(&bad).is_err(), "bit flip at {pos} decoded");
+    }
+    // loading a non-artifact file is a typed error, not a panic
+    let mut p = std::env::temp_dir();
+    p.push(format!("dvi_integration_model_junk_{}.pallas-model", std::process::id()));
+    std::fs::write(&p, b"definitely not a model").unwrap();
+    assert!(matches!(format::load(&p), Err(model::ModelIoError::Corrupt(_) | model::ModelIoError::BadMagic)));
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn support_only_path_is_zero_ulp_from_full_w() {
+    for (m, c) in [(Model::Svm, 0.5), (Model::WeightedSvm, 0.4), (Model::Lad, 0.3)] {
+        for storage in [Storage::Dense, Storage::Csr] {
+            let (tm, _) = train(m, storage, c);
+            // the re-derived w must equal the stored w bit for bit
+            assert_eq!(bits(&tm.reconstruct_w()), bits(&tm.w), "{m:?} {storage:?}");
+            let rows = batch(Storage::Dense, tm.n());
+            let full = model::scores(&tm, &rows, &PredictOptions::default()).unwrap();
+            let sup = model::scores(
+                &tm,
+                &rows,
+                &PredictOptions { threads: 3, support_only: true },
+            )
+            .unwrap();
+            assert_eq!(bits(&full), bits(&sup), "{m:?} {storage:?}");
+        }
+    }
+}
+
+#[test]
+fn support_set_is_a_genuine_reduction() {
+    // the artifact's reason to exist: far fewer active rows than l on a
+    // solved SVM, and the support (E) set is a subset of the active set
+    let (tm, inst) = train(Model::Svm, Storage::Dense, 0.5);
+    assert!(tm.active.len() < tm.l, "active {} of {}", tm.active.len(), tm.l);
+    assert!(tm.support.len() < tm.l);
+    assert_eq!(inst.len(), tm.l);
+    assert!(tm.support.iter().all(|&i| (i as usize) < tm.l));
+    assert!(tm.active.iter().all(|&i| (i as usize) < tm.l));
+    // the artifact is smaller than the instance it came from
+    assert!(tm.approx_bytes() < inst.approx_bytes());
+}
+
+fn serve_lines(svc: &mut ScreeningService, input: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    svc.serve(input.as_bytes(), &mut out).unwrap();
+    String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
+}
+
+/// The ISSUE acceptance path: train through the service (persisting the
+/// artifact), predict through the service against that artifact, and
+/// hold the scores to (a) input-order determinism, (b) bit-equality with
+/// direct in-memory evaluation.
+#[test]
+fn service_train_predict_matches_in_memory_bit_for_bit() {
+    let mut p = std::env::temp_dir();
+    p.push(format!("dvi_integration_svc_{}.pallas-model", std::process::id()));
+    let mut svc = ScreeningService::new(1); // in-order execution
+
+    let train_line = format!(
+        r#"{{"kind": "train", "dataset": "toy1", "scale": 0.05, "c": 0.5, "tol": 1e-6, "save": "{}", "timings": false}}"#,
+        p.display()
+    );
+    let lines = serve_lines(&mut svc, &train_line);
+    let tj = parse_json(&lines[0]).unwrap();
+    assert_eq!(tj.get("ok").unwrap().as_bool(), Some(true), "{lines:?}");
+    let model_id = tj.get("model_id").unwrap().as_str().unwrap().to_string();
+    let model_name = tj.get("model").unwrap().as_str().unwrap().to_string();
+    assert_eq!(Model::parse(&model_name), Some(Model::Svm), "model name round-trips");
+    assert!(model_id.starts_with("svm-"));
+
+    // the same requests as a batch: one predict by id, one by file, one
+    // inline-rows predict — all deterministic, in input order
+    let batch_line = format!(
+        concat!(
+            r#"{{"batch": ["#,
+            r#"{{"kind": "predict", "model_id": "{id}", "dataset": "toy1", "scale": 0.05, "threads": 2, "timings": false}}, "#,
+            r#"{{"kind": "predict", "model_file": "{file}", "dataset": "toy1", "scale": 0.05, "support_only": true, "timings": false}}, "#,
+            r#"{{"kind": "predict", "model_id": "{id}", "rows": [[0.25, -1.5], [2.0, 2.0]], "timings": false}}"#,
+            r#"]}}"#
+        ),
+        id = model_id,
+        file = p.display()
+    );
+    let out1 = serve_lines(&mut svc, &batch_line);
+    let out2 = serve_lines(&mut svc, &batch_line);
+    assert_eq!(out1.len(), 1);
+    let strip_ids = |line: &str| {
+        let j = parse_json(line).unwrap();
+        j.get("batch")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|e| match e {
+                Json::Object(o) => {
+                    let mut o = o.clone();
+                    o.remove("id");
+                    Json::Object(o).to_string()
+                }
+                other => other.to_string(),
+            })
+            .collect::<Vec<String>>()
+    };
+    assert_eq!(strip_ids(&out1[0]), strip_ids(&out2[0]), "double run byte-identical");
+
+    // scores from entry 0 (full-w by id) and entry 1 (support-only from
+    // the artifact file) must be identical
+    let j = parse_json(&out1[0]).unwrap();
+    let entries = j.get("batch").unwrap().as_array().unwrap();
+    for e in entries {
+        assert_eq!(e.get("ok").unwrap().as_bool(), Some(true), "{e:?}");
+    }
+    let s0 = entries[0].get("scores").unwrap();
+    let s1 = entries[1].get("scores").unwrap();
+    assert_eq!(s0.to_string(), s1.to_string(), "full-w ≡ support-only over the wire");
+
+    // bit-for-bit against direct in-memory evaluation of the artifact
+    let tm = format::load(&p).unwrap();
+    let ds = dvi_screen::data::registry::resolve("toy1", 0.05, dvi_screen::data::Task::Classification)
+        .unwrap();
+    let direct: Vec<f64> = (0..ds.len()).map(|i| ds.x.row(i).dot(&tm.w)).collect();
+    let wire: Vec<f64> = s0
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_float().unwrap())
+        .collect();
+    assert_eq!(bits(&wire), bits(&direct), "service scores ≡ in-memory scores");
+
+    // inline-rows entry agrees with direct evaluation too
+    let s2: Vec<f64> = entries[2]
+        .get("scores")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_float().unwrap())
+        .collect();
+    let want0 = Rows::Dense(dvi_screen::linalg::RowMatrix::from_flat(
+        2,
+        2,
+        vec![0.25, -1.5, 2.0, 2.0],
+    ));
+    let want: Vec<f64> = (0..2).map(|i| want0.row(i).dot(&tm.w)).collect();
+    assert_eq!(bits(&s2), bits(&want));
+
+    std::fs::remove_file(&p).ok();
+    svc.shutdown();
+}
+
+/// `"kind": "cache"` lists both caches and evicts entries by key.
+#[test]
+fn service_cache_introspection_covers_both_caches() {
+    let mut svc = ScreeningService::new(1);
+    let lines = serve_lines(
+        &mut svc,
+        concat!(
+            r#"{"kind": "train", "dataset": "toy2", "scale": 0.03, "c": 0.4, "tol": 1e-5, "timings": false}"#,
+            "\n",
+            r#"{"kind": "cache", "timings": false}"#,
+            "\n"
+        ),
+    );
+    assert_eq!(lines.len(), 2);
+    let model_id = parse_json(&lines[0])
+        .unwrap()
+        .get("model_id")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+    let cj = parse_json(&lines[1]).unwrap();
+    let instances = cj.get("instances").unwrap().as_array().unwrap().to_vec();
+    let models = cj.get("models").unwrap().as_array().unwrap().to_vec();
+    assert_eq!(instances.len(), 1);
+    assert_eq!(instances[0].get("dataset").unwrap().as_str(), Some("toy2"));
+    assert!(instances[0].get("bytes").unwrap().as_int().unwrap() > 0);
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].get("id").unwrap().as_str(), Some(model_id.as_str()));
+
+    // evict the instance by its full key, then the model by id
+    let evicts = format!(
+        concat!(
+            r#"{{"kind": "cache", "op": "evict", "target": "instance", "dataset": "toy2", "model": "svm", "storage": "auto", "scale": 0.03, "timings": false}}"#,
+            "\n",
+            r#"{{"kind": "cache", "op": "evict", "target": "model", "model_id": "{}", "timings": false}}"#,
+            "\n"
+        ),
+        model_id
+    );
+    let lines = serve_lines(&mut svc, &evicts);
+    let a = parse_json(&lines[0]).unwrap();
+    assert_eq!(a.get("evicted").unwrap().as_bool(), Some(true), "{lines:?}");
+    assert_eq!(a.get("instances").unwrap().as_array().unwrap().len(), 0);
+    let b = parse_json(&lines[1]).unwrap();
+    assert_eq!(b.get("evicted").unwrap().as_bool(), Some(true));
+    assert_eq!(b.get("models").unwrap().as_array().unwrap().len(), 0);
+
+    // evicting again reports false (nothing there), never an error
+    let again = serve_lines(
+        &mut svc,
+        &format!(
+            r#"{{"kind": "cache", "op": "evict", "target": "model", "model_id": "{model_id}", "timings": false}}"#
+        ),
+    );
+    let j = parse_json(&again[0]).unwrap();
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(j.get("evicted").unwrap().as_bool(), Some(false));
+    svc.shutdown();
+}

@@ -12,6 +12,10 @@
 #                     session's output must match it byte for byte.
 #                     Regenerate with `scripts/service_smoke.sh --bless`
 #                     after an intentional protocol change.
+#   4. model loop   — `dvi train` writes a .pallas-model artifact, the
+#                     service's "kind": "predict" serves it (double-run
+#                     determinism diff), and `dvi predict` emits the same
+#                     scores the service returns.
 #
 # The screening_service example runs last as an end-to-end sanity check
 # (it asserts its own expectations internally).
@@ -77,6 +81,53 @@ elif [[ -f "$GOLDEN" ]]; then
 else
   echo "== no $GOLDEN committed yet; run with --bless to create it"
 fi
+
+echo "== model artifacts: train -> predict round trip"
+MODEL="$WORK/smoke.pallas-model"
+cat > "$WORK/train.jsonl" <<EOF
+{"kind": "train", "dataset": "toy1", "model": "svm", "scale": 0.05, "c": 0.5, "tol": 1e-6, "save": "$MODEL", "timings": false}
+EOF
+cat > "$WORK/predict.jsonl" <<EOF
+{"kind": "predict", "model_file": "$MODEL", "dataset": "toy1", "scale": 0.05, "timings": false}
+{"kind": "predict", "model_file": "$MODEL", "dataset": "toy1", "scale": 0.05, "support_only": true, "timings": false}
+{"kind": "predict", "model_file": "$MODEL", "rows": [[0.0, 0.0], [1.5, 1.5], [-1.5, -1.5]], "timings": false}
+EOF
+"$BIN" serve --workers 2 < "$WORK/train.jsonl" > "$WORK/out.train" 2> /dev/null
+grep -q '"ok":true' "$WORK/out.train" || { echo "train failed:"; cat "$WORK/out.train"; exit 1; }
+test -s "$MODEL" || { echo "artifact $MODEL was not written"; exit 1; }
+"$BIN" serve --workers 3 < "$WORK/predict.jsonl" > "$WORK/out.predict1" 2> /dev/null
+"$BIN" serve --workers 3 < "$WORK/predict.jsonl" > "$WORK/out.predict2" 2> /dev/null
+echo "   predict double-run determinism"
+diff "$WORK/out.predict1" "$WORK/out.predict2"
+if grep -q '"ok":false' "$WORK/out.predict1"; then
+  echo "a predict request failed:"; cat "$WORK/out.predict1"; exit 1
+fi
+
+echo "== cli predict agrees with the service (and with itself)"
+"$BIN" predict --model "$MODEL" --dataset toy1 --scale 0.05 > "$WORK/cli.scores1"
+"$BIN" predict --model "$MODEL" --dataset toy1 --scale 0.05 --threads 4 --support-only > "$WORK/cli.scores2"
+diff "$WORK/cli.scores1" "$WORK/cli.scores2"
+if command -v python3 > /dev/null; then
+  python3 - "$WORK/out.predict1" "$WORK/cli.scores1" <<'EOF'
+import json, sys
+service = json.loads(open(sys.argv[1]).readline())["scores"]
+cli = [float(l) for l in open(sys.argv[2]) if l.strip()]
+assert len(service) == len(cli), (len(service), len(cli))
+for i, (a, b) in enumerate(zip(service, cli)):
+    assert a == b, f"score {i} diverged: service {a!r} vs cli {b!r}"
+print(f"   {len(cli)} scores identical")
+EOF
+else
+  echo "   (python3 unavailable; skipping service-vs-cli score comparison)"
+fi
+
+echo "== cache introspection lists the preloaded instance"
+"$BIN" serve --workers 1 --preload toy1 --preload-scale 0.05 \
+  <<< '{"kind": "cache", "timings": false}' > "$WORK/out.cache" 2> "$WORK/metrics.cache"
+grep -q '"dataset":"toy1"' "$WORK/out.cache" || {
+  echo "expected the preloaded toy1 entry:"; cat "$WORK/out.cache"; exit 1; }
+grep -q "preloaded toy1" "$WORK/metrics.cache" || {
+  echo "expected a preload log line:"; cat "$WORK/metrics.cache"; exit 1; }
 
 echo "== screening_service example"
 cargo run --release --quiet --example screening_service > /dev/null
