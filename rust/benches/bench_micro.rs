@@ -6,6 +6,9 @@
 //!   l ∈ {10k, 100k, 1M} (the paper's "negligible vs solving" claim only
 //!   holds if the scan saturates the hardware);
 //! * the PJRT/AOT scan (per-call latency incl. u upload + codes download);
+//! * CD sweep scaling: the block-synchronous parallel solver at 1/2/4/8
+//!   threads over l ∈ {10k, 100k}, dense and CSR, against the full
+//!   problem and against a DVI-screened (reduced) free set;
 //! * one dual-CD sweep (gradient-eval rate);
 //! * Lemma 20 extremization (SSNSV/ESSNSV inner loop);
 //! * w-form vs θ-form DVI ablation (the Gram-matrix crossover).
@@ -197,6 +200,109 @@ fn main() {
                         batch as f64 / s.min_s / 1e6,
                         bytes / s.min_s / 1e9
                     );
+                }
+            }
+        }
+    }
+
+    // ---- CD sweep scaling: block-synchronous parallel solver --------------
+    // The acceptance series for the sharded CD sweep: fixed sweep budget
+    // (max_outer bounds the work so the series measures sweep throughput,
+    // not convergence luck), 1/2/4/8 solver threads, dense and CSR, and
+    // both arms of the paper's story — the full problem and the reduced
+    // problem a DVI screen leaves behind (screening composes with any
+    // solver, so the speedups multiply).
+    {
+        use dvi_screen::linalg::Storage;
+        use dvi_screen::screening::Decision;
+        println!("\n# cd sweep scaling: block-synchronous parallel dual CD");
+        let max_l = common::arg_usize("max-l", 1_000_000);
+        for l in [10_000usize, 100_000] {
+            if l > max_l {
+                println!("cd_sweep_{l} skipped (--max-l {max_l})");
+                continue;
+            }
+            // the csr-wide cell (n = 8192 > the sparse-delta threshold)
+            // exercises the sparse delta-u accumulator — the narrow csr
+            // cell takes the dense u-clone path like the serial solver
+            for (storage, n, density, tag) in [
+                (Storage::Dense, 22usize, 1.0f64, "dense"),
+                (Storage::Csr, 200, 0.05, "csr"),
+                (Storage::Csr, 8192, 0.002, "csr-wide"),
+            ] {
+                let ds = if storage == Storage::Csr {
+                    synth::sparse_classes(0xCD5, l, n, density)
+                } else {
+                    synth::gaussian_classes(0xCD5, l, n, 1.0, 1.0, 0.5, 1.0)
+                };
+                let inst = Instance::from_dataset(Model::Svm, &ds);
+                let (c_prev, c_next) = (0.5f64, 0.55f64);
+                // anchor solve + screen once, outside the timed region
+                let anchor = CdSolver::new(SolverConfig {
+                    tol: 1e-4,
+                    max_outer: 60,
+                    ..Default::default()
+                })
+                .solve(&inst, c_prev, inst.cold_start());
+                let u_anchor = inst.u_from_theta(&anchor.theta);
+                let report = Dvi::new_w().screen(&inst, c_prev, c_next, &anchor.theta, &u_anchor);
+                // snap screened coordinates exactly as the path runner does
+                let mut theta_red = anchor.theta.clone();
+                let mut u_red = u_anchor.clone();
+                for (i, d) in report.decisions.iter().enumerate() {
+                    let target = match d {
+                        Decision::AtLo => inst.lo[i],
+                        Decision::AtHi => inst.hi[i],
+                        Decision::Keep => theta_red[i],
+                    };
+                    let delta = target - theta_red[i];
+                    if delta != 0.0 {
+                        theta_red[i] = target;
+                        inst.z.row(i).axpy_into(delta, &mut u_red);
+                    }
+                }
+                let free_red = report.free_indices();
+                let free_all: Vec<usize> = (0..inst.len()).collect();
+                for (arm, free, theta0, u0) in [
+                    ("full", &free_all, &anchor.theta, &u_anchor),
+                    ("screened", &free_red, &theta_red, &u_red),
+                ] {
+                    let mut single = f64::NAN;
+                    for threads in [1usize, 2, 4, 8] {
+                        let solver = CdSolver::new(SolverConfig {
+                            tol: 1e-12, // unreachable in 24 sweeps: fixed work
+                            max_outer: 24,
+                            solver_threads: Some(threads),
+                            ..Default::default()
+                        });
+                        let mut evals = 0u64;
+                        let s = bench(
+                            &format!("cd_sweep_{tag}_{l}_{arm}_t{threads}"),
+                            3,
+                            0.3,
+                            || {
+                                let r = solver.solve_free_with_u(
+                                    &inst,
+                                    c_next,
+                                    theta0.clone(),
+                                    free,
+                                    u0.clone(),
+                                );
+                                evals = r.stats.grad_evals;
+                                r.stats.coord_updates
+                            },
+                        );
+                        let rate = evals as f64 / s.min_s / 1e6;
+                        if threads == 1 {
+                            single = s.min_s;
+                            println!("    -> {rate:.1} M grad-evals/s ({} free)", free.len());
+                        } else {
+                            println!(
+                                "    -> {rate:.1} M grad-evals/s, {:.2}x vs 1 thread",
+                                single / s.min_s
+                            );
+                        }
+                    }
                 }
             }
         }

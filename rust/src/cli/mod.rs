@@ -14,6 +14,7 @@ USAGE:
   dvi path [--dataset NAME] [--model svm|lad|wsvm] [--rule dvi|dvi-theta|ssnsv|essnsv|none]
            [--scale S] [--points N] [--c-min F] [--c-max F] [--tol F]
            [--threads N]  (scan/validate worker threads; 1 = serial, 0 = auto)
+           [--solver-threads N]  (CD sweep worker threads; defaults to --threads)
            [--storage dense|csr|auto]
            [--validate] [--pjrt] [--config FILE]
   dvi experiment --id fig1|tab1|fig2|tab2|fig3|tab3|all
@@ -21,7 +22,8 @@ USAGE:
   dvi cv   [--dataset NAME] [--model svm|lad] [--folds K] [--scale S]
            [--points N] [--rule dvi|none]     cross-validated C selection
   dvi train [--dataset NAME] [--model svm|lad|wsvm] --c F [--scale S]
-           [--tol F] [--threads N] [--storage dense|csr|auto] [--out FILE]
+           [--tol F] [--threads N] [--solver-threads N] [--print-support]
+           [--storage dense|csr|auto] [--out FILE]
   dvi predict --model FILE --dataset NAME [--scale S] [--storage ...]
            [--threads N] [--support-only] [--out FILE]
   dvi serve [--workers N] [--cache-mb MB] [--model-cache-mb MB]
@@ -60,6 +62,19 @@ MODEL:
   address while the model is resident, or use "model_file" to load an
   artifact from disk.
 
+SOLVER:
+  The dual CD solver is sharded (block-synchronous parallel sweeps over
+  nnz-balanced shards of the active set). --solver-threads picks its
+  worker count independently of --threads (which drives the scan, Gram
+  build, and validation): 1 = the serial sweep, 0 = auto, default =
+  whatever --threads is. The parallel solver returns a KKT-valid point
+  at the same --tol whose screening decisions and support set match the
+  serial solver's; iterates are deterministic for a fixed (seed,
+  threads) pair but NOT bitwise-identical across different thread
+  counts — pin --solver-threads 1 when diffing solver trajectories.
+  Also available as `solver.solver_threads` in --config TOML and as
+  "solver_threads" in serve path/screen/train requests.
+
 STORAGE:
   --storage picks the instance-matrix layout: `dense` (row-major buffer),
   `csr` (compressed sparse rows — libsvm files parse straight into CSR,
@@ -83,7 +98,7 @@ fn parse_flags(args: &[String]) -> Result<(Vec<String>, BTreeMap<String, String>
         let a = &args[i];
         if let Some(key) = a.strip_prefix("--") {
             // boolean flags
-            if matches!(key, "validate" | "pjrt" | "help" | "support-only") {
+            if matches!(key, "validate" | "pjrt" | "help" | "support-only" | "print-support") {
                 flags.insert(key.to_string(), "true".to_string());
                 i += 1;
                 continue;
@@ -174,6 +189,9 @@ fn cmd_path(args: &[String]) -> Result<(), String> {
     cfg.grid.c_max = get_f64(&flags, "c-max", cfg.grid.c_max)?;
     cfg.solver.tol = get_f64(&flags, "tol", cfg.solver.tol)?;
     cfg.solver.threads = get_usize(&flags, "threads", cfg.solver.threads)?;
+    if flags.contains_key("solver-threads") {
+        cfg.solver.solver_threads = Some(get_usize(&flags, "solver-threads", 0)?);
+    }
     cfg.validate = cfg.validate || flags.contains_key("validate");
     cfg.use_pjrt = cfg.use_pjrt || flags.contains_key("pjrt");
 
@@ -287,9 +305,15 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
         solver: crate::config::SolverConfig {
             tol,
             threads: get_usize(&flags, "threads", 1)?,
+            solver_threads: if flags.contains_key("solver-threads") {
+                Some(get_usize(&flags, "solver-threads", 0)?)
+            } else {
+                None
+            },
             ..Default::default()
         },
         save: flags.get("out").cloned(),
+        report_support: flags.contains_key("print-support"),
     };
     let outcome = crate::coordinator::run_job(&JobSpec::train(0, spec));
     let reply = outcome.result?;
@@ -312,6 +336,12 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
         s.artifact_bytes,
         s.solve_secs
     );
+    if let Some(sup) = &s.support_indices {
+        // one stable line the smoke script diffs between the serial and
+        // parallel solvers (the sets must agree; see SOLVER help)
+        let list: Vec<String> = sup.iter().map(|i| i.to_string()).collect();
+        println!("support_indices={}", list.join(","));
+    }
     match &s.saved {
         Some(p) => println!("saved {p}"),
         None => println!("(not persisted — pass --out FILE to write the artifact)"),
@@ -472,6 +502,39 @@ mod tests {
         let args: Vec<String> = [
             "path", "--dataset", "toy1", "--scale", "0.02", "--points", "4", "--tol", "1e-5",
             "--threads", "3", "--validate",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&args), 0);
+    }
+
+    #[test]
+    fn cmd_path_runs_parallel_solver() {
+        let args: Vec<String> = [
+            "path", "--dataset", "toy1", "--scale", "0.02", "--points", "4", "--tol", "1e-5",
+            "--solver-threads", "3", "--validate",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&args), 0);
+        // --threads alone now drives the solver too (inheritance)
+        let args: Vec<String> = [
+            "path", "--dataset", "toy1", "--scale", "0.02", "--points", "4", "--tol", "1e-5",
+            "--threads", "2", "--solver-threads", "0",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&args), 0);
+    }
+
+    #[test]
+    fn cmd_train_prints_support_with_parallel_solver() {
+        let args: Vec<String> = [
+            "train", "--dataset", "toy1", "--scale", "0.03", "--c", "0.5", "--tol", "1e-6",
+            "--solver-threads", "4", "--print-support",
         ]
         .iter()
         .map(|s| s.to_string())

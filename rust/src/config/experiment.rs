@@ -21,14 +21,43 @@ pub struct SolverConfig {
     /// Worker threads for the sharded screening scan, θ-form Gram build,
     /// and full-problem KKT validation: 1 = serial (default — jobs already
     /// run on a worker pool), 0 = auto-detect, n = n threads (clamped to
-    /// the row count and to 4× the hardware parallelism). Screening
-    /// decisions are byte-identical for every setting.
+    /// the row count and to 4× the hardware parallelism). The *scan*
+    /// engines' decisions are byte-identical for every setting — but the
+    /// CD solver also inherits this value when `solver_threads` is unset,
+    /// and its iterates are NOT bitwise-equal across thread counts (they
+    /// are KKT/decision-equivalent; see `solver_threads`). Pin
+    /// `solver_threads = 1` alongside `threads > 1` to keep solver
+    /// trajectories bit-for-bit serial.
     pub threads: usize,
+    /// Worker threads for the block-synchronous parallel CD sweep
+    /// ([`crate::solver`]): `None` inherits `threads` (the CLI's
+    /// `--solver-threads` default), `Some(1)` forces the serial sweep,
+    /// `Some(0)` auto-detects. Unlike the scan, the parallel sweep's
+    /// iterates are NOT bitwise-equal across thread counts — they are
+    /// deterministic per `(seed, threads)` and converge to the same
+    /// optimum at `tol` (see README §Solver).
+    pub solver_threads: Option<usize>,
 }
 
 impl Default for SolverConfig {
     fn default() -> Self {
-        SolverConfig { tol: 1e-6, max_outer: 2000, shrink: true, seed: 0x5EED, threads: 1 }
+        SolverConfig {
+            tol: 1e-6,
+            max_outer: 2000,
+            shrink: true,
+            seed: 0x5EED,
+            threads: 1,
+            solver_threads: None,
+        }
+    }
+}
+
+impl SolverConfig {
+    /// Thread count the CD solver actually uses: the explicit
+    /// `solver_threads` override, else `threads` (0 = auto, crate
+    /// convention).
+    pub fn cd_threads(&self) -> usize {
+        self.solver_threads.unwrap_or(self.threads)
     }
 }
 
@@ -133,6 +162,17 @@ fn get_usize(m: &BTreeMap<String, Value>, k: &str, d: usize) -> Result<usize, To
     }
 }
 
+fn get_opt_usize(m: &BTreeMap<String, Value>, k: &str) -> Result<Option<usize>, TomlError> {
+    match m.get(k) {
+        None => Ok(None),
+        Some(v) => v
+            .as_int()
+            .filter(|&i| i >= 0)
+            .map(|i| Some(i as usize))
+            .ok_or_else(|| TomlError { line: 0, msg: format!("`{k}` must be a non-negative int") }),
+    }
+}
+
 fn get_bool(m: &BTreeMap<String, Value>, k: &str, d: bool) -> Result<bool, TomlError> {
     match m.get(k) {
         None => Ok(d),
@@ -157,7 +197,7 @@ impl RunConfig {
     /// catch typos early.
     pub fn from_toml_str(src: &str) -> Result<RunConfig, TomlError> {
         let m = parse_str(src)?;
-        const KNOWN: [&str; 15] = [
+        const KNOWN: [&str; 16] = [
             "model",
             "dataset",
             "scale",
@@ -173,6 +213,7 @@ impl RunConfig {
             "solver.shrink",
             "solver.seed",
             "solver.threads",
+            "solver.solver_threads",
         ];
         for k in m.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -197,6 +238,7 @@ impl RunConfig {
                 shrink: get_bool(&m, "solver.shrink", d.solver.shrink)?,
                 seed: get_usize(&m, "solver.seed", d.solver.seed as usize)? as u64,
                 threads: get_usize(&m, "solver.threads", d.solver.threads)?,
+                solver_threads: get_opt_usize(&m, "solver.solver_threads")?,
             },
             use_pjrt: get_bool(&m, "use_pjrt", d.use_pjrt)?,
             validate: get_bool(&m, "validate", d.validate)?,
@@ -318,6 +360,29 @@ threads = 4
             0
         );
         assert!(RunConfig::from_toml_str("[solver]\nthreads = -2").is_err());
+    }
+
+    #[test]
+    fn solver_threads_inherits_threads_unless_set() {
+        let d = RunConfig::from_toml_str("").unwrap();
+        assert_eq!(d.solver.solver_threads, None);
+        assert_eq!(d.solver.cd_threads(), 1);
+        let inherit = RunConfig::from_toml_str("[solver]\nthreads = 4").unwrap();
+        assert_eq!(inherit.solver.cd_threads(), 4, "solver threads follow `threads`");
+        let split =
+            RunConfig::from_toml_str("[solver]\nthreads = 4\nsolver_threads = 1").unwrap();
+        assert_eq!(split.solver.solver_threads, Some(1));
+        assert_eq!(split.solver.cd_threads(), 1, "explicit override wins");
+        assert_eq!(
+            RunConfig::from_toml_str("[solver]\nsolver_threads = 0")
+                .unwrap()
+                .solver
+                .cd_threads(),
+            0,
+            "0 = auto is legal"
+        );
+        assert!(RunConfig::from_toml_str("[solver]\nsolver_threads = -1").is_err());
+        assert!(RunConfig::from_toml_str("[solver]\nsolver_threads = \"x\"").is_err());
     }
 
     #[test]

@@ -32,6 +32,12 @@
 //! * **Errors are not cached.** A failed resolve (unknown dataset,
 //!   task/model mismatch, unreadable file) is reported to every waiter
 //!   and retried on the next request.
+//!
+//! The recency/byte bookkeeping itself — tick clock, charge/uncharge,
+//! evict-until-fit with the fresh-entry exemption, the gauge pair — is
+//! one generic [`LruCore`] shared with the sibling [`ModelCache`]
+//! (deferred from PR 4; previously each cache carried its own copy of
+//! the eviction loop).
 
 use crate::data::registry;
 use crate::linalg::Storage;
@@ -70,15 +76,128 @@ struct Slot {
     built: Mutex<Option<Arc<Instance>>>,
 }
 
-struct Entry {
-    slot: Arc<Slot>,
-    /// Recency tick of the last `get_or_build` touch.
+/// One entry of the shared LRU core: a value plus the recency/size/hit
+/// bookkeeping both caches used to duplicate. `bytes == 0` means "not
+/// resident yet" (an instance placeholder still building) — such entries
+/// are never eviction victims and don't count toward the gauges.
+struct LruEntry<V> {
+    value: V,
+    /// Recency tick of the last touch (strictly increasing per core, so
+    /// LRU victim selection is deterministic).
     last_used: u64,
-    /// [`Instance::approx_bytes`] once built; 0 while building (unbuilt
-    /// entries are never evicted — they hold no bytes yet).
     bytes: usize,
     /// Resident-hit count (the `"kind": "cache"` introspection surface).
     hits: u64,
+}
+
+/// The byte-budget LRU core [`InstanceCache`] and [`ModelCache`] share:
+/// tick/recency bookkeeping, byte charging, evict-until-fit with the
+/// fresh-entry exemption, and the `{prefix}_bytes`/`{prefix}_entries`
+/// gauge pair. Wrappers hold it behind their own mutex and keep their
+/// policy differences (build slots and deferred charging for instances;
+/// replace-keeps-hits inserts and file loads for models) on top of these
+/// primitives — one eviction loop instead of the two copies PR 3/PR 4
+/// shipped.
+struct LruCore<K, V> {
+    entries: HashMap<K, LruEntry<V>>,
+    tick: u64,
+    resident_bytes: usize,
+}
+
+impl<K: Eq + std::hash::Hash + Clone, V> LruCore<K, V> {
+    fn new() -> LruCore<K, V> {
+        LruCore { entries: HashMap::new(), tick: 0, resident_bytes: 0 }
+    }
+
+    /// Advance and return the recency clock.
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn get_mut<Q>(&mut self, k: &Q) -> Option<&mut LruEntry<V>>
+    where
+        K: std::borrow::Borrow<Q>,
+        Q: Eq + std::hash::Hash + ?Sized,
+    {
+        self.entries.get_mut(k)
+    }
+
+    /// Insert at a fresh tick, charging `bytes`. Any existing entry under
+    /// the key is removed (and uncharged) first and returned; its hit
+    /// count carries over to the new entry — for both caches, same key
+    /// means same logical object (content-digest model ids, full
+    /// construction-input instance keys), so a refresh keeps its history.
+    fn insert(&mut self, k: K, value: V, bytes: usize) -> Option<LruEntry<V>> {
+        let tick = self.next_tick();
+        let displaced = self.entries.remove(&k);
+        if let Some(old) = &displaced {
+            self.resident_bytes -= old.bytes;
+        }
+        let hits = displaced.as_ref().map_or(0, |old| old.hits);
+        self.resident_bytes += bytes;
+        self.entries.insert(k, LruEntry { value, last_used: tick, bytes, hits });
+        displaced
+    }
+
+    /// Charge a so-far-unresident entry (a build slot whose construction
+    /// just finished). No-op if the entry is gone or already charged.
+    fn charge(&mut self, k: &K, bytes: usize) {
+        if let Some(e) = self.entries.get_mut(k) {
+            if e.bytes == 0 {
+                e.bytes = bytes;
+                self.resident_bytes += bytes;
+            }
+        }
+    }
+
+    /// Remove and uncharge an entry.
+    fn remove<Q>(&mut self, k: &Q) -> Option<LruEntry<V>>
+    where
+        K: std::borrow::Borrow<Q>,
+        Q: Eq + std::hash::Hash + ?Sized,
+    {
+        let e = self.entries.remove(k)?;
+        self.resident_bytes -= e.bytes;
+        Some(e)
+    }
+
+    /// Number of resident (charged) entries.
+    fn resident_len(&self) -> usize {
+        self.entries.values().filter(|e| e.bytes > 0).count()
+    }
+
+    /// Evict least-recently-used resident entries until `resident_bytes`
+    /// fits the budget. The `protect` key — the entry whose insert
+    /// triggered this pass — is exempt, so one oversized entry stays
+    /// resident (and becomes evictable by the next insert); unresident
+    /// placeholders hold no bytes and are skipped.
+    fn evict_until_fit(&mut self, budget: usize, protect: &K, evictions: &crate::metrics::Counter) {
+        while self.resident_bytes > budget {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(k, e)| e.bytes > 0 && *k != protect)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if self.remove(&k).is_some() {
+                        evictions.inc();
+                    }
+                }
+                None => break, // only the fresh entry remains; keep it
+            }
+        }
+    }
+
+    /// Refresh the `{prefix}_bytes` / `{prefix}_entries` gauge pair.
+    fn publish(&self, metrics: &Registry, prefix: &str) {
+        metrics.gauge(&format!("{prefix}_bytes")).set(self.resident_bytes as u64);
+        metrics
+            .gauge(&format!("{prefix}_entries"))
+            .set(self.resident_len() as u64);
+    }
 }
 
 /// One resident instance entry, as reported by the `"kind": "cache"`
@@ -93,17 +212,11 @@ pub struct InstanceEntryInfo {
     pub hits: u64,
 }
 
-struct CacheState {
-    entries: HashMap<CacheKey, Entry>,
-    tick: u64,
-    resident_bytes: usize,
-}
-
 /// `(dataset, model, storage, scale)`-keyed LRU cache of built
 /// [`Instance`]s, shared by every worker in a pool.
 pub struct InstanceCache {
     budget_bytes: usize,
-    state: Mutex<CacheState>,
+    state: Mutex<LruCore<CacheKey, Arc<Slot>>>,
 }
 
 impl InstanceCache {
@@ -115,14 +228,7 @@ impl InstanceCache {
     /// `budget_bytes = 0` disables residency: every call constructs a
     /// transient instance (still counted as a miss).
     pub fn new(budget_bytes: usize) -> InstanceCache {
-        InstanceCache {
-            budget_bytes,
-            state: Mutex::new(CacheState {
-                entries: HashMap::new(),
-                tick: 0,
-                resident_bytes: 0,
-            }),
-        }
+        InstanceCache { budget_bytes, state: Mutex::new(LruCore::new()) }
     }
 
     /// Configured byte budget (0 = residency disabled).
@@ -132,7 +238,7 @@ impl InstanceCache {
 
     /// Number of resident (built) entries.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().entries.values().filter(|e| e.bytes > 0).count()
+        self.state.lock().unwrap().resident_len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -168,9 +274,8 @@ impl InstanceCache {
         }
         let slot = {
             let mut st = self.state.lock().unwrap();
-            st.tick += 1;
-            let tick = st.tick;
-            match st.entries.get_mut(key) {
+            let tick = st.next_tick();
+            match st.get_mut(key) {
                 Some(e) => {
                     e.last_used = tick;
                     // resident-hit bookkeeping rides the lock we already
@@ -184,14 +289,12 @@ impl InstanceCache {
                     if e.bytes > 0 {
                         e.hits += 1;
                     }
-                    e.slot.clone()
+                    e.value.clone()
                 }
                 None => {
                     let slot = Arc::new(Slot { built: Mutex::new(None) });
-                    st.entries.insert(
-                        key.clone(),
-                        Entry { slot: slot.clone(), last_used: tick, bytes: 0, hits: 0 },
-                    );
+                    // a placeholder: 0 bytes until the build charges it
+                    let _ = st.insert(key.clone(), slot.clone(), 0);
                     slot
                 }
             }
@@ -220,50 +323,36 @@ impl InstanceCache {
     }
 
     /// Record the built entry's size, then evict LRU entries until the
-    /// resident total fits the budget again. The entry just inserted is
-    /// exempt from its own eviction pass; unbuilt entries (a concurrent
-    /// build mid-flight) hold no bytes and are skipped.
+    /// resident total fits the budget again (the core's evict-until-fit:
+    /// the entry just inserted is exempt from its own pass; unbuilt
+    /// entries hold no bytes and are skipped).
     fn charge_and_evict(&self, key: &CacheKey, slot: &Arc<Slot>, bytes: usize, metrics: &Registry) {
         let mut st = self.state.lock().unwrap();
-        if let Some(e) = st.entries.get_mut(key) {
-            // only charge if this is still our entry (a failed build may
-            // have been forgotten and re-created by another thread)
-            if Arc::ptr_eq(&e.slot, slot) && e.bytes == 0 {
-                e.bytes = bytes;
-                st.resident_bytes += bytes;
-            }
+        // only charge if this is still our entry (a failed build may
+        // have been forgotten and re-created by another thread)
+        let ours = st
+            .get_mut(key)
+            .map_or(false, |e| Arc::ptr_eq(&e.value, slot) && e.bytes == 0);
+        if ours {
+            st.charge(key, bytes);
         }
-        while st.resident_bytes > self.budget_bytes {
-            let victim = st
-                .entries
-                .iter()
-                .filter(|(k, e)| e.bytes > 0 && *k != key)
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone());
-            match victim {
-                Some(k) => {
-                    if let Some(e) = st.entries.remove(&k) {
-                        st.resident_bytes -= e.bytes;
-                        metrics.counter("instance_cache_evictions").inc();
-                    }
-                }
-                None => break, // only the fresh entry remains; keep it
-            }
-        }
-        metrics.gauge("instance_cache_bytes").set(st.resident_bytes as u64);
-        metrics
-            .gauge("instance_cache_entries")
-            .set(st.entries.values().filter(|e| e.bytes > 0).count() as u64);
+        st.evict_until_fit(
+            self.budget_bytes,
+            key,
+            &metrics.counter("instance_cache_evictions"),
+        );
+        st.publish(metrics, "instance_cache");
     }
 
     /// Drop the placeholder entry for a failed build (only if it is still
     /// ours — a concurrent retry may have replaced it).
     fn forget_failed(&self, key: &CacheKey, slot: &Arc<Slot>) {
         let mut st = self.state.lock().unwrap();
-        if let Some(e) = st.entries.get(key) {
-            if Arc::ptr_eq(&e.slot, slot) && e.bytes == 0 {
-                st.entries.remove(key);
-            }
+        let ours = st
+            .get_mut(key)
+            .map_or(false, |e| Arc::ptr_eq(&e.value, slot) && e.bytes == 0);
+        if ours {
+            st.remove(key);
         }
     }
 
@@ -305,13 +394,9 @@ impl InstanceCache {
         if !evictable {
             return false;
         }
-        let e = st.entries.remove(key).expect("checked above");
-        st.resident_bytes -= e.bytes;
+        st.remove(key).expect("checked above");
         metrics.counter("instance_cache_evictions").inc();
-        metrics.gauge("instance_cache_bytes").set(st.resident_bytes as u64);
-        metrics
-            .gauge("instance_cache_entries")
-            .set(st.entries.values().filter(|e| e.bytes > 0).count() as u64);
+        st.publish(metrics, "instance_cache");
         true
     }
 }
@@ -338,19 +423,6 @@ fn build_instance(key: &CacheKey) -> Result<Instance, String> {
     Ok(Instance::from_dataset(key.model, &ds))
 }
 
-struct ModelEntry {
-    model: Arc<TrainedModel>,
-    last_used: u64,
-    bytes: usize,
-    hits: u64,
-}
-
-struct ModelState {
-    entries: HashMap<String, ModelEntry>,
-    tick: u64,
-    resident_bytes: usize,
-}
-
 /// One resident model entry, as reported by `"kind": "cache"`.
 #[derive(Clone, Debug)]
 pub struct ModelEntryInfo {
@@ -361,21 +433,18 @@ pub struct ModelEntryInfo {
 
 /// Resident cache of [`TrainedModel`]s keyed by their deterministic id —
 /// the instance cache's sibling on the serving side of the train →
-/// predict loop. Same shape: LRU under a byte budget
-/// ([`TrainedModel::approx_bytes`] per entry, the just-inserted entry
-/// exempt from its own eviction pass), `model_cache_{hits,misses,loads,
-/// evictions,errors}` counters plus `model_cache_{bytes,entries}` gauges,
-/// zero budget disables residency. Unlike instances, models enter by
-/// *insertion* (a train job) or by *loading* an artifact file — there is
-/// no per-key build slot because neither path has the instance cache's
-/// expensive-concurrent-rebuild problem: inserts are cheap, and a rare
-/// duplicate concurrent file load is just a second read. The LRU core
-/// deliberately mirrors [`InstanceCache`]'s rather than sharing a
-/// generic with it (ROADMAP: model artifact follow-ons) — keep the two
-/// eviction loops in sync when touching either.
+/// predict loop, built over the same [`LruCore`] (one eviction loop, one
+/// gauge pair, shared fresh-entry exemption):
+/// [`TrainedModel::approx_bytes`] per entry, `model_cache_{hits,misses,
+/// loads,evictions,errors}` counters plus `model_cache_{bytes,entries}`
+/// gauges, zero budget disables residency. Unlike instances, models
+/// enter by *insertion* (a train job) or by *loading* an artifact file —
+/// there is no per-key build slot because neither path has the instance
+/// cache's expensive-concurrent-rebuild problem: inserts are cheap, and
+/// a rare duplicate concurrent file load is just a second read.
 pub struct ModelCache {
     budget_bytes: usize,
-    state: Mutex<ModelState>,
+    state: Mutex<LruCore<String, Arc<TrainedModel>>>,
 }
 
 impl ModelCache {
@@ -386,18 +455,12 @@ impl ModelCache {
     /// `budget_bytes = 0` disables residency: inserts are dropped and
     /// every file reference loads transiently.
     pub fn new(budget_bytes: usize) -> ModelCache {
-        ModelCache {
-            budget_bytes,
-            state: Mutex::new(ModelState {
-                entries: HashMap::new(),
-                tick: 0,
-                resident_bytes: 0,
-            }),
-        }
+        ModelCache { budget_bytes, state: Mutex::new(LruCore::new()) }
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().entries.len()
+        // every model entry is charged on insert, so resident = all
+        self.state.lock().unwrap().resident_len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -410,8 +473,8 @@ impl ModelCache {
 
     /// Insert (or refresh) a model under its deterministic id; returns
     /// the id. Then evicts LRU entries until the budget fits again — the
-    /// entry just inserted is exempt from its own pass, mirroring
-    /// [`InstanceCache`].
+    /// entry just inserted is exempt from its own pass (the core's
+    /// fresh-entry exemption).
     pub fn insert(&self, model: Arc<TrainedModel>, metrics: &Registry) -> String {
         let id = model.id();
         if self.budget_bytes == 0 {
@@ -419,50 +482,25 @@ impl ModelCache {
         }
         let bytes = model.approx_bytes();
         let mut st = self.state.lock().unwrap();
-        st.tick += 1;
-        let tick = st.tick;
         // a refresh (re-train, predict-by-file reload) keeps the entry's
-        // hit history — ids are content digests, so same id ⇒ same model
-        let mut hits = 0;
-        if let Some(old) = st.entries.remove(&id) {
-            st.resident_bytes -= old.bytes;
-            hits = old.hits;
-        }
-        st.resident_bytes += bytes;
-        st.entries.insert(id.clone(), ModelEntry { model, last_used: tick, bytes, hits });
-        while st.resident_bytes > self.budget_bytes {
-            let victim = st
-                .entries
-                .iter()
-                .filter(|(k, _)| *k != &id)
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone());
-            match victim {
-                Some(k) => {
-                    if let Some(e) = st.entries.remove(&k) {
-                        st.resident_bytes -= e.bytes;
-                        metrics.counter("model_cache_evictions").inc();
-                    }
-                }
-                None => break, // only the fresh entry remains; keep it
-            }
-        }
-        metrics.gauge("model_cache_bytes").set(st.resident_bytes as u64);
-        metrics.gauge("model_cache_entries").set(st.entries.len() as u64);
+        // hit history (the core's carry-over) — ids are content digests,
+        // so same id ⇒ same model
+        let _ = st.insert(id.clone(), model, bytes);
+        st.evict_until_fit(self.budget_bytes, &id, &metrics.counter("model_cache_evictions"));
+        st.publish(metrics, "model_cache");
         id
     }
 
     /// Fetch a resident model by id (hit/miss counted).
     pub fn get(&self, id: &str, metrics: &Registry) -> Option<Arc<TrainedModel>> {
         let mut st = self.state.lock().unwrap();
-        st.tick += 1;
-        let tick = st.tick;
-        match st.entries.get_mut(id) {
+        let tick = st.next_tick();
+        match st.get_mut(id) {
             Some(e) => {
                 e.last_used = tick;
                 e.hits += 1;
                 metrics.counter("model_cache_hits").inc();
-                Some(e.model.clone())
+                Some(e.value.clone())
             }
             None => {
                 metrics.counter("model_cache_misses").inc();
@@ -494,12 +532,10 @@ impl ModelCache {
     /// Explicitly evict one model (the `"kind": "cache"` evict surface).
     pub fn evict(&self, id: &str, metrics: &Registry) -> bool {
         let mut st = self.state.lock().unwrap();
-        match st.entries.remove(id) {
-            Some(e) => {
-                st.resident_bytes -= e.bytes;
+        match st.remove(id) {
+            Some(_) => {
                 metrics.counter("model_cache_evictions").inc();
-                metrics.gauge("model_cache_bytes").set(st.resident_bytes as u64);
-                metrics.gauge("model_cache_entries").set(st.entries.len() as u64);
+                st.publish(metrics, "model_cache");
                 true
             }
             None => false,
@@ -720,6 +756,62 @@ mod tests {
         std::fs::remove_file(&p).ok();
         assert!(cache.get_or_load(Path::new("/no/such/file"), &m).is_err());
         assert_eq!(m.counter("model_cache_errors").get(), 1);
+    }
+
+    #[test]
+    fn lru_core_charge_evict_and_publish() {
+        let m = Registry::default();
+        let ev = m.counter("test_evictions");
+        let mut core: LruCore<&'static str, u32> = LruCore::new();
+        assert!(core.insert("a", 1, 10).is_none());
+        assert!(core.insert("b", 2, 10).is_none());
+        assert_eq!(core.resident_bytes, 20);
+        assert_eq!(core.resident_len(), 2);
+
+        // placeholder: unresident until charged, never a victim
+        let _ = core.insert("building", 3, 0);
+        assert_eq!(core.resident_len(), 2);
+        core.evict_until_fit(5, &"b", &ev);
+        assert!(core.get_mut("building").is_some(), "placeholders survive eviction");
+        assert!(core.get_mut("a").is_none(), "LRU resident entry evicted");
+        assert!(core.get_mut("b").is_some(), "protected entry survives over-budget");
+        assert_eq!(ev.get(), 1);
+
+        core.charge(&"building", 7);
+        assert_eq!(core.resident_bytes, 17);
+        core.charge(&"building", 99); // double charge is a no-op
+        assert_eq!(core.resident_bytes, 17);
+
+        // touching refreshes recency: "b" touched last, "building" evicts
+        let t = core.next_tick();
+        core.get_mut("b").unwrap().last_used = t;
+        core.evict_until_fit(10, &"b", &ev);
+        assert!(core.get_mut("building").is_none());
+        assert_eq!(core.resident_bytes, 10);
+
+        // remove uncharges; publish reflects the final state
+        assert!(core.remove("b").is_some());
+        assert!(core.remove("b").is_none());
+        assert_eq!(core.resident_bytes, 0);
+        core.publish(&m, "test_core");
+        assert_eq!(m.gauge("test_core_bytes").get(), 0);
+        assert_eq!(m.gauge("test_core_entries").get(), 0);
+    }
+
+    #[test]
+    fn lru_core_insert_replaces_without_double_charge() {
+        let mut core: LruCore<u8, u8> = LruCore::new();
+        let _ = core.insert(1, 10, 100);
+        core.get_mut(&1).unwrap().hits = 5;
+        let displaced = core.insert(1, 11, 40).expect("old entry displaced");
+        assert_eq!((displaced.value, displaced.hits), (10, 5));
+        assert_eq!(core.resident_bytes, 40, "replacement uncharges the old entry");
+        let e = core.get_mut(&1).unwrap();
+        assert_eq!((e.value, e.bytes, e.hits), (11, 40, 5), "hit history carries over");
+        // ticks strictly increase across operations
+        let a = core.next_tick();
+        let b = core.next_tick();
+        assert!(b > a);
     }
 
     #[test]

@@ -41,23 +41,36 @@ pub struct JobSpec {
     /// deterministic (the batch/single equivalence the protocol promises
     /// — and the smoke test diffs — only holds for deterministic bytes).
     pub timings: bool,
+    /// Run only after the job with this id has completed: the pool parks
+    /// the spec until that outcome is delivered (success OR failure), so
+    /// an in-session predict can depend on a same-session train without
+    /// `--workers 1`. Must name an already-submitted job — the service
+    /// validates `after < id` at parse, and the pool fails a dangling or
+    /// self-referential edge out immediately rather than parking it.
+    pub after: Option<u64>,
 }
 
 impl JobSpec {
     pub fn path(id: u64, run: RunConfig) -> JobSpec {
-        JobSpec { id, kind: JobKind::Path(run), timings: true }
+        JobSpec { id, kind: JobKind::Path(run), timings: true, after: None }
     }
 
     pub fn screen(id: u64, spec: ScreenSpec) -> JobSpec {
-        JobSpec { id, kind: JobKind::Screen(spec), timings: true }
+        JobSpec { id, kind: JobKind::Screen(spec), timings: true, after: None }
     }
 
     pub fn train(id: u64, spec: TrainSpec) -> JobSpec {
-        JobSpec { id, kind: JobKind::Train(spec), timings: true }
+        JobSpec { id, kind: JobKind::Train(spec), timings: true, after: None }
     }
 
     pub fn predict(id: u64, spec: PredictSpec) -> JobSpec {
-        JobSpec { id, kind: JobKind::Predict(spec), timings: true }
+        JobSpec { id, kind: JobKind::Predict(spec), timings: true, after: None }
+    }
+
+    /// Gate this job on the completion of an earlier one.
+    pub fn after(mut self, dep: u64) -> JobSpec {
+        self.after = Some(dep);
+        self
     }
 }
 
@@ -247,6 +260,10 @@ pub struct TrainSpec {
     pub solver: SolverConfig,
     /// Persist the artifact here after training.
     pub save: Option<String>,
+    /// Echo the full support-set indices in the summary (`dvi train
+    /// --print-support`; the CI smoke leg diffs the parallel solver's
+    /// support set against the serial one with this).
+    pub report_support: bool,
 }
 
 /// What a train job reports.
@@ -274,6 +291,8 @@ pub struct TrainSummary {
     pub artifact_bytes: usize,
     /// Where the artifact was persisted, when requested.
     pub saved: Option<String>,
+    /// Ascending E-set indices, when [`TrainSpec::report_support`].
+    pub support_indices: Option<Vec<u32>>,
     pub solve_secs: f64,
 }
 
@@ -559,6 +578,7 @@ fn run_train(
         active: trained.active.len(),
         artifact_bytes: encoded.len(),
         saved: spec.save.clone(),
+        support_indices: spec.report_support.then(|| trained.support.clone()),
         solve_secs,
     };
     models.insert(Arc::new(trained), metrics);
@@ -836,6 +856,7 @@ mod tests {
             c,
             solver: SolverConfig { tol: 1e-7, ..Default::default() },
             save: None,
+            report_support: false,
         }
     }
 
@@ -942,6 +963,30 @@ mod tests {
     }
 
     #[test]
+    fn parallel_train_reports_the_serial_support_set() {
+        // exact-set equality is sound here because the E-band (= tol)
+        // only flips for a TRUE margin within ~tol of the band edge, and
+        // toy1 is a fixed generic set with no such degenerate margin —
+        // integration_cd_par.rs covers arbitrary data with a wide band
+        let mk = |threads: usize| {
+            let mut spec = quick_train("toy1", 0.5);
+            spec.report_support = true;
+            spec.solver.tol = 1e-8;
+            spec.solver.solver_threads = Some(threads);
+            spec
+        };
+        let serial = run_job(&JobSpec::train(0, mk(1))).result.unwrap();
+        let par = run_job(&JobSpec::train(1, mk(4))).result.unwrap();
+        let (s, p) = (serial.as_train().unwrap(), par.as_train().unwrap());
+        let sup = s.support_indices.as_ref().expect("requested support echo");
+        assert!(!sup.is_empty());
+        assert_eq!(s.support_indices, p.support_indices, "support sets must agree");
+        // without the flag the summary stays lean
+        let lean = run_job(&JobSpec::train(2, quick_train("toy1", 0.5))).result.unwrap();
+        assert!(lean.as_train().unwrap().support_indices.is_none());
+    }
+
+    #[test]
     fn train_save_and_predict_from_file() {
         let mut p = std::env::temp_dir();
         p.push(format!("dvi_job_train_{}.pallas-model", std::process::id()));
@@ -973,7 +1018,12 @@ mod tests {
         run_job_cached(&JobSpec::train(0, quick_train("toy1", 0.5)), &cache, &models, &m)
             .result
             .unwrap();
-        let list = JobSpec { id: 1, kind: JobKind::Cache(CacheSpec { op: CacheOp::List }), timings: false };
+        let list = JobSpec {
+            id: 1,
+            kind: JobKind::Cache(CacheSpec { op: CacheOp::List }),
+            timings: false,
+            after: None,
+        };
         let out = run_job_cached(&list, &cache, &models, &m).result.unwrap();
         let s = out.as_cache().unwrap();
         assert_eq!(s.instances.len(), 1);
@@ -985,6 +1035,7 @@ mod tests {
             id: 2,
             kind: JobKind::Cache(CacheSpec { op: CacheOp::EvictModel(model_id) }),
             timings: false,
+            after: None,
         };
         let out = run_job_cached(&evict, &cache, &models, &m).result.unwrap();
         let s = out.as_cache().unwrap();
@@ -998,6 +1049,7 @@ mod tests {
                 op: CacheOp::EvictInstance(CacheKey::new("toy1", Model::Svm, Storage::Auto, 0.05)),
             }),
             timings: false,
+            after: None,
         };
         let out = run_job_cached(&evict_inst, &cache, &models, &m).result.unwrap();
         assert_eq!(out.as_cache().unwrap().evicted, Some(true));

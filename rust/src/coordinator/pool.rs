@@ -18,6 +18,7 @@
 use super::cache::{InstanceCache, ModelCache};
 use super::job::{run_job_cached, JobOutcome, JobSpec};
 use crate::metrics::{Counter, Registry};
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -28,12 +29,56 @@ enum Msg {
     Shutdown,
 }
 
+/// Dependency bookkeeping for [`JobSpec::after`]: jobs naming a dep that
+/// has not completed yet are parked here; the worker that delivers the
+/// dep's outcome re-enqueues them. `done` grows by one u64 per finished
+/// job for the pool's lifetime — the service's per-session job counts
+/// make that a non-issue, and correctness needs the full history (a dep
+/// may complete long before its dependent is submitted).
+struct DepState {
+    /// Every job id ever accepted by `submit` — the membership check
+    /// that lets a dangling `after` fail fast instead of parking a job
+    /// (and a caller blocked in `recv`) forever.
+    submitted: HashSet<u64>,
+    done: HashSet<u64>,
+    waiting: HashMap<u64, Vec<JobSpec>>,
+}
+
+/// Mark `id` complete and hand any parked dependents back to the queue.
+/// Called on every completion path (normal outcomes and the result
+/// guard's unwind cleanup), so a failed or panicked dep still releases
+/// its dependents — they run and fail on their own terms (e.g. "model
+/// not resident") instead of hanging the session.
+fn release_dependents(id: u64, deps: &Mutex<DepState>, tx: &Sender<Msg>) {
+    let freed = {
+        let mut st = deps.lock().unwrap();
+        st.done.insert(id);
+        st.waiting.remove(&id)
+    };
+    if let Some(specs) = freed {
+        for spec in specs {
+            // receiver may be gone during shutdown; the drop path then
+            // fails these jobs out of the waiting map
+            let _ = tx.send(Msg::Job(spec));
+        }
+    }
+}
+
 /// Fixed-size worker pool with a shared resident instance cache.
 pub struct WorkerPool {
     tx: Sender<Msg>,
     results_rx: Receiver<JobOutcome>,
+    /// A sender the pool keeps for itself so the drop path can fail out
+    /// parked jobs whose dependency never ran (workers hold clones).
+    results_tx: Sender<JobOutcome>,
+    /// The pool's own handle on the work queue receiver, used only at
+    /// drop: jobs released into the queue after the shutdown messages
+    /// (a dependency finishing during the drain) are recovered from it
+    /// and failed out instead of vanishing with the channel.
+    rx: Arc<Mutex<Receiver<Msg>>>,
     workers: Vec<JoinHandle<()>>,
     pending: Arc<AtomicU64>,
+    deps: Arc<Mutex<DepState>>,
     pub metrics: Arc<Registry>,
     pub cache: Arc<InstanceCache>,
     /// Resident trained-model cache (train inserts, predict resolves).
@@ -54,6 +99,8 @@ struct ResultGuard<'a> {
     pending: &'a AtomicU64,
     jobs_done: &'a Counter,
     jobs_failed: &'a Counter,
+    deps: &'a Mutex<DepState>,
+    job_tx: &'a Sender<Msg>,
     done: bool,
 }
 
@@ -67,6 +114,7 @@ impl ResultGuard<'_> {
         self.pending.fetch_sub(1, Ordering::SeqCst);
         // receiver may be gone during shutdown
         let _ = self.results_tx.send(outcome);
+        release_dependents(self.id, self.deps, self.job_tx);
     }
 }
 
@@ -81,6 +129,7 @@ impl Drop for ResultGuard<'_> {
                 timings: true,
                 result: Err("worker crashed while finalizing the job".into()),
             });
+            release_dependents(self.id, self.deps, self.job_tx);
         }
     }
 }
@@ -109,6 +158,11 @@ impl WorkerPool {
         let metrics = Arc::new(Registry::default());
         let cache = Arc::new(InstanceCache::new(cache_bytes));
         let models = Arc::new(ModelCache::new(model_bytes));
+        let deps = Arc::new(Mutex::new(DepState {
+            submitted: HashSet::new(),
+            done: HashSet::new(),
+            waiting: HashMap::new(),
+        }));
 
         let mut workers = Vec::with_capacity(n);
         for wid in 0..n {
@@ -118,6 +172,8 @@ impl WorkerPool {
             let metrics = metrics.clone();
             let cache = cache.clone();
             let models = models.clone();
+            let deps = deps.clone();
+            let job_tx = tx.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("dvi-worker-{wid}"))
@@ -141,6 +197,8 @@ impl WorkerPool {
                                         pending: &pending,
                                         jobs_done: &jobs_done,
                                         jobs_failed: &jobs_failed,
+                                        deps: &deps,
+                                        job_tx: &job_tx,
                                         done: false,
                                     };
                                     let t = std::time::Instant::now();
@@ -164,12 +222,59 @@ impl WorkerPool {
                     .expect("spawn worker"),
             );
         }
-        WorkerPool { tx, results_rx, workers, pending, metrics, cache, models }
+        WorkerPool {
+            tx,
+            results_rx,
+            results_tx,
+            rx,
+            workers,
+            pending,
+            deps,
+            metrics,
+            cache,
+            models,
+        }
     }
 
-    /// Enqueue a job.
+    /// Enqueue a job. A job carrying [`JobSpec::after`] is parked until
+    /// that dependency's outcome has been delivered. The dependency must
+    /// name an *already-submitted* job — a dangling or self-referential
+    /// id is failed out immediately (an error outcome, never a park),
+    /// because a forever-parked job would deadlock a caller blocked in
+    /// [`WorkerPool::recv`].
     pub fn submit(&self, spec: JobSpec) {
         self.pending.fetch_add(1, Ordering::SeqCst);
+        if let Some(dep) = spec.after {
+            let mut st = self.deps.lock().unwrap();
+            // membership is checked BEFORE this id registers, so a
+            // self-dependency is dangling by construction
+            if !st.submitted.contains(&dep) {
+                st.submitted.insert(spec.id);
+                drop(st);
+                self.metrics.counter("jobs_done").inc();
+                self.metrics.counter("jobs_failed").inc();
+                self.pending.fetch_sub(1, Ordering::SeqCst);
+                let _ = self.results_tx.send(JobOutcome {
+                    id: spec.id,
+                    timings: spec.timings,
+                    result: Err(format!(
+                        "after: {dep} does not name an already-submitted job"
+                    )),
+                });
+                // a fail-fast is still a completion: anything gated on
+                // THIS id must release (and fail on its own terms), not
+                // park forever
+                release_dependents(spec.id, &self.deps, &self.tx);
+                return;
+            }
+            st.submitted.insert(spec.id);
+            if !st.done.contains(&dep) {
+                st.waiting.entry(dep).or_default().push(spec);
+                return;
+            }
+        } else {
+            self.deps.lock().unwrap().submitted.insert(spec.id);
+        }
         self.tx.send(Msg::Job(spec)).expect("pool closed");
     }
 
@@ -214,6 +319,48 @@ impl Drop for WorkerPool {
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        // Jobs a finishing dependency released into the queue *behind*
+        // the shutdown messages: their dep DID complete, and the pool's
+        // contract is that drop drains queued jobs — so run them inline
+        // here (their completions may release further dependents into
+        // the queue, hence the loop until dry).
+        if let Ok(rx) = self.rx.lock() {
+            while let Ok(msg) = rx.try_recv() {
+                let Msg::Job(spec) = msg else { continue };
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_job_cached(&spec, &self.cache, &self.models, &self.metrics)
+                }))
+                .unwrap_or_else(|p| JobOutcome {
+                    id: spec.id,
+                    timings: spec.timings,
+                    result: Err(panic_msg(p)),
+                });
+                self.metrics.counter("jobs_done").inc();
+                if outcome.result.is_err() {
+                    self.metrics.counter("jobs_failed").inc();
+                }
+                self.pending.fetch_sub(1, Ordering::SeqCst);
+                let _ = self.results_tx.send(outcome);
+                release_dependents(spec.id, &self.deps, &self.tx);
+            }
+        }
+        // Anything still parked has a dependency that never ran at all
+        // (a dangling id): fail it out so every accepted job still
+        // yields exactly one outcome.
+        let stragglers: Vec<JobSpec> = {
+            let mut st = self.deps.lock().unwrap();
+            st.waiting.drain().flat_map(|(_, specs)| specs).collect()
+        };
+        for spec in stragglers {
+            self.metrics.counter("jobs_done").inc();
+            self.metrics.counter("jobs_failed").inc();
+            self.pending.fetch_sub(1, Ordering::SeqCst);
+            let _ = self.results_tx.send(JobOutcome {
+                id: spec.id,
+                timings: spec.timings,
+                result: Err("pool shut down before the job's dependency completed".into()),
+            });
         }
     }
 }
@@ -314,6 +461,7 @@ mod tests {
                 c: 0.5,
                 solver: SolverConfig { tol: 1e-6, ..Default::default() },
                 save: None,
+                report_support: false,
             },
         ));
         let trained = pool.recv().unwrap().result.unwrap();
@@ -332,6 +480,104 @@ mod tests {
         let out = pool.recv().unwrap().result.unwrap();
         assert_eq!(out.as_predict().unwrap().scores.len(), 1);
         assert_eq!(pool.metrics.counter("model_cache_hits").get(), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn after_edge_orders_train_before_predict() {
+        use super::super::job::{ModelRef, PredictInput, PredictSpec, TrainSpec};
+        use crate::linalg::Storage;
+        use crate::problem::Model;
+        // learn the deterministic model id up front (content digest)
+        let probe = super::super::job::run_job(&JobSpec::train(
+            0,
+            TrainSpec {
+                dataset: "toy1".into(),
+                model: Model::Svm,
+                scale: 0.03,
+                storage: Storage::Auto,
+                c: 0.5,
+                solver: SolverConfig { tol: 1e-6, ..Default::default() },
+                save: None,
+                report_support: false,
+            },
+        ));
+        let id = probe.result.unwrap().as_train().unwrap().model_id.clone();
+
+        // submit train + dependent predict TOGETHER on a multi-worker
+        // pool: without the edge the predict could run first and miss
+        let pool = WorkerPool::new(3);
+        pool.submit(JobSpec::train(
+            0,
+            TrainSpec {
+                dataset: "toy1".into(),
+                model: Model::Svm,
+                scale: 0.03,
+                storage: Storage::Auto,
+                c: 0.5,
+                solver: SolverConfig { tol: 1e-6, ..Default::default() },
+                save: None,
+                report_support: false,
+            },
+        ));
+        pool.submit(
+            JobSpec::predict(
+                1,
+                PredictSpec {
+                    model: ModelRef::Id(id),
+                    input: PredictInput::Rows { flat: vec![1.0, 1.0], width: 2 },
+                    threads: 1,
+                    support_only: false,
+                },
+            )
+            .after(0),
+        );
+        let mut outcomes = vec![pool.recv().unwrap(), pool.recv().unwrap()];
+        outcomes.sort_by_key(|o| o.id);
+        assert!(outcomes[0].result.is_ok(), "{:?}", outcomes[0].result);
+        assert!(
+            outcomes[1].result.is_ok(),
+            "predict must run after its train dep: {:?}",
+            outcomes[1].result
+        );
+        assert_eq!(pool.pending(), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn after_edge_on_completed_dep_runs_immediately_and_failures_release() {
+        let pool = WorkerPool::new(1);
+        // dep fails (unknown dataset) — the dependent must still run
+        pool.submit(spec(0, "missing-set"));
+        pool.submit(spec(1, "toy1").after(0));
+        let mut outcomes = vec![pool.recv().unwrap(), pool.recv().unwrap()];
+        outcomes.sort_by_key(|o| o.id);
+        assert!(outcomes[0].result.is_err());
+        assert!(outcomes[1].result.is_ok(), "failed dep must still release");
+        // a dep that already completed gates nothing
+        pool.submit(spec(2, "toy1").after(1));
+        assert!(pool.recv().unwrap().result.is_ok());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn dangling_or_self_after_fails_fast() {
+        let pool = WorkerPool::new(1);
+        pool.submit(spec(0, "toy1").after(99)); // 99 never submitted
+        let out = pool.recv().unwrap();
+        assert_eq!(out.id, 0);
+        assert!(out.result.is_err(), "dangling dep must not park forever");
+        // self-dependency is dangling by construction (membership is
+        // checked before the id registers)
+        pool.submit(spec(1, "toy1").after(1));
+        let out = pool.recv().unwrap();
+        assert!(out.result.is_err());
+        assert_eq!(pool.pending(), 0);
+        assert_eq!(pool.metrics.counter("jobs_failed").get(), 2);
+        // a fail-fast still counts as completion: a job gated on the
+        // failed id runs (and succeeds on its own terms)
+        pool.submit(spec(2, "toy1").after(0));
+        assert!(pool.recv().unwrap().result.is_ok());
         pool.shutdown();
     }
 

@@ -62,13 +62,31 @@
 //! `model_id`. A predict job scores inline rows or a registry dataset
 //! against a model addressed by `model_id` (resident) or `model_file`
 //! (loaded from disk, then resident); scores are byte-deterministic for
-//! any `threads`/storage/`support_only` setting. NOTE: jobs on one
-//! session line-set run concurrently — a predict-by-id that depends on a
-//! train in the *same* session is only ordered with `--workers 1`; use
-//! `model_file`, or train in an earlier session, otherwise. The same
-//! caveat applies to `"kind": "cache"` introspection: its snapshot races
-//! whatever jobs are in flight, so its listing (and hit counters) are
-//! only reproducible with `--workers 1` or in a session of their own.
+//! any `threads`/storage/`support_only` setting.
+//!
+//! Jobs on one session line-set run concurrently; a request that depends
+//! on an earlier one declares `"after": <id>` (any kind accepts it) and
+//! the pool holds it until that job's outcome is delivered — so a
+//! predict-by-id can follow its train in the same session at any worker
+//! count:
+//!
+//! ```json
+//! {"kind": "train", "dataset": "toy1", "c": 0.5}
+//! {"kind": "predict", "model_id": "svm-…", "rows": [[0.5, -1.0]], "after": 0}
+//! ```
+//!
+//! Ids are assigned in submission order from 0 (parse-failed lines
+//! consume no id); `after` must name an already-submitted id. The edge
+//! fires on completion, success or failure — a failed dependency lets
+//! the dependent run and fail on its own terms. `"kind": "cache"`
+//! introspection still races whatever jobs are in flight unless gated
+//! the same way (or run with `--workers 1`).
+//!
+//! Path, screen, and train requests accept `"solver_threads"` (0 = auto)
+//! to shard their CD solves independently of the scan-side `"threads"`;
+//! unset, the solver inherits `"threads"`. Solutions are KKT-equivalent
+//! but not bitwise-equal across solver thread counts — see README
+//! §Solver before diffing session outputs that vary it.
 //!
 //! ## Cache requests
 //!
@@ -112,6 +130,10 @@ const MAX_PREDICT_FLOATS: usize = 8_000_000;
 pub struct ParsedRequest {
     pub kind: JobKind,
     pub timings: bool,
+    /// `"after": <id>` — run only once that (already-submitted) job of
+    /// this session has completed. Lets e.g. a predict depend on a
+    /// same-session train with `--workers` > 1.
+    pub after: Option<u64>,
 }
 
 /// Service wrapping a pool with JSON request/response framing.
@@ -226,7 +248,19 @@ impl ScreeningService {
             None => "path",
             Some(v) => v.as_str().ok_or("kind: string")?,
         };
-        match kind {
+        // the dependency edge is common to every kind; the per-kind
+        // parsers skip the key and this level attaches it
+        let after = match obj.get("after") {
+            None => None,
+            Some(v) => {
+                let a = v.as_int().ok_or("after: int (an earlier job id)")?;
+                if a < 0 {
+                    return Err(format!("after must be a job id >= 0, got {a}"));
+                }
+                Some(a as u64)
+            }
+        };
+        let mut req = match kind {
             "path" => Self::parse_path_object(obj),
             "screen" => Self::parse_screen_object(obj),
             "train" => Self::parse_train_object(obj),
@@ -235,7 +269,9 @@ impl ScreeningService {
             other => Err(format!(
                 "unknown request kind `{other}` (path | screen | train | predict | cache)"
             )),
-        }
+        }?;
+        req.after = after;
+        Ok(req)
     }
 
     fn parse_path_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
@@ -243,7 +279,7 @@ impl ScreeningService {
         let mut timings = true;
         for (k, v) in obj {
             match k.as_str() {
-                "kind" => {} // dispatched by the caller
+                "kind" | "after" => {} // dispatched by the caller
                 "timings" => timings = v.as_bool().ok_or("timings: bool")?,
                 "dataset" => cfg.dataset = v.as_str().ok_or("dataset: string")?.to_string(),
                 "model" => cfg.model = v.as_str().ok_or("model: string")?.to_string(),
@@ -275,6 +311,7 @@ impl ScreeningService {
                 }
                 "tol" => cfg.solver.tol = v.as_float().ok_or("tol: number")?,
                 "threads" => cfg.solver.threads = parse_threads(v)?,
+                "solver_threads" => cfg.solver.solver_threads = Some(parse_threads(v)?),
                 "storage" => {
                     let s = v.as_str().ok_or("storage: string")?;
                     if crate::linalg::Storage::parse(s).is_none() {
@@ -292,7 +329,7 @@ impl ScreeningService {
         // request like {"scale": 1e18} would reach the worker and abort
         // it inside the dataset generator's allocation
         cfg.validate_semantics().map_err(|e| e.to_string())?;
-        Ok(ParsedRequest { kind: JobKind::Path(cfg), timings })
+        Ok(ParsedRequest { kind: JobKind::Path(cfg), timings, after: None })
     }
 
     fn parse_screen_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
@@ -309,7 +346,7 @@ impl ScreeningService {
         let mut timings = true;
         for (k, v) in obj {
             match k.as_str() {
-                "kind" => {}
+                "kind" | "after" => {}
                 "timings" => timings = v.as_bool().ok_or("timings: bool")?,
                 "dataset" => spec.dataset = v.as_str().ok_or("dataset: string")?.to_string(),
                 "model" => {
@@ -337,6 +374,7 @@ impl ScreeningService {
                     spec.solver.tol = x;
                 }
                 "threads" => spec.solver.threads = parse_threads(v)?,
+                "solver_threads" => spec.solver.solver_threads = Some(parse_threads(v)?),
                 "pairs" => {
                     let arr = v.as_array().ok_or("pairs: array of [c_prev, c_next]")?;
                     if arr.len() > MAX_PAIRS {
@@ -382,7 +420,7 @@ impl ScreeningService {
         if spec.pairs.is_empty() {
             return Err("screen: `pairs` must be a non-empty array".into());
         }
-        Ok(ParsedRequest { kind: JobKind::Screen(spec), timings })
+        Ok(ParsedRequest { kind: JobKind::Screen(spec), timings, after: None })
     }
 
     fn parse_train_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
@@ -394,11 +432,12 @@ impl ScreeningService {
             c: f64::NAN,
             solver: SolverConfig::default(),
             save: None,
+            report_support: false,
         };
         let mut timings = true;
         for (k, v) in obj {
             match k.as_str() {
-                "kind" => {}
+                "kind" | "after" => {}
                 "timings" => timings = v.as_bool().ok_or("timings: bool")?,
                 "dataset" => spec.dataset = v.as_str().ok_or("dataset: string")?.to_string(),
                 "model" => {
@@ -435,6 +474,7 @@ impl ScreeningService {
                     spec.solver.tol = x;
                 }
                 "threads" => spec.solver.threads = parse_threads(v)?,
+                "solver_threads" => spec.solver.solver_threads = Some(parse_threads(v)?),
                 "save" => spec.save = Some(v.as_str().ok_or("save: string")?.to_string()),
                 other => return Err(format!("unknown train field `{other}`")),
             }
@@ -445,7 +485,7 @@ impl ScreeningService {
         if spec.c.is_nan() {
             return Err("train: `c` is required".into());
         }
-        Ok(ParsedRequest { kind: JobKind::Train(spec), timings })
+        Ok(ParsedRequest { kind: JobKind::Train(spec), timings, after: None })
     }
 
     fn parse_predict_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
@@ -461,7 +501,7 @@ impl ScreeningService {
         let mut timings = true;
         for (k, v) in obj {
             match k.as_str() {
-                "kind" => {}
+                "kind" | "after" => {}
                 "timings" => timings = v.as_bool().ok_or("timings: bool")?,
                 "model_id" => model_id = Some(v.as_str().ok_or("model_id: string")?.to_string()),
                 "model_file" => {
@@ -553,6 +593,7 @@ impl ScreeningService {
         Ok(ParsedRequest {
             kind: JobKind::Predict(PredictSpec { model, input, threads, support_only }),
             timings,
+            after: None,
         })
     }
 
@@ -568,7 +609,7 @@ impl ScreeningService {
         let mut timings = true;
         for (k, v) in obj {
             match k.as_str() {
-                "kind" => {}
+                "kind" | "after" => {}
                 "timings" => timings = v.as_bool().ok_or("timings: bool")?,
                 "op" => op = v.as_str().ok_or("op: string")?.to_string(),
                 "target" => target = Some(v.as_str().ok_or("target: string")?.to_string()),
@@ -631,7 +672,7 @@ impl ScreeningService {
             },
             other => return Err(format!("unknown cache op `{other}` (list | evict)")),
         };
-        Ok(ParsedRequest { kind: JobKind::Cache(CacheSpec { op }), timings })
+        Ok(ParsedRequest { kind: JobKind::Cache(CacheSpec { op }), timings, after: None })
     }
 
     /// Submit a path run; returns its job id.
@@ -641,10 +682,30 @@ impl ScreeningService {
 
     /// Submit any job kind; returns its job id.
     pub fn submit_kind(&mut self, kind: JobKind, timings: bool) -> u64 {
+        self.submit_gated(kind, timings, None)
+    }
+
+    /// Submit a job, optionally gated on an earlier job's completion
+    /// (`"after"`; the caller has validated the id exists).
+    fn submit_gated(&mut self, kind: JobKind, timings: bool, after: Option<u64>) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.pool.submit(JobSpec { id, kind, timings });
+        self.pool.submit(JobSpec { id, kind, timings, after });
         id
+    }
+
+    /// A dependency edge may only name an already-submitted job of this
+    /// service — parse-failed lines consume no id, so the edge must be
+    /// rejected (not parked forever) when it points past the last one.
+    fn check_after(&self, after: Option<u64>) -> Result<(), String> {
+        match after {
+            Some(a) if a >= self.next_id => Err(format!(
+                "after: {a} does not name an already-submitted job \
+                 (next id is {})",
+                self.next_id
+            )),
+            _ => Ok(()),
+        }
     }
 
     /// Block for the next result.
@@ -880,12 +941,13 @@ impl ScreeningService {
                     let parsed = e
                         .as_object()
                         .ok_or("batch entry must be a request object".to_string())
-                        .and_then(Self::parse_object);
+                        .and_then(Self::parse_object)
+                        .and_then(|req| self.check_after(req.after).map(|()| req));
                     match parsed {
                         Ok(req) => {
                             *submitted += 1;
                             self.pool.metrics.counter("service_requests").inc();
-                            Pending::Job(self.submit_kind(req.kind, req.timings))
+                            Pending::Job(self.submit_gated(req.kind, req.timings, req.after))
                         }
                         Err(msg) => Pending::Ready(error_json(msg)),
                     }
@@ -893,11 +955,17 @@ impl ScreeningService {
                 .collect();
             LineSlot::Batch(pending)
         } else {
-            match Self::parse_object(obj) {
+            match Self::parse_object(obj)
+                .and_then(|req| self.check_after(req.after).map(|()| req))
+            {
                 Ok(req) => {
                     *submitted += 1;
                     self.pool.metrics.counter("service_requests").inc();
-                    LineSlot::Single(Pending::Job(self.submit_kind(req.kind, req.timings)))
+                    LineSlot::Single(Pending::Job(self.submit_gated(
+                        req.kind,
+                        req.timings,
+                        req.after,
+                    )))
                 }
                 Err(msg) => LineSlot::Single(Pending::Ready(error_json(msg))),
             }
@@ -1045,6 +1113,108 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.solver.threads, 4);
+        assert_eq!(cfg.solver.solver_threads, None, "solver inherits threads by default");
+        assert_eq!(cfg.solver.cd_threads(), 4);
+    }
+
+    #[test]
+    fn parse_solver_threads_overrides_inheritance() {
+        let cfg = ScreeningService::parse_request(
+            r#"{"dataset": "toy2", "threads": 4, "solver_threads": 1, "points": 8}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.solver.threads, 4);
+        assert_eq!(cfg.solver.cd_threads(), 1);
+        assert!(ScreeningService::parse_request(
+            r#"{"dataset": "toy2", "solver_threads": -2}"#
+        )
+        .is_err());
+        // screen and train kinds take it too
+        let r = parse_line(
+            r#"{"kind": "screen", "dataset": "toy1", "pairs": [[0.1, 0.2]],
+                "solver_threads": 2}"#,
+        )
+        .unwrap();
+        let JobKind::Screen(s) = r.kind else { panic!("expected screen kind") };
+        assert_eq!(s.solver.cd_threads(), 2);
+        let r = parse_line(
+            r#"{"kind": "train", "dataset": "toy1", "c": 0.5, "solver_threads": 0}"#,
+        )
+        .unwrap();
+        let JobKind::Train(s) = r.kind else { panic!("expected train kind") };
+        assert_eq!(s.solver.solver_threads, Some(0), "0 = auto is legal");
+    }
+
+    #[test]
+    fn parse_after_on_any_kind() {
+        for line in [
+            r#"{"dataset": "toy1", "after": 3}"#,
+            r#"{"kind": "screen", "dataset": "toy1", "pairs": [[0.1, 0.2]], "after": 0}"#,
+            r#"{"kind": "train", "dataset": "toy1", "c": 0.5, "after": 1}"#,
+            r#"{"kind": "predict", "model_id": "m", "rows": [[1.0]], "after": 2}"#,
+            r#"{"kind": "cache", "after": 0}"#,
+        ] {
+            let r = parse_line(line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert!(r.after.is_some(), "{line}");
+        }
+        assert_eq!(parse_line(r#"{"dataset": "toy1"}"#).unwrap().after, None);
+        assert!(parse_line(r#"{"dataset": "toy1", "after": -1}"#).is_err());
+        assert!(parse_line(r#"{"dataset": "toy1", "after": "zero"}"#).is_err());
+    }
+
+    #[test]
+    fn serve_after_orders_in_session_train_predict() {
+        use super::super::job::{JobSpec, TrainSpec};
+        // learn the deterministic model id (content digest) up front
+        let probe = super::super::job::run_job(&JobSpec::train(
+            0,
+            TrainSpec {
+                dataset: "toy1".into(),
+                model: Model::Svm,
+                scale: 0.03,
+                storage: crate::linalg::Storage::Auto,
+                c: 0.5,
+                solver: SolverConfig { tol: 1e-6, ..Default::default() },
+                save: None,
+                report_support: false,
+            },
+        ));
+        let id = probe.result.unwrap().as_train().unwrap().model_id.clone();
+
+        // 3 workers: without the edge the predict would race the train
+        let mut svc = ScreeningService::new(3);
+        let input = format!(
+            concat!(
+                r#"{{"kind": "train", "dataset": "toy1", "scale": 0.03, "c": 0.5, "tol": 1e-6, "timings": false}}"#,
+                "\n",
+                r#"{{"kind": "predict", "model_id": "{}", "rows": [[1.0, 1.0]], "after": 0, "timings": false}}"#,
+                "\n",
+                // an edge past the last submitted id is an error line
+                r#"{{"kind": "cache", "after": 7}}"#,
+                "\n"
+            ),
+            id
+        );
+        let mut out = Vec::new();
+        svc.serve(input.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        assert_eq!(
+            parse_json(lines[0]).unwrap().get("ok").unwrap().as_bool(),
+            Some(true),
+            "{text}"
+        );
+        let predict = parse_json(lines[1]).unwrap();
+        assert_eq!(predict.get("ok").unwrap().as_bool(), Some(true), "{text}");
+        assert_eq!(predict.get("kind").unwrap().as_str(), Some("predict"));
+        let bad = parse_json(lines[2]).unwrap();
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+        assert!(
+            bad.get("error").unwrap().as_str().unwrap().contains("already-submitted"),
+            "{text}"
+        );
+        svc.shutdown();
     }
 
     fn parse_line(line: &str) -> Result<ParsedRequest, String> {

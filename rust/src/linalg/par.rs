@@ -79,6 +79,22 @@ pub fn cumulative_ranges(cum: &[usize], shards: usize) -> Vec<Range<usize>> {
     out
 }
 
+/// Prefix-sum a weight sequence into the cumulative form
+/// [`cumulative_ranges`] consumes (length `items + 1`, `cum[0] = 0`).
+/// Lets callers balance shards over an arbitrary *subset* of rows (e.g.
+/// the CD sweep's shuffled active set) by feeding the subset's per-row
+/// weights.
+pub fn cumulative_weights(weights: impl Iterator<Item = usize>) -> Vec<usize> {
+    let mut cum = Vec::with_capacity(weights.size_hint().0 + 1);
+    cum.push(0usize);
+    let mut acc = 0usize;
+    for w in weights {
+        acc = acc.saturating_add(w);
+        cum.push(acc);
+    }
+    cum
+}
+
 /// Row boundaries (length `shards + 1`) that split the upper triangle of
 /// an l×l matrix into row blocks of near-equal area: row i contributes
 /// `l − i` entries, so early rows are "heavier" and equal-row splits would
@@ -278,6 +294,16 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn cumulative_weights_prefix_sums() {
+        assert_eq!(cumulative_weights([].into_iter()), vec![0]);
+        assert_eq!(cumulative_weights([3usize, 0, 5].into_iter()), vec![0, 3, 3, 8]);
+        // feeds straight into cumulative_ranges
+        let cum = cumulative_weights((0..10usize).map(|i| i + 1));
+        let rs = cumulative_ranges(&cum, 3);
+        assert_eq!(rs.last().unwrap().end, 10);
     }
 
     #[test]

@@ -246,6 +246,28 @@ impl Rows {
         }
     }
 
+    /// Like [`Rows::balanced_shards`], but over an arbitrary *subset* of
+    /// rows: split positions `0..idx.len()` of the given row-index list
+    /// into `shards` contiguous ranges carrying near-equal stored-entry
+    /// weight (uniform for dense, per-row nnz for CSR). The parallel CD
+    /// sweep partitions its shuffled active set with this, so a CSR shard
+    /// full of heavy rows still costs about the same as its neighbours.
+    /// The returned ranges index into `idx`, not into the matrix.
+    pub fn balanced_subset_shards(
+        &self,
+        idx: &[usize],
+        shards: usize,
+    ) -> Vec<std::ops::Range<usize>> {
+        match self {
+            Rows::Dense(_) => super::par::shard_ranges(idx.len(), shards),
+            Rows::Sparse(m) => {
+                let ip = m.indptr();
+                let cum = super::par::cumulative_weights(idx.iter().map(|&i| ip[i + 1] - ip[i]));
+                super::par::cumulative_ranges(&cum, shards)
+            }
+        }
+    }
+
     /// Row boundaries (length `shards + 1`) splitting the θ-form Gram
     /// upper triangle into row blocks of near-equal *cost*: entry (i,j)
     /// costs nnzᵢ + nnzⱼ, so on CSR data with uneven row lengths an
@@ -483,6 +505,30 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn balanced_subset_shards_cover_and_balance() {
+        let (d, s) = both();
+        // a subset in arbitrary (shuffled) order, with repeats of heavy rows
+        let idx = [2usize, 0, 1, 2];
+        for shards in [1usize, 2, 3] {
+            for r in [&d, &s] {
+                let ranges = r.balanced_subset_shards(&idx, shards);
+                assert_eq!(ranges.first().unwrap().start, 0);
+                assert_eq!(ranges.last().unwrap().end, idx.len());
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+            }
+        }
+        // CSR balances by nnz: row 1 holds 1 nonzero, row 2 holds 3; a
+        // 2-way split of [2, 1] must put the heavy row alone
+        let ranges = s.balanced_subset_shards(&[2, 1], 2);
+        assert_eq!(ranges[0], 0..1, "{ranges:?}");
+        // empty subset stays well-formed
+        let ranges = s.balanced_subset_shards(&[], 2);
+        assert_eq!(ranges.last().unwrap().end, 0);
     }
 
     #[test]

@@ -13,6 +13,15 @@
 //! clearly-non-violating coordinates from the sweep and re-checks the full
 //! problem before declaring convergence, so the answer is identical with
 //! or without shrinking.
+//!
+//! The per-coordinate kernel ([`coord_step`]), the zero-norm-row pre-pass
+//! ([`clip_zero_norm_rows`]), and the shrink-threshold update
+//! ([`relax_m_bar`]) are factored out so the block-synchronous parallel
+//! sweep ([`super::cd_par`]) performs bit-for-bit the same per-coordinate
+//! arithmetic as the serial loop. [`CdSolver::solve_free_with_u`]
+//! dispatches on [`SolverConfig::cd_threads`]: 1 keeps this serial path
+//! (byte-identical to the pre-parallel solver), anything else routes to
+//! the sharded engine.
 
 use crate::config::SolverConfig;
 use crate::data::Rng;
@@ -41,8 +50,167 @@ pub struct SolverStats {
     pub grad_evals: u64,
     pub converged: bool,
     pub final_violation: f64,
-    /// Number of coordinates actually optimized (l − screened).
+    /// Number of coordinates actually optimized: the free set minus the
+    /// degenerate zero-norm rows clipped straight to a bound up front
+    /// (the post-retain active set the first sweep visits). Identical for
+    /// the serial and sharded sweeps.
     pub active_coords: usize,
+}
+
+/// One coordinate's pending move: the clipped target plus the Δθ to apply
+/// to u (0-delta moves are filtered out by [`coord_step`]).
+#[derive(Clone, Copy, Debug)]
+pub(super) struct CoordUpdate {
+    pub new_theta: f64,
+    pub delta: f64,
+}
+
+/// Outcome of visiting one coordinate during a sweep.
+#[derive(Clone, Copy, Debug)]
+pub(super) enum CoordStep {
+    /// Clearly bound-stuck and non-violating: drop from the active set.
+    Shrunk,
+    /// Stays active this sweep; `update` is `None` when the coordinate is
+    /// already (numerically) optimal.
+    Kept { viol: f64, update: Option<CoordUpdate> },
+}
+
+/// The per-coordinate CD kernel — exactly the arithmetic of the serial
+/// sweep body, shared with the sharded sweep so both evaluate the same
+/// floating-point expressions in the same order. `u` is whatever view of
+/// Zᵀθ the caller sequences against (the live vector for Gauss-Seidel,
+/// a shard-local copy for the block-synchronous sweep).
+#[inline]
+pub(super) fn coord_step(
+    inst: &Instance,
+    c: f64,
+    i: usize,
+    th: f64,
+    u: &[f64],
+    m_bar: f64,
+    shrink: bool,
+) -> CoordStep {
+    let g = c * inst.z.row(i).dot(u) - inst.ybar[i];
+    coord_step_from_g(inst, c, i, th, g, m_bar, shrink)
+}
+
+/// [`coord_step`] with the gradient supplied by the caller — the sharded
+/// sweep's sparse-delta path evaluates g = C·(⟨zᵢ, u⟩ + ⟨zᵢ, Δu⟩) − ȳᵢ
+/// from two striped dots instead of one dot over a dense local copy;
+/// everything after the gradient is this one shared piece.
+#[inline]
+pub(super) fn coord_step_from_g(
+    inst: &Instance,
+    c: f64,
+    i: usize,
+    th: f64,
+    g: f64,
+    m_bar: f64,
+    shrink: bool,
+) -> CoordStep {
+    let (lo, hi) = (inst.lo[i], inst.hi[i]);
+    // projected gradient
+    let pg = if th <= lo + 1e-15 {
+        // at lower bound we can only increase θ ⇒ only a negative
+        // gradient is a violation
+        if g > m_bar && shrink {
+            // clearly stuck at the bound: shrink out
+            return CoordStep::Shrunk;
+        }
+        g.min(0.0)
+    } else if th >= hi - 1e-15 {
+        if g < -m_bar && shrink {
+            return CoordStep::Shrunk;
+        }
+        g.max(0.0)
+    } else {
+        g
+    };
+    let viol = pg.abs();
+    let update = if viol > 1e-15 {
+        let denom = c * inst.z_norms_sq[i];
+        let new = linalg::clamp(th - g / denom, lo, hi);
+        let delta = new - th;
+        if delta != 0.0 {
+            Some(CoordUpdate { new_theta: new, delta })
+        } else {
+            None
+        }
+    } else {
+        None
+    };
+    CoordStep::Kept { viol, update }
+}
+
+/// Handle degenerate zero-norm rows up front: their gradient is the
+/// constant −ȳᵢ, so the optimum clips straight to a bound (no u update is
+/// needed — zᵢ = 0). Returns the surviving active list in `free` order.
+pub(super) fn clip_zero_norm_rows(
+    inst: &Instance,
+    theta: &mut [f64],
+    free: &[usize],
+) -> Vec<usize> {
+    let mut active = Vec::with_capacity(free.len());
+    for &i in free {
+        if inst.z_norms_sq[i] > 0.0 {
+            active.push(i);
+        } else if inst.ybar[i] > 0.0 {
+            theta[i] = inst.hi[i];
+        } else if inst.ybar[i] < 0.0 {
+            theta[i] = inst.lo[i];
+        }
+    }
+    active
+}
+
+/// One Gauss-Seidel sweep over `active` against the LIVE u: measure each
+/// coordinate, apply its move immediately, shrink bound-stuck ones out.
+/// Returns (surviving active list, max projected-gradient violation).
+/// This is THE serial sweep — `solve_serial` loops it, and the sharded
+/// solver calls it for single-shard blocks and for its serial
+/// confirmation/stall sweeps, so those paths cannot drift from the
+/// serial arithmetic.
+pub(super) fn sweep_live(
+    inst: &Instance,
+    c: f64,
+    active: &[usize],
+    theta: &mut [f64],
+    u: &mut [f64],
+    m_bar: f64,
+    shrink: bool,
+    stats: &mut SolverStats,
+) -> (Vec<usize>, f64) {
+    let mut max_violation = 0.0f64;
+    let mut kept = Vec::with_capacity(active.len());
+    for &i in active {
+        stats.grad_evals = stats.grad_evals.saturating_add(1);
+        match coord_step(inst, c, i, theta[i], u, m_bar, shrink) {
+            CoordStep::Shrunk => {}
+            CoordStep::Kept { viol, update } => {
+                kept.push(i);
+                max_violation = max_violation.max(viol);
+                if let Some(up) = update {
+                    theta[i] = up.new_theta;
+                    inst.z.row(i).axpy_into(up.delta, u);
+                    stats.coord_updates = stats.coord_updates.saturating_add(1);
+                }
+            }
+        }
+    }
+    (kept, max_violation)
+}
+
+/// End-of-sweep shrink-threshold update (LIBLINEAR §4): relax m̄ toward
+/// the sweep's violation; a threshold at or below `tol` would shrink
+/// coordinates the convergence test still needs, so it resets to ∞.
+#[inline]
+pub(super) fn relax_m_bar(max_violation: f64, tol: f64) -> f64 {
+    let m = if max_violation.is_finite() { max_violation } else { f64::INFINITY };
+    if m <= tol {
+        f64::INFINITY
+    } else {
+        m
+    }
 }
 
 /// The solver object (holds config; stateless between solves).
@@ -86,9 +254,9 @@ impl CdSolver {
         &self,
         inst: &Instance,
         c: f64,
-        mut theta: Vec<f64>,
+        theta: Vec<f64>,
         free: &[usize],
-        mut u: Vec<f64>,
+        u: Vec<f64>,
     ) -> SolveResult {
         assert_eq!(theta.len(), inst.len());
         assert_eq!(u.len(), inst.dim());
@@ -98,29 +266,32 @@ impl CdSolver {
             crate::linalg::max_abs_diff(&u, &inst.u_from_theta(&theta)) < 1e-6,
             "caller-supplied u inconsistent with theta"
         );
+        // cd_threads = 1 keeps the serial Gauss-Seidel sweep below —
+        // byte-identical to the pre-parallel solver; anything else (0 =
+        // auto) routes to the block-synchronous sharded engine, whose
+        // iterates are deterministic per (seed, threads) but not
+        // bitwise-equal across thread counts.
+        if self.cfg.cd_threads() != 1 {
+            return super::cd_par::solve_free_with_u_par(&self.cfg, inst, c, theta, free, u);
+        }
+        self.solve_serial(inst, c, theta, free, u)
+    }
+
+    /// The serial Gauss-Seidel sweep loop (cd_threads = 1).
+    fn solve_serial(
+        &self,
+        inst: &Instance,
+        c: f64,
+        mut theta: Vec<f64>,
+        free: &[usize],
+        mut u: Vec<f64>,
+    ) -> SolveResult {
         let mut rng = Rng::new(self.cfg.seed);
-        let mut stats = SolverStats { active_coords: free.len(), ..Default::default() };
+        let mut stats = SolverStats::default();
 
         // Active set for shrinking; indices into `free`'s coordinate ids.
-        let mut active: Vec<usize> = free.to_vec();
-        // Handle degenerate zero-norm rows up front: their gradient is the
-        // constant −ȳᵢ, so the optimum clips straight to a bound.
-        active.retain(|&i| {
-            if inst.z_norms_sq[i] > 0.0 {
-                true
-            } else {
-                let old = theta[i];
-                let opt = if inst.ybar[i] > 0.0 {
-                    inst.hi[i]
-                } else if inst.ybar[i] < 0.0 {
-                    inst.lo[i]
-                } else {
-                    old
-                };
-                theta[i] = opt; // no u update needed: zᵢ = 0
-                false
-            }
-        });
+        let mut active = clip_zero_norm_rows(inst, &mut theta, free);
+        stats.active_coords = active.len();
 
         // Shrinking thresholds (LIBLINEAR §4): track max/min projected
         // gradient of the previous sweep.
@@ -135,47 +306,16 @@ impl CdSolver {
             stats.outer_iters += 1;
             rng.shuffle(&mut active);
 
-            let mut max_violation = 0.0f64;
-            let mut kept = Vec::with_capacity(active.len());
-            for &i in &active {
-                let zi = inst.z.row(i);
-                stats.grad_evals += 1;
-                let g = c * zi.dot(&u) - inst.ybar[i];
-                let (lo, hi) = (inst.lo[i], inst.hi[i]);
-                let th = theta[i];
-
-                // projected gradient
-                let pg = if th <= lo + 1e-15 {
-                    // at lower bound we can only increase θ ⇒ only a
-                    // negative gradient is a violation
-                    if g > m_bar && self.cfg.shrink {
-                        // clearly stuck at the bound: shrink out
-                        continue;
-                    }
-                    g.min(0.0)
-                } else if th >= hi - 1e-15 {
-                    if g < -m_bar && self.cfg.shrink {
-                        continue;
-                    }
-                    g.max(0.0)
-                } else {
-                    g
-                };
-                kept.push(i);
-
-                let viol = pg.abs();
-                max_violation = max_violation.max(viol);
-                if viol > 1e-15 {
-                    let denom = c * inst.z_norms_sq[i];
-                    let new = linalg::clamp(th - g / denom, lo, hi);
-                    let delta = new - th;
-                    if delta != 0.0 {
-                        theta[i] = new;
-                        zi.axpy_into(delta, &mut u);
-                        stats.coord_updates += 1;
-                    }
-                }
-            }
+            let (kept, max_violation) = sweep_live(
+                inst,
+                c,
+                &active,
+                &mut theta,
+                &mut u,
+                m_bar,
+                self.cfg.shrink,
+                &mut stats,
+            );
             shrunk = shrunk || kept.len() < active.len();
             active = kept;
             stats.final_violation = max_violation;
@@ -197,10 +337,7 @@ impl CdSolver {
                 break;
             }
             // relax the shrink threshold toward the current violation
-            m_bar = if max_violation.is_finite() { max_violation } else { f64::INFINITY };
-            if m_bar <= tol {
-                m_bar = f64::INFINITY;
-            }
+            m_bar = relax_m_bar(max_violation, tol);
         }
 
         // u is maintained incrementally (f64 axpy drift is ~machine-eps
@@ -289,7 +426,7 @@ mod tests {
     use crate::problem::{Instance, Model};
 
     fn solver() -> CdSolver {
-        CdSolver::new(SolverConfig { tol: 1e-8, max_outer: 10_000, shrink: true, seed: 1, threads: 1 })
+        CdSolver::new(SolverConfig { tol: 1e-8, max_outer: 10_000, seed: 1, ..Default::default() })
     }
 
     #[test]
@@ -419,6 +556,41 @@ mod tests {
         let inst = Instance::from_dataset(Model::Lad, &ds);
         let r = solver().solve(&inst, 1.0, inst.cold_start());
         assert_eq!(r.theta[1], 1.0, "zero row with y>0 must sit at β");
+    }
+
+    #[test]
+    fn counters_pin_tiny_problem_with_zero_norm_row() {
+        use crate::data::{Dataset, Task};
+        use crate::linalg::RowMatrix;
+        // 3 rows, one all-zero: active_coords counts the post-retain set
+        let x = RowMatrix::from_flat(3, 2, vec![1.0, 0.5, 0.0, 0.0, -1.0, 2.0]);
+        let ds = Dataset::new("z", Task::Regression, x, vec![0.3, 2.0, -0.7]);
+        let inst = Instance::from_dataset(Model::Lad, &ds);
+        for solver_threads in [1usize, 4] {
+            let s = CdSolver::new(SolverConfig {
+                tol: 1e-10,
+                max_outer: 10_000,
+                solver_threads: Some(solver_threads),
+                ..Default::default()
+            });
+            let r = s.solve(&inst, 1.0, inst.cold_start());
+            assert!(r.stats.converged);
+            assert_eq!(
+                r.stats.active_coords, 2,
+                "zero-norm row must not count (t={solver_threads})"
+            );
+            assert_eq!(r.theta[1], 1.0, "zero row clipped to its bound");
+            assert!(r.stats.grad_evals >= r.stats.coord_updates);
+            // no sweep can visit more than the active set
+            assert!(r.stats.grad_evals <= r.stats.outer_iters as u64 * 2);
+        }
+        // one full sweep with shrinking impossible (m̄ = ∞ on sweep 1):
+        // exactly one gradient evaluation per active coordinate
+        let one = CdSolver::new(SolverConfig { tol: 1e-16, max_outer: 1, ..Default::default() });
+        let r = one.solve(&inst, 1.0, inst.cold_start());
+        assert_eq!(r.stats.outer_iters, 1);
+        assert_eq!(r.stats.grad_evals, 2);
+        assert_eq!(r.stats.active_coords, 2);
     }
 
     #[test]

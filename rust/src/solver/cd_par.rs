@@ -1,0 +1,464 @@
+//! Block-synchronous parallel dual coordinate descent.
+//!
+//! The sweep — the last serial O(nnz) hot path after the scan, Gram
+//! build, and KKT validation were sharded — is parallelized the same way
+//! those were, with one twist: CD is inherently sequential through
+//! u = Zᵀθ, so the shards cannot share a live u. Instead each outer
+//! iteration is one *block*:
+//!
+//! 1. shuffle the active set with the solver's seeded RNG (exactly the
+//!    serial permutation schedule);
+//! 2. partition the shuffled list into nnz-balanced contiguous shards
+//!    ([`Rows::balanced_subset_shards`] — CSR shards carry near-equal
+//!    stored-entry counts, dense shards near-equal rows);
+//! 3. each shard runs Gauss-Seidel CD *locally*: it reads the shared
+//!    read-mostly u, folds its own updates into a shard-private delta-u
+//!    buffer — a dense local copy for dense/narrow data, a sparse
+//!    accumulator (zero-init + touched-column list, no O(n) clone) for
+//!    wide CSR data — and records `(coordinate, new θ)` moves; the
+//!    per-coordinate arithmetic is [`super::cd::coord_step`] (the serial
+//!    kernel; the sparse path feeds it the gradient from two striped
+//!    dots via [`super::cd::coord_step_from_g`]);
+//! 4. at the block boundary the main thread merges θ moves and the
+//!    per-shard delta-u buffers (u_local − u) in **fixed shard order**, so
+//!    a given `(seed, threads)` pair is run-to-run deterministic no matter
+//!    how the OS schedules the workers.
+//!
+//! Between shards this is a Jacobi step (each shard sees the others'
+//! block-start u), within a shard it is Gauss-Seidel — the re-shuffle
+//! each block re-partitions the coordinates, so cross-shard coupled pairs
+//! don't stay split forever and the usual Jacobi oscillation modes are
+//! broken up. Jacobi steps on highly coherent data can still stall
+//! (near-duplicate rows split across shards overshoot together), so a
+//! deterministic stall guard watches the best violation seen: after
+//! [`STALL_LIMIT`] sweeps without a new best, sweeps run serially until
+//! progress resumes. Serial sweeps provably converge, and the best
+//! violation ratchets monotonically down across guard episodes, so the
+//! solve always terminates — the guard costs nothing when the parallel
+//! sweeps are healthy. Convergence is still judged by the true
+//! criterion — and never off stale data: a sharded sweep measures
+//! violations against its block-start u, so a sub-`tol` sharded sweep
+//! only schedules a serial (live-u) confirmation sweep; `converged` is
+//! declared exclusively from serial sweeps, with the serial solver's
+//! shrinking thresholds (m̄) and its full-active-set re-check carried
+//! over verbatim.
+//!
+//! Contract (locked by `tests/integration_cd_par.rs`): the returned point
+//! is KKT-valid at the same `tol` as the serial solver, and downstream
+//! DVI screening decisions and KKT support/E-set classification agree
+//! with the serial solution; iterates are deterministic per
+//! `(seed, threads)` but — unlike the sharded scan — NOT bitwise-equal
+//! across thread counts. `cd_threads = 1` never reaches this module.
+
+use super::cd::{self, CoordStep, SolveResult, SolverStats};
+use crate::config::SolverConfig;
+use crate::data::Rng;
+use crate::linalg::par;
+use crate::problem::Instance;
+
+/// Below this many active coordinates per shard the sweep collapses to
+/// fewer shards (eventually one): spawning workers for a handful of
+/// coordinates costs more than the sweep, and the shrunken endgame —
+/// where few coordinates still violate — converges faster Gauss-Seidel
+/// anyway. The collapse depends only on the active-set size, which
+/// evolves deterministically per `(seed, threads)`.
+const MIN_COORDS_PER_SHARD: usize = 32;
+
+/// Sweeps without a new best violation before the stall guard switches
+/// to serial sweeps (it switches back the moment a sweep sets a new
+/// best). Deterministic: the trigger depends only on the violation
+/// trajectory, which is itself deterministic per `(seed, threads)`.
+const STALL_LIMIT: usize = 8;
+
+/// Above this feature dimension, CSR shards keep their delta-u
+/// *sparsely* (a zero-init accumulator plus the touched column list):
+/// cloning u costs O(n) per shard per block, which on wide sparse data
+/// (n ≫ shard nnz — e.g. text features) would dwarf the sweep itself.
+/// Below it, the dense clone is cheaper than paying a second striped
+/// dot per gradient. Static per instance, so the choice is
+/// deterministic.
+const SPARSE_DELTA_MIN_DIM: usize = 4096;
+
+/// A shard's contribution to u, in one of two representations chosen by
+/// [`use_sparse_delta`].
+enum DeltaU {
+    /// u_local − u_block_start, full length (dense or narrow data).
+    Dense(Vec<f64>),
+    /// Accumulated Δu over only the touched columns; `touched` may hold
+    /// duplicates (one entry per stored element of each updated row) —
+    /// the merge zeroes each applied column so duplicates are no-ops.
+    Sparse { delta: Vec<f64>, touched: Vec<u32> },
+}
+
+/// What one shard reports back from a block.
+struct ShardSweep {
+    /// Coordinates surviving shrinking, in shard (= shuffled) order.
+    kept: Vec<usize>,
+    /// `(coordinate, new θ)` moves to apply at the block boundary.
+    updates: Vec<(usize, f64)>,
+    /// The shard's contribution to u.
+    delta_u: DeltaU,
+    max_violation: f64,
+    grad_evals: u64,
+    coord_updates: u64,
+}
+
+/// Whether shards of this instance should carry sparse delta-u buffers.
+fn use_sparse_delta(inst: &Instance) -> bool {
+    inst.z.is_sparse() && inst.dim() > SPARSE_DELTA_MIN_DIM
+}
+
+/// Resolve how many shards this block runs.
+fn plan_shards(requested: usize, active_len: usize) -> usize {
+    let t = par::effective_threads(requested, active_len.max(1));
+    t.min((active_len / MIN_COORDS_PER_SHARD).max(1))
+}
+
+/// One shard's local Gauss-Seidel pass over `coords` (a contiguous slice
+/// of the shuffled active set). Reads the shared θ and block-start u;
+/// every write is deferred into the returned buffers.
+fn sweep_shard(
+    inst: &Instance,
+    c: f64,
+    coords: &[usize],
+    theta: &[f64],
+    u: &[f64],
+    m_bar: f64,
+    shrink: bool,
+    sparse_delta: bool,
+) -> ShardSweep {
+    let mut out = ShardSweep {
+        kept: Vec::with_capacity(coords.len()),
+        updates: Vec::new(),
+        delta_u: DeltaU::Dense(Vec::new()),
+        max_violation: 0.0,
+        grad_evals: 0,
+        coord_updates: 0,
+    };
+    if sparse_delta {
+        // wide CSR data: never materialize an O(n) copy of u — fold the
+        // shard's own moves into a zero-init accumulator (untouched
+        // pages stay untouched) read via a second striped dot
+        let mut delta = vec![0.0; u.len()];
+        let mut touched: Vec<u32> = Vec::new();
+        for &i in coords {
+            out.grad_evals += 1;
+            let zi = inst.z.row(i);
+            let g = c * (zi.dot(u) + zi.dot(&delta)) - inst.ybar[i];
+            match cd::coord_step_from_g(inst, c, i, theta[i], g, m_bar, shrink) {
+                CoordStep::Shrunk => {}
+                CoordStep::Kept { viol, update } => {
+                    out.kept.push(i);
+                    out.max_violation = out.max_violation.max(viol);
+                    if let Some(up) = update {
+                        out.updates.push((i, up.new_theta));
+                        // fused axpy + touched-column recording (stored
+                        // entries only — this path is CSR by selection)
+                        for (j, v) in zi.iter() {
+                            delta[j] += up.delta * v;
+                            touched.push(j as u32);
+                        }
+                        out.coord_updates += 1;
+                    }
+                }
+            }
+        }
+        out.delta_u = DeltaU::Sparse { delta, touched };
+    } else {
+        let mut u_local = u.to_vec();
+        for &i in coords {
+            out.grad_evals += 1;
+            match cd::coord_step(inst, c, i, theta[i], &u_local, m_bar, shrink) {
+                CoordStep::Shrunk => {}
+                CoordStep::Kept { viol, update } => {
+                    out.kept.push(i);
+                    out.max_violation = out.max_violation.max(viol);
+                    if let Some(up) = update {
+                        out.updates.push((i, up.new_theta));
+                        inst.z.row(i).axpy_into(up.delta, &mut u_local);
+                        out.coord_updates += 1;
+                    }
+                }
+            }
+        }
+        // turn u_local into the delta-u buffer against the block-start u
+        for (d, &base) in u_local.iter_mut().zip(u) {
+            *d -= base;
+        }
+        out.delta_u = DeltaU::Dense(u_local);
+    }
+    out
+}
+
+/// The sharded counterpart of `CdSolver::solve_free_with_u` — same
+/// reduced-problem semantics (Lemma 4: frozen coordinates live inside u),
+/// same shrinking, same convergence re-check. Input invariants (θ/u
+/// lengths, box membership, u ≈ Zᵀθ) were already asserted by the
+/// dispatching wrapper.
+pub(super) fn solve_free_with_u_par(
+    cfg: &SolverConfig,
+    inst: &Instance,
+    c: f64,
+    mut theta: Vec<f64>,
+    free: &[usize],
+    mut u: Vec<f64>,
+) -> SolveResult {
+    let requested = cfg.cd_threads();
+    let sparse_delta = use_sparse_delta(inst);
+    let mut rng = Rng::new(cfg.seed);
+    let mut stats = SolverStats::default();
+
+    let mut active = cd::clip_zero_norm_rows(inst, &mut theta, free);
+    stats.active_coords = active.len();
+
+    let mut m_bar = f64::INFINITY;
+    let mut shrunk = false;
+    // stall guard state: the best (lowest) sweep violation seen, and how
+    // many sweeps have passed since it improved
+    let mut best_violation = f64::INFINITY;
+    let mut stalled = 0usize;
+    // set when a SHARDED sweep measures sub-tol violations: those were
+    // taken against per-shard stale u, so the next sweep re-measures
+    // Gauss-Seidel against the live u before any convergence decision —
+    // `converged` is only ever declared off a serial sweep, exactly the
+    // serial solver's criterion
+    let mut confirm_serial = false;
+
+    let tol = cfg.tol;
+    loop {
+        if stats.outer_iters >= cfg.max_outer {
+            break;
+        }
+        stats.outer_iters += 1;
+        rng.shuffle(&mut active);
+
+        let t = if confirm_serial || stalled >= STALL_LIMIT {
+            1 // confirming convergence, or stalled: Gauss-Seidel sweep
+        } else {
+            plan_shards(requested, active.len())
+        };
+        confirm_serial = false;
+        let (kept, max_violation) = if t <= 1 {
+            // single shard: THE serial sweep against the live u (shared
+            // with `solve_serial`, so small/endgame/confirmation blocks
+            // cannot drift from the serial arithmetic)
+            cd::sweep_live(
+                inst,
+                c,
+                &active,
+                &mut theta,
+                &mut u,
+                m_bar,
+                cfg.shrink,
+                &mut stats,
+            )
+        } else {
+            let mut max_violation = 0.0f64;
+            let mut kept = Vec::with_capacity(active.len());
+            let ranges = inst.z.balanced_subset_shards(&active, t);
+            let sweeps = {
+                let (theta_ro, u_ro, active_ro) = (&theta, &u, &active);
+                par::run_sharded_ranges(ranges, move |r| {
+                    sweep_shard(
+                        inst,
+                        c,
+                        &active_ro[r],
+                        theta_ro,
+                        u_ro,
+                        m_bar,
+                        cfg.shrink,
+                        sparse_delta,
+                    )
+                })
+            };
+            // deterministic merge: fixed shard order, θ moves first (the
+            // coordinate sets are disjoint), then each delta-u buffer
+            for s in sweeps {
+                for &(i, new_theta) in &s.updates {
+                    theta[i] = new_theta;
+                }
+                match s.delta_u {
+                    DeltaU::Dense(d) => {
+                        for (uj, dv) in u.iter_mut().zip(&d) {
+                            if *dv != 0.0 {
+                                *uj += *dv;
+                            }
+                        }
+                    }
+                    DeltaU::Sparse { mut delta, touched } => {
+                        for &j in &touched {
+                            let j = j as usize;
+                            let dv = delta[j];
+                            if dv != 0.0 {
+                                u[j] += dv;
+                                delta[j] = 0.0; // dedupe repeat columns
+                            }
+                        }
+                    }
+                }
+                max_violation = max_violation.max(s.max_violation);
+                stats.grad_evals = stats.grad_evals.saturating_add(s.grad_evals);
+                stats.coord_updates = stats.coord_updates.saturating_add(s.coord_updates);
+                kept.extend_from_slice(&s.kept);
+            }
+            (kept, max_violation)
+        };
+
+        shrunk = shrunk || kept.len() < active.len();
+        active = kept;
+        stats.final_violation = max_violation;
+        if max_violation < best_violation {
+            best_violation = max_violation;
+            stalled = 0;
+        } else {
+            stalled = stalled.saturating_add(1);
+        }
+
+        if max_violation < tol {
+            if t > 1 {
+                // sub-tol, but measured against block-start u per shard:
+                // re-measure with a live-u sweep before believing it
+                confirm_serial = true;
+                m_bar = cd::relax_m_bar(max_violation, tol);
+                continue;
+            }
+            if cfg.shrink && shrunk {
+                // re-expand and confirm on the full free set — the same
+                // full-problem re-check as the serial solver, so a point
+                // is never declared converged off a shrunken subset
+                active = free
+                    .iter()
+                    .copied()
+                    .filter(|&i| inst.z_norms_sq[i] > 0.0)
+                    .collect();
+                shrunk = false;
+                m_bar = f64::INFINITY;
+                // new regime: the shrunken set's tiny violations would
+                // otherwise read every full-set sweep as a stall
+                best_violation = f64::INFINITY;
+                stalled = 0;
+                continue;
+            }
+            stats.converged = true;
+            break;
+        }
+        m_bar = cd::relax_m_bar(max_violation, tol);
+    }
+
+    SolveResult { theta, u, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::problem::{Instance, Model};
+    use crate::solver::CdSolver;
+
+    fn cfg(solver_threads: usize) -> SolverConfig {
+        SolverConfig {
+            tol: 1e-8,
+            max_outer: 100_000,
+            solver_threads: Some(solver_threads),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn plan_shards_collapses_small_blocks() {
+        assert_eq!(plan_shards(4, 0), 1);
+        assert_eq!(plan_shards(4, 10), 1, "10 coords are not worth 4 workers");
+        assert_eq!(plan_shards(4, 2 * MIN_COORDS_PER_SHARD), 2);
+        assert!(plan_shards(4, 100 * MIN_COORDS_PER_SHARD) <= 4);
+        assert_eq!(plan_shards(1, 10_000), 1);
+    }
+
+    #[test]
+    fn parallel_solve_is_kkt_valid_and_converges() {
+        let ds = synth::toy_gaussian(21, 120, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        for threads in [2usize, 4, 7] {
+            let r = CdSolver::new(cfg(threads)).solve(&inst, 1.0, inst.cold_start());
+            assert!(r.stats.converged, "threads={threads}");
+            assert!(inst.in_box(&r.theta, 1e-12));
+            let v = CdSolver::kkt_violation(&inst, 1.0, &r.theta);
+            assert!(v < 1e-6, "threads={threads}: violation {v}");
+        }
+    }
+
+    #[test]
+    fn same_seed_threads_is_deterministic() {
+        let ds = synth::toy_gaussian(22, 150, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        for threads in [2usize, 4] {
+            let a = CdSolver::new(cfg(threads)).solve(&inst, 0.7, inst.cold_start());
+            let b = CdSolver::new(cfg(threads)).solve(&inst, 0.7, inst.cold_start());
+            assert_eq!(a.theta, b.theta, "threads={threads}");
+            assert_eq!(a.u, b.u, "threads={threads}");
+            assert_eq!(a.stats.outer_iters, b.stats.outer_iters);
+            assert_eq!(a.stats.grad_evals, b.stats.grad_evals);
+            assert_eq!(a.stats.coord_updates, b.stats.coord_updates);
+        }
+    }
+
+    #[test]
+    fn frozen_coordinates_stay_fixed_under_sharding() {
+        let ds = synth::toy_gaussian(23, 140, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let full = CdSolver::new(cfg(1)).solve(&inst, 1.0, inst.cold_start());
+        let free: Vec<usize> = (0..inst.len())
+            .filter(|&i| full.theta[i] > 1e-9 && full.theta[i] < 1.0 - 1e-9)
+            .collect();
+        let red = CdSolver::new(cfg(4)).solve_free(&inst, 1.0, full.theta.clone(), &free);
+        for i in 0..inst.len() {
+            if !free.contains(&i) {
+                assert_eq!(red.theta[i], full.theta[i], "frozen coord {i} moved");
+            }
+        }
+        let g_full = inst.dual_objective(1.0, &full.theta);
+        let g_red = inst.dual_objective(1.0, &red.theta);
+        assert!((g_full - g_red).abs() < 1e-7, "{g_full} vs {g_red}");
+    }
+
+    #[test]
+    fn wide_csr_uses_sparse_delta_and_matches_serial_decisions() {
+        // n > SPARSE_DELTA_MIN_DIM forces the sparse delta-u path; the
+        // parallel solve must still land on the serial optimum
+        let ds = synth::sparse_classes(25, 200, SPARSE_DELTA_MIN_DIM + 10, 0.002);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        assert!(use_sparse_delta(&inst));
+        let serial = CdSolver::new(cfg(1)).solve(&inst, 0.8, inst.cold_start());
+        assert!(serial.stats.converged);
+        for threads in [2usize, 4] {
+            let par = CdSolver::new(cfg(threads)).solve(&inst, 0.8, inst.cold_start());
+            assert!(par.stats.converged, "threads={threads}");
+            let v = CdSolver::kkt_violation(&inst, 0.8, &par.theta);
+            assert!(v < 1e-6, "threads={threads}: violation {v}");
+            // run-to-run determinism holds on this path too
+            let again = CdSolver::new(cfg(threads)).solve(&inst, 0.8, inst.cold_start());
+            assert_eq!(par.theta, again.theta, "threads={threads}");
+            assert_eq!(par.u, again.u, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn shard_sweep_counters_lose_nothing() {
+        // one full sweep (max_outer = 1, shrinking can't trigger on the
+        // first sweep because m̄ = ∞): every active coordinate must be
+        // charged exactly one gradient evaluation, across all shards
+        let ds = synth::toy_gaussian(24, 200, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let one_sweep = SolverConfig {
+            tol: 1e-14,
+            max_outer: 1,
+            solver_threads: Some(4),
+            ..Default::default()
+        };
+        let r = CdSolver::new(one_sweep).solve(&inst, 5.0, inst.cold_start());
+        assert_eq!(r.stats.outer_iters, 1);
+        assert_eq!(r.stats.active_coords, inst.len());
+        assert_eq!(r.stats.grad_evals, inst.len() as u64, "a shard dropped its counts");
+        assert!(r.stats.coord_updates > 0);
+        assert!(r.stats.coord_updates <= inst.len() as u64);
+    }
+}

@@ -8,11 +8,20 @@
 //! u = Zᵀθ, which is exactly the ŷ-offset construction of the lemma
 //! without materializing any sub-matrix.
 //!
+//! The sweep itself is sharded ([`cd_par`]): block-synchronous parallel
+//! CD over nnz-balanced shards of the active set, selected by
+//! [`crate::config::SolverConfig::cd_threads`] (`--solver-threads`;
+//! defaults to the scan's `threads`). `cd_threads = 1` is byte-identical
+//! to the serial solver; other values converge to the same optimum at
+//! `tol` and are deterministic per `(seed, threads)` — see README
+//! §Solver for the contract.
+//!
 //! A projected-gradient solver ([`pg::PgSolver`]) is included as an
 //! independent cross-check used by the test suite (different algorithm,
 //! same optimum).
 
 pub mod cd;
+mod cd_par;
 pub mod pg;
 
 pub use cd::{CdSolver, SolveResult, SolverStats};

@@ -1,0 +1,183 @@
+//! Parallel CD solver acceptance suite — the contract of the
+//! block-synchronous sharded sweep (`solver::cd_par`):
+//!
+//! 1. the parallel solve returns a KKT-valid point at the same `tol`;
+//! 2. downstream DVI screening decisions AND the KKT support/E-set
+//!    classification are identical to the serial solver's, for
+//!    svm/wsvm/lad × dense/CSR × {1, 2, 4, 7} threads;
+//! 3. `solver_threads = 1` is byte-identical to the serial solver;
+//! 4. a fixed `(seed, threads)` pair is run-to-run deterministic;
+//! 5. the whole warm-started path (screen → reduce → solve) screens the
+//!    same sets with the parallel solver as with the serial one.
+//!
+//! Unlike the sharded *scan* (integration_parscan) and the storage layer
+//! (integration_storage), the parallel sweep does NOT promise bitwise
+//! equality across thread counts — shards see block-start u, so iterates
+//! differ in the low bits — which is why those suites pin
+//! `solver_threads = 1` and this one compares at the decision level.
+
+use dvi_screen::config::SolverConfig;
+use dvi_screen::data::{synth, Dataset};
+use dvi_screen::linalg::Storage;
+use dvi_screen::path::{PathConfig, PathRunner};
+use dvi_screen::problem::{classify_kkt, Instance, Model};
+use dvi_screen::screening::dvi::{ball_params, dvi_scan};
+use dvi_screen::screening::RuleKind;
+use dvi_screen::solver::CdSolver;
+
+const THREADS: [usize; 4] = [1, 2, 4, 7];
+/// Solve tolerance; the KKT re-check allows 100× for the incremental
+/// u-maintenance drift both solvers share.
+const TOL: f64 = 1e-9;
+/// KKT dead-band for the E-set comparison — three orders above the
+/// solve tolerance, so serial/parallel optimum differences (≈ tol)
+/// cannot flip a margin across the band edge.
+const E_BAND: f64 = 1e-6;
+
+fn cfg(solver_threads: usize) -> SolverConfig {
+    SolverConfig {
+        tol: TOL,
+        max_outer: 200_000,
+        solver_threads: Some(solver_threads),
+        ..Default::default()
+    }
+}
+
+/// Solve serial and parallel on both storages of one dataset and hold
+/// every clause of the contract.
+fn check_model(model: Model, sparse: Dataset, c: f64, c_next: f64) {
+    assert!(sparse.x.is_sparse());
+    let dense = sparse.clone().into_storage(Storage::Dense);
+    for (ds, stag) in [(&dense, "dense"), (&sparse, "csr")] {
+        let inst = Instance::from_dataset(model, ds);
+        let serial = CdSolver::new(cfg(1)).solve(&inst, c, inst.cold_start());
+        assert!(serial.stats.converged, "{model:?}/{stag}: serial did not converge");
+
+        let (mid, rad) = ball_params(c, c_next);
+        let u_serial = inst.u_from_theta(&serial.theta);
+        let decisions_serial = dvi_scan(&inst, mid, rad, &u_serial);
+        let members_serial =
+            classify_kkt(&inst, &inst.w_from_theta(c, &serial.theta), E_BAND);
+
+        for threads in THREADS {
+            let par = CdSolver::new(cfg(threads)).solve(&inst, c, inst.cold_start());
+            let tag = format!("{model:?}/{stag}/t={threads}");
+            assert!(par.stats.converged, "{tag}: did not converge");
+            assert!(inst.in_box(&par.theta, 1e-12), "{tag}: θ leaves the box");
+            assert_eq!(par.stats.active_coords, serial.stats.active_coords, "{tag}");
+
+            // KKT-valid at the same tol (fresh full-problem recompute)
+            let v = CdSolver::kkt_violation(&inst, c, &par.theta);
+            assert!(v < 100.0 * TOL, "{tag}: violation {v}");
+
+            if threads == 1 {
+                // byte-identical to the serial solver, trajectory and all
+                assert_eq!(par.theta, serial.theta, "{tag}: θ drifted");
+                assert_eq!(par.u, serial.u, "{tag}: u drifted");
+                assert_eq!(par.stats.outer_iters, serial.stats.outer_iters);
+                assert_eq!(par.stats.grad_evals, serial.stats.grad_evals);
+            }
+
+            // identical downstream screening decisions
+            let u_par = inst.u_from_theta(&par.theta);
+            assert_eq!(
+                dvi_scan(&inst, mid, rad, &u_par),
+                decisions_serial,
+                "{tag}: DVI screening decisions diverged"
+            );
+            // identical support/E-set classification
+            let members_par =
+                classify_kkt(&inst, &inst.w_from_theta(c, &par.theta), E_BAND);
+            assert_eq!(
+                members_par.classes, members_serial.classes,
+                "{tag}: KKT membership diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn svm_parallel_solver_matches_serial() {
+    check_model(Model::Svm, synth::sparse_classes(901, 180, 60, 0.08), 0.5, 0.8);
+}
+
+#[test]
+fn weighted_svm_parallel_solver_matches_serial() {
+    check_model(Model::WeightedSvm, synth::sparse_classes(902, 150, 50, 0.1), 0.5, 0.8);
+}
+
+#[test]
+fn lad_parallel_solver_matches_serial() {
+    check_model(Model::Lad, synth::sparse_regression(903, 160, 40, 0.12, 0.2), 0.5, 0.8);
+}
+
+#[test]
+fn fixed_seed_threads_is_run_to_run_deterministic() {
+    let ds = synth::sparse_classes(904, 170, 48, 0.1);
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    // 0 = auto resolves to one machine-dependent count and must still be
+    // reproducible within the machine
+    for threads in [2usize, 4, 7, 0] {
+        let a = CdSolver::new(cfg(threads)).solve(&inst, 0.7, inst.cold_start());
+        let b = CdSolver::new(cfg(threads)).solve(&inst, 0.7, inst.cold_start());
+        assert_eq!(a.theta, b.theta, "threads={threads}: θ not reproducible");
+        assert_eq!(a.u, b.u, "threads={threads}: u not reproducible");
+        assert_eq!(a.stats.outer_iters, b.stats.outer_iters, "threads={threads}");
+        assert_eq!(a.stats.grad_evals, b.stats.grad_evals, "threads={threads}");
+        assert_eq!(a.stats.coord_updates, b.stats.coord_updates, "threads={threads}");
+        assert_eq!(
+            a.stats.final_violation.to_bits(),
+            b.stats.final_violation.to_bits(),
+            "threads={threads}"
+        );
+    }
+}
+
+/// The warm-started path — screen, snap screened coordinates, reduced
+/// solve via `solve_free_with_u` — must screen the exact same sets at
+/// every grid point whichever solver runs the sweeps, and stay
+/// full-problem KKT-valid throughout. This is the end-to-end form of the
+/// "screening composes with any solver" argument the parallel sweep
+/// leans on.
+#[test]
+fn warm_started_path_screens_identically_with_parallel_solver() {
+    let cases = [
+        (Model::Svm, synth::sparse_classes(905, 160, 50, 0.1)),
+        (Model::Lad, synth::sparse_regression(906, 140, 30, 0.15, 0.2)),
+    ];
+    for (model, sparse) in cases {
+        let dense = sparse.clone().into_storage(Storage::Dense);
+        for ds in [&dense, &sparse] {
+            // 24 grid points: DVI's sequential radius shrinks with the
+            // grid spacing, and LAD needs a reasonably fine grid before
+            // anything screens at all (cf. the runner's own LAD test)
+            let path_cfg = |solver_threads: usize| {
+                PathConfig::log_grid(1e-2, 10.0, 24)
+                    .with_solver(SolverConfig {
+                        tol: 1e-9,
+                        max_outer: 200_000,
+                        solver_threads: Some(solver_threads),
+                        ..Default::default()
+                    })
+                    .with_validation(true)
+            };
+            let serial = PathRunner::new(model, path_cfg(1), RuleKind::DviW).run(ds);
+            let par = PathRunner::new(model, path_cfg(4), RuleKind::DviW).run(ds);
+            assert_eq!(serial.steps.len(), par.steps.len());
+            for (a, b) in serial.steps.iter().zip(&par.steps) {
+                assert_eq!(
+                    (a.n_lo, a.n_hi, a.free),
+                    (b.n_lo, b.n_hi, b.free),
+                    "{model:?} {}: screened sets diverged at C={}",
+                    ds.x.storage_name(),
+                    a.c
+                );
+            }
+            assert_eq!(serial.mean_rejection(), par.mean_rejection());
+            if model == Model::Svm {
+                assert!(serial.mean_rejection() > 0.0, "nothing screened — test is vacuous");
+            }
+            assert!(par.worst_violation().unwrap() < 1e-6, "{model:?}: parallel path KKT");
+        }
+    }
+}

@@ -77,11 +77,19 @@ fn degenerate_rows_parscan_matches_native() {
 /// End-to-end: a full path run with `solver.threads` set routes the scan
 /// through ParScan and must reproduce the serial path bit-for-bit —
 /// identical screening counts at every step and an identical final θ.
+/// (The CD solver is pinned serial: `threads` now also drives the
+/// sharded sweep by default, whose iterates are deliberately not bitwise
+/// across thread counts — integration_cd_par.rs covers that contract.)
 #[test]
 fn sharded_path_run_is_bit_identical_to_serial() {
     let ds = synth::toy_gaussian(85, 150, 1.0, 0.75);
     let cfg = |threads: usize| {
-        let mut solver = SolverConfig { tol: 1e-7, max_outer: 50_000, ..Default::default() };
+        let mut solver = SolverConfig {
+            tol: 1e-7,
+            max_outer: 50_000,
+            solver_threads: Some(1),
+            ..Default::default()
+        };
         solver.threads = threads;
         PathConfig::log_grid(1e-2, 10.0, 10).with_solver(solver).with_validation(true)
     };
@@ -104,7 +112,12 @@ fn sharded_path_run_is_bit_identical_to_serial() {
 fn sharded_theta_path_matches_serial_theta() {
     let ds = synth::toy_gaussian(86, 80, 1.0, 0.75);
     let cfg = |threads: usize| {
-        let mut solver = SolverConfig { tol: 1e-7, max_outer: 50_000, ..Default::default() };
+        let mut solver = SolverConfig {
+            tol: 1e-7,
+            max_outer: 50_000,
+            solver_threads: Some(1),
+            ..Default::default()
+        };
         solver.threads = threads;
         PathConfig::log_grid(1e-2, 10.0, 6).with_solver(solver)
     };

@@ -25,6 +25,13 @@ fn path_cfg(points: usize, threads: usize) -> PathConfig {
             tol: 1e-7,
             max_outer: 50_000,
             threads,
+            // this suite asserts bitwise θ equality ACROSS storages and
+            // scan-thread counts, so the CD solver must stay serial: the
+            // sharded sweep partitions the active set by stored-entry
+            // count, which legitimately differs between dense and CSR
+            // (its decision-level equivalence is integration_cd_par.rs's
+            // contract)
+            solver_threads: Some(1),
             ..Default::default()
         })
         .with_validation(true)

@@ -16,6 +16,9 @@
 #                     service's "kind": "predict" serves it (double-run
 #                     determinism diff), and `dvi predict` emits the same
 #                     scores the service returns.
+#   5. parallel CD  — `dvi train --solver-threads 4` classifies the exact
+#                     support set the serial solver does (the sharded
+#                     sweep's decision-equivalence contract, end to end).
 #
 # The screening_service example runs last as an end-to-end sanity check
 # (it asserts its own expectations internally).
@@ -120,6 +123,22 @@ EOF
 else
   echo "   (python3 unavailable; skipping service-vs-cli score comparison)"
 fi
+
+# Note: the E-set dead band equals the solve tol, so only a data point
+# whose TRUE margin sits within ~tol (1e-8) of the band edge could
+# classify differently between the two solvers — toy1 is a fixed generic
+# Gaussian set with no such degenerate margin, so the exact diff is
+# stable. (integration_cd_par.rs covers the general case with a band
+# 1000x the solve tol.)
+echo "== parallel CD: --solver-threads 4 trains the serial support set"
+"$BIN" train --dataset toy1 --scale 0.05 --c 0.5 --tol 1e-8 --print-support \
+  > "$WORK/train.serial"
+"$BIN" train --dataset toy1 --scale 0.05 --c 0.5 --tol 1e-8 --print-support \
+  --solver-threads 4 > "$WORK/train.par"
+grep '^support_indices=' "$WORK/train.serial" > "$WORK/support.serial"
+grep '^support_indices=' "$WORK/train.par"    > "$WORK/support.par"
+test -s "$WORK/support.serial" || { echo "no support set printed:"; cat "$WORK/train.serial"; exit 1; }
+diff "$WORK/support.serial" "$WORK/support.par"
 
 echo "== cache introspection lists the preloaded instance"
 "$BIN" serve --workers 1 --preload toy1 --preload-scale 0.05 \
