@@ -11,14 +11,22 @@ const USAGE: &str = "\
 dvi — safe exact data reduction for SVM and LAD (DVI screening)
 
 USAGE:
-  dvi path [--dataset NAME] [--model svm|lad|wsvm] [--rule dvi|dvi-theta|ssnsv|essnsv|none]
+  dvi path [--dataset NAME] [--model svm|lad|wsvm] [--rule EXPR]
+           (EXPR: dvi|dvi-theta|ssnsv|essnsv|none, composable with `+`,
+            e.g. --rule \"dvi+essnsv\" intersects both rules' regions)
            [--scale S] [--points N] [--c-min F] [--c-max F] [--tol F]
            [--threads N]  (scan/validate worker threads; 1 = serial, 0 = auto)
            [--solver-threads N]  (CD sweep worker threads; defaults to --threads)
            [--storage dense|csr|auto]
            [--validate] [--pjrt] [--config FILE]
-  dvi experiment --id fig1|tab1|fig2|tab2|fig3|tab3|all
+  dvi experiment --id fig1|tab1|fig2|tab2|fig3|tab3|ablation|all
            [--scale S] [--points N] [--tol F] [--out DIR] [--threads N] [--pjrt]
+  dvi gauntlet [--rules e1,e2,...] [--datasets d1,d2] [--scale S] [--points N]
+           [--tol F] [--threads N] [--out DIR] [--no-timings]
+           races rule expressions (incl. `+`-compositions) against one
+           shared solved C-path per dataset; writes BENCH_screening.json
+           (--no-timings drops wall-clock fields so double runs are
+            byte-identical — the CI smoke contract)
   dvi cv   [--dataset NAME] [--model svm|lad] [--folds K] [--scale S]
            [--points N] [--rule dvi|none]     cross-validated C selection
   dvi train [--dataset NAME] [--model svm|lad|wsvm] --c F [--scale S]
@@ -98,7 +106,10 @@ fn parse_flags(args: &[String]) -> Result<(Vec<String>, BTreeMap<String, String>
         let a = &args[i];
         if let Some(key) = a.strip_prefix("--") {
             // boolean flags
-            if matches!(key, "validate" | "pjrt" | "help" | "support-only" | "print-support") {
+            if matches!(
+                key,
+                "validate" | "pjrt" | "help" | "support-only" | "print-support" | "no-timings"
+            ) {
                 flags.insert(key.to_string(), "true".to_string());
                 i += 1;
                 continue;
@@ -155,6 +166,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "path" => cmd_path(rest),
         "cv" => cmd_cv(rest),
         "experiment" => cmd_experiment(rest),
+        "gauntlet" => cmd_gauntlet(rest),
         "train" => cmd_train(rest),
         "predict" => cmd_predict(rest),
         "serve" => cmd_serve(rest),
@@ -229,8 +241,14 @@ fn cmd_cv(args: &[String]) -> Result<(), String> {
     let dataset = flags.get("dataset").cloned().unwrap_or_else(|| "toy1".into());
     let model = Model::parse(flags.get("model").map(String::as_str).unwrap_or("svm"))
         .ok_or("bad --model")?;
-    let rule = RuleKind::parse(flags.get("rule").map(String::as_str).unwrap_or("dvi"))
-        .ok_or("bad --rule")?;
+    let rule_s = flags.get("rule").map(String::as_str).unwrap_or("dvi");
+    let rule = RuleKind::parse(rule_s).ok_or_else(|| {
+        format!(
+            "bad --rule `{rule_s}` — valid rules: {}; cv races one rule \
+             (no `+`-composition)",
+            crate::screening::VALID_RULES
+        )
+    })?;
     let folds = get_usize(&flags, "folds", 5)?;
     let scale = get_f64(&flags, "scale", 0.25)?;
     let points = get_usize(&flags, "points", 50)?;
@@ -269,6 +287,31 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
     let report = experiments::run(id, &opts)?;
     println!("{report}");
     println!("(CSV written to {})", opts.out_dir.display());
+    Ok(())
+}
+
+fn cmd_gauntlet(args: &[String]) -> Result<(), String> {
+    let (_, flags) = parse_flags(args)?;
+    let mut opts = ExpOptions::default();
+    opts.scale = get_f64(&flags, "scale", opts.scale)?;
+    opts.points = get_usize(&flags, "points", opts.points)?;
+    opts.tol = get_f64(&flags, "tol", opts.tol)?;
+    opts.threads = get_usize(&flags, "threads", opts.threads)?;
+    if let Some(dir) = flags.get("out") {
+        opts.out_dir = PathBuf::from(dir);
+    }
+    let split = |v: &String| -> Vec<String> {
+        v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+    };
+    if let Some(v) = flags.get("rules") {
+        opts.rules = split(v);
+    }
+    if let Some(v) = flags.get("datasets") {
+        opts.bench_datasets = split(v);
+    }
+    opts.bench_timings = !flags.contains_key("no-timings");
+    let report = experiments::run("gauntlet", &opts)?;
+    println!("{report}");
     Ok(())
 }
 
@@ -528,6 +571,39 @@ mod tests {
         .map(|s| s.to_string())
         .collect();
         assert_eq!(dispatch(&args), 0);
+    }
+
+    #[test]
+    fn cmd_path_runs_composed_rule_and_rejects_bad_expr() {
+        let args: Vec<String> = [
+            "path", "--dataset", "toy1", "--scale", "0.02", "--points", "4", "--tol", "1e-5",
+            "--rule", "dvi+essnsv",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&args), 0);
+        let bad: Vec<String> = ["path", "--dataset", "toy1", "--rule", "dvi+bogus"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(dispatch(&bad), 1);
+    }
+
+    #[test]
+    fn cmd_gauntlet_writes_bench_json() {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("dvi_cli_gauntlet_{}", std::process::id()));
+        let args: Vec<String> = [
+            "gauntlet", "--datasets", "toy1", "--rules", "dvi,dvi+essnsv", "--scale", "0.02",
+            "--points", "3", "--tol", "1e-4", "--no-timings", "--out", dir.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&args), 0);
+        assert!(dir.join("BENCH_screening.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -97,7 +97,9 @@ pub struct RunConfig {
     pub dataset: String,
     /// size scale for the simulated real sets (tests use ≪1)
     pub scale: f64,
-    /// "dvi" (w-form) | "dvi-theta" | "ssnsv" | "essnsv" | "none"
+    /// Screening-rule expression: an atom — "dvi" (w-form) | "dvi-theta"
+    /// | "ssnsv" | "essnsv" | "none" — or a `+`-composition such as
+    /// "dvi+essnsv" whose member regions are intersected per step.
     pub rule: String,
     /// Instance-matrix storage: "dense" | "csr" | "auto" (auto picks CSR
     /// at or below the density threshold when the dataset loads).
@@ -263,8 +265,12 @@ impl RunConfig {
         if !["svm", "lad", "wsvm"].contains(&self.model.as_str()) {
             return bad(format!("unknown model `{}`", self.model));
         }
-        if !["dvi", "dvi-theta", "ssnsv", "essnsv", "none"].contains(&self.rule.as_str()) {
-            return bad(format!("unknown rule `{}`", self.rule));
+        // rule expressions (atoms and `+`-compositions) are validated by
+        // the engine's parser so the accepted vocabulary — and the
+        // actionable error enumerating it — cannot drift from the rules
+        // that actually exist
+        if let Err(e) = crate::screening::RuleExpr::parse(&self.rule) {
+            return bad(e);
         }
         if crate::linalg::Storage::parse(&self.storage).is_none() {
             return bad(format!(
@@ -394,6 +400,16 @@ threads = 4
     #[test]
     fn rejects_unknown_key() {
         assert!(RunConfig::from_toml_str("modle = \"svm\"").is_err());
+    }
+
+    #[test]
+    fn parses_composed_rule_expressions() {
+        let cfg = RunConfig::from_toml_str("rule = \"dvi+essnsv\"").unwrap();
+        assert_eq!(cfg.rule, "dvi+essnsv");
+        // the rejection message must teach the valid vocabulary
+        let err = RunConfig::from_toml_str("rule = \"dvi+bogus\"").unwrap_err();
+        assert!(err.msg.contains("valid rules:"), "{}", err.msg);
+        assert!(err.msg.contains("compose with `+`"), "{}", err.msg);
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::metrics::Registry;
 use crate::model::{self, format as model_format, PredictOptions, TrainedModel};
 use crate::path::{PathConfig, PathOutput, PathRunner};
 use crate::problem::{Instance, Model};
-use crate::screening::{dvi, RuleKind};
+use crate::screening::{dvi, RuleExpr, RuleKind, ScreenReport, ScreeningRule, StepContext};
 use crate::solver::CdSolver;
 use std::sync::Arc;
 use std::time::Instant;
@@ -88,6 +88,10 @@ pub struct ScreenSpec {
     pub model: Model,
     pub scale: f64,
     pub storage: crate::linalg::Storage,
+    /// Screening rule expression (same vocabulary as path jobs,
+    /// `+`-composable — e.g. `"dvi"` or `"dvi+essnsv"`). Defaults to
+    /// `"dvi"`, which keeps the pre-rule wire behavior bit-for-bit.
+    pub rule: String,
     /// `(c_prev, c_next)` pairs, each requiring `0 < c_prev < c_next`.
     pub pairs: Vec<(f64, f64)>,
     /// Optional θ*(pairs[0].0) warm start (length l). Screening safety
@@ -185,7 +189,7 @@ impl JobSummary {
         JobSummary {
             dataset: out.dataset.clone(),
             model: out.model.wire_name(),
-            rule: out.rule.name().to_string(),
+            rule: out.rule.name(),
             l: out.l,
             steps: out.steps.len(),
             mean_rejection: out.mean_rejection(),
@@ -216,6 +220,9 @@ pub struct ScreenPairResult {
 pub struct ScreenSummary {
     pub dataset: String,
     pub model: String,
+    /// The rule expression the scans used (echoed so clients can tell
+    /// composed responses apart).
+    pub rule: String,
     pub l: usize,
     pub pairs: Vec<ScreenPairResult>,
     /// Anchor solves this job paid for (0 when every pair reused the
@@ -402,13 +409,11 @@ fn run_path(
     metrics: &Registry,
 ) -> Result<JobSummary, String> {
     let model = Model::parse(&cfg.model).ok_or_else(|| format!("bad model `{}`", cfg.model))?;
-    let rule = RuleKind::parse(&cfg.rule).ok_or_else(|| format!("bad rule `{}`", cfg.rule))?;
+    let rule = RuleExpr::parse(&cfg.rule)?;
     let storage = crate::linalg::Storage::parse(&cfg.storage)
         .ok_or_else(|| format!("bad storage `{}` (dense | csr | auto)", cfg.storage))?;
-    if rule == RuleKind::Ssnsv || rule == RuleKind::Essnsv {
-        if model == Model::Lad {
-            return Err("SSNSV/ESSNSV are SVM-only rules".into());
-        }
+    if rule.svm_only() && model == Model::Lad {
+        return Err("SSNSV/ESSNSV are SVM-only rules".into());
     }
     let key = CacheKey::new(&cfg.dataset, model, storage, cfg.scale);
     let inst = cache.get_or_build(&key, metrics)?;
@@ -418,8 +423,9 @@ fn run_path(
         validate: cfg.validate,
         warm_start: true,
     };
-    let mut runner = PathRunner::new(model, path_cfg, rule);
-    if cfg.use_pjrt && rule == RuleKind::DviW {
+    let single_dvi = rule.single() == Some(RuleKind::DviW);
+    let mut runner = PathRunner::new_expr(model, path_cfg, rule);
+    if cfg.use_pjrt && single_dvi {
         match crate::runtime::PjrtScreener::from_default_dir() {
             Ok(s) => runner = runner.with_backend(Box::new(s)),
             Err(e) => eprintln!("[job] pjrt unavailable ({e}); using native scan"),
@@ -431,7 +437,9 @@ fn run_path(
 
 /// Execute a screening job: fetch the cached instance once, then for each
 /// `(c_prev, c_next)` pair resolve the anchor θ*(c_prev) (supplied, or
-/// solved and memoized) and run the sharded w-form DVI scan.
+/// solved and memoized) and screen with the requested rule expression.
+/// The plain `"dvi"` rule keeps the original sharded w-form scan
+/// bit-for-bit; any other expression goes through the composable engine.
 fn run_screen(
     spec: &ScreenSpec,
     cache: &InstanceCache,
@@ -444,6 +452,10 @@ fn run_screen(
         if !(a.is_finite() && b.is_finite() && a > 0.0 && b > a) {
             return Err(format!("screen: pair ({a}, {b}) must satisfy 0 < c_prev < c_next"));
         }
+    }
+    let rule = RuleExpr::parse(&spec.rule)?;
+    if rule.svm_only() && spec.model == Model::Lad {
+        return Err("SSNSV/ESSNSV are SVM-only rules".into());
     }
     let key = CacheKey::new(&spec.dataset, spec.model, spec.storage, spec.scale);
     let inst: Arc<Instance> = cache.get_or_build(&key, metrics)?;
@@ -476,6 +488,32 @@ fn run_screen(
     let mut screen_secs = 0.0;
     let mut results = Vec::with_capacity(spec.pairs.len());
 
+    // Plain `dvi` keeps the original fast path (bit-compatible with every
+    // pre-rule client); anything else builds the composable engine once.
+    let mut engine: Option<Box<dyn ScreeningRule>> =
+        if rule.single() == Some(RuleKind::DviW) {
+            None
+        } else {
+            let mut e = rule.build(spec.solver.threads);
+            let t = Instant::now();
+            e.init(&inst, spec.solver.threads);
+            screen_secs += t.elapsed().as_secs_f64();
+            Some(e)
+        };
+
+    // SSNSV-family members need w*(C_max): pay one cold solve at the
+    // largest target C in the batch (feasible for every smaller pair).
+    let w_feasible: Option<Vec<f64>> = if rule.requires_cmax() {
+        let c_max = spec.pairs.iter().map(|p| p.1).fold(f64::MIN, f64::max);
+        let t = Instant::now();
+        let r = solver.solve(&inst, c_max, inst.cold_start());
+        solve_secs += t.elapsed().as_secs_f64();
+        anchor_solves += 1;
+        Some(inst.w_from_theta(c_max, &r.theta))
+    } else {
+        None
+    };
+
     for &(c_prev, c_next) in &spec.pairs {
         if let Some(i) = anchors.iter().position(|(c, _, _)| *c == c_prev) {
             // mark most-recently-used by moving to the back
@@ -506,9 +544,22 @@ fn run_screen(
                 anchors.remove(0); // least-recently-used
             }
         }
-        let (_, _, u) = anchors.last().expect("anchor just ensured");
+        let (_, theta_a, u) = anchors.last().expect("anchor just ensured");
         let t = Instant::now();
-        let report = dvi::screen_w_par(&inst, c_prev, c_next, u, spec.solver.threads);
+        let report = match engine.as_mut() {
+            None => dvi::screen_w_par(&inst, c_prev, c_next, u, spec.solver.threads),
+            Some(eng) => {
+                let ctx = StepContext {
+                    c_prev,
+                    c_next,
+                    theta_prev: theta_a,
+                    u_prev: u,
+                    w_feasible: w_feasible.as_deref(),
+                };
+                let region = eng.prepare(&inst, &ctx);
+                ScreenReport::from_decisions(eng.screen_rows(&inst, &region, spec.solver.threads))
+            }
+        };
         screen_secs += t.elapsed().as_secs_f64();
         results.push(ScreenPairResult {
             c_prev,
@@ -528,6 +579,7 @@ fn run_screen(
     Ok(ScreenSummary {
         dataset: spec.dataset.clone(),
         model: spec.model.wire_name(),
+        rule: rule.name(),
         l,
         pairs: results,
         anchor_solves,
@@ -700,6 +752,7 @@ mod tests {
             model: Model::Svm,
             scale: 0.05,
             storage: Storage::Auto,
+            rule: "dvi".into(),
             pairs,
             theta: None,
             solver: SolverConfig { tol: 1e-6, ..Default::default() },
@@ -793,6 +846,45 @@ mod tests {
         let rep1 = crate::screening::Dvi::new_w().screen(&inst, 0.8, 1.6, &r1.theta, &u1);
         assert_eq!((s.pairs[1].n_lo, s.pairs[1].n_hi), (rep1.n_lo, rep1.n_hi));
         assert!(s.mean_rejection() > 0.0);
+    }
+
+    #[test]
+    fn screen_job_composed_rule_dominates_plain_dvi() {
+        let pairs = vec![(0.5, 0.8), (0.8, 1.6)];
+        let mut spec = quick_screen("toy1", pairs.clone());
+        spec.rule = "dvi+essnsv".into();
+        let out = run_job(&JobSpec::screen(0, spec));
+        let s = out.result.expect("composed screen failed");
+        let s = s.as_screen().unwrap();
+        assert_eq!(s.rule, "dvi+essnsv");
+        assert_eq!(s.anchor_solves, 3, "two anchors plus the w*(C_max) feasible solve");
+        // the anchors are solved identically in both jobs (the feasible
+        // solve is separate), so the composite must reject at least what
+        // its dvi member — the plain job's scan — rejects, per pair
+        let plain = run_job(&JobSpec::screen(1, quick_screen("toy1", pairs)));
+        let p = plain.result.unwrap();
+        let p = p.as_screen().unwrap();
+        assert_eq!(p.rule, "dvi");
+        for (a, b) in s.pairs.iter().zip(&p.pairs) {
+            assert!(
+                a.n_lo + a.n_hi >= b.n_lo + b.n_hi,
+                "composite ({}, {}) rejected {} < dvi's {}",
+                a.c_prev,
+                a.c_next,
+                a.n_lo + a.n_hi,
+                b.n_lo + b.n_hi
+            );
+        }
+    }
+
+    #[test]
+    fn screen_job_rejects_svm_only_rule_on_lad() {
+        let mut spec = quick_screen("houses", vec![(0.5, 0.8)]);
+        spec.model = Model::Lad;
+        spec.rule = "dvi+ssnsv".into();
+        let out = run_job(&JobSpec::screen(0, spec));
+        let err = out.result.unwrap_err();
+        assert!(err.contains("SVM-only"), "{err}");
     }
 
     #[test]

@@ -21,15 +21,20 @@
 //!
 //! ```json
 //! {"kind": "screen", "dataset": "toy1", "model": "svm", "scale": 0.1,
+//!  "rule": "dvi+essnsv",
 //!  "pairs": [[0.1, 0.2], [0.2, 0.4]], "theta": [0.0, 1.0],
 //!  "tol": 1e-6, "threads": 0, "return_theta": true}
 //! ```
 //!
-//! A screen job runs the w-form DVI scan for each `(c_prev, c_next)` pair
-//! against ONE resident instance. The anchor θ*(c_prev) is the supplied
-//! `theta` (valid for the first pair's `c_prev`) or is solved on demand
-//! and memoized across pairs. This is the protocol for amortizing one
-//! prepared problem over many screening queries.
+//! A screen job screens each `(c_prev, c_next)` pair against ONE resident
+//! instance with the requested `rule` expression — any path-rule name or
+//! a `+`-composition (e.g. `"dvi+essnsv"`); it defaults to `"dvi"`, whose
+//! sharded w-form scan keeps the pre-`rule` wire behavior bit-for-bit.
+//! SSNSV-family members cost one extra feasible solve at the batch's
+//! largest `c_next`. The anchor θ*(c_prev) is the supplied `theta` (valid
+//! for the first pair's `c_prev`) or is solved on demand and memoized
+//! across pairs. This is the protocol for amortizing one prepared problem
+//! over many screening queries.
 //!
 //! ## Batch requests
 //!
@@ -338,6 +343,7 @@ impl ScreeningService {
             model: Model::Svm,
             scale: 1.0,
             storage: crate::linalg::Storage::Auto,
+            rule: "dvi".to_string(),
             pairs: Vec::new(),
             theta: None,
             solver: SolverConfig::default(),
@@ -365,6 +371,13 @@ impl ScreeningService {
                     let s = v.as_str().ok_or("storage: string")?;
                     spec.storage = crate::linalg::Storage::parse(s)
                         .ok_or_else(|| format!("storage must be dense|csr|auto, got `{s}`"))?;
+                }
+                "rule" => {
+                    let s = v.as_str().ok_or("rule: string")?;
+                    // validate the expression at parse so a typo answers
+                    // with the accepted vocabulary instead of a worker error
+                    crate::screening::RuleExpr::parse(s)?;
+                    spec.rule = s.to_string();
                 }
                 "tol" => {
                     let x = v.as_float().ok_or("tol: number")?;
@@ -758,6 +771,7 @@ impl ScreeningService {
                 o.insert("kind".into(), Json::Str("screen".into()));
                 o.insert("dataset".into(), Json::Str(s.dataset.clone()));
                 o.insert("model".into(), Json::Str(s.model.clone()));
+                o.insert("rule".into(), Json::Str(s.rule.clone()));
                 o.insert("l".into(), Json::Int(s.l as i64));
                 o.insert("mean_rejection".into(), Json::Float(s.mean_rejection()));
                 o.insert("anchor_solves".into(), Json::Int(s.anchor_solves as i64));
@@ -1238,6 +1252,22 @@ mod tests {
         assert_eq!(s.solver.threads, 2);
         assert!(s.return_theta);
         assert!(s.theta.is_none());
+        assert_eq!(s.rule, "dvi", "rule defaults to the pre-rule wire behavior");
+
+        let r = parse_line(
+            r#"{"kind": "screen", "dataset": "toy1", "rule": "dvi+essnsv",
+                "pairs": [[0.1, 0.2]]}"#,
+        )
+        .unwrap();
+        let JobKind::Screen(s) = r.kind else { panic!("expected screen kind") };
+        assert_eq!(s.rule, "dvi+essnsv");
+
+        let err = parse_line(
+            r#"{"kind": "screen", "dataset": "toy1", "rule": "nope",
+                "pairs": [[0.1, 0.2]]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("valid rules:"), "{err}");
     }
 
     #[test]

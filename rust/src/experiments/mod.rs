@@ -34,6 +34,15 @@ pub struct ExpOptions {
     /// Table/figure regeneration at paper scale should run 0 (auto) so
     /// the ParScan engine is exploited; results are identical either way.
     pub threads: usize,
+    /// Rule expressions the `gauntlet` races (`--rule` syntax, including
+    /// `+`-compositions).
+    pub rules: Vec<String>,
+    /// Classification registry datasets the `gauntlet` screens.
+    pub bench_datasets: Vec<String>,
+    /// Emit wall-clock fields (scan/solve seconds, speedups) in
+    /// `BENCH_screening.json`. Off ⇒ the file is byte-deterministic
+    /// across double runs — what the CI smoke job diffs.
+    pub bench_timings: bool,
 }
 
 impl Default for ExpOptions {
@@ -46,6 +55,12 @@ impl Default for ExpOptions {
             use_pjrt: false,
             validate: false,
             threads: 1,
+            rules: ["dvi", "dvi-theta", "ssnsv", "essnsv", "dvi+essnsv"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            bench_datasets: vec!["toy1".to_string(), "toy2".to_string()],
+            bench_timings: true,
         }
     }
 }
@@ -89,6 +104,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<String, String> {
         "fig3" => Ok(fig3(opts)),
         "tab3" => Ok(tab3(opts)),
         "ablation" => Ok(ablation_grid_density(opts)),
+        "gauntlet" => gauntlet(opts),
         "all" => {
             let mut out = String::new();
             for id in ["fig1", "tab1", "fig2", "tab2", "fig3", "tab3", "ablation"] {
@@ -98,7 +114,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<String, String> {
             Ok(out)
         }
         _ => Err(format!(
-            "unknown experiment id `{id}` (fig1..fig3, tab1..tab3, ablation, all)"
+            "unknown experiment id `{id}` (fig1..fig3, tab1..tab3, ablation, gauntlet, all)"
         )),
     }
 }
@@ -441,6 +457,209 @@ pub fn ablation_grid_density(opts: &ExpOptions) -> String {
     table.render()
 }
 
+// ------------------------------------------------------------ gauntlet --
+
+/// The `dvi gauntlet`: race a grid of screening-rule expressions over
+/// datasets × one shared C-path, and write a versioned, schema-stable
+/// `BENCH_screening.json` under `out_dir` (schema_version 1).
+///
+/// Every rule replays against the SAME reference trajectory — one
+/// warm-started, unscreened path per dataset whose per-step (θ*, u = Zᵀθ)
+/// anchors are recorded, plus one feasible w*(C_max) from the final point
+/// for the SSNSV family — so per-step rejection rates are directly
+/// comparable, and a composed rule's rate dominates each raced member's
+/// *by construction* (intersection of member regions keeps the tightest
+/// per-row bounds; see [`crate::screening::composite`]). With
+/// `bench_timings` off the file carries no wall-clock field and a double
+/// run is byte-identical — that is what `scripts/gauntlet_smoke.sh`
+/// diffs in CI.
+pub fn gauntlet(opts: &ExpOptions) -> Result<String, String> {
+    use crate::config::json::Json;
+    use crate::problem::Instance;
+    use crate::screening::{RuleExpr, ScreenReport, StepContext};
+    use crate::solver::CdSolver;
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+
+    if opts.rules.is_empty() {
+        return Err("gauntlet: `rules` must name at least one rule expression".into());
+    }
+    if opts.bench_datasets.is_empty() {
+        return Err("gauntlet: `bench_datasets` must name at least one dataset".into());
+    }
+    let exprs: Vec<RuleExpr> =
+        opts.rules.iter().map(|s| RuleExpr::parse(s)).collect::<Result<_, _>>()?;
+    std::fs::create_dir_all(&opts.out_dir)
+        .map_err(|e| format!("gauntlet: create {}: {e}", opts.out_dir.display()))?;
+    let cfg = opts.path_config(1e-2, 10.0);
+    let grid = cfg.grid.clone();
+    if grid.len() < 2 {
+        return Err("gauntlet: need at least 2 grid points".into());
+    }
+
+    struct Raced {
+        name: String,
+        atoms: Vec<String>,
+        steps: Vec<f64>,
+        mean: f64,
+        scan_secs: f64,
+        solve_secs: Option<f64>,
+    }
+
+    let mut report =
+        String::from("=== dvi gauntlet: screening-rate race on shared solved paths ===\n");
+    let mut ds_entries: Vec<Json> = Vec::new();
+    for name in &opts.bench_datasets {
+        let ds = registry::resolve(name, opts.scale, crate::data::Task::Classification)?;
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let l = inst.len();
+
+        // the shared reference trajectory (warm-started, no screening)
+        let solver = CdSolver::new(cfg.solver.clone());
+        let mut trail: Vec<(Vec<f64>, Vec<f64>)> = Vec::with_capacity(grid.len());
+        let mut warm = inst.cold_start();
+        let t_ref = Instant::now();
+        for &c in &grid {
+            let r = solver.solve(&inst, c, warm);
+            let u = inst.u_from_theta(&r.theta);
+            warm = r.theta.clone();
+            inst.project_box(&mut warm);
+            trail.push((r.theta, u));
+        }
+        let ref_secs = t_ref.elapsed().as_secs_f64();
+        let theta_last = &trail.last().expect("non-empty grid").0;
+        let w_feasible = inst.w_from_theta(*grid.last().expect("non-empty grid"), theta_last);
+
+        // end-to-end baseline only matters when wall-clock is reported
+        let baseline_secs: Option<f64> = if opts.bench_timings {
+            let cfg = opts.path_config(1e-2, 10.0);
+            Some(PathRunner::new(Model::Svm, cfg, RuleKind::None).run(&ds).total_secs)
+        } else {
+            None
+        };
+
+        let mut raced: Vec<Raced> = Vec::new();
+        for expr in &exprs {
+            let mut engine = expr.build(opts.threads);
+            engine.init(&inst, opts.threads);
+            let mut steps: Vec<f64> = Vec::with_capacity(grid.len() - 1);
+            let mut scan_secs = 0.0;
+            for k in 1..grid.len() {
+                let ctx = StepContext {
+                    c_prev: grid[k - 1],
+                    c_next: grid[k],
+                    theta_prev: &trail[k - 1].0,
+                    u_prev: &trail[k - 1].1,
+                    w_feasible: Some(&w_feasible),
+                };
+                let t0 = Instant::now();
+                let region = engine.prepare(&inst, &ctx);
+                let rep = ScreenReport::from_decisions(engine.screen_rows(
+                    &inst,
+                    &region,
+                    opts.threads,
+                ));
+                scan_secs += t0.elapsed().as_secs_f64();
+                steps.push(rep.rejection());
+            }
+            let mean = steps.iter().sum::<f64>() / steps.len() as f64;
+            let solve_secs = if opts.bench_timings {
+                let cfg = opts.path_config(1e-2, 10.0);
+                Some(PathRunner::new_expr(Model::Svm, cfg, expr.clone()).run(&ds).total_secs)
+            } else {
+                None
+            };
+            raced.push(Raced {
+                name: expr.name(),
+                atoms: expr.atoms().iter().map(|a| a.name().to_string()).collect(),
+                steps,
+                mean,
+                scan_secs,
+                solve_secs,
+            });
+        }
+
+        // members raced as singles, for the composed-dominance record
+        let singles: BTreeMap<&str, &Vec<f64>> = raced
+            .iter()
+            .filter(|r| r.atoms.len() == 1)
+            .map(|r| (r.name.as_str(), &r.steps))
+            .collect();
+        let mut t = Table::new(format!("{} (l={l}, n={})", ds.name, ds.dim()))
+            .header(&["rule", "mean rejection", "final step", "scan"]);
+        let mut rule_entries: Vec<Json> = Vec::new();
+        for r in &raced {
+            let mut o = BTreeMap::new();
+            o.insert("rule".to_string(), Json::Str(r.name.clone()));
+            o.insert(
+                "per_step_rejection".to_string(),
+                Json::Array(r.steps.iter().map(|&v| Json::Float(v)).collect()),
+            );
+            o.insert("mean_rejection".to_string(), Json::Float(r.mean));
+            if r.atoms.len() > 1 {
+                // exact (not epsilon) comparison: the composite evaluates
+                // the identical member bounds and intersects them
+                let dominates = r.atoms.iter().all(|a| match singles.get(a.as_str()) {
+                    Some(ms) => ms.iter().zip(&r.steps).all(|(m, c)| c >= m),
+                    None => true, // member not raced as a single
+                });
+                o.insert("dominates_members".to_string(), Json::Bool(dominates));
+            }
+            if opts.bench_timings {
+                o.insert("scan_secs".to_string(), Json::Float(r.scan_secs));
+                if let (Some(s), Some(b)) = (r.solve_secs, baseline_secs) {
+                    o.insert("solve_total_secs".to_string(), Json::Float(s));
+                    o.insert("speedup_vs_warm".to_string(), Json::Float(b / s));
+                }
+            }
+            rule_entries.push(Json::Object(o));
+            let last = *r.steps.last().expect("at least one step");
+            t.row(&[
+                r.name.clone(),
+                format!("{:.1}%", 100.0 * r.mean),
+                format!("{:.1}%", 100.0 * last),
+                if opts.bench_timings { format!("{:.4}s", r.scan_secs) } else { "-".into() },
+            ]);
+        }
+
+        let mut d = BTreeMap::new();
+        d.insert("dataset".to_string(), Json::Str(ds.name.clone()));
+        d.insert("l".to_string(), Json::Int(l as i64));
+        d.insert("n".to_string(), Json::Int(ds.dim() as i64));
+        d.insert("grid".to_string(), Json::Array(grid.iter().map(|&c| Json::Float(c)).collect()));
+        d.insert("rules".to_string(), Json::Array(rule_entries));
+        if opts.bench_timings {
+            d.insert("reference_path_secs".to_string(), Json::Float(ref_secs));
+            if let Some(b) = baseline_secs {
+                d.insert("baseline_warm_secs".to_string(), Json::Float(b));
+            }
+        }
+        ds_entries.push(Json::Object(d));
+        report.push_str(&t.render());
+        report.push('\n');
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("schema_version".to_string(), Json::Int(1));
+    top.insert("kind".to_string(), Json::Str("dvi-gauntlet".to_string()));
+    top.insert("model".to_string(), Json::Str("svm".to_string()));
+    top.insert("scale".to_string(), Json::Float(opts.scale));
+    top.insert("points".to_string(), Json::Int(opts.points as i64));
+    top.insert("tol".to_string(), Json::Float(opts.tol));
+    top.insert(
+        "rules".to_string(),
+        Json::Array(opts.rules.iter().map(|r| Json::Str(r.clone())).collect()),
+    );
+    top.insert("datasets".to_string(), Json::Array(ds_entries));
+    let path = opts.out_dir.join("BENCH_screening.json");
+    let mut text = Json::Object(top).to_string();
+    text.push('\n');
+    std::fs::write(&path, &text)
+        .map_err(|e| format!("gauntlet: write {}: {e}", path.display()))?;
+    report.push_str(&format!("wrote {}\n", path.display()));
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -456,12 +675,57 @@ mod tests {
             use_pjrt: false,
             validate: false,
             threads: 2, // exercise the sharded engine in the harness tests
+            rules: vec!["dvi".into(), "essnsv".into(), "dvi+essnsv".into()],
+            bench_datasets: vec!["toy1".into()],
+            bench_timings: false,
         }
     }
 
     #[test]
     fn unknown_id_is_error() {
         assert!(run("nope", &tiny_opts()).is_err());
+    }
+
+    #[test]
+    fn gauntlet_bench_is_deterministic_and_composite_dominates() {
+        let mut opts = tiny_opts();
+        // own directory: sibling tests remove_dir_all the shared tiny dir
+        opts.out_dir = std::env::temp_dir();
+        opts.out_dir.push(format!("dvi_exp_gauntlet_{}", std::process::id()));
+        let report = run("gauntlet", &opts).expect("gauntlet runs");
+        assert!(report.contains("dvi+essnsv"), "{report}");
+        let path = opts.out_dir.join("BENCH_screening.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        // timings off ⇒ no wall-clock field and a byte-identical double run
+        assert!(!text.contains("secs"), "{text}");
+        run("gauntlet", &opts).expect("gauntlet reruns");
+        assert_eq!(text, std::fs::read_to_string(&path).unwrap(), "double run must be stable");
+
+        let j = crate::config::json::parse_json(&text).unwrap();
+        assert_eq!(j.get("schema_version").unwrap().as_int(), Some(1));
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("dvi-gauntlet"));
+        let dsets = j.get("datasets").unwrap().as_array().unwrap();
+        assert_eq!(dsets.len(), 1);
+        let rules = dsets[0].get("rules").unwrap().as_array().unwrap();
+        assert_eq!(rules.len(), 3);
+        let steps = |r: &crate::config::json::Json| -> Vec<f64> {
+            r.get("per_step_rejection")
+                .unwrap()
+                .as_array()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_float().unwrap())
+                .collect()
+        };
+        let dvi = steps(&rules[0]);
+        let ess = steps(&rules[1]);
+        let both = steps(&rules[2]);
+        assert_eq!(rules[2].get("rule").unwrap().as_str(), Some("dvi+essnsv"));
+        assert_eq!(rules[2].get("dominates_members").unwrap().as_bool(), Some(true));
+        for k in 0..both.len() {
+            assert!(both[k] >= dvi[k].max(ess[k]), "step {k}: {both:?} vs {dvi:?}/{ess:?}");
+        }
+        std::fs::remove_dir_all(&opts.out_dir).ok();
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! The regularization-path runner.
 
-use super::{DviScanBackend, NativeScan, ParScan};
+use super::DviScanBackend;
 use crate::config::{GridConfig, SolverConfig};
 use crate::data::Dataset;
 use crate::problem::{Instance, Model};
-use crate::screening::{Dvi, RuleKind, ScreenReport, Ssnsv, SsnsvContext};
+use crate::screening::{
+    DviWRule, RuleExpr, RuleKind, ScreenReport, ScreeningRule, StepContext,
+};
 use crate::solver::CdSolver;
 use std::time::Instant;
 
@@ -18,9 +20,9 @@ pub struct PathConfig {
     pub validate: bool,
     /// Warm-start each grid point from the previous solution. `true` is
     /// the strong modern baseline; `false` reproduces the paper's
-    /// "Solver" arm (each C solved independently). Only honored for
-    /// [`RuleKind::None`] — every screening rule needs the previous
-    /// solution anyway.
+    /// "Solver" arm (each C solved independently). Only honored for the
+    /// `none` rule — every screening rule needs the previous solution
+    /// anyway.
     pub warm_start: bool,
 }
 
@@ -86,7 +88,7 @@ impl StepRecord {
 pub struct PathOutput {
     pub dataset: String,
     pub model: Model,
-    pub rule: RuleKind,
+    pub rule: RuleExpr,
     pub l: usize,
     pub steps: Vec<StepRecord>,
     /// Time solving the required initial point(s) — C₁ always; also C_K
@@ -137,30 +139,40 @@ impl PathOutput {
     }
 }
 
-/// Orchestrates screen → reduce → solve along the grid.
+/// Orchestrates screen → reduce → solve along the grid. Screening goes
+/// through the open [`ScreeningRule`] engine: single atoms run their
+/// dedicated impls (bit-identical to the pre-refactor enum dispatch),
+/// `+`-compositions intersect member regions.
 pub struct PathRunner {
     pub model: Model,
     pub cfg: PathConfig,
-    pub rule: RuleKind,
-    backend: Box<dyn DviScanBackend>,
+    pub rule: RuleExpr,
+    engine: Box<dyn ScreeningRule>,
 }
 
 impl PathRunner {
-    /// `cfg.solver.threads` picks the scan backend: 1 (the default) keeps
-    /// the serial [`NativeScan`]; any other value installs the sharded
-    /// [`ParScan`] (0 = auto-detect), whose decisions are byte-identical.
+    /// Single-atom constructor (the legacy enum surface).
+    /// `cfg.solver.threads` picks the w-form scan backend: 1 (the
+    /// default) keeps the serial [`super::NativeScan`]; any other value
+    /// installs the sharded [`super::ParScan`] (0 = auto-detect), whose
+    /// decisions are byte-identical.
     pub fn new(model: Model, cfg: PathConfig, rule: RuleKind) -> PathRunner {
-        let backend: Box<dyn DviScanBackend> = if cfg.solver.threads == 1 {
-            Box::new(NativeScan)
-        } else {
-            Box::new(ParScan::new(cfg.solver.threads))
-        };
-        PathRunner { model, cfg, rule, backend }
+        Self::new_expr(model, cfg, RuleExpr::from_kind(rule))
     }
 
-    /// Swap the DVI scan backend (e.g. the PJRT AOT executable).
+    /// Rule-expression constructor: atoms or `+`-compositions.
+    pub fn new_expr(model: Model, cfg: PathConfig, rule: RuleExpr) -> PathRunner {
+        let engine = rule.build(cfg.solver.threads);
+        PathRunner { model, cfg, rule, engine }
+    }
+
+    /// Swap the DVI scan backend (e.g. the PJRT AOT executable). Only
+    /// meaningful for the plain `dvi` rule — exactly the sites that
+    /// installed one pre-refactor; other expressions keep their engine.
     pub fn with_backend(mut self, backend: Box<dyn DviScanBackend>) -> Self {
-        self.backend = backend;
+        if self.rule.single() == Some(RuleKind::DviW) {
+            self.engine = Box::new(DviWRule::with_backend(backend));
+        }
         self
     }
 
@@ -200,29 +212,25 @@ impl PathRunner {
         let c1_solve_secs = t.elapsed().as_secs_f64();
         let mut init_secs = c1_solve_secs;
 
-        // SSNSV/ESSNSV additionally require the solution at C_max.
-        let w_feasible: Option<Vec<f64>> = match self.rule {
-            RuleKind::Ssnsv | RuleKind::Essnsv => {
-                let t = Instant::now();
-                let r = solver.solve(inst, *grid.last().unwrap(), inst.cold_start());
-                init_secs += t.elapsed().as_secs_f64();
-                Some(inst.w_from_theta(*grid.last().unwrap(), &r.theta))
-            }
-            _ => None,
+        // The SSNSV family additionally requires the solution at C_max
+        // (any composition with an ssnsv/essnsv member pays this too).
+        let w_feasible: Option<Vec<f64>> = if self.rule.requires_cmax() {
+            let t = Instant::now();
+            let r = solver.solve(inst, *grid.last().unwrap(), inst.cold_start());
+            init_secs += t.elapsed().as_secs_f64();
+            Some(inst.w_from_theta(*grid.last().unwrap(), &r.theta))
+        } else {
+            None
         };
 
-        // θ-form DVI precomputes the Gram matrix once; that cost is
-        // attributed to init (the paper's "G can be computed only once").
-        let dvi_rule: Option<Dvi> = match self.rule {
-            RuleKind::DviTheta => {
-                let t = Instant::now();
-                let r = Dvi::new_theta_threads(inst, self.cfg.solver.threads);
-                init_secs += t.elapsed().as_secs_f64();
-                Some(r)
-            }
-            RuleKind::DviW => Some(Dvi::new_w()),
-            _ => None,
-        };
+        // Per-instance rule precomputation — the θ-form's Gram matrix
+        // build, a no-op for every other atom. Attributed to init (the
+        // paper's "G can be computed only once").
+        {
+            let t = Instant::now();
+            self.engine.init(inst, self.cfg.solver.threads);
+            init_secs += t.elapsed().as_secs_f64();
+        }
 
         let mut steps = Vec::with_capacity(grid.len());
         let mut screen_secs_total = 0.0;
@@ -249,31 +257,29 @@ impl PathRunner {
             let (c_prev, c_next) = (grid[k - 1], grid[k]);
 
             let t_screen = Instant::now();
-            let report: ScreenReport = match self.rule {
-                RuleKind::None => ScreenReport::keep_all(l),
-                RuleKind::DviW => {
-                    let (mid, rad) = crate::screening::dvi::ball_params(c_prev, c_next);
-                    ScreenReport::from_decisions(self.backend.scan(inst, mid, rad, &cur.u))
-                }
-                RuleKind::DviTheta => dvi_rule
-                    .as_ref()
-                    .unwrap()
-                    .screen(inst, c_prev, c_next, &cur.theta, &cur.u),
-                RuleKind::Ssnsv | RuleKind::Essnsv => {
-                    let w_anchor = inst.w_from_theta(c_prev, &cur.theta);
-                    let ctx = SsnsvContext {
-                        w_anchor: &w_anchor,
-                        w_feasible: w_feasible.as_ref().unwrap(),
-                    };
-                    Ssnsv::new(self.rule == RuleKind::Essnsv).screen(inst, &ctx)
-                }
+            let report: ScreenReport = if self.rule.is_none() {
+                ScreenReport::keep_all(l)
+            } else {
+                let ctx = StepContext {
+                    c_prev,
+                    c_next,
+                    theta_prev: &cur.theta,
+                    u_prev: &cur.u,
+                    w_feasible: w_feasible.as_deref(),
+                };
+                let region = self.engine.prepare(inst, &ctx);
+                ScreenReport::from_decisions(self.engine.screen_rows(
+                    inst,
+                    &region,
+                    self.cfg.solver.threads,
+                ))
             };
             let screen_secs = t_screen.elapsed().as_secs_f64();
             screen_secs_total += screen_secs;
 
             // Paper-protocol baseline: no warm start, every C solved
             // independently (only meaningful without screening).
-            if self.rule == RuleKind::None && !self.cfg.warm_start {
+            if self.rule.is_none() && !self.cfg.warm_start {
                 let t_solve = Instant::now();
                 cur = solver.solve(inst, c_next, inst.cold_start());
                 steps.push(StepRecord {
@@ -358,7 +364,7 @@ impl PathRunner {
         PathOutput {
             dataset: inst.name.clone(),
             model: self.model,
-            rule: self.rule,
+            rule: self.rule.clone(),
             l,
             steps,
             init_secs,
@@ -467,6 +473,25 @@ mod tests {
         assert_eq!(r.len(), 7);
         assert_eq!(h.len(), 7);
         assert!(r.iter().zip(&h).all(|(a, b)| a + b <= 1.0 + 1e-12));
+    }
+
+    #[test]
+    fn composed_rule_path_safe_and_dominates_members() {
+        let ds = synth::toy_gaussian(8, 120, 1.0, 0.75);
+        let cfg = quick_cfg(8);
+        let expr = crate::screening::RuleExpr::parse("dvi+essnsv").unwrap();
+        let out_c = PathRunner::new_expr(Model::Svm, cfg.clone(), expr).run(&ds);
+        // safe: the reduced solves still satisfy full-problem KKT
+        assert!(out_c.worst_violation().unwrap() < 1e-5);
+        assert_eq!(out_c.rule.name(), "dvi+essnsv");
+        // at least as strong as each member over the whole path (both
+        // trajectories coincide: screening is safe, so every rule's path
+        // visits the same optima and the per-step contexts agree)
+        let out_d =
+            PathRunner::new(Model::Svm, cfg.clone(), RuleKind::DviW).run(&ds);
+        let out_e = PathRunner::new(Model::Svm, cfg, RuleKind::Essnsv).run(&ds);
+        assert!(out_c.mean_rejection() >= out_d.mean_rejection() - 1e-12);
+        assert!(out_c.mean_rejection() >= out_e.mean_rejection() - 1e-12);
     }
 
     #[test]

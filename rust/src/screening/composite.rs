@@ -1,0 +1,54 @@
+//! Rule composition: intersect member regions, keep the tightest per-row
+//! bounds.
+//!
+//! Safety: every member's region contains the dual optimum at the next
+//! parameter value (that is each rule's contract), so their intersection
+//! does too — screening against the intersection is exactly as safe as
+//! against any member, and at least as tight. Per row the intersection's
+//! interval is lo = max over members, hi = min over members
+//! ([`DualRegion::Intersect`]), so any row a member rejects, the
+//! composite rejects: a composed rule's rejection rate dominates every
+//! member's *by construction*, on the same solved context. The `dvi
+//! gauntlet` bench records that dominance and
+//! `tests/integration_screening_rules.rs` locks it.
+
+use super::region::DualRegion;
+use super::rule::{ScreeningRule, StepContext};
+use crate::problem::Instance;
+
+/// Intersection of member rules (built from `"a+b"` expressions by
+/// [`super::RuleExpr::build`]).
+pub struct Composite {
+    members: Vec<Box<dyn ScreeningRule>>,
+}
+
+impl Composite {
+    pub fn new(members: Vec<Box<dyn ScreeningRule>>) -> Composite {
+        assert!(members.len() >= 2, "a composite needs at least two members");
+        Composite { members }
+    }
+}
+
+impl ScreeningRule for Composite {
+    fn name(&self) -> String {
+        self.members.iter().map(|m| m.name()).collect::<Vec<_>>().join("+")
+    }
+
+    fn requires_cmax(&self) -> bool {
+        self.members.iter().any(|m| m.requires_cmax())
+    }
+
+    fn init(&mut self, inst: &Instance, threads: usize) {
+        for m in &mut self.members {
+            m.init(inst, threads);
+        }
+    }
+
+    fn prepare(&self, inst: &Instance, ctx: &StepContext) -> DualRegion {
+        DualRegion::Intersect(self.members.iter().map(|m| m.prepare(inst, ctx)).collect())
+    }
+    // screen_rows: the trait's generic sharded sweep evaluates the
+    // intersection — member kernels (e.g. the PJRT scan) are deliberately
+    // not consulted here, matching the pre-refactor behavior where
+    // specialized backends only ever served the plain dvi rule.
+}

@@ -129,6 +129,13 @@ impl Dvi {
         dvi_scan(inst, mid, rad, u)
     }
 
+    /// The cached Gram matrix (θ-form only) — read by the trait-based
+    /// engine's θ rule so its per-row expressions evaluate the exact
+    /// entries the enum-dispatch path did.
+    pub(crate) fn gram_matrix(&self) -> Option<&RowMatrix> {
+        self.gram.as_ref()
+    }
+
     fn screen_theta(&self, inst: &Instance, mid: f64, rad: f64, theta: &[f64]) -> Vec<Decision> {
         let g = self.gram.as_ref().expect("θ-form requires the Gram matrix");
         assert_eq!(g.rows(), inst.len());

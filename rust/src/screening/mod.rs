@@ -14,11 +14,28 @@
 //!   and its VI-enhanced variant ESSNSV (Eq. 28 / Theorem 19), sharing
 //!   the cone∩ball extremization of Lemma 20;
 //! * [`RuleKind::None`] — no screening (the paper's plain "Solver" arm).
+//!
+//! All of the above are also exposed through the open, composable
+//! engine: [`rule::ScreeningRule`] implementations build a
+//! [`region::DualRegion`] per step and sweep the rows against it, and a
+//! [`composite::Composite`] intersects member regions so `--rule
+//! "dvi+essnsv"` screens every row with the tightest available bound.
+//! [`RuleKind`] remains the atom vocabulary; [`RuleExpr`] is the parsed
+//! `+`-expression every layer now threads through.
 
+pub mod composite;
 pub mod dvi;
+pub mod region;
+pub mod rule;
 pub mod ssnsv;
 
+pub use composite::Composite;
 pub use dvi::{Dvi, DviForm};
+pub use region::{decide_bounds, DualRegion, RowScratch};
+pub use rule::{
+    DviThetaRule, DviWRule, NoneRule, RuleExpr, ScreeningRule, SsnsvRule, StepContext,
+    VALID_RULES,
+};
 pub use ssnsv::{Ssnsv, SsnsvContext};
 
 use crate::problem::Instance;

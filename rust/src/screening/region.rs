@@ -1,0 +1,249 @@
+//! Dual-feasible regions — the geometric half of the composable engine.
+//!
+//! Every safe rule in this repo works the same way: it constructs a
+//! region that provably contains the (transformed) dual optimum at the
+//! next parameter value, then bounds the per-row score sᵢ over that
+//! region. DVI bounds Zᵀθ*(C_next) in Theorem 6's ball and evaluates
+//! mid·⟨u, zᵢ⟩ ± rad·‖u‖·‖zᵢ‖; SSNSV/ESSNSV bound w*(C) in a
+//! half-space-intersected ball (Ogawa et al. §IV) and extremize ⟨w, x̄ᵢ⟩
+//! via Lemma 20. Either way the output is a per-row interval
+//! [loᵢ, hiᵢ] compared against ȳᵢ:
+//!
+//! ```text
+//!   loᵢ > ȳᵢ  ⇒  AtLo (paper's R set)
+//!   hiᵢ < ȳᵢ  ⇒  AtHi (paper's L set)
+//! ```
+//!
+//! Because every region contains the optimum, *intersecting* regions is
+//! also safe: the intersection still contains the optimum, and the
+//! tightest per-row bounds are simply lo = max over members, hi = min
+//! over members ([`DualRegion::Intersect`]). That max/min construction
+//! is what makes a composed rule dominate each member by construction —
+//! any row a member rejects, the composite rejects.
+//!
+//! The per-row expressions below are kept *textually identical* to the
+//! pre-refactor kernels in [`super::dvi`] and [`super::ssnsv`], so the
+//! trait-based rules reproduce the enum-dispatch decisions bit for bit
+//! (locked by `tests/integration_screening_rules.rs`).
+
+use super::ssnsv::{ball_min, lemma20_min};
+use super::Decision;
+use crate::linalg::{par, RowView};
+use crate::problem::Instance;
+
+/// A region guaranteed to contain the dual optimum at the next parameter
+/// value, in whichever space the owning rule screens.
+#[derive(Clone, Debug)]
+pub enum DualRegion {
+    /// No information — every row stays free (the `none` rule).
+    All,
+    /// Theorem-6 ball screened in w-form (DVI_s, Cor. 9): per-row score
+    /// mid·⟨u, zᵢ⟩ with slack rad·‖u‖·‖zᵢ‖.
+    BallW { mid: f64, rad: f64, u: Vec<f64>, u_norm: f64 },
+    /// Theorem-6 ball screened in θ-form (DVI_s*, Cor. 8): ⟨u, zᵢ⟩ read
+    /// from the cached Gram matvec, ‖zᵢ‖ from its diagonal.
+    BallTheta { mid: f64, rad: f64, gtheta: Vec<f64>, u_norm: f64, zn: Vec<f64> },
+    /// SSNSV/ESSNSV region: ball ‖w − center‖ ≤ radius intersected with
+    /// the variational-inequality half-space uᵀw ≤ d (`cone = (u, d)`;
+    /// `None` when the anchor is degenerate and the half-space vacuous).
+    ConeBall { cone: Option<(Vec<f64>, f64)>, center: Vec<f64>, radius: f64 },
+    /// Intersection of member regions: per-row lo = max, hi = min.
+    Intersect(Vec<DualRegion>),
+}
+
+/// Reusable per-shard buffers for rules that materialize x̄ᵢ per row.
+pub struct RowScratch {
+    xbar: Vec<f64>,
+    neg: Vec<f64>,
+}
+
+impl RowScratch {
+    pub fn new(dim: usize) -> RowScratch {
+        RowScratch { xbar: vec![0.0; dim], neg: vec![0.0; dim] }
+    }
+}
+
+impl DualRegion {
+    /// The tightest [lo, hi] interval this region implies for row `i`'s
+    /// score. `ybar` is passed so the cone∩ball case can skip the upper
+    /// extremization once the lower bound alone rejects the row — the
+    /// exact short-circuit the pre-refactor SSNSV loop performs.
+    pub fn row_bounds(
+        &self,
+        inst: &Instance,
+        i: usize,
+        ybar: f64,
+        scratch: &mut RowScratch,
+    ) -> (f64, f64) {
+        match self {
+            DualRegion::All => (f64::NEG_INFINITY, f64::INFINITY),
+            DualRegion::BallW { mid, rad, u, u_norm } => {
+                let p = inst.z.row(i).dot(u); // ⟨u, zᵢ⟩
+                let zn = inst.z_norms_sq[i].sqrt();
+                let slack = rad * u_norm * zn;
+                let score = mid * p;
+                (score - slack, score + slack)
+            }
+            DualRegion::BallTheta { mid, rad, gtheta, u_norm, zn } => {
+                let p = gtheta[i]; // gᵢᵀθ = ⟨u, zᵢ⟩
+                let slack = rad * u_norm * zn[i];
+                let score = mid * p;
+                (score - slack, score + slack)
+            }
+            DualRegion::ConeBall { cone, center, radius } => {
+                // x̄ᵢ = yᵢxᵢ = −zᵢ for (weighted) SVM. Dense rows overwrite
+                // every position directly; sparse rows reset then scatter.
+                match inst.z.row(i) {
+                    RowView::Dense(r) => {
+                        for (x, z) in scratch.xbar.iter_mut().zip(r) {
+                            *x = -z;
+                        }
+                    }
+                    sparse => {
+                        scratch.xbar.iter_mut().for_each(|x| *x = 0.0);
+                        for (j, z) in sparse.iter() {
+                            scratch.xbar[j] = -z;
+                        }
+                    }
+                }
+                let lower = match cone {
+                    Some((u, d)) => lemma20_min(&scratch.xbar, u, *d, center, *radius),
+                    None => ball_min(&scratch.xbar, center, *radius),
+                };
+                if lower > ybar {
+                    // the lower bound already rejects; the upper
+                    // extremization is never evaluated (and can't matter:
+                    // the decision logic tests lo first)
+                    return (lower, f64::INFINITY);
+                }
+                // max⟨w,x̄⟩ = −min⟨w,−x̄⟩
+                for (n, x) in scratch.neg.iter_mut().zip(&scratch.xbar) {
+                    *n = -x;
+                }
+                let upper = -match cone {
+                    Some((u, d)) => lemma20_min(&scratch.neg, u, *d, center, *radius),
+                    None => ball_min(&scratch.neg, center, *radius),
+                };
+                (lower, upper)
+            }
+            DualRegion::Intersect(members) => {
+                let mut lo = f64::NEG_INFINITY;
+                let mut hi = f64::INFINITY;
+                for m in members {
+                    let (ml, mh) = m.row_bounds(inst, i, ybar, scratch);
+                    lo = lo.max(ml);
+                    hi = hi.min(mh);
+                }
+                (lo, hi)
+            }
+        }
+    }
+}
+
+/// Shared decision core over an interval: lo > ȳᵢ fixes the row at the
+/// lower bound, hi < ȳᵢ at the upper — the exact comparison order of the
+/// pre-refactor `dvi::decide` (score ± slack) and SSNSV loops.
+#[inline]
+pub fn decide_bounds(lo: f64, hi: f64, ybar: f64) -> Decision {
+    if lo > ybar {
+        Decision::AtLo
+    } else if hi < ybar {
+        Decision::AtHi
+    } else {
+        Decision::Keep
+    }
+}
+
+/// Evaluate a region over one contiguous row range.
+fn scan_range(
+    inst: &Instance,
+    region: &DualRegion,
+    rows: std::ops::Range<usize>,
+    scratch: &mut RowScratch,
+) -> Vec<Decision> {
+    let mut out = Vec::with_capacity(rows.end - rows.start);
+    for i in rows {
+        let ybar = inst.ybar[i];
+        let (lo, hi) = region.row_bounds(inst, i, ybar, scratch);
+        out.push(decide_bounds(lo, hi, ybar));
+    }
+    out
+}
+
+/// The generic row sweep behind [`super::ScreeningRule::screen_rows`]:
+/// nnz-balanced contiguous shards on `std::thread::scope` workers
+/// (`threads`: 0 = auto, 1 = serial), merged in shard order. Per-row
+/// bounds are independent of sharding, so decisions are byte-identical
+/// for any thread count and either storage — the same contract
+/// [`super::dvi::dvi_scan_par`] keeps.
+pub fn screen_rows(inst: &Instance, region: &DualRegion, threads: usize) -> Vec<Decision> {
+    let l = inst.len();
+    let t = par::effective_threads(threads, l);
+    if t <= 1 {
+        let mut scratch = RowScratch::new(inst.dim());
+        return scan_range(inst, region, 0..l, &mut scratch);
+    }
+    let shards = par::run_sharded_ranges(inst.z.balanced_shards(t), |r| {
+        let mut scratch = RowScratch::new(inst.dim());
+        scan_range(inst, region, r, &mut scratch)
+    });
+    let mut out = Vec::with_capacity(l);
+    for mut s in shards {
+        out.append(&mut s);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decide_bounds_matches_interval_logic() {
+        assert_eq!(decide_bounds(1.5, 2.0, 1.0), Decision::AtLo);
+        assert_eq!(decide_bounds(-2.0, 0.5, 1.0), Decision::AtHi);
+        assert_eq!(decide_bounds(0.5, 1.5, 1.0), Decision::Keep);
+        // boundary: strict inequalities, ties keep
+        assert_eq!(decide_bounds(1.0, 1.0, 1.0), Decision::Keep);
+        assert_eq!(decide_bounds(f64::NEG_INFINITY, f64::INFINITY, 0.0), Decision::Keep);
+    }
+
+    #[test]
+    fn intersect_takes_tightest_bounds() {
+        use crate::data::synth;
+        use crate::problem::Model;
+        let ds = synth::toy_gaussian(3, 12, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let u = vec![0.3, -0.2];
+        let u_norm = crate::linalg::norm(&u);
+        let wide =
+            DualRegion::BallW { mid: 1.0, rad: 2.0, u: u.clone(), u_norm };
+        let tight = DualRegion::BallW { mid: 1.0, rad: 0.1, u, u_norm };
+        let both = DualRegion::Intersect(vec![wide.clone(), tight.clone()]);
+        let mut s = RowScratch::new(inst.dim());
+        for i in 0..inst.len() {
+            let y = inst.ybar[i];
+            let (wl, wh) = wide.row_bounds(&inst, i, y, &mut s);
+            let (tl, th) = tight.row_bounds(&inst, i, y, &mut s);
+            let (bl, bh) = both.row_bounds(&inst, i, y, &mut s);
+            assert_eq!(bl, wl.max(tl), "i={i}");
+            assert_eq!(bh, wh.min(th), "i={i}");
+        }
+    }
+
+    #[test]
+    fn sweep_is_thread_invariant() {
+        use crate::data::synth;
+        use crate::problem::Model;
+        // prime l so no thread count divides it evenly
+        let ds = synth::gaussian_classes(19, 101, 4, 1.0, 1.0, 0.5, 1.0);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let u: Vec<f64> = (0..inst.dim()).map(|j| (j as f64 * 0.7).sin()).collect();
+        let u_norm = crate::linalg::norm(&u);
+        let region = DualRegion::BallW { mid: 0.6, rad: 0.2, u, u_norm };
+        let want = screen_rows(&inst, &region, 1);
+        for threads in [2usize, 3, 4, 7, 0] {
+            assert_eq!(screen_rows(&inst, &region, threads), want, "threads={threads}");
+        }
+    }
+}

@@ -1,0 +1,413 @@
+//! The open screening-rule engine: a trait the path runner (and the
+//! coordinator's screen jobs) drive instead of matching on a closed
+//! enum, plus the rule-expression syntax (`"dvi+essnsv"`) every config
+//! surface parses.
+//!
+//! A rule splits into two halves:
+//!
+//! * [`ScreeningRule::prepare`] builds the [`DualRegion`] that provably
+//!   contains the dual optimum for the coming step (cheap, O(n) or one
+//!   matvec);
+//! * [`ScreeningRule::screen_rows`] sweeps the rows against that region
+//!   — by default the generic nnz-balanced sharded sweep in
+//!   [`super::region`], overridable so the w-form DVI rule keeps its
+//!   pluggable [`DviScanBackend`] (native serial / sharded / PJRT).
+//!
+//! The four pre-refactor rules are re-expressed as trait impls below and
+//! reproduce the enum-dispatch decisions bit for bit; composition
+//! ([`super::Composite`]) intersects member regions, which is safe
+//! because every member region contains the optimum.
+
+use super::dvi::{ball_params, Dvi};
+use super::region::{self, DualRegion};
+use super::{Decision, RuleKind};
+use crate::linalg;
+use crate::path::{DviScanBackend, NativeScan, ParScan};
+use crate::problem::{Instance, Model};
+
+/// Everything a rule may need at one path step C_prev → C_next. The
+/// runner owns the solved state; rules borrow it.
+#[derive(Clone, Copy, Debug)]
+pub struct StepContext<'a> {
+    pub c_prev: f64,
+    pub c_next: f64,
+    /// θ*(C_prev) — the most recent solved path point.
+    pub theta_prev: &'a [f64],
+    /// Zᵀθ*(C_prev) (the solver hands it over for free).
+    pub u_prev: &'a [f64],
+    /// w*(C_max) — present when the runner solved the far grid end
+    /// because some member rule [`ScreeningRule::requires_cmax`].
+    pub w_feasible: Option<&'a [f64]>,
+}
+
+/// One safe screening rule. Implementations must be *safe*: the region
+/// returned by [`Self::prepare`] must contain the dual optimum at
+/// `ctx.c_next`, so a non-`Keep` decision is guaranteed exact.
+pub trait ScreeningRule {
+    /// Display name (e.g. `"dvi"`, `"dvi+essnsv"` for composites).
+    fn name(&self) -> String;
+
+    /// Whether the rule needs w*(C_max) in the [`StepContext`] (the
+    /// SSNSV family's "Init." solve at the far grid end).
+    fn requires_cmax(&self) -> bool {
+        false
+    }
+
+    /// One-time per-instance precomputation (e.g. the θ-form Gram
+    /// matrix), charged to the run's init time.
+    fn init(&mut self, _inst: &Instance, _threads: usize) {}
+
+    /// Build the dual region for this step.
+    fn prepare(&self, inst: &Instance, ctx: &StepContext) -> DualRegion;
+
+    /// Sweep all rows against the region. The default is the generic
+    /// sharded bounds sweep; rules with a specialized kernel override it.
+    fn screen_rows(
+        &mut self,
+        inst: &Instance,
+        region: &DualRegion,
+        threads: usize,
+    ) -> Vec<Decision> {
+        region::screen_rows(inst, region, threads)
+    }
+}
+
+/// DVI_s, w-form (Cor. 9): Theorem-6 ball, O(l·n) streaming sweep. Keeps
+/// the pluggable scan backend — inside a composite only its *region* is
+/// used (the generic sweep evaluates the intersection), matching the
+/// pre-refactor behavior where PJRT only ever served the plain rule.
+pub struct DviWRule {
+    backend: Box<dyn DviScanBackend>,
+}
+
+impl DviWRule {
+    /// Same backend policy as the path runner: 1 thread keeps the serial
+    /// scan, anything else installs the sharded one (0 = auto).
+    pub fn with_threads(threads: usize) -> DviWRule {
+        let backend: Box<dyn DviScanBackend> = if threads == 1 {
+            Box::new(NativeScan)
+        } else {
+            Box::new(ParScan::new(threads))
+        };
+        DviWRule { backend }
+    }
+
+    /// Swap the scan backend (e.g. the PJRT AOT executable).
+    pub fn with_backend(backend: Box<dyn DviScanBackend>) -> DviWRule {
+        DviWRule { backend }
+    }
+}
+
+impl ScreeningRule for DviWRule {
+    fn name(&self) -> String {
+        RuleKind::DviW.name().to_string()
+    }
+
+    fn prepare(&self, _inst: &Instance, ctx: &StepContext) -> DualRegion {
+        let (mid, rad) = ball_params(ctx.c_prev, ctx.c_next);
+        DualRegion::BallW {
+            mid,
+            rad,
+            u: ctx.u_prev.to_vec(),
+            u_norm: linalg::norm(ctx.u_prev),
+        }
+    }
+
+    fn screen_rows(
+        &mut self,
+        inst: &Instance,
+        region: &DualRegion,
+        threads: usize,
+    ) -> Vec<Decision> {
+        match region {
+            // the backend recomputes ‖u‖ itself — same value, and the
+            // kernel stays the single source the PJRT artifact mirrors
+            DualRegion::BallW { mid, rad, u, .. } => self.backend.scan(inst, *mid, *rad, u),
+            other => region::screen_rows(inst, other, threads),
+        }
+    }
+}
+
+/// DVI_s*, θ-form (Cor. 8): one-time Gram build in [`Self::init`], then
+/// a matvec per step.
+pub struct DviThetaRule {
+    dvi: Option<Dvi>,
+    /// ‖zᵢ‖ from the Gram diagonal — the exact `g.get(i,i).max(0).sqrt()`
+    /// values the enum path evaluated per row.
+    zn: Vec<f64>,
+}
+
+impl DviThetaRule {
+    pub fn new() -> DviThetaRule {
+        DviThetaRule { dvi: None, zn: Vec::new() }
+    }
+}
+
+impl Default for DviThetaRule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScreeningRule for DviThetaRule {
+    fn name(&self) -> String {
+        RuleKind::DviTheta.name().to_string()
+    }
+
+    fn init(&mut self, inst: &Instance, threads: usize) {
+        let dvi = Dvi::new_theta_threads(inst, threads);
+        let g = dvi.gram_matrix().expect("θ-form always builds the Gram matrix");
+        self.zn = (0..inst.len()).map(|i| g.get(i, i).max(0.0).sqrt()).collect();
+        self.dvi = Some(dvi);
+    }
+
+    fn prepare(&self, inst: &Instance, ctx: &StepContext) -> DualRegion {
+        let g = self
+            .dvi
+            .as_ref()
+            .and_then(|d| d.gram_matrix())
+            .expect("DviThetaRule::prepare before init");
+        assert_eq!(g.rows(), inst.len());
+        let (mid, rad) = ball_params(ctx.c_prev, ctx.c_next);
+        // ‖u‖² = θᵀGθ via one matvec
+        let mut gtheta = vec![0.0; inst.len()];
+        g.matvec(ctx.theta_prev, &mut gtheta);
+        let u_norm = linalg::dot(&gtheta, ctx.theta_prev).max(0.0).sqrt();
+        DualRegion::BallTheta { mid, rad, gtheta, u_norm, zn: self.zn.clone() }
+    }
+}
+
+/// SSNSV (Ogawa et al. 2013) / ESSNSV (§5.2): the cone∩ball region over
+/// w-space, extremized row-wise by Lemma 20.
+pub struct SsnsvRule {
+    pub enhanced: bool,
+}
+
+impl SsnsvRule {
+    pub fn new(enhanced: bool) -> SsnsvRule {
+        SsnsvRule { enhanced }
+    }
+}
+
+impl ScreeningRule for SsnsvRule {
+    fn name(&self) -> String {
+        if self.enhanced { RuleKind::Essnsv.name() } else { RuleKind::Ssnsv.name() }
+            .to_string()
+    }
+
+    fn requires_cmax(&self) -> bool {
+        true
+    }
+
+    fn prepare(&self, inst: &Instance, ctx: &StepContext) -> DualRegion {
+        assert!(
+            inst.model != Model::Lad,
+            "SSNSV/ESSNSV are derived for SVM only"
+        );
+        let w_a = inst.w_from_theta(ctx.c_prev, ctx.theta_prev);
+        let w_hat = ctx
+            .w_feasible
+            .expect("SSNSV family needs w*(C_max) in the step context");
+        assert_eq!(w_a.len(), inst.dim());
+        assert_eq!(w_hat.len(), inst.dim());
+        let wa_norm_sq = linalg::norm_sq(&w_a);
+        let what_norm = linalg::norm(w_hat);
+        // Degenerate anchor (w_a = 0): the half-space is vacuous; fall
+        // back to ball-only bounds.
+        let cone = if wa_norm_sq > 0.0 {
+            Some((w_a.iter().map(|v| -v).collect::<Vec<f64>>(), -wa_norm_sq))
+        } else {
+            None
+        };
+        let (center, radius): (Vec<f64>, f64) = if self.enhanced {
+            (w_hat.iter().map(|v| 0.5 * v).collect(), 0.5 * what_norm)
+        } else {
+            (vec![0.0; inst.dim()], what_norm)
+        };
+        DualRegion::ConeBall { cone, center, radius }
+    }
+}
+
+/// No screening: the region is all of dual space, every row keeps.
+pub struct NoneRule;
+
+impl ScreeningRule for NoneRule {
+    fn name(&self) -> String {
+        RuleKind::None.name().to_string()
+    }
+
+    fn prepare(&self, _inst: &Instance, _ctx: &StepContext) -> DualRegion {
+        DualRegion::All
+    }
+
+    fn screen_rows(
+        &mut self,
+        inst: &Instance,
+        _region: &DualRegion,
+        _threads: usize,
+    ) -> Vec<Decision> {
+        vec![Decision::Keep; inst.len()]
+    }
+}
+
+/// The accepted atom names, quoted by every rule-parse error and the CLI
+/// usage text.
+pub const VALID_RULES: &str = "dvi, dvi-theta, ssnsv, essnsv, none";
+
+/// A parsed rule expression: one atom (`"dvi"`) or a `+`-composition
+/// (`"dvi+essnsv"`) whose regions are intersected per step.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RuleExpr {
+    atoms: Vec<RuleKind>,
+}
+
+impl RuleExpr {
+    /// Parse a rule expression. Errors enumerate the accepted names and
+    /// the composition syntax (the service and CLI surface them as-is).
+    pub fn parse(s: &str) -> Result<RuleExpr, String> {
+        let bad = |msg: String| {
+            Err(format!(
+                "{msg} — valid rules: {VALID_RULES}; compose with `+` (e.g. `dvi+essnsv`)"
+            ))
+        };
+        let s = s.trim();
+        if s.is_empty() {
+            return bad("empty rule expression".to_string());
+        }
+        let mut atoms = Vec::new();
+        for tok in s.split('+') {
+            let tok = tok.trim();
+            let Some(kind) = RuleKind::parse(tok) else {
+                return bad(format!("unknown rule `{tok}`"));
+            };
+            if atoms.contains(&kind) {
+                return bad(format!("duplicate rule `{tok}` in composition"));
+            }
+            atoms.push(kind);
+        }
+        if atoms.len() > 1 && atoms.contains(&RuleKind::None) {
+            return bad("`none` cannot be composed".to_string());
+        }
+        Ok(RuleExpr { atoms })
+    }
+
+    /// Wrap a single pre-parsed atom (the legacy enum surface).
+    pub fn from_kind(kind: RuleKind) -> RuleExpr {
+        RuleExpr { atoms: vec![kind] }
+    }
+
+    /// Canonical display/wire name: atom names joined with `+`.
+    pub fn name(&self) -> String {
+        self.atoms.iter().map(|k| k.name()).collect::<Vec<_>>().join("+")
+    }
+
+    /// The member atoms, in expression order.
+    pub fn atoms(&self) -> &[RuleKind] {
+        &self.atoms
+    }
+
+    /// `Some(kind)` iff the expression is a single atom.
+    pub fn single(&self) -> Option<RuleKind> {
+        match self.atoms.as_slice() {
+            [k] => Some(*k),
+            _ => None,
+        }
+    }
+
+    /// The no-screening arm?
+    pub fn is_none(&self) -> bool {
+        self.single() == Some(RuleKind::None)
+    }
+
+    /// Any member needing the C_max init solve (SSNSV family)?
+    pub fn requires_cmax(&self) -> bool {
+        self.atoms.iter().any(|k| matches!(k, RuleKind::Ssnsv | RuleKind::Essnsv))
+    }
+
+    /// Any member derived for SVM only?
+    pub fn svm_only(&self) -> bool {
+        self.requires_cmax()
+    }
+
+    /// Instantiate the engine: a single atom's impl, or a
+    /// [`super::Composite`] intersecting the members. `threads` picks
+    /// the w-form scan backend (the same policy the path runner uses).
+    pub fn build(&self, threads: usize) -> Box<dyn ScreeningRule> {
+        if let [k] = self.atoms.as_slice() {
+            return build_atom(*k, threads);
+        }
+        Box::new(super::Composite::new(
+            self.atoms.iter().map(|&k| build_atom(k, threads)).collect(),
+        ))
+    }
+}
+
+fn build_atom(kind: RuleKind, threads: usize) -> Box<dyn ScreeningRule> {
+    match kind {
+        RuleKind::DviW => Box::new(DviWRule::with_threads(threads)),
+        RuleKind::DviTheta => Box::new(DviThetaRule::new()),
+        RuleKind::Ssnsv => Box::new(SsnsvRule::new(false)),
+        RuleKind::Essnsv => Box::new(SsnsvRule::new(true)),
+        RuleKind::None => Box::new(NoneRule),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expr_parses_atoms_and_compositions() {
+        for (s, n) in [
+            ("dvi", "dvi"),
+            ("dvi-theta", "dvi-theta"),
+            ("none", "none"),
+            ("dvi+ssnsv", "dvi+ssnsv"),
+            (" dvi + essnsv ", "dvi+essnsv"),
+            ("dvi+dvi-theta+essnsv", "dvi+dvi-theta+essnsv"),
+        ] {
+            let e = RuleExpr::parse(s).unwrap_or_else(|err| panic!("{s}: {err}"));
+            assert_eq!(e.name(), n);
+        }
+        assert_eq!(RuleExpr::parse("dvi").unwrap().single(), Some(RuleKind::DviW));
+        assert_eq!(RuleExpr::parse("dvi+ssnsv").unwrap().single(), None);
+        assert!(RuleExpr::parse("none").unwrap().is_none());
+        assert!(RuleExpr::parse("dvi+ssnsv").unwrap().requires_cmax());
+        assert!(!RuleExpr::parse("dvi+dvi-theta").unwrap().requires_cmax());
+    }
+
+    #[test]
+    fn expr_errors_are_actionable() {
+        for bad in ["nope", "", "dvi+", "dvi+dvi", "dvi+none", "none+ssnsv"] {
+            let err = RuleExpr::parse(bad).unwrap_err();
+            assert!(err.contains("valid rules: dvi, dvi-theta, ssnsv, essnsv, none"), "{bad}: {err}");
+            assert!(err.contains("compose with `+`"), "{bad}: {err}");
+        }
+        assert!(RuleExpr::parse("bogus").unwrap_err().contains("unknown rule `bogus`"));
+        assert!(RuleExpr::parse("dvi+dvi").unwrap_err().contains("duplicate rule"));
+        assert!(RuleExpr::parse("dvi+none").unwrap_err().contains("`none` cannot be composed"));
+    }
+
+    #[test]
+    fn expr_roundtrips_rulekind_names() {
+        for k in [
+            RuleKind::DviW,
+            RuleKind::DviTheta,
+            RuleKind::Ssnsv,
+            RuleKind::Essnsv,
+            RuleKind::None,
+        ] {
+            let e = RuleExpr::from_kind(k);
+            assert_eq!(RuleExpr::parse(&e.name()).unwrap(), e);
+            assert_eq!(e.single(), Some(k));
+        }
+    }
+
+    #[test]
+    fn build_names_match_expressions() {
+        for s in ["dvi", "dvi-theta", "ssnsv", "essnsv", "none", "dvi+ssnsv", "dvi+essnsv"] {
+            let e = RuleExpr::parse(s).unwrap();
+            assert_eq!(e.build(1).name(), e.name(), "{s}");
+        }
+    }
+}

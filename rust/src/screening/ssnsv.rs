@@ -133,7 +133,7 @@ struct Cone {
 }
 
 /// min ⟨v, w⟩ over ‖w − o‖ ≤ r (no half-space): vᵀo − r‖v‖.
-fn ball_min(v: &[f64], o: &[f64], r: f64) -> f64 {
+pub(crate) fn ball_min(v: &[f64], o: &[f64], r: f64) -> f64 {
     linalg::dot(v, o) - r * linalg::norm(v)
 }
 

@@ -1,0 +1,186 @@
+//! Acceptance gate for the composable ScreeningRule engine.
+//!
+//! Three contracts, locked at the decision level:
+//!
+//! 1. **Bit-identity with the enum-dispatch path** — every trait rule
+//!    (`dvi`, `dvi-theta`, `ssnsv`, `essnsv` expressed through
+//!    [`RuleExpr::build`]) makes byte-for-byte the decisions of the
+//!    pre-refactor rule structs ([`Dvi`], [`Ssnsv`]), for svm/wsvm/lad ×
+//!    dense/CSR × {1, 2, 4} scan threads.
+//! 2. **Composed safety** — every row a composed rule rejects is
+//!    confirmed non-support against an exactly solved KKT point at the
+//!    target C (AtLo ⇒ the paper's R set, AtHi ⇒ L).
+//! 3. **Composed dominance** — on the SAME solved step context, the
+//!    composite rejects every row any member rejects (intersection of
+//!    member regions keeps the tightest per-row bounds).
+
+use dvi_screen::config::SolverConfig;
+use dvi_screen::data::{synth, Dataset};
+use dvi_screen::linalg::Storage;
+use dvi_screen::problem::{Instance, Model};
+use dvi_screen::screening::{
+    Decision, Dvi, RuleExpr, ScreenReport, ScreeningRule, Ssnsv, SsnsvContext, StepContext,
+};
+use dvi_screen::solver::CdSolver;
+use dvi_screen::validation::check_safety;
+
+fn solver_cfg() -> SolverConfig {
+    SolverConfig { tol: 1e-9, max_outer: 100_000, ..Default::default() }
+}
+
+fn solve(inst: &Instance, c: f64) -> dvi_screen::solver::SolveResult {
+    CdSolver::new(solver_cfg()).solve(inst, c, inst.cold_start())
+}
+
+/// Everything one screening step needs, solved once per (model, storage).
+struct Anchored {
+    inst: Instance,
+    c_prev: f64,
+    c_next: f64,
+    theta: Vec<f64>,
+    u: Vec<f64>,
+    w_feasible: Vec<f64>,
+}
+
+impl Anchored {
+    fn new(model: Model, ds: &Dataset, c_prev: f64, c_next: f64, c_max: f64) -> Anchored {
+        let inst = Instance::from_dataset(model, ds);
+        let r = solve(&inst, c_prev);
+        // u recomputed from θ exactly, so both the legacy structs and the
+        // engine consume identical floats
+        let u = inst.u_from_theta(&r.theta);
+        let w_feasible = {
+            let rf = solve(&inst, c_max);
+            inst.w_from_theta(c_max, &rf.theta)
+        };
+        Anchored { inst, c_prev, c_next, theta: r.theta, u, w_feasible }
+    }
+
+    fn ctx(&self) -> StepContext<'_> {
+        StepContext {
+            c_prev: self.c_prev,
+            c_next: self.c_next,
+            theta_prev: &self.theta,
+            u_prev: &self.u,
+            w_feasible: Some(&self.w_feasible),
+        }
+    }
+
+    /// Run a rule expression through the trait engine.
+    fn screen_expr(&self, expr: &str, threads: usize) -> Vec<Decision> {
+        let mut engine = RuleExpr::parse(expr).expect("valid expression").build(threads);
+        engine.init(&self.inst, threads);
+        let region = engine.prepare(&self.inst, &self.ctx());
+        engine.screen_rows(&self.inst, &region, threads)
+    }
+
+    /// The pre-refactor enum-dispatch decisions for one atom.
+    fn screen_legacy(&self, atom: &str) -> Vec<Decision> {
+        match atom {
+            "dvi" => {
+                Dvi::new_w().screen(&self.inst, self.c_prev, self.c_next, &self.theta, &self.u)
+            }
+            "dvi-theta" => Dvi::new_theta(&self.inst).screen(
+                &self.inst,
+                self.c_prev,
+                self.c_next,
+                &self.theta,
+                &self.u,
+            ),
+            "ssnsv" | "essnsv" => {
+                let w_anchor = self.inst.w_from_theta(self.c_prev, &self.theta);
+                let ctx = SsnsvContext { w_anchor: &w_anchor, w_feasible: &self.w_feasible };
+                Ssnsv::new(atom == "essnsv").screen(&self.inst, &ctx)
+            }
+            other => panic!("no legacy dispatch for `{other}`"),
+        }
+        .decisions
+    }
+}
+
+fn dense_and_csr(model: Model, seed: u64) -> Vec<Dataset> {
+    let sparse = match model {
+        Model::Lad => synth::sparse_regression(seed, 140, 30, 0.15, 0.2),
+        _ => synth::sparse_classes(seed, 160, 40, 0.12),
+    };
+    assert!(sparse.x.is_sparse());
+    let dense = sparse.clone().into_storage(Storage::Dense);
+    vec![dense, sparse]
+}
+
+/// Contract 1: trait rules reproduce the enum path bit-for-bit across
+/// models, storages, and scan-thread counts.
+#[test]
+fn trait_rules_match_enum_rules_bitwise() {
+    for (model, seed) in [(Model::Svm, 11u64), (Model::WeightedSvm, 22), (Model::Lad, 33)] {
+        let atoms: &[&str] = if model == Model::Lad {
+            &["dvi", "dvi-theta"] // SSNSV family is SVM-only
+        } else {
+            &["dvi", "dvi-theta", "ssnsv", "essnsv"]
+        };
+        for ds in dense_and_csr(model, seed) {
+            let a = Anchored::new(model, &ds, 0.3, 0.6, 2.0);
+            for atom in atoms {
+                let legacy = a.screen_legacy(atom);
+                for threads in [1usize, 2, 4] {
+                    let got = a.screen_expr(atom, threads);
+                    assert_eq!(
+                        got, legacy,
+                        "{atom} diverged from the enum path ({model:?}, {}, t={threads})",
+                        ds.x.storage_name(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Contract 2: rows rejected by composed rules are non-support at the
+/// exactly solved target C (same oracle the validation layer ships:
+/// AtLo ⇒ KKT class R, AtHi ⇒ L on a tol=1e-9 solve).
+#[test]
+fn composed_rejections_are_non_support_at_the_target() {
+    for ds in dense_and_csr(Model::Svm, 44) {
+        let a = Anchored::new(Model::Svm, &ds, 0.3, 0.6, 2.0);
+        for expr in ["dvi+essnsv", "dvi-theta+ssnsv", "dvi+dvi-theta+essnsv"] {
+            let rep = ScreenReport::from_decisions(a.screen_expr(expr, 2));
+            let safety = check_safety(&a.inst, a.c_next, &rep, &solver_cfg(), 1e-7);
+            assert!(safety.n_screened > 0, "{expr}: vacuous test, nothing screened");
+            assert!(
+                safety.violations.is_empty(),
+                "{expr}: unsafe rejections {:?}",
+                safety.violations
+            );
+        }
+    }
+}
+
+/// Contract 3: on one shared context the composite rejects at least the
+/// union of its members' rejections, and is thread-invariant.
+#[test]
+fn composite_dominates_every_member_on_shared_context() {
+    for ds in dense_and_csr(Model::Svm, 55) {
+        let a = Anchored::new(Model::Svm, &ds, 0.25, 0.5, 2.0);
+        let members = ["dvi", "essnsv"];
+        let composite = a.screen_expr("dvi+essnsv", 1);
+        for threads in [2usize, 4] {
+            assert_eq!(
+                composite,
+                a.screen_expr("dvi+essnsv", threads),
+                "composite not thread-invariant (t={threads})"
+            );
+        }
+        for m in members {
+            let alone = a.screen_expr(m, 1);
+            for i in 0..alone.len() {
+                if alone[i] != Decision::Keep {
+                    assert_ne!(
+                        composite[i],
+                        Decision::Keep,
+                        "row {i}: member `{m}` rejected but the composite kept it"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,80 @@
+#!/usr/bin/env bash
+# Gauntlet smoke test: drive a tiny rule grid through the built `dvi
+# gauntlet` binary and hold BENCH_screening.json to its contract:
+#
+#   1. determinism — with --no-timings the benchmark is a pure function
+#      of (datasets, rules, grid): two runs must emit identical bytes;
+#   2. schema      — schema_version 1 with the documented dataset/rule
+#      layout, validated structurally when python3 is available;
+#   3. dominance   — every composed rule's per-step rejection rate is
+#      >= the best of its members on every grid point (the composite
+#      region is the members' intersection, so this is exact, not
+#      statistical), and the emitter agrees via dominates_members;
+#   4. timings     — a timed run adds the wall-clock fields without
+#      perturbing the deterministic core.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+WORK=$(mktemp -d)
+trap 'rm -rf "$WORK"' EXIT
+
+cargo build --release --quiet
+BIN=target/release/dvi
+
+GAUNTLET_ARGS=(gauntlet --datasets toy1,toy2 --rules dvi,essnsv,dvi+essnsv
+               --scale 0.02 --points 3 --tol 1e-4 --threads 2)
+
+echo "== determinism: --no-timings double run must emit identical bytes"
+"$BIN" "${GAUNTLET_ARGS[@]}" --no-timings --out "$WORK/run1" > /dev/null
+"$BIN" "${GAUNTLET_ARGS[@]}" --no-timings --out "$WORK/run2" > /dev/null
+test -s "$WORK/run1/BENCH_screening.json" || {
+  echo "BENCH_screening.json was not written"; exit 1; }
+diff "$WORK/run1/BENCH_screening.json" "$WORK/run2/BENCH_screening.json"
+
+echo "== timed run still produces the benchmark (plus wall-clock fields)"
+"$BIN" "${GAUNTLET_ARGS[@]}" --out "$WORK/timed" > /dev/null
+grep -q '"scan_secs"' "$WORK/timed/BENCH_screening.json" || {
+  echo "timed run is missing scan_secs"; exit 1; }
+
+echo "== schema + dominance"
+if command -v python3 > /dev/null; then
+  python3 - "$WORK/run1/BENCH_screening.json" "$WORK/timed/BENCH_screening.json" <<'EOF'
+import json, sys
+
+for path, timed in [(sys.argv[1], False), (sys.argv[2], True)]:
+    b = json.load(open(path))
+    assert b["schema_version"] == 1, b["schema_version"]
+    assert b["kind"] == "dvi-gauntlet", b["kind"]
+    assert b["model"] == "svm"
+    assert b["rules"] == ["dvi", "essnsv", "dvi+essnsv"]
+    assert len(b["datasets"]) == 2, [d["dataset"] for d in b["datasets"]]
+    for d in b["datasets"]:
+        for key in ("dataset", "l", "n", "grid", "rules"):
+            assert key in d, (d["dataset"], key)
+        assert len(d["grid"]) == 3
+        by_name = {r["rule"]: r for r in d["rules"]}
+        assert set(by_name) == {"dvi", "essnsv", "dvi+essnsv"}
+        for r in d["rules"]:
+            steps = r["per_step_rejection"]
+            assert len(steps) == len(d["grid"]) - 1, (r["rule"], len(steps))
+            assert all(0.0 <= s <= 1.0 for s in steps), (r["rule"], steps)
+            has_timing = "scan_secs" in r
+            assert has_timing == timed, (path, r["rule"], sorted(r))
+        both = by_name["dvi+essnsv"]
+        assert both["dominates_members"] is True, both
+        for k, c in enumerate(both["per_step_rejection"]):
+            best = max(by_name["dvi"]["per_step_rejection"][k],
+                       by_name["essnsv"]["per_step_rejection"][k])
+            assert c >= best, (d["dataset"], k, c, best)
+    print(f"   {path.split('/')[-2]}: schema + dominance OK")
+EOF
+else
+  echo "   (python3 unavailable; grep-level checks only)"
+  grep -q '"schema_version":1' "$WORK/run1/BENCH_screening.json"
+  grep -q '"dominates_members":true' "$WORK/run1/BENCH_screening.json"
+  if grep -q 'secs' "$WORK/run1/BENCH_screening.json"; then
+    echo "--no-timings output leaked a wall-clock field"; exit 1
+  fi
+fi
+
+echo "gauntlet smoke: OK"
