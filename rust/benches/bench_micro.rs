@@ -9,6 +9,12 @@
 //! * CD sweep scaling: the block-synchronous parallel solver at 1/2/4/8
 //!   threads over l ∈ {10k, 100k}, dense and CSR, against the full
 //!   problem and against a DVI-screened (reduced) free set;
+//! * cd-mode: sync vs async wall-clock to convergence at the same tol,
+//!   1/2/4/8 threads × l ∈ {10k, 100k} × dense/CSR — written (with the
+//!   sweep-scaling and pool-reuse series) to BENCH_solver.json
+//!   (`--out DIR`, default `.`), the CI bench-smoke gate's input;
+//! * pool reuse: the persistent pinned worker pool vs per-call scoped
+//!   spawning, with spawn/dispatch/migration counters;
 //! * one dual-CD sweep (gradient-eval rate);
 //! * Lemma 20 extremization (SSNSV/ESSNSV inner loop);
 //! * w-form vs θ-form DVI ablation (the Gram-matrix crossover).
@@ -19,7 +25,7 @@
 mod common;
 
 use common::bench;
-use dvi_screen::config::SolverConfig;
+use dvi_screen::config::{Json, SolverConfig};
 use dvi_screen::data::synth;
 use dvi_screen::problem::{Instance, Model};
 use dvi_screen::screening::dvi::{dvi_scan, dvi_scan_par};
@@ -27,8 +33,17 @@ use dvi_screen::screening::ssnsv::lemma20_min;
 use dvi_screen::screening::Dvi;
 use dvi_screen::solver::CdSolver;
 
+/// One row of BENCH_solver.json's `series` array.
+struct SolverSeriesEntry {
+    name: String,
+    stats: common::BenchStats,
+    extra: Vec<(&'static str, Json)>,
+}
+
 fn main() {
     println!("# bench_micro\n");
+    // accumulates the solver-focused series for BENCH_solver.json
+    let mut solver_series: Vec<SolverSeriesEntry> = Vec::new();
 
     // ---- native DVI scan ------------------------------------------------
     for (l, n) in [(10_000usize, 22usize), (40_000, 54)] {
@@ -293,18 +308,239 @@ fn main() {
                             },
                         );
                         let rate = evals as f64 / s.min_s / 1e6;
-                        if threads == 1 {
+                        let speedup = if threads == 1 {
                             single = s.min_s;
                             println!("    -> {rate:.1} M grad-evals/s ({} free)", free.len());
+                            1.0
                         } else {
-                            println!(
-                                "    -> {rate:.1} M grad-evals/s, {:.2}x vs 1 thread",
-                                single / s.min_s
-                            );
-                        }
+                            let x = single / s.min_s;
+                            println!("    -> {rate:.1} M grad-evals/s, {x:.2}x vs 1 thread");
+                            x
+                        };
+                        solver_series.push(SolverSeriesEntry {
+                            name: s.name.clone(),
+                            stats: s,
+                            extra: vec![
+                                ("series", Json::Str("cd_sweep".into())),
+                                ("mode", Json::Str("sync".into())),
+                                ("storage", Json::Str(tag.into())),
+                                ("l", Json::Int(l as i64)),
+                                ("arm", Json::Str(arm.to_string())),
+                                ("threads", Json::Int(threads as i64)),
+                                ("grad_evals", Json::Int(evals as i64)),
+                                ("speedup_vs_serial", Json::Float(speedup)),
+                            ],
+                        });
                     }
                 }
             }
+        }
+    }
+
+    // ---- cd-mode: sync vs async wall-clock to convergence ------------------
+    // The acceptance series for the wild arm: from one shared warm start,
+    // time-to-KKT-valid at the same tol for both modes across thread
+    // counts. Unlike the fixed-work series above this measures what the
+    // async arm is actually for — wall-clock to a converged point — since
+    // its wild rounds and confirmation sweeps make per-sweep work
+    // incomparable with the block-synchronous arm.
+    {
+        use dvi_screen::config::CdMode;
+        use dvi_screen::linalg::Storage;
+        println!("\n# cd mode: sync vs async, wall-clock to convergence at tol 1e-6");
+        let max_l = common::arg_usize("max-l", 1_000_000);
+        for l in [10_000usize, 100_000] {
+            if l > max_l {
+                println!("cd_mode_{l} skipped (--max-l {max_l})");
+                continue;
+            }
+            for (storage, n, density, tag) in
+                [(Storage::Dense, 22usize, 1.0f64, "dense"), (Storage::Csr, 200, 0.05, "csr")]
+            {
+                let ds = if storage == Storage::Csr {
+                    synth::sparse_classes(0xA51C, l, n, density)
+                } else {
+                    synth::gaussian_classes(0xA51C, l, n, 1.0, 1.0, 0.5, 1.0)
+                };
+                let inst = Instance::from_dataset(Model::Svm, &ds);
+                // shared warm start so every cell solves the same problem
+                let anchor = CdSolver::new(SolverConfig {
+                    tol: 1e-3,
+                    max_outer: 40,
+                    ..Default::default()
+                })
+                .solve(&inst, 0.5, inst.cold_start());
+                let u0 = inst.u_from_theta(&anchor.theta);
+                let free: Vec<usize> = (0..inst.len()).collect();
+                let mut serial = f64::NAN;
+                for mode in [CdMode::Sync, CdMode::Async] {
+                    for threads in [1usize, 2, 4, 8] {
+                        if mode == CdMode::Async && threads == 1 {
+                            continue; // identical to sync/1 by contract
+                        }
+                        let solver = CdSolver::new(SolverConfig {
+                            tol: 1e-6,
+                            max_outer: 200_000,
+                            solver_threads: Some(threads),
+                            cd_mode: mode,
+                            ..Default::default()
+                        });
+                        let mut converged = true;
+                        let s = bench(
+                            &format!("cd_mode_{}_{tag}_{l}_t{threads}", mode.name()),
+                            3,
+                            0.3,
+                            || {
+                                let r = solver.solve_free_with_u(
+                                    &inst,
+                                    0.55,
+                                    anchor.theta.clone(),
+                                    &free,
+                                    u0.clone(),
+                                );
+                                converged &= r.stats.converged;
+                                r.stats.coord_updates
+                            },
+                        );
+                        assert!(converged, "cd_mode series must converge to be comparable");
+                        let speedup = if mode == CdMode::Sync && threads == 1 {
+                            serial = s.min_s;
+                            1.0
+                        } else {
+                            let x = serial / s.min_s;
+                            println!("    -> {x:.2}x vs sync serial");
+                            x
+                        };
+                        solver_series.push(SolverSeriesEntry {
+                            name: s.name.clone(),
+                            stats: s,
+                            extra: vec![
+                                ("series", Json::Str("cd_mode".into())),
+                                ("mode", Json::Str(mode.name().into())),
+                                ("storage", Json::Str(tag.into())),
+                                ("l", Json::Int(l as i64)),
+                                ("threads", Json::Int(threads as i64)),
+                                ("speedup_vs_serial", Json::Float(speedup)),
+                            ],
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- pool reuse: persistent pinned workers vs per-call spawning --------
+    // The tentpole's accounting: a sharded scan through the routed
+    // entries costs channel sends into long-lived workers (pool spawns
+    // stay flat after warmup — ≤ 1 spawn per solve amortized, in fact 0
+    // here), while the scoped fallback pays t-1 OS thread spawns on
+    // EVERY call. Shard→worker affinity is pinned by construction
+    // (shard k → worker k-1), measured here as the number of distinct
+    // worker threads observed per shard slot across repeat calls.
+    {
+        use dvi_screen::linalg::par;
+        println!("\n# pool reuse: routed (persistent pool) vs scoped (spawn per call)");
+        let l = 200_000usize.min(common::arg_usize("max-l", 1_000_000));
+        let n = 22usize;
+        let shards = 4usize;
+        let ds = synth::gaussian_classes(0x9001, l, n, 1.0, 1.0, 0.5, 1.0);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let u: Vec<f64> = (0..n).map(|i| (i as f64 * 0.17).sin()).collect();
+
+        let before = par::pool_stats();
+        let pooled = bench(&format!("pool_scan_routed_{l}x{n}_t{shards}"), 8, 0.4, || {
+            dvi_scan_par(&inst, 1.05, 0.05, &u, shards)
+        });
+        let after = par::pool_stats();
+        let spawned = after.workers_spawned - before.workers_spawned;
+        let dispatched = after.jobs_dispatched - before.jobs_dispatched;
+        println!(
+            "    -> {spawned} workers spawned over {} calls ({dispatched} jobs dispatched); \
+             pool reuses its threads",
+            pooled.iters
+        );
+        assert!(
+            (spawned as usize) <= shards,
+            "pool must spawn at most once per worker slot, ever"
+        );
+
+        let scoped_before = par::pool_stats().scoped_spawns;
+        let scoped = bench(&format!("pool_scan_scoped_{l}x{n}_t{shards}"), 8, 0.4, || {
+            let ranges = inst.balanced_shards(shards);
+            par::run_sharded_ranges_scoped(ranges, |r| {
+                let mut acc = 0usize;
+                for i in r {
+                    acc += (inst.z.row(i).dot(&u) > 0.0) as usize;
+                }
+                acc
+            })
+        });
+        let scoped_spawns = par::pool_stats().scoped_spawns - scoped_before;
+        println!(
+            "    -> scoped fallback spawned {scoped_spawns} OS threads over {} calls \
+             ({:.1} per call)",
+            scoped.iters,
+            scoped_spawns as f64 / scoped.iters.max(1) as f64
+        );
+
+        // shard→worker affinity: each shard slot must land on one stable
+        // worker thread across repeated dispatches (shard 0 runs inline)
+        let mut migrations = 0usize;
+        {
+            use std::sync::Mutex;
+            let seen: Vec<Mutex<Option<std::thread::ThreadId>>> =
+                (0..shards).map(|_| Mutex::new(None)).collect();
+            let bounds = inst.balanced_shards(shards);
+            for _ in 0..16 {
+                let seen_ro = &seen;
+                let bounds_c = bounds.clone();
+                par::run_sharded_ranges(bounds_c, |r| {
+                    let slot = bounds.iter().position(|b| b.start == r.start).unwrap();
+                    let me = std::thread::current().id();
+                    let mut prev = seen_ro[slot].lock().unwrap();
+                    match *prev {
+                        Some(p) if p != me => {
+                            *prev = Some(me);
+                            1usize // migration observed
+                        }
+                        _ => {
+                            *prev = Some(me);
+                            0
+                        }
+                    }
+                })
+                .into_iter()
+                .for_each(|m| migrations += m);
+            }
+        }
+        println!("    -> {migrations} shard->worker migrations across 16 dispatches");
+        for (entry, extras) in [
+            (
+                (&pooled, "routed"),
+                vec![
+                    ("workers_spawned", Json::Int(spawned as i64)),
+                    ("jobs_dispatched", Json::Int(dispatched as i64)),
+                    ("shard_migrations", Json::Int(migrations as i64)),
+                ],
+            ),
+            (
+                (&scoped, "scoped"),
+                vec![("os_threads_spawned", Json::Int(scoped_spawns as i64))],
+            ),
+        ] {
+            let (stats, kind) = entry;
+            let mut extra = vec![
+                ("series", Json::Str("pool_reuse".into())),
+                ("kind", Json::Str(kind.into())),
+                ("l", Json::Int(l as i64)),
+                ("threads", Json::Int(shards as i64)),
+            ];
+            extra.extend(extras);
+            solver_series.push(SolverSeriesEntry {
+                name: stats.name.clone(),
+                stats: (*stats).clone(),
+                extra,
+            });
         }
     }
 
@@ -385,5 +621,38 @@ fn main() {
             gram_secs,
             gram_secs / (s.min_s.max(1e-12))
         );
+    }
+
+    // ---- BENCH_solver.json -------------------------------------------------
+    // Machine-readable record of the solver-focused series (cd_sweep,
+    // cd_mode, pool_reuse) for the CI bench-smoke gate and for diffing
+    // runs; schema mirrors the gauntlet's BENCH_screening.json.
+    {
+        use std::collections::BTreeMap;
+        let out_dir = std::path::PathBuf::from(common::arg_str("out", "."));
+        let mut entries = Vec::with_capacity(solver_series.len());
+        for e in &solver_series {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(e.name.clone()));
+            o.insert("iters".to_string(), Json::Int(e.stats.iters as i64));
+            o.insert("mean_s".to_string(), Json::Float(e.stats.mean_s));
+            o.insert("p50_s".to_string(), Json::Float(e.stats.p50_s));
+            o.insert("min_s".to_string(), Json::Float(e.stats.min_s));
+            for (k, v) in &e.extra {
+                o.insert((*k).to_string(), v.clone());
+            }
+            entries.push(Json::Object(o));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("schema_version".to_string(), Json::Int(1));
+        top.insert("bench".to_string(), Json::Str("bench_micro/solver".into()));
+        top.insert("series".to_string(), Json::Array(entries));
+        let path = out_dir.join("BENCH_solver.json");
+        let mut text = Json::Object(top).to_string();
+        text.push('\n');
+        match std::fs::write(&path, &text) {
+            Ok(()) => println!("\nwrote {} solver series to {}", solver_series.len(), path.display()),
+            Err(e) => println!("\nfailed to write {}: {e}", path.display()),
+        }
     }
 }

@@ -68,3 +68,17 @@ pub fn arg_f64(key: &str, default: f64) -> f64 {
 pub fn arg_usize(key: &str, default: usize) -> usize {
     arg_f64(key, default as f64) as usize
 }
+
+/// String-valued `--key value` bench arg (e.g. `--out DIR`).
+#[allow(dead_code)] // not every bench binary takes string args
+pub fn arg_str(key: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    for i in 0..args.len() {
+        if args[i] == format!("--{key}") {
+            if let Some(v) = args.get(i + 1) {
+                return v.clone();
+            }
+        }
+    }
+    default.to_string()
+}

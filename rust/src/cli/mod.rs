@@ -17,6 +17,7 @@ USAGE:
            [--scale S] [--points N] [--c-min F] [--c-max F] [--tol F]
            [--threads N]  (scan/validate worker threads; 1 = serial, 0 = auto)
            [--solver-threads N]  (CD sweep worker threads; defaults to --threads)
+           [--cd-mode sync|async]  (parallel CD arm; default sync — see SOLVER)
            [--storage dense|csr|auto]
            [--validate] [--pjrt] [--config FILE]
   dvi experiment --id fig1|tab1|fig2|tab2|fig3|tab3|ablation|all
@@ -30,8 +31,8 @@ USAGE:
   dvi cv   [--dataset NAME] [--model svm|lad] [--folds K] [--scale S]
            [--points N] [--rule dvi|none]     cross-validated C selection
   dvi train [--dataset NAME] [--model svm|lad|wsvm] --c F [--scale S]
-           [--tol F] [--threads N] [--solver-threads N] [--print-support]
-           [--storage dense|csr|auto] [--out FILE]
+           [--tol F] [--threads N] [--solver-threads N] [--cd-mode sync|async]
+           [--print-support] [--storage dense|csr|auto] [--out FILE]
   dvi predict --model FILE --dataset NAME [--scale S] [--storage ...]
            [--threads N] [--support-only] [--out FILE]
   dvi serve [--workers N] [--cache-mb MB] [--model-cache-mb MB]
@@ -71,17 +72,35 @@ MODEL:
   artifact from disk.
 
 SOLVER:
-  The dual CD solver is sharded (block-synchronous parallel sweeps over
-  nnz-balanced shards of the active set). --solver-threads picks its
-  worker count independently of --threads (which drives the scan, Gram
-  build, and validation): 1 = the serial sweep, 0 = auto, default =
-  whatever --threads is. The parallel solver returns a KKT-valid point
-  at the same --tol whose screening decisions and support set match the
-  serial solver's; iterates are deterministic for a fixed (seed,
-  threads) pair but NOT bitwise-identical across different thread
-  counts — pin --solver-threads 1 when diffing solver trajectories.
-  Also available as `solver.solver_threads` in --config TOML and as
-  "solver_threads" in serve path/screen/train requests.
+  The dual CD solver is sharded over a persistent pinned worker pool:
+  long-lived solver threads are spawned once (growing to the largest
+  shard count ever requested, then reused for every later solve and
+  screening scan — one channel send per shard instead of one OS thread
+  spawn), and shard k always runs on worker k, so per-worker caches and
+  first-touch NUMA pages stay hot across the path. --solver-threads
+  picks the shard count independently of --threads (which drives the
+  scan, Gram build, and validation): 1 = the serial sweep, 0 = auto,
+  default = whatever --threads is.
+
+  --cd-mode picks the parallel arm (ignored when the effective solver
+  thread count is 1):
+    sync   block-synchronous sweeps, deterministic per (seed, threads)
+           [default]
+    async  wild/asynchronous sweeps — workers race atomic updates on a
+           shared u with no block barrier, then a serial sweep confirms
+           convergence; faster on many cores, nondeterministic run to run
+
+  Determinism contract:
+    mode   threads   guarantee
+    sync   1         byte-identical to the serial solver, always
+    sync   t fixed   byte-identical run-to-run for fixed (seed, t)
+    sync   t varies  KKT-valid at --tol; same support set & decisions
+    async  any       KKT-valid at --tol; same support set & decisions;
+                     NOT byte-reproducible run-to-run
+  Pin --solver-threads 1 (any mode) when diffing solver trajectories.
+  Also available as `solver.solver_threads` / `solver.cd_mode` in
+  --config TOML and as "solver_threads" / "cd_mode" in serve
+  path/screen/train requests.
 
 STORAGE:
   --storage picks the instance-matrix layout: `dense` (row-major buffer),
@@ -138,6 +157,17 @@ fn get_usize(flags: &BTreeMap<String, String>, key: &str, default: usize) -> Res
     match flags.get(key) {
         None => Ok(default),
         Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+    }
+}
+
+fn get_cd_mode(
+    flags: &BTreeMap<String, String>,
+    default: crate::config::CdMode,
+) -> Result<crate::config::CdMode, String> {
+    match flags.get("cd-mode") {
+        None => Ok(default),
+        Some(v) => crate::config::CdMode::parse(v)
+            .ok_or_else(|| format!("--cd-mode must be sync|async, got `{v}`")),
     }
 }
 
@@ -204,6 +234,7 @@ fn cmd_path(args: &[String]) -> Result<(), String> {
     if flags.contains_key("solver-threads") {
         cfg.solver.solver_threads = Some(get_usize(&flags, "solver-threads", 0)?);
     }
+    cfg.solver.cd_mode = get_cd_mode(&flags, cfg.solver.cd_mode)?;
     cfg.validate = cfg.validate || flags.contains_key("validate");
     cfg.use_pjrt = cfg.use_pjrt || flags.contains_key("pjrt");
 
@@ -353,6 +384,7 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
             } else {
                 None
             },
+            cd_mode: get_cd_mode(&flags, crate::config::CdMode::default())?,
             ..Default::default()
         },
         save: flags.get("out").cloned(),
@@ -604,6 +636,35 @@ mod tests {
         assert_eq!(dispatch(&args), 0);
         assert!(dir.join("BENCH_screening.json").exists());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cmd_path_runs_async_solver_and_rejects_bad_mode() {
+        let args: Vec<String> = [
+            "path", "--dataset", "toy1", "--scale", "0.02", "--points", "4", "--tol", "1e-5",
+            "--solver-threads", "3", "--cd-mode", "async", "--validate",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&args), 0);
+        let bad: Vec<String> = ["path", "--dataset", "toy1", "--cd-mode", "wild"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(dispatch(&bad), 1);
+    }
+
+    #[test]
+    fn cmd_train_accepts_cd_mode() {
+        let args: Vec<String> = [
+            "train", "--dataset", "toy1", "--scale", "0.03", "--c", "0.5", "--tol", "1e-6",
+            "--solver-threads", "4", "--cd-mode", "async", "--print-support",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&args), 0);
     }
 
     #[test]

@@ -7,6 +7,47 @@ use super::toml::{parse_str, TomlError, Value};
 use std::collections::BTreeMap;
 use std::path::Path;
 
+/// Which parallel CD arm the solver dispatches to when its effective
+/// thread count is > 1 (`cd_threads() != 1`). Serial solves ignore this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CdMode {
+    /// Block-synchronous sharded sweep (`solver/cd_par.rs`): deterministic
+    /// per `(seed, threads)`, byte-identical to itself run-to-run. The
+    /// default.
+    Sync,
+    /// Asynchronous "wild" sweep (`solver/cd_async.rs`): workers race
+    /// atomic updates on a shared u with no block barrier. Faster on
+    /// high-core machines; explicitly trades away run-to-run determinism
+    /// (results remain KKT-valid at the same tol, with the same
+    /// support/E-sets — see README §Solver).
+    Async,
+}
+
+impl CdMode {
+    /// Parse the CLI/TOML/JSON spelling.
+    pub fn parse(s: &str) -> Option<CdMode> {
+        match s {
+            "sync" => Some(CdMode::Sync),
+            "async" => Some(CdMode::Async),
+            _ => None,
+        }
+    }
+
+    /// The canonical spelling (round-trips through [`Self::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            CdMode::Sync => "sync",
+            CdMode::Async => "async",
+        }
+    }
+}
+
+impl Default for CdMode {
+    fn default() -> Self {
+        CdMode::Sync
+    }
+}
+
 /// Dual coordinate-descent solver parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SolverConfig {
@@ -37,6 +78,10 @@ pub struct SolverConfig {
     /// deterministic per `(seed, threads)` and converge to the same
     /// optimum at `tol` (see README §Solver).
     pub solver_threads: Option<usize>,
+    /// Parallel sweep flavor: [`CdMode::Sync`] (default, deterministic per
+    /// `(seed, threads)`) or [`CdMode::Async`] (wild atomic updates,
+    /// nondeterministic run-to-run). Ignored when `cd_threads() == 1`.
+    pub cd_mode: CdMode,
 }
 
 impl Default for SolverConfig {
@@ -48,6 +93,7 @@ impl Default for SolverConfig {
             seed: 0x5EED,
             threads: 1,
             solver_threads: None,
+            cd_mode: CdMode::Sync,
         }
     }
 }
@@ -199,7 +245,7 @@ impl RunConfig {
     /// catch typos early.
     pub fn from_toml_str(src: &str) -> Result<RunConfig, TomlError> {
         let m = parse_str(src)?;
-        const KNOWN: [&str; 16] = [
+        const KNOWN: [&str; 17] = [
             "model",
             "dataset",
             "scale",
@@ -216,6 +262,7 @@ impl RunConfig {
             "solver.seed",
             "solver.threads",
             "solver.solver_threads",
+            "solver.cd_mode",
         ];
         for k in m.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -241,6 +288,13 @@ impl RunConfig {
                 seed: get_usize(&m, "solver.seed", d.solver.seed as usize)? as u64,
                 threads: get_usize(&m, "solver.threads", d.solver.threads)?,
                 solver_threads: get_opt_usize(&m, "solver.solver_threads")?,
+                cd_mode: {
+                    let s = get_str(&m, "solver.cd_mode", d.solver.cd_mode.name())?;
+                    CdMode::parse(&s).ok_or_else(|| TomlError {
+                        line: 0,
+                        msg: format!("`solver.cd_mode` must be \"sync\" or \"async\", got `{s}`"),
+                    })?
+                },
             },
             use_pjrt: get_bool(&m, "use_pjrt", d.use_pjrt)?,
             validate: get_bool(&m, "validate", d.validate)?,
@@ -389,6 +443,32 @@ threads = 4
         );
         assert!(RunConfig::from_toml_str("[solver]\nsolver_threads = -1").is_err());
         assert!(RunConfig::from_toml_str("[solver]\nsolver_threads = \"x\"").is_err());
+    }
+
+    #[test]
+    fn cd_mode_parses_and_defaults_sync() {
+        assert_eq!(RunConfig::from_toml_str("").unwrap().solver.cd_mode, CdMode::Sync);
+        assert_eq!(
+            RunConfig::from_toml_str("[solver]\ncd_mode = \"async\"")
+                .unwrap()
+                .solver
+                .cd_mode,
+            CdMode::Async
+        );
+        assert_eq!(
+            RunConfig::from_toml_str("[solver]\ncd_mode = \"sync\"")
+                .unwrap()
+                .solver
+                .cd_mode,
+            CdMode::Sync
+        );
+        let err = RunConfig::from_toml_str("[solver]\ncd_mode = \"wild\"").unwrap_err();
+        assert!(err.msg.contains("sync"), "{}", err.msg);
+        assert!(RunConfig::from_toml_str("[solver]\ncd_mode = 3").is_err());
+        // round-trip spellings
+        for mode in [CdMode::Sync, CdMode::Async] {
+            assert_eq!(CdMode::parse(mode.name()), Some(mode));
+        }
     }
 
     #[test]

@@ -11,6 +11,6 @@ pub mod experiment;
 pub mod json;
 pub mod toml;
 
-pub use experiment::{ExperimentConfig, GridConfig, RunConfig, SolverConfig};
+pub use experiment::{CdMode, ExperimentConfig, GridConfig, RunConfig, SolverConfig};
 pub use json::{parse_json, Json, JsonError};
 pub use toml::{parse_str, TomlError, Value};

@@ -89,9 +89,12 @@
 //!
 //! Path, screen, and train requests accept `"solver_threads"` (0 = auto)
 //! to shard their CD solves independently of the scan-side `"threads"`;
-//! unset, the solver inherits `"threads"`. Solutions are KKT-equivalent
-//! but not bitwise-equal across solver thread counts — see README
-//! §Solver before diffing session outputs that vary it.
+//! unset, the solver inherits `"threads"`. They also accept
+//! `"cd_mode": "sync"|"async"` (default `sync`): sync solves are
+//! deterministic per (seed, solver_threads); async solves are KKT-valid
+//! at the same tolerance but nondeterministic run to run — see README
+//! §Solver for the contract before diffing session outputs that vary
+//! either knob.
 //!
 //! ## Cache requests
 //!
@@ -317,6 +320,7 @@ impl ScreeningService {
                 "tol" => cfg.solver.tol = v.as_float().ok_or("tol: number")?,
                 "threads" => cfg.solver.threads = parse_threads(v)?,
                 "solver_threads" => cfg.solver.solver_threads = Some(parse_threads(v)?),
+                "cd_mode" => cfg.solver.cd_mode = parse_cd_mode(v)?,
                 "storage" => {
                     let s = v.as_str().ok_or("storage: string")?;
                     if crate::linalg::Storage::parse(s).is_none() {
@@ -388,6 +392,7 @@ impl ScreeningService {
                 }
                 "threads" => spec.solver.threads = parse_threads(v)?,
                 "solver_threads" => spec.solver.solver_threads = Some(parse_threads(v)?),
+                "cd_mode" => spec.solver.cd_mode = parse_cd_mode(v)?,
                 "pairs" => {
                     let arr = v.as_array().ok_or("pairs: array of [c_prev, c_next]")?;
                     if arr.len() > MAX_PAIRS {
@@ -488,6 +493,7 @@ impl ScreeningService {
                 }
                 "threads" => spec.solver.threads = parse_threads(v)?,
                 "solver_threads" => spec.solver.solver_threads = Some(parse_threads(v)?),
+                "cd_mode" => spec.solver.cd_mode = parse_cd_mode(v)?,
                 "save" => spec.save = Some(v.as_str().ok_or("save: string")?.to_string()),
                 other => return Err(format!("unknown train field `{other}`")),
             }
@@ -1016,6 +1022,12 @@ fn parse_threads(v: &Json) -> Result<usize, String> {
     Ok(t as usize)
 }
 
+fn parse_cd_mode(v: &Json) -> Result<crate::config::CdMode, String> {
+    let s = v.as_str().ok_or("cd_mode: string")?;
+    crate::config::CdMode::parse(s)
+        .ok_or_else(|| format!("cd_mode must be sync|async, got `{s}`"))
+}
+
 fn error_json(msg: String) -> Json {
     let mut o = BTreeMap::new();
     o.insert("ok".to_string(), Json::Bool(false));
@@ -1157,6 +1169,41 @@ mod tests {
         .unwrap();
         let JobKind::Train(s) = r.kind else { panic!("expected train kind") };
         assert_eq!(s.solver.solver_threads, Some(0), "0 = auto is legal");
+    }
+
+    #[test]
+    fn parse_cd_mode_on_path_screen_train() {
+        use crate::config::CdMode;
+        // default is sync; explicit async sticks on every solver-bearing kind
+        let cfg = ScreeningService::parse_request(r#"{"dataset": "toy1"}"#).unwrap();
+        assert_eq!(cfg.solver.cd_mode, CdMode::Sync);
+        let cfg = ScreeningService::parse_request(
+            r#"{"dataset": "toy1", "cd_mode": "async", "solver_threads": 4}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.solver.cd_mode, CdMode::Async);
+        let r = parse_line(
+            r#"{"kind": "screen", "dataset": "toy1", "pairs": [[0.1, 0.2]],
+                "cd_mode": "async"}"#,
+        )
+        .unwrap();
+        let JobKind::Screen(s) = r.kind else { panic!("expected screen kind") };
+        assert_eq!(s.solver.cd_mode, CdMode::Async);
+        let r = parse_line(
+            r#"{"kind": "train", "dataset": "toy1", "c": 0.5, "cd_mode": "sync"}"#,
+        )
+        .unwrap();
+        let JobKind::Train(s) = r.kind else { panic!("expected train kind") };
+        assert_eq!(s.solver.cd_mode, CdMode::Sync);
+        // vocabulary and type errors answer at parse, not in the worker
+        for bad in [
+            r#"{"dataset": "toy1", "cd_mode": "wild"}"#,
+            r#"{"dataset": "toy1", "cd_mode": 2}"#,
+            r#"{"kind": "train", "dataset": "toy1", "c": 0.5, "cd_mode": "Async"}"#,
+        ] {
+            let e = parse_line(bad);
+            assert!(e.is_err(), "accepted `{bad}`");
+        }
     }
 
     #[test]

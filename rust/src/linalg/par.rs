@@ -1,22 +1,38 @@
-//! Sharded parallel execution on `std::thread::scope` workers (std-only —
-//! no rayon offline).
+//! Sharded parallel execution on a persistent solver worker pool (std-only
+//! — no rayon offline).
 //!
-//! The screening scan, the θ-form Gram build, and full-problem KKT
-//! validation are all embarrassingly parallel over the l data rows. This
-//! module provides the one primitive they share: split `0..items` into
-//! contiguous shards, evaluate a closure per shard on scoped worker
-//! threads, and return the per-shard results **in shard order** so callers
-//! can concatenate or reduce deterministically. Because shards are
+//! The screening scan, the θ-form Gram build, full-problem KKT validation,
+//! and every `cd_par` block are all embarrassingly parallel over contiguous
+//! row shards. This module provides the one primitive they share: split
+//! `0..items` into contiguous shards, evaluate a closure per shard on
+//! worker threads, and return the per-shard results **in shard order** so
+//! callers can concatenate or reduce deterministically. Because shards are
 //! contiguous and each row's result is computed by exactly the same
 //! floating-point expression as the serial code, sharded row-wise maps are
 //! byte-identical to their serial counterparts for any thread count.
+//!
+//! Execution lives on [`SolverPool`]: N long-lived workers, each owning an
+//! mpsc job queue, grown lazily the first time a dispatch needs worker k
+//! and then reused for the rest of the process. Shard 0 always runs inline
+//! on the calling thread; shard k is pinned to worker k−1, so a solve that
+//! re-cuts shards every block still lands shard k on the *same* OS thread
+//! every time — thread spawn/join is paid at most once per process-lifetime
+//! worker instead of once per block, and shard→thread affinity lets
+//! first-touch NUMA placement of Z stick across blocks. The pre-pool
+//! `std::thread::scope` implementations remain available as
+//! [`run_sharded_ranges_scoped`] / [`run_sharded_mut_scoped`] (they are the
+//! nested-dispatch fallback and the bench baseline).
 //!
 //! Thread-count convention used throughout the crate (and in
 //! [`crate::config::SolverConfig::threads`]): `1` = serial (no threads
 //! spawned), `0` = auto-detect via `std::thread::available_parallelism`,
 //! `n` = exactly n workers (clamped to the number of items).
 
+use std::cell::Cell;
 use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex, MutexGuard};
 
 /// Resolve a requested thread count: 0 = auto-detect, otherwise the
 /// requested count; always ≥ 1, never more than `items`, and capped at
@@ -151,9 +167,257 @@ pub fn weighted_triangle_bounds(weights: &[usize], shards: usize) -> Vec<usize> 
     bounds
 }
 
-/// Evaluate `f` over contiguous shards of `0..items` on scoped worker
-/// threads; results are returned in shard order. `threads` follows the
-/// crate convention (0 = auto, 1 = serial in the calling thread).
+// ---------------------------------------------------------------------------
+// The persistent solver pool
+// ---------------------------------------------------------------------------
+
+/// A unit of work queued to a pool worker. The `'static` bound is a lie
+/// told at exactly one place — the transmute in [`SolverPool::run_ranges`] /
+/// [`SolverPool::run_mut`] — and made true by the dispatch protocol: the
+/// dispatching call does not return (and therefore the borrows captured by
+/// the job cannot die) until every job has acknowledged completion.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Upper bound on lazily-grown pool workers. [`effective_threads`] already
+/// caps shard counts at 4× the hardware parallelism, so this is a backstop
+/// against a caller hand-rolling thousands of ranges, not a working limit;
+/// excess shards wrap onto existing workers via the modulo in dispatch.
+const MAX_POOL_WORKERS: usize = 512;
+
+thread_local! {
+    /// Set once, to `true`, on every pool worker thread. Dispatching from
+    /// inside a pool worker would deadlock-by-queueing (the nested jobs
+    /// would wait behind the very job that is waiting for them), so the
+    /// routed entry points check this flag and fall back to the scoped
+    /// spawn-per-shard path for nested parallelism.
+    static IN_POOL_WORKER: Cell<bool> = Cell::new(false);
+}
+
+fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|c| c.get())
+}
+
+/// Spawn count of the scoped (non-pool) fallback paths, for the bench
+/// comparison between per-block spawning and the persistent pool.
+static SCOPED_SPAWNS: AtomicU64 = AtomicU64::new(0);
+
+/// A persistent, work-stealing-free pinned worker pool.
+///
+/// Workers are long-lived OS threads, each consuming one private mpsc
+/// queue — there is no shared deque and no stealing, so the mapping from
+/// shard index to worker thread is a pure function (`shard k → worker
+/// k−1`, shard 0 inline on the caller) and stays stable across every
+/// dispatch for the life of the process. Workers are grown lazily up to
+/// the largest shard count ever requested (capped at
+/// [`MAX_POOL_WORKERS`]), then reused: one spawn per worker per process,
+/// instead of one spawn per shard per block.
+///
+/// Panic protocol: every job wraps its closure in `catch_unwind` and
+/// *always* acknowledges completion, even on panic; the dispatcher
+/// collects every acknowledgement before resuming the first panic on the
+/// calling thread. Workers therefore never die, and — critically for the
+/// lifetime-erasure safety argument — no borrow captured by a job can
+/// outlive the dispatching call.
+pub struct SolverPool {
+    senders: Mutex<Vec<mpsc::Sender<Job>>>,
+    workers_spawned: AtomicU64,
+    jobs_dispatched: AtomicU64,
+}
+
+/// Monotonic counters describing pool (and fallback) activity since
+/// process start — consumed by `bench_micro`'s pool-reuse series and by
+/// the bench smoke gate's "≤ 1 spawn per solve" check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolStats {
+    /// OS threads ever spawned by the pool (lifetime ≈ process lifetime).
+    pub workers_spawned: u64,
+    /// Jobs enqueued to pool workers (excludes inline shard-0 work).
+    pub jobs_dispatched: u64,
+    /// OS threads spawned by the scoped fallback paths.
+    pub scoped_spawns: u64,
+}
+
+static GLOBAL_POOL: SolverPool = SolverPool::new();
+
+/// The process-wide pool every routed entry point dispatches through.
+pub fn solver_pool() -> &'static SolverPool {
+    &GLOBAL_POOL
+}
+
+/// Counters for the global pool plus the scoped-fallback spawn count.
+pub fn pool_stats() -> PoolStats {
+    let p = solver_pool();
+    PoolStats {
+        workers_spawned: p.workers_spawned(),
+        jobs_dispatched: p.jobs_dispatched(),
+        scoped_spawns: SCOPED_SPAWNS.load(Ordering::Relaxed),
+    }
+}
+
+impl SolverPool {
+    /// An empty pool; workers are spawned on first use. `const` so the
+    /// global pool is a plain `static` with no lazy-init cell.
+    pub const fn new() -> SolverPool {
+        SolverPool {
+            senders: Mutex::new(Vec::new()),
+            workers_spawned: AtomicU64::new(0),
+            jobs_dispatched: AtomicU64::new(0),
+        }
+    }
+
+    /// OS threads this pool has ever spawned.
+    pub fn workers_spawned(&self) -> u64 {
+        self.workers_spawned.load(Ordering::Relaxed)
+    }
+
+    /// Jobs this pool has enqueued to workers (inline shard-0 excluded).
+    pub fn jobs_dispatched(&self) -> u64 {
+        self.jobs_dispatched.load(Ordering::Relaxed)
+    }
+
+    /// Lock the sender table, growing it to `want` workers first (capped
+    /// at [`MAX_POOL_WORKERS`]). The lock is held only while enqueueing —
+    /// never while waiting for results — so concurrent solves interleave
+    /// jobs onto the shared workers instead of serializing whole solves.
+    fn lock_and_grow(&self, want: usize) -> MutexGuard<'_, Vec<mpsc::Sender<Job>>> {
+        let mut senders = self.senders.lock().unwrap_or_else(|e| e.into_inner());
+        let want = want.min(MAX_POOL_WORKERS);
+        while senders.len() < want {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let idx = senders.len();
+            std::thread::Builder::new()
+                .name(format!("dvi-solver-{idx}"))
+                .spawn(move || {
+                    IN_POOL_WORKER.with(|c| c.set(true));
+                    // Jobs never unwind (each catches its own panic), so
+                    // this loop ends only when every sender is dropped.
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("spawn solver pool worker");
+            self.workers_spawned.fetch_add(1, Ordering::Relaxed);
+            senders.push(tx);
+        }
+        senders
+    }
+
+    /// Evaluate `f` over `ranges` with shard 0 inline on the caller and
+    /// shard k pinned to worker k−1; results come back in shard order, so
+    /// output is byte-identical to the scoped implementation.
+    ///
+    /// SAFETY argument for the lifetime erasure below: each queued job
+    /// owns a clone of `ack_tx` and sends on it unconditionally (the user
+    /// closure runs under `catch_unwind`, and a failed enqueue runs the
+    /// returned job inline — which still sends). This loop does not return
+    /// until it has received exactly `ranges.len() − 1` acknowledgements,
+    /// so every borrow captured by a job (`&f`, the ack sender, the range)
+    /// is live for the job's entire execution.
+    pub fn run_ranges<T, F>(&self, ranges: Vec<Range<usize>>, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Range<usize>) -> T + Sync,
+    {
+        let n = ranges.len();
+        if n <= 1 {
+            return ranges.into_iter().map(f).collect();
+        }
+        let (ack_tx, ack_rx) = mpsc::channel::<(usize, std::thread::Result<T>)>();
+        {
+            let senders = self.lock_and_grow(n - 1);
+            self.jobs_dispatched.fetch_add((n - 1) as u64, Ordering::Relaxed);
+            for (k, r) in ranges.iter().enumerate().skip(1) {
+                let r = r.clone();
+                let ack = ack_tx.clone();
+                let f = &f;
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let out = catch_unwind(AssertUnwindSafe(|| f(r)));
+                    let _ = ack.send((k, out));
+                });
+                let job: Job = unsafe { std::mem::transmute(job) };
+                if let Err(err) = senders[(k - 1) % senders.len()].send(job) {
+                    // A worker's queue can only be gone if its thread
+                    // failed to start; run the job here — it still acks.
+                    (err.0)();
+                }
+            }
+        }
+        drop(ack_tx);
+        let mut slots: Vec<Option<std::thread::Result<T>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        slots[0] = Some(catch_unwind(AssertUnwindSafe(|| f(ranges[0].clone()))));
+        for _ in 1..n {
+            let (k, res) = ack_rx.recv().expect("solver pool worker lost its ack channel");
+            slots[k] = Some(res);
+        }
+        slots
+            .into_iter()
+            .map(|s| match s.expect("every shard acknowledged") {
+                Ok(v) => v,
+                Err(payload) => resume_unwind(payload),
+            })
+            .collect()
+    }
+
+    /// Writer-side twin of [`Self::run_ranges`]: split `data` into the row
+    /// blocks delimited by `bounds`, run block 0 inline and block w on
+    /// worker w−1. Same acknowledgement/panic protocol (and the same
+    /// safety argument for the lifetime erasure).
+    pub fn run_mut<T, F>(&self, data: &mut [T], row_len: usize, bounds: &[usize], f: F)
+    where
+        T: Send,
+        F: Fn(Range<usize>, &mut [T]) + Sync,
+    {
+        let blocks = bounds.len() - 1;
+        debug_assert!(blocks >= 2, "single block is handled by the caller");
+        let (ack_tx, ack_rx) = mpsc::channel::<std::thread::Result<()>>();
+        let mut first: Option<(Range<usize>, &mut [T])> = None;
+        {
+            let senders = self.lock_and_grow(blocks - 1);
+            self.jobs_dispatched.fetch_add((blocks - 1) as u64, Ordering::Relaxed);
+            let mut rest: &mut [T] = data;
+            for w in 0..blocks {
+                let (lo, hi) = (bounds[w], bounds[w + 1]);
+                let taken = std::mem::take(&mut rest);
+                let (head, tail) = taken.split_at_mut((hi - lo) * row_len);
+                rest = tail;
+                if w == 0 {
+                    first = Some((lo..hi, head));
+                    continue;
+                }
+                let ack = ack_tx.clone();
+                let f = &f;
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let out = catch_unwind(AssertUnwindSafe(|| f(lo..hi, head)));
+                    let _ = ack.send(out);
+                });
+                let job: Job = unsafe { std::mem::transmute(job) };
+                if let Err(err) = senders[(w - 1) % senders.len()].send(job) {
+                    (err.0)();
+                }
+            }
+        }
+        drop(ack_tx);
+        let (r0, head0) = first.expect("bounds delimit at least one block");
+        let mut results = vec![catch_unwind(AssertUnwindSafe(|| f(r0, head0)))];
+        for _ in 1..blocks {
+            results.push(ack_rx.recv().expect("solver pool worker lost its ack channel"));
+        }
+        for res in results {
+            if let Err(payload) = res {
+                resume_unwind(payload);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routed entry points (pool) and scoped fallbacks (spawn-per-shard)
+// ---------------------------------------------------------------------------
+
+/// Evaluate `f` over contiguous shards of `0..items` on pool workers;
+/// results are returned in shard order. `threads` follows the crate
+/// convention (0 = auto, 1 = serial in the calling thread).
 pub fn run_sharded<T, F>(items: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -169,7 +433,10 @@ where
 /// Like [`run_sharded`], but over caller-supplied contiguous ranges (e.g.
 /// nonzero-balanced shards from [`cumulative_ranges`] or
 /// [`crate::linalg::Rows::balanced_shards`]). One range runs serially in
-/// the calling thread; results come back in range order.
+/// the calling thread; results come back in range order. Dispatches
+/// through the global [`SolverPool`] (shard k pinned to worker k−1);
+/// nested calls from inside a pool worker fall back to
+/// [`run_sharded_ranges_scoped`].
 pub fn run_sharded_ranges<T, F>(ranges: Vec<Range<usize>>, f: F) -> Vec<T>
 where
     T: Send,
@@ -178,6 +445,25 @@ where
     if ranges.len() <= 1 {
         return ranges.into_iter().map(f).collect();
     }
+    if in_pool_worker() {
+        return run_sharded_ranges_scoped(ranges, f);
+    }
+    solver_pool().run_ranges(ranges, f)
+}
+
+/// The pre-pool implementation of [`run_sharded_ranges`]: one scoped OS
+/// thread per range, joined in order. Kept public as the nested-dispatch
+/// fallback and as the spawn-per-block baseline the pool-reuse bench
+/// series compares against.
+pub fn run_sharded_ranges_scoped<T, F>(ranges: Vec<Range<usize>>, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    if ranges.len() <= 1 {
+        return ranges.into_iter().map(f).collect();
+    }
+    SCOPED_SPAWNS.fetch_add(ranges.len() as u64, Ordering::Relaxed);
     std::thread::scope(|s| {
         let f = &f;
         let handles: Vec<_> = ranges
@@ -194,10 +480,11 @@ where
 /// Like [`run_sharded`], but for writers: split `data` — a row-major
 /// buffer of `row_len`-sized rows — into the contiguous row blocks
 /// delimited by `bounds` (e.g. from [`triangle_bounds`], or the edges of
-/// [`shard_ranges`]) and run `f(rows, block)` on each block on scoped
-/// worker threads. `bounds` must start at 0, be non-decreasing, and end
-/// at `data.len() / row_len`. Two bounds (one block) runs serially in the
-/// calling thread.
+/// [`shard_ranges`]) and run `f(rows, block)` on each block on pool
+/// workers. `bounds` must start at 0, be non-decreasing, and end at
+/// `data.len() / row_len`. Two bounds (one block) runs serially in the
+/// calling thread; nested calls from a pool worker fall back to
+/// [`run_sharded_mut_scoped`].
 pub fn run_sharded_mut<T, F>(data: &mut [T], row_len: usize, bounds: &[usize], f: F)
 where
     T: Send,
@@ -214,6 +501,32 @@ where
         f(bounds[0]..bounds[1], data);
         return;
     }
+    if in_pool_worker() {
+        return run_sharded_mut_scoped(data, row_len, bounds, f);
+    }
+    solver_pool().run_mut(data, row_len, bounds, f)
+}
+
+/// The pre-pool implementation of [`run_sharded_mut`]: one scoped OS
+/// thread per block. Kept public as the nested-dispatch fallback and the
+/// bench baseline; performs the same bounds checks as the routed entry.
+pub fn run_sharded_mut_scoped<T, F>(data: &mut [T], row_len: usize, bounds: &[usize], f: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    assert!(bounds.len() >= 2, "bounds must delimit at least one block");
+    assert_eq!(bounds[0], 0, "bounds must start at row 0");
+    assert_eq!(
+        bounds[bounds.len() - 1] * row_len,
+        data.len(),
+        "bounds must cover the whole buffer"
+    );
+    if bounds.len() == 2 {
+        f(bounds[0]..bounds[1], data);
+        return;
+    }
+    SCOPED_SPAWNS.fetch_add((bounds.len() - 1) as u64, Ordering::Relaxed);
     std::thread::scope(|s| {
         let f = &f;
         let mut rest: &mut [T] = data;
@@ -449,5 +762,102 @@ mod tests {
     fn run_sharded_mut_empty_buffer() {
         let mut data: Vec<f64> = Vec::new();
         run_sharded_mut(&mut data, 0, &[0, 0], |_, block| assert!(block.is_empty()));
+    }
+
+    // -- pool-specific tests (private pool instances: the global pool is
+    //    shared with concurrently-running tests, so its counters are not
+    //    deterministic here) --
+
+    #[test]
+    fn pool_matches_scoped_and_reuses_workers() {
+        let pool = SolverPool::new();
+        let cum: Vec<usize> = (0..=57).map(|i| i * i).collect();
+        for round in 0..3 {
+            let ranges = cumulative_ranges(&cum, 4);
+            let via_pool = pool.run_ranges(ranges.clone(), |r| r.collect::<Vec<usize>>());
+            let via_scoped = run_sharded_ranges_scoped(ranges, |r| r.collect::<Vec<usize>>());
+            assert_eq!(via_pool, via_scoped, "round {round}");
+            // 4 ranges → 3 workers, spawned once on the first round only
+            assert_eq!(pool.workers_spawned(), 3, "round {round}");
+            assert_eq!(pool.jobs_dispatched(), 3 * (round + 1), "round {round}");
+        }
+    }
+
+    #[test]
+    fn pool_grows_to_largest_request_only() {
+        let pool = SolverPool::new();
+        pool.run_ranges(shard_ranges(40, 2), |r| r.len());
+        assert_eq!(pool.workers_spawned(), 1);
+        pool.run_ranges(shard_ranges(40, 8), |r| r.len());
+        assert_eq!(pool.workers_spawned(), 7);
+        pool.run_ranges(shard_ranges(40, 3), |r| r.len());
+        assert_eq!(pool.workers_spawned(), 7);
+    }
+
+    #[test]
+    fn pool_run_mut_matches_direct_writes() {
+        let pool = SolverPool::new();
+        let (rows, row_len) = (13usize, 2usize);
+        let mut data = vec![0usize; rows * row_len];
+        let mut bounds: Vec<usize> = shard_ranges(rows, 5).iter().map(|r| r.start).collect();
+        bounds.push(rows);
+        pool.run_mut(&mut data, row_len, &bounds, |rs, block| {
+            let lo = rs.start;
+            for i in rs {
+                for j in 0..row_len {
+                    block[(i - lo) * row_len + j] = 10 * i + j;
+                }
+            }
+        });
+        for i in 0..rows {
+            for j in 0..row_len {
+                assert_eq!(data[i * row_len + j], 10 * i + j);
+            }
+        }
+        assert_eq!(pool.workers_spawned(), 4);
+    }
+
+    #[test]
+    fn pool_propagates_panics_and_survives() {
+        let pool = SolverPool::new();
+        let ranges = shard_ranges(8, 4);
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_ranges(ranges.clone(), |r| {
+                if r.start >= 4 {
+                    panic!("shard detonated");
+                }
+                r.len()
+            })
+        }));
+        assert!(boom.is_err(), "panic must propagate to the dispatcher");
+        // workers survive a panicking job and keep serving
+        let ok = pool.run_ranges(ranges, |r| r.len());
+        assert_eq!(ok.iter().sum::<usize>(), 8);
+        assert_eq!(pool.workers_spawned(), 3);
+    }
+
+    #[test]
+    fn nested_dispatch_falls_back_to_scoped() {
+        // a job running on a pool worker that itself calls the routed
+        // entry point must not enqueue onto the (busy) pool
+        let pool = SolverPool::new();
+        let out = pool.run_ranges(shard_ranges(4, 2), |outer| {
+            let inner: usize = run_sharded(16, 2, |r| r.len()).iter().sum();
+            outer.len() + inner
+        });
+        assert_eq!(out, vec![18, 18]);
+    }
+
+    #[test]
+    fn global_pool_counters_monotone() {
+        let before = pool_stats();
+        let flat: Vec<usize> = run_sharded(64, 4, |r| r.collect::<Vec<usize>>())
+            .into_iter()
+            .flatten()
+            .collect();
+        assert_eq!(flat.len(), 64);
+        let after = pool_stats();
+        assert!(after.workers_spawned >= before.workers_spawned);
+        assert!(after.jobs_dispatched >= before.jobs_dispatched + 3);
     }
 }

@@ -69,6 +69,15 @@ pub struct Instance {
     pub hi: Vec<f64>,
     /// Cached ‖zᵢ‖².
     pub z_norms_sq: Vec<f64>,
+    /// Cumulative stored-entry prefix over the rows of Z (length `l + 1`,
+    /// `nnz_prefix[0] = 0`): `nnz_prefix[i+1] − nnz_prefix[i]` is row i's
+    /// stored-entry count (`n` for dense, the CSR row nnz for sparse).
+    /// This is the `par::cumulative_weights` input the sharded scan and
+    /// the CD block loop previously recomputed per scan/block; caching it
+    /// here amortizes it once per instance and evicts it with the
+    /// instance in the coordinator's `InstanceCache` (it is charged to
+    /// [`Instance::approx_bytes`]).
+    pub nnz_prefix: Vec<usize>,
 }
 
 impl Instance {
@@ -122,6 +131,10 @@ impl Instance {
             }
         };
         let z_norms_sq = z.row_norms_sq();
+        let nnz_prefix = match &z {
+            Rows::Dense(_) => (0..=l).map(|i| i * n).collect(),
+            Rows::Sparse(m) => m.indptr().to_vec(),
+        };
         Instance {
             model,
             name: ds.name.clone(),
@@ -130,6 +143,7 @@ impl Instance {
             lo,
             hi,
             z_norms_sq,
+            nnz_prefix,
         }
     }
 
@@ -157,7 +171,46 @@ impl Instance {
     pub fn approx_bytes(&self) -> usize {
         self.z.approx_bytes()
             + 8 * (self.ybar.len() + self.lo.len() + self.hi.len() + self.z_norms_sq.len())
+            + 8 * self.nnz_prefix.len()
             + std::mem::size_of::<Instance>()
+    }
+
+    /// Stored entries in row i of Z, from the cached prefix.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.nnz_prefix[i + 1] - self.nnz_prefix[i]
+    }
+
+    /// Stored-entry-balanced contiguous shards over all l rows — the same
+    /// cuts as [`Rows::balanced_shards`], served from the cached
+    /// [`Self::nnz_prefix`] instead of re-deriving weights from storage.
+    pub fn balanced_shards(&self, shards: usize) -> Vec<std::ops::Range<usize>> {
+        match &self.z {
+            // dense rows are uniform: the even split, NOT a cumulative cut
+            // (the two differ at rounding boundaries, and every dense
+            // bitwise contract is pinned to `shard_ranges`)
+            Rows::Dense(_) => linalg::par::shard_ranges(self.len(), shards),
+            Rows::Sparse(_) => linalg::par::cumulative_ranges(&self.nnz_prefix, shards),
+        }
+    }
+
+    /// Stored-entry-balanced shards over positions of an arbitrary row
+    /// subset (e.g. the CD sweep's shuffled active set) — identical cuts
+    /// to [`Rows::balanced_subset_shards`], weights from the cached
+    /// prefix. The returned ranges index into `idx`, not into Z.
+    pub fn balanced_subset_shards(
+        &self,
+        idx: &[usize],
+        shards: usize,
+    ) -> Vec<std::ops::Range<usize>> {
+        match &self.z {
+            Rows::Dense(_) => linalg::par::shard_ranges(idx.len(), shards),
+            Rows::Sparse(_) => {
+                let cum =
+                    linalg::par::cumulative_weights(idx.iter().map(|&i| self.row_nnz(i)));
+                linalg::par::cumulative_ranges(&cum, shards)
+            }
+        }
     }
 
     /// u = Zᵀθ (n-vector). w*(C) = −C·u at the optimum.
@@ -370,6 +423,37 @@ mod tests {
         assert!(de.approx_bytes() > sp.approx_bytes());
         assert!(de.approx_bytes() >= 50 * 40 * 8);
         assert!(sp.approx_bytes() >= sp.z.nnz() * 12);
+    }
+
+    #[test]
+    fn nnz_prefix_cached_and_shards_match_rows() {
+        use crate::linalg::Storage;
+        let ds = synth::sparse_classes(9, 60, 30, 0.12);
+        let sp = Instance::from_dataset(Model::Svm, &ds);
+        let de = Instance::from_dataset(Model::Svm, &ds.clone().into_storage(Storage::Dense));
+        for inst in [&sp, &de] {
+            assert_eq!(inst.nnz_prefix.len(), inst.len() + 1);
+            assert_eq!(inst.nnz_prefix[0], 0);
+            assert_eq!(*inst.nnz_prefix.last().unwrap(), inst.z.nnz());
+            for i in 0..inst.len() {
+                assert_eq!(inst.row_nnz(i), inst.z.row(i).nnz(), "row {i}");
+            }
+        }
+        // the cached-prefix cuts must be byte-identical to the Rows cuts —
+        // cd_par and the scans route through these, and their bitwise
+        // contracts depend on the groupings not moving
+        let subset: Vec<usize> = (0..sp.len()).rev().step_by(2).collect();
+        for shards in [1usize, 2, 3, 4, 7] {
+            for inst in [&sp, &de] {
+                assert_eq!(inst.balanced_shards(shards), inst.z.balanced_shards(shards));
+                assert_eq!(
+                    inst.balanced_subset_shards(&subset, shards),
+                    inst.z.balanced_subset_shards(&subset, shards)
+                );
+            }
+        }
+        // and the prefix is charged to the cache budget estimate
+        assert!(sp.approx_bytes() >= sp.z.approx_bytes() + 8 * (sp.len() + 1));
     }
 
     #[test]

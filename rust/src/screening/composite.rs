@@ -12,8 +12,9 @@
 //! gauntlet` bench records that dominance and
 //! `tests/integration_screening_rules.rs` locks it.
 
-use super::region::DualRegion;
+use super::region::{self, DualRegion};
 use super::rule::{ScreeningRule, StepContext};
+use super::Decision;
 use crate::problem::Instance;
 
 /// Intersection of member rules (built from `"a+b"` expressions by
@@ -47,8 +48,19 @@ impl ScreeningRule for Composite {
     fn prepare(&self, inst: &Instance, ctx: &StepContext) -> DualRegion {
         DualRegion::Intersect(self.members.iter().map(|m| m.prepare(inst, ctx)).collect())
     }
-    // screen_rows: the trait's generic sharded sweep evaluates the
-    // intersection — member kernels (e.g. the PJRT scan) are deliberately
-    // not consulted here, matching the pre-refactor behavior where
-    // specialized backends only ever served the plain dvi rule.
+
+    // Member kernels (e.g. the PJRT scan) are deliberately not consulted
+    // here, matching the pre-refactor behavior where specialized backends
+    // only ever served the plain dvi rule.
+    fn screen_rows(
+        &mut self,
+        inst: &Instance,
+        region: &DualRegion,
+        threads: usize,
+    ) -> Vec<Decision> {
+        // fused single-pass intersection sweep — decisions byte-identical
+        // to the trait's generic sweep (locked by
+        // `tests/integration_screening_rules.rs` and region::tests)
+        region::screen_rows_fused(inst, region, threads)
+    }
 }

@@ -191,9 +191,11 @@ pub fn dvi_scan(inst: &Instance, mid: f64, rad: f64, u: &[f64]) -> Vec<Decision>
 }
 
 /// Sharded multi-threaded variant of [`dvi_scan`]: the l rows are split
-/// into contiguous shards evaluated on `std::thread::scope` workers and
-/// the per-shard decision vectors are merged in shard order. Shards are
-/// area-balanced by *stored-entry* count ([`crate::linalg::Rows::balanced_shards`]):
+/// into contiguous shards evaluated on the persistent solver pool
+/// ([`crate::linalg::par::SolverPool`]) and the per-shard decision
+/// vectors are merged in shard order. Shards are area-balanced by
+/// *stored-entry* count ([`crate::problem::Instance::balanced_shards`],
+/// served from the instance's cached nnz prefix):
 /// row-count splits on CSR data with uneven row lengths would starve some
 /// workers, since a shard's cost is its nonzero count, not its row count.
 /// `‖u‖` is computed once and every per-row expression is identical to
@@ -204,7 +206,7 @@ pub fn dvi_scan_par(inst: &Instance, mid: f64, rad: f64, u: &[f64], threads: usi
     assert_eq!(u.len(), inst.dim());
     let u_norm = linalg::norm(u);
     let t = par::effective_threads(threads, inst.len());
-    let shards = par::run_sharded_ranges(inst.z.balanced_shards(t), |r| {
+    let shards = par::run_sharded_ranges(inst.balanced_shards(t), |r| {
         dvi_scan_range(inst, mid, rad, u, u_norm, r)
     });
     let mut out = Vec::with_capacity(inst.len());

@@ -154,6 +154,42 @@ pub fn decide_bounds(lo: f64, hi: f64, ybar: f64) -> Decision {
     }
 }
 
+/// Decide row `i` against an intersection in one fused member walk,
+/// without materializing the combined interval. Members are consulted in
+/// order and the walk stops at the first member whose *lower* bound alone
+/// rejects the row — for ConeBall members that also skips their upper
+/// extremization (a second `lemma20_min`) *and* every later member's
+/// bounds entirely.
+///
+/// Byte-identity with `decide_bounds(row_bounds(Intersect(..)))`:
+/// [`decide_bounds`] tests `lo > ȳᵢ` FIRST, and the intersection's lo is
+/// the max over members, so "some member's ml > ȳᵢ" ⟺ "lo > ȳᵢ" ⟺ AtLo —
+/// which member trips it cannot change the decision. The AtHi side takes
+/// no shortcut: hi must be the min over *all* members before comparing,
+/// exactly as the unfused walk computes it.
+#[inline]
+pub(super) fn fused_row_decision(
+    inst: &Instance,
+    members: &[DualRegion],
+    i: usize,
+    ybar: f64,
+    scratch: &mut RowScratch,
+) -> Decision {
+    let mut hi = f64::INFINITY;
+    for m in members {
+        let (ml, mh) = m.row_bounds(inst, i, ybar, scratch);
+        if ml > ybar {
+            return Decision::AtLo;
+        }
+        hi = hi.min(mh);
+    }
+    if hi < ybar {
+        Decision::AtHi
+    } else {
+        Decision::Keep
+    }
+}
+
 /// Evaluate a region over one contiguous row range.
 fn scan_range(
     inst: &Instance,
@@ -183,9 +219,45 @@ pub fn screen_rows(inst: &Instance, region: &DualRegion, threads: usize) -> Vec<
         let mut scratch = RowScratch::new(inst.dim());
         return scan_range(inst, region, 0..l, &mut scratch);
     }
-    let shards = par::run_sharded_ranges(inst.z.balanced_shards(t), |r| {
+    let shards = par::run_sharded_ranges(inst.balanced_shards(t), |r| {
         let mut scratch = RowScratch::new(inst.dim());
         scan_range(inst, region, r, &mut scratch)
+    });
+    let mut out = Vec::with_capacity(l);
+    for mut s in shards {
+        out.append(&mut s);
+    }
+    out
+}
+
+/// [`screen_rows`] specialized for intersections: each row makes ONE
+/// member walk through [`fused_row_decision`] instead of materializing
+/// the combined [lo, hi] and deciding afterwards. Decisions are
+/// byte-identical to the generic sweep for any thread count (same
+/// shards, same per-member arithmetic, same comparison order — only
+/// provably-irrelevant work is skipped); `tests` lock this. Non-intersect
+/// regions fall through to the generic sweep unchanged.
+pub fn screen_rows_fused(inst: &Instance, region: &DualRegion, threads: usize) -> Vec<Decision> {
+    let members = match region {
+        DualRegion::Intersect(ms) => ms.as_slice(),
+        _ => return screen_rows(inst, region, threads),
+    };
+    let l = inst.len();
+    let t = par::effective_threads(threads, l);
+    let scan = |rows: std::ops::Range<usize>, scratch: &mut RowScratch| {
+        let mut out = Vec::with_capacity(rows.end - rows.start);
+        for i in rows {
+            out.push(fused_row_decision(inst, members, i, inst.ybar[i], scratch));
+        }
+        out
+    };
+    if t <= 1 {
+        let mut scratch = RowScratch::new(inst.dim());
+        return scan(0..l, &mut scratch);
+    }
+    let shards = par::run_sharded_ranges(inst.balanced_shards(t), |r| {
+        let mut scratch = RowScratch::new(inst.dim());
+        scan(r, &mut scratch)
     });
     let mut out = Vec::with_capacity(l);
     for mut s in shards {
@@ -229,6 +301,32 @@ mod tests {
             assert_eq!(bl, wl.max(tl), "i={i}");
             assert_eq!(bh, wh.min(th), "i={i}");
         }
+    }
+
+    #[test]
+    fn fused_intersection_is_byte_identical() {
+        use crate::data::synth;
+        use crate::problem::Model;
+        let ds = synth::gaussian_classes(23, 97, 3, 1.0, 1.0, 0.5, 1.0);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let u: Vec<f64> = (0..inst.dim()).map(|j| (j as f64 * 0.9).cos()).collect();
+        let u_norm = crate::linalg::norm(&u);
+        let center: Vec<f64> = u.iter().map(|v| 0.4 * v).collect();
+        // three members of different kinds, including a ConeBall whose
+        // upper extremization the fusion skips on lower-bound rejections
+        let region = DualRegion::Intersect(vec![
+            DualRegion::BallW { mid: 0.8, rad: 0.3, u: u.clone(), u_norm },
+            DualRegion::ConeBall { cone: Some((u.clone(), 0.2)), center, radius: 0.5 },
+            DualRegion::BallW { mid: 0.5, rad: 1.5, u, u_norm },
+        ]);
+        for threads in [1usize, 2, 3, 7, 0] {
+            let generic = screen_rows(&inst, &region, threads);
+            let fused = screen_rows_fused(&inst, &region, threads);
+            assert_eq!(generic, fused, "threads={threads}");
+        }
+        // non-intersect regions fall through unchanged
+        let ball = DualRegion::All;
+        assert_eq!(screen_rows_fused(&inst, &ball, 2), screen_rows(&inst, &ball, 2));
     }
 
     #[test]

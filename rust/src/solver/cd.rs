@@ -20,10 +20,12 @@
 //! sweep ([`super::cd_par`]) performs bit-for-bit the same per-coordinate
 //! arithmetic as the serial loop. [`CdSolver::solve_free_with_u`]
 //! dispatches on [`SolverConfig::cd_threads`]: 1 keeps this serial path
-//! (byte-identical to the pre-parallel solver), anything else routes to
-//! the sharded engine.
+//! (byte-identical to the pre-parallel solver), anything else routes by
+//! [`crate::config::CdMode`] to the block-synchronous sharded engine
+//! ([`super::cd_par`], the default) or the asynchronous wild arm
+//! ([`super::cd_async`]).
 
-use crate::config::SolverConfig;
+use crate::config::{CdMode, SolverConfig};
 use crate::data::Rng;
 use crate::linalg::{self};
 use crate::problem::Instance;
@@ -267,12 +269,20 @@ impl CdSolver {
             "caller-supplied u inconsistent with theta"
         );
         // cd_threads = 1 keeps the serial Gauss-Seidel sweep below —
-        // byte-identical to the pre-parallel solver; anything else (0 =
-        // auto) routes to the block-synchronous sharded engine, whose
-        // iterates are deterministic per (seed, threads) but not
-        // bitwise-equal across thread counts.
+        // byte-identical to the pre-parallel solver regardless of
+        // cd_mode; anything else (0 = auto) routes by mode: Sync is the
+        // block-synchronous sharded engine (deterministic per
+        // (seed, threads)), Async the wild racing arm (KKT-valid result,
+        // nondeterministic trajectory).
         if self.cfg.cd_threads() != 1 {
-            return super::cd_par::solve_free_with_u_par(&self.cfg, inst, c, theta, free, u);
+            return match self.cfg.cd_mode {
+                CdMode::Sync => {
+                    super::cd_par::solve_free_with_u_par(&self.cfg, inst, c, theta, free, u)
+                }
+                CdMode::Async => {
+                    super::cd_async::solve_free_with_u_async(&self.cfg, inst, c, theta, free, u)
+                }
+            };
         }
         self.solve_serial(inst, c, theta, free, u)
     }
@@ -368,9 +378,10 @@ impl CdSolver {
         if t <= 1 {
             return Self::kkt_violation(inst, c, theta);
         }
-        // shards are balanced by stored-entry count (nnz for CSR), since
-        // both passes cost O(shard nnz)
-        let shards = inst.z.balanced_shards(t);
+        // shards are balanced by stored-entry count (nnz for CSR) from
+        // the instance's cached prefix, since both passes cost
+        // O(shard nnz)
+        let shards = inst.balanced_shards(t);
         let partials = crate::linalg::par::run_sharded_ranges(shards.clone(), |rows| {
             let mut u = vec![0.0; inst.dim()];
             for i in rows {

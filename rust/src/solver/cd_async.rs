@@ -1,0 +1,359 @@
+//! Asynchronous ("wild") parallel dual coordinate descent — the opt-in
+//! `--cd-mode async` arm.
+//!
+//! Where [`super::cd_par`] is block-synchronous (shards work against a
+//! frozen block-start u and merge deterministically at a barrier), this
+//! arm lets workers race: during a *wild round* every worker runs
+//! Gauss-Seidel locally over its own slice of the active set while
+//! folding each Δθᵢ·zᵢ straight into one SHARED u through per-component
+//! f64 CAS-adds — no block barrier, no delta-u buffers, gradients read
+//! whatever mix of neighbours' updates has landed (the Hogwild-style
+//! trade: staleness for zero synchronization). θ itself needs no atomics:
+//! the active set is kept *sorted* for the wild phase, so each shard owns
+//! a contiguous interval of coordinate ids and writes its own disjoint
+//! θ slab.
+//!
+//! Two design points keep this exact-in-the-end rather than
+//! approximately-converged:
+//!
+//! * **Deferred θ reconciliation.** After each wild round, u is recomputed
+//!   exactly as Zᵀθ from the (race-free) θ — CAS interleaving and atomic
+//!   rounding drift never survive a round.
+//! * **Serial confirmation.** Convergence is declared exclusively by the
+//!   serial live-u sweep ([`super::cd::sweep_live`]) with the serial
+//!   solver's shrinking thresholds, full-active-set re-check, and stall
+//!   guard — the same criterion `cd_par` confirms with. Wild rounds only
+//!   ever *accelerate* θ toward the optimum; they decide nothing. Once
+//!   the stall guard trips, wild rounds stop and the solve degenerates to
+//!   pure serial sweeps, so termination is inherited from the serial
+//!   solver.
+//!
+//! Stable shard affinity: the wild phase cuts the *sorted* active set
+//! into standing nnz-balanced intervals ([`Instance::balanced_subset_shards`]
+//! from the cached prefix) and dispatches slab k to pool worker k−1
+//! (see [`crate::linalg::par`]), so a worker keeps touching the same
+//! Z-row interval across rounds and first-touch NUMA placement sticks —
+//! unlike `cd_par`, whose shuffled shards intentionally re-deal rows to
+//! preserve its bitwise contract.
+//!
+//! Contract (locked by `tests/integration_cd_async.rs`): the returned
+//! point is KKT-valid at the same `tol`, with the serial solution's
+//! support/E-sets; run-to-run determinism is explicitly traded away —
+//! two async solves of the same problem may return different bit
+//! patterns (both valid). `--cd-mode sync` never reaches this module.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::cd::{self, CoordStep, SolveResult, SolverStats};
+use super::cd_par;
+use crate::config::SolverConfig;
+use crate::data::Rng;
+use crate::linalg::{par, RowView};
+use crate::problem::Instance;
+
+/// Local Gauss-Seidel sweeps per worker per wild round. More sweeps
+/// amortize the round's reconciliation O(l·n) better but read staler
+/// neighbours; a handful is the usual wild-CD sweet spot.
+const WILD_SWEEPS: usize = 4;
+
+/// One CAS-add of `add` onto an f64 stored as bits. Relaxed ordering is
+/// sufficient: wild gradients tolerate any staleness, and the exact u is
+/// rebuilt from θ after the round anyway.
+#[inline]
+fn atomic_add(slot: &AtomicU64, add: f64) {
+    let mut cur = slot.load(Ordering::Relaxed);
+    loop {
+        let new = (f64::from_bits(cur) + add).to_bits();
+        match slot.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+/// ⟨row, u⟩ against the racing atomic u (relaxed loads; explicitly
+/// stored zeros skipped — dense rows iterate every column).
+#[inline]
+fn dot_atomic(row: RowView<'_>, u: &[AtomicU64]) -> f64 {
+    let mut acc = 0.0;
+    for (j, v) in row.iter() {
+        if v != 0.0 {
+            acc += v * f64::from_bits(u[j].load(Ordering::Relaxed));
+        }
+    }
+    acc
+}
+
+/// One wild round: cut the sorted active set into standing nnz-balanced
+/// θ slabs, race [`WILD_SWEEPS`] local Gauss-Seidel sweeps per slab
+/// against the shared atomic u, then return with θ updated in place
+/// (u is left to the caller's reconciliation). Returns nothing decision-
+/// relevant by design.
+#[allow(clippy::too_many_arguments)]
+fn wild_round(
+    inst: &Instance,
+    c: f64,
+    tol: f64,
+    seed: u64,
+    epoch: u64,
+    shards: usize,
+    active_sorted: &[usize],
+    theta: &mut [f64],
+    u: &[f64],
+    stats: &mut SolverStats,
+) {
+    let l = inst.len();
+    let ranges = inst.balanced_subset_shards(active_sorted, shards);
+    // slab boundaries in θ-index space: the active set is sorted, so
+    // shard k's coordinate ids all fall in [cuts[k], cuts[k+1])
+    let mut cuts = Vec::with_capacity(ranges.len() + 1);
+    cuts.push(0usize);
+    for r in ranges.iter().skip(1) {
+        cuts.push(active_sorted.get(r.start).copied().unwrap_or(l));
+    }
+    cuts.push(l);
+
+    let u_atomic: Vec<AtomicU64> = u.iter().map(|&v| AtomicU64::new(v.to_bits())).collect();
+    let grad_evals = AtomicU64::new(0);
+    let coord_updates = AtomicU64::new(0);
+    {
+        let (u_ro, ge, cu) = (&u_atomic, &grad_evals, &coord_updates);
+        par::run_sharded_mut(theta, 1, &cuts, move |rows, block| {
+            let lo = rows.start;
+            let p0 = active_sorted.partition_point(|&i| i < rows.start);
+            let p1 = active_sorted.partition_point(|&i| i < rows.end);
+            if p0 == p1 {
+                return;
+            }
+            let mut order: Vec<usize> = active_sorted[p0..p1].to_vec();
+            // any per-(round, slab) stream works — wild sweeps make no
+            // determinism promise, the seed just decorrelates slabs
+            let mut rng = Rng::new(
+                seed ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ (rows.start as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
+            );
+            for _ in 0..WILD_SWEEPS {
+                rng.shuffle(&mut order);
+                let mut max_viol = 0.0f64;
+                for &i in &order {
+                    ge.fetch_add(1, Ordering::Relaxed);
+                    let g = c * dot_atomic(inst.z.row(i), u_ro) - inst.ybar[i];
+                    // m̄ = ∞ / shrink = false: wild measurements are too
+                    // stale to shrink on — the serial sweeps own shrinking
+                    match cd::coord_step_from_g(inst, c, i, block[i - lo], g, f64::INFINITY, false)
+                    {
+                        CoordStep::Shrunk => {}
+                        CoordStep::Kept { viol, update } => {
+                            max_viol = max_viol.max(viol);
+                            if let Some(up) = update {
+                                block[i - lo] = up.new_theta;
+                                for (j, v) in inst.z.row(i).iter() {
+                                    if v != 0.0 {
+                                        atomic_add(&u_ro[j], up.delta * v);
+                                    }
+                                }
+                                cu.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+                if max_viol < tol {
+                    break; // slab locally quiescent — stop burning sweeps
+                }
+            }
+        });
+    }
+    stats.grad_evals = stats.grad_evals.saturating_add(grad_evals.into_inner());
+    stats.coord_updates = stats.coord_updates.saturating_add(coord_updates.into_inner());
+}
+
+/// The asynchronous counterpart of `CdSolver::solve_free_with_u` — same
+/// reduced-problem semantics, same convergence criterion (serial sweeps
+/// decide everything), nondeterministic intermediate trajectory. Input
+/// invariants were asserted by the dispatching wrapper.
+pub(super) fn solve_free_with_u_async(
+    cfg: &SolverConfig,
+    inst: &Instance,
+    c: f64,
+    mut theta: Vec<f64>,
+    free: &[usize],
+    mut u: Vec<f64>,
+) -> SolveResult {
+    let requested = cfg.cd_threads();
+    let mut rng = Rng::new(cfg.seed);
+    let mut stats = SolverStats::default();
+
+    let mut active = cd::clip_zero_norm_rows(inst, &mut theta, free);
+    stats.active_coords = active.len();
+
+    let mut m_bar = f64::INFINITY;
+    let mut shrunk = false;
+    // same stall guard as cd_par, same role: wild rounds that stop
+    // helping (coherent data oscillating under staleness) are cut off and
+    // the solve falls through to pure serial sweeps, which provably
+    // terminate
+    let mut best_violation = f64::INFINITY;
+    let mut stalled = 0usize;
+    let mut epoch = 0u64;
+
+    let tol = cfg.tol;
+    loop {
+        if stats.outer_iters >= cfg.max_outer {
+            break;
+        }
+        let t = cd_par::plan_shards(requested, active.len());
+        if t > 1 && stalled < cd_par::STALL_LIMIT {
+            stats.outer_iters += 1;
+            epoch += 1;
+            let mut sorted = active.clone();
+            sorted.sort_unstable();
+            wild_round(
+                inst, c, tol, cfg.seed, epoch, t, &sorted, &mut theta, &u, &mut stats,
+            );
+            // deferred reconciliation: the racing u is discarded and
+            // rebuilt exactly from θ, so CAS drift never compounds
+            u = inst.u_from_theta(&theta);
+            if stats.outer_iters >= cfg.max_outer {
+                break;
+            }
+        }
+
+        // serial confirmation sweep — verbatim the serial solver's loop
+        // body, so shrinking, m̄, re-expansion, and `converged` are the
+        // serial criterion
+        stats.outer_iters += 1;
+        rng.shuffle(&mut active);
+        let (kept, max_violation) = cd::sweep_live(
+            inst,
+            c,
+            &active,
+            &mut theta,
+            &mut u,
+            m_bar,
+            cfg.shrink,
+            &mut stats,
+        );
+        shrunk = shrunk || kept.len() < active.len();
+        active = kept;
+        stats.final_violation = max_violation;
+        if max_violation < best_violation {
+            best_violation = max_violation;
+            stalled = 0;
+        } else {
+            stalled = stalled.saturating_add(1);
+        }
+
+        if max_violation < tol {
+            if cfg.shrink && shrunk {
+                active = free
+                    .iter()
+                    .copied()
+                    .filter(|&i| inst.z_norms_sq[i] > 0.0)
+                    .collect();
+                shrunk = false;
+                m_bar = f64::INFINITY;
+                best_violation = f64::INFINITY;
+                stalled = 0;
+                continue;
+            }
+            stats.converged = true;
+            break;
+        }
+        m_bar = cd::relax_m_bar(max_violation, tol);
+    }
+
+    SolveResult { theta, u, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CdMode;
+    use crate::data::synth;
+    use crate::problem::{Instance, Model};
+    use crate::solver::CdSolver;
+
+    fn cfg(solver_threads: usize) -> SolverConfig {
+        SolverConfig {
+            tol: 1e-8,
+            max_outer: 100_000,
+            solver_threads: Some(solver_threads),
+            cd_mode: CdMode::Async,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn atomic_add_accumulates() {
+        let slot = AtomicU64::new(1.5f64.to_bits());
+        atomic_add(&slot, 0.25);
+        atomic_add(&slot, -2.0);
+        assert_eq!(f64::from_bits(slot.into_inner()), -0.25);
+    }
+
+    #[test]
+    fn dot_atomic_matches_plain_dot() {
+        let ds = synth::toy_gaussian(41, 30, 1.0, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let u: Vec<f64> = (0..inst.dim()).map(|j| 0.1 * j as f64 - 0.05).collect();
+        let ua: Vec<AtomicU64> = u.iter().map(|&v| AtomicU64::new(v.to_bits())).collect();
+        for i in 0..inst.len() {
+            let plain = inst.z.row(i).dot(&u);
+            let atomic = dot_atomic(inst.z.row(i), &ua);
+            assert!((plain - atomic).abs() < 1e-12, "row {i}: {plain} vs {atomic}");
+        }
+    }
+
+    #[test]
+    fn async_solve_is_kkt_valid_and_converges() {
+        let ds = synth::toy_gaussian(42, 160, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        for threads in [2usize, 4] {
+            let r = CdSolver::new(cfg(threads)).solve(&inst, 1.0, inst.cold_start());
+            assert!(r.stats.converged, "threads={threads}");
+            assert!(inst.in_box(&r.theta, 1e-12));
+            let v = CdSolver::kkt_violation(&inst, 1.0, &r.theta);
+            assert!(v < 1e-6, "threads={threads}: violation {v}");
+        }
+    }
+
+    #[test]
+    fn async_matches_serial_objective() {
+        let ds = synth::toy_gaussian(43, 140, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let serial = CdSolver::new(SolverConfig {
+            solver_threads: Some(1),
+            ..cfg(1)
+        })
+        .solve(&inst, 0.7, inst.cold_start());
+        let wild = CdSolver::new(cfg(4)).solve(&inst, 0.7, inst.cold_start());
+        let gs = inst.dual_objective(0.7, &serial.theta);
+        let gw = inst.dual_objective(0.7, &wild.theta);
+        assert!((gs - gw).abs() < 1e-7, "{gs} vs {gw}");
+        assert!(crate::linalg::max_abs_diff(&serial.u, &wild.u) < 1e-5);
+    }
+
+    #[test]
+    fn async_respects_max_outer() {
+        let ds = synth::toy_gaussian(44, 200, 0.5, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let s = CdSolver::new(SolverConfig { max_outer: 2, tol: 1e-14, ..cfg(4) });
+        let r = s.solve(&inst, 10.0, inst.cold_start());
+        assert!(r.stats.outer_iters <= 2);
+        assert!(!r.stats.converged);
+    }
+
+    #[test]
+    fn async_mode_with_one_thread_is_bitwise_serial() {
+        // cd_threads() == 1 never reaches the parallel arms at all —
+        // cd_mode must be irrelevant there
+        let ds = synth::toy_gaussian(45, 120, 0.75, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let a = CdSolver::new(cfg(1)).solve(&inst, 0.9, inst.cold_start());
+        let b = CdSolver::new(SolverConfig { cd_mode: CdMode::Sync, ..cfg(1) })
+            .solve(&inst, 0.9, inst.cold_start());
+        assert_eq!(a.theta, b.theta);
+        assert_eq!(a.u, b.u);
+        assert_eq!(a.stats.grad_evals, b.stats.grad_evals);
+    }
+}

@@ -68,7 +68,7 @@ const MIN_COORDS_PER_SHARD: usize = 32;
 /// to serial sweeps (it switches back the moment a sweep sets a new
 /// best). Deterministic: the trigger depends only on the violation
 /// trajectory, which is itself deterministic per `(seed, threads)`.
-const STALL_LIMIT: usize = 8;
+pub(super) const STALL_LIMIT: usize = 8;
 
 /// Above this feature dimension, CSR shards keep their delta-u
 /// *sparsely* (a zero-init accumulator plus the touched column list):
@@ -108,8 +108,9 @@ fn use_sparse_delta(inst: &Instance) -> bool {
     inst.z.is_sparse() && inst.dim() > SPARSE_DELTA_MIN_DIM
 }
 
-/// Resolve how many shards this block runs.
-fn plan_shards(requested: usize, active_len: usize) -> usize {
+/// Resolve how many shards this block runs (shared with the async arm,
+/// so both modes collapse to serial sweeps at the same active-set size).
+pub(super) fn plan_shards(requested: usize, active_len: usize) -> usize {
     let t = par::effective_threads(requested, active_len.max(1));
     t.min((active_len / MIN_COORDS_PER_SHARD).max(1))
 }
@@ -255,7 +256,7 @@ pub(super) fn solve_free_with_u_par(
         } else {
             let mut max_violation = 0.0f64;
             let mut kept = Vec::with_capacity(active.len());
-            let ranges = inst.z.balanced_subset_shards(&active, t);
+            let ranges = inst.balanced_subset_shards(&active, t);
             let sweeps = {
                 let (theta_ro, u_ro, active_ro) = (&theta, &u, &active);
                 par::run_sharded_ranges(ranges, move |r| {

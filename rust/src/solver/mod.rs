@@ -8,19 +8,29 @@
 //! u = Zᵀθ, which is exactly the ŷ-offset construction of the lemma
 //! without materializing any sub-matrix.
 //!
-//! The sweep itself is sharded ([`cd_par`]): block-synchronous parallel
-//! CD over nnz-balanced shards of the active set, selected by
-//! [`crate::config::SolverConfig::cd_threads`] (`--solver-threads`;
-//! defaults to the scan's `threads`). `cd_threads = 1` is byte-identical
-//! to the serial solver; other values converge to the same optimum at
-//! `tol` and are deterministic per `(seed, threads)` — see README
-//! §Solver for the contract.
+//! The sweep itself is sharded over a persistent pinned worker pool
+//! ([`crate::linalg::par::SolverPool`]) in one of two modes selected by
+//! [`crate::config::CdMode`] (`--cd-mode`, default `sync`):
+//!
+//! * [`cd_par`] — block-synchronous parallel CD over nnz-balanced shards
+//!   of the active set. `cd_threads = 1` is byte-identical to the serial
+//!   solver; other values converge to the same optimum at `tol` and are
+//!   deterministic per `(seed, threads)`.
+//! * [`cd_async`] — opt-in asynchronous ("wild") CD: workers race
+//!   against one shared atomic u with no block barrier, with θ
+//!   reconciliation and a serial confirmation sweep guaranteeing the
+//!   returned point is KKT-valid at `tol`. Nondeterministic trajectory.
+//!
+//! Thread count comes from [`crate::config::SolverConfig::cd_threads`]
+//! (`--solver-threads`; defaults to the scan's `threads`) — see README
+//! §Solver for the full determinism contract.
 //!
 //! A projected-gradient solver ([`pg::PgSolver`]) is included as an
 //! independent cross-check used by the test suite (different algorithm,
 //! same optimum).
 
 pub mod cd;
+mod cd_async;
 mod cd_par;
 pub mod pg;
 

@@ -1,0 +1,176 @@
+//! Asynchronous ("wild") CD solver acceptance suite — the contract of
+//! `--cd-mode async` (`solver::cd_async`):
+//!
+//! 1. the async solve returns a KKT-valid point at the same `tol`;
+//! 2. downstream DVI screening decisions AND the KKT support/E-set
+//!    classification are identical to the sync solver's, for
+//!    svm/wsvm/lad × dense/CSR × {2, 4, 7} threads;
+//! 3. `cd_mode` is inert at `solver_threads = 1`: both modes are
+//!    byte-identical to the serial solver there;
+//! 4. `cd_mode = sync` (the default) stays byte-identical to the
+//!    pre-mode block-synchronous solver at every thread count — adding
+//!    the async arm must not perturb the sync arm's numerics;
+//! 5. `max_outer` still bounds the solve.
+//!
+//! What this suite deliberately does NOT assert: run-to-run bitwise
+//! reproducibility of the async arm. Wild sweeps race atomic updates on
+//! the shared u with no block barrier, so two async solves may take
+//! different trajectories — both valid. That trade is the arm's contract
+//! (see README §Solver); the sync default keeps the determinism suite
+//! (`integration_cd_par`) green unchanged.
+
+use dvi_screen::config::{CdMode, SolverConfig};
+use dvi_screen::data::{synth, Dataset};
+use dvi_screen::linalg::Storage;
+use dvi_screen::problem::{classify_kkt, Instance, Model};
+use dvi_screen::screening::dvi::{ball_params, dvi_scan};
+use dvi_screen::solver::CdSolver;
+
+const THREADS: [usize; 3] = [2, 4, 7];
+/// Solve tolerance; the KKT re-check allows 100× for the incremental
+/// u-maintenance drift all arms share.
+const TOL: f64 = 1e-9;
+/// KKT dead-band for the E-set comparison — three orders above the
+/// solve tolerance, so optimum differences (≈ tol) cannot flip a margin
+/// across the band edge.
+const E_BAND: f64 = 1e-6;
+
+fn cfg(mode: CdMode, solver_threads: usize) -> SolverConfig {
+    SolverConfig {
+        tol: TOL,
+        max_outer: 200_000,
+        solver_threads: Some(solver_threads),
+        cd_mode: mode,
+        ..Default::default()
+    }
+}
+
+/// Solve sync-serial and async on both storages of one dataset and hold
+/// every clause of the contract.
+fn check_model(model: Model, sparse: Dataset, c: f64, c_next: f64) {
+    assert!(sparse.x.is_sparse());
+    let dense = sparse.clone().into_storage(Storage::Dense);
+    for (ds, stag) in [(&dense, "dense"), (&sparse, "csr")] {
+        let inst = Instance::from_dataset(model, ds);
+        let serial = CdSolver::new(cfg(CdMode::Sync, 1)).solve(&inst, c, inst.cold_start());
+        assert!(serial.stats.converged, "{model:?}/{stag}: serial did not converge");
+
+        let (mid, rad) = ball_params(c, c_next);
+        let u_serial = inst.u_from_theta(&serial.theta);
+        let decisions_serial = dvi_scan(&inst, mid, rad, &u_serial);
+        let members_serial =
+            classify_kkt(&inst, &inst.w_from_theta(c, &serial.theta), E_BAND);
+
+        for threads in THREADS {
+            let wild =
+                CdSolver::new(cfg(CdMode::Async, threads)).solve(&inst, c, inst.cold_start());
+            let tag = format!("{model:?}/{stag}/async/t={threads}");
+            assert!(wild.stats.converged, "{tag}: did not converge");
+            assert!(inst.in_box(&wild.theta, 1e-12), "{tag}: θ leaves the box");
+            assert_eq!(wild.stats.active_coords, serial.stats.active_coords, "{tag}");
+
+            // KKT-valid at the same tol (fresh full-problem recompute)
+            let v = CdSolver::kkt_violation(&inst, c, &wild.theta);
+            assert!(v < 100.0 * TOL, "{tag}: violation {v}");
+
+            // identical downstream screening decisions
+            let u_wild = inst.u_from_theta(&wild.theta);
+            assert_eq!(
+                dvi_scan(&inst, mid, rad, &u_wild),
+                decisions_serial,
+                "{tag}: DVI screening decisions diverged"
+            );
+            // identical support/E-set classification
+            let members_wild =
+                classify_kkt(&inst, &inst.w_from_theta(c, &wild.theta), E_BAND);
+            assert_eq!(
+                members_wild.classes, members_serial.classes,
+                "{tag}: KKT membership diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn svm_async_solver_matches_sync() {
+    check_model(Model::Svm, synth::sparse_classes(911, 180, 60, 0.08), 0.5, 0.8);
+}
+
+#[test]
+fn weighted_svm_async_solver_matches_sync() {
+    check_model(Model::WeightedSvm, synth::sparse_classes(912, 150, 50, 0.1), 0.5, 0.8);
+}
+
+#[test]
+fn lad_async_solver_matches_sync() {
+    check_model(Model::Lad, synth::sparse_regression(913, 160, 40, 0.12, 0.2), 0.5, 0.8);
+}
+
+/// Clause 3: at one solver thread the mode knob must be completely
+/// inert — both spellings take the serial path, bit for bit.
+#[test]
+fn cd_mode_is_inert_at_one_thread() {
+    let ds = synth::sparse_classes(914, 140, 40, 0.1);
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    let a = CdSolver::new(cfg(CdMode::Sync, 1)).solve(&inst, 0.7, inst.cold_start());
+    let b = CdSolver::new(cfg(CdMode::Async, 1)).solve(&inst, 0.7, inst.cold_start());
+    assert_eq!(a.theta, b.theta);
+    assert_eq!(a.u, b.u);
+    assert_eq!(a.stats.outer_iters, b.stats.outer_iters);
+    assert_eq!(a.stats.grad_evals, b.stats.grad_evals);
+    assert_eq!(a.stats.coord_updates, b.stats.coord_updates);
+}
+
+/// Clause 4 — the sync-mode byte-identity pin: an explicit
+/// `cd_mode = sync` and the default config must both reproduce the
+/// block-synchronous solver exactly, at every thread count, run to run.
+/// This is the regression guard that adding the async arm (and routing
+/// the sweeps through the persistent pool) left the sync numerics
+/// untouched.
+#[test]
+fn sync_mode_is_byte_identical_to_default_at_all_thread_counts() {
+    let ds = synth::sparse_classes(915, 170, 48, 0.1);
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    for threads in [1usize, 2, 4, 7, 0] {
+        let default_cfg = SolverConfig {
+            tol: TOL,
+            max_outer: 200_000,
+            solver_threads: Some(threads),
+            ..Default::default()
+        };
+        assert_eq!(default_cfg.cd_mode, CdMode::Sync, "sync must stay the default");
+        let a = CdSolver::new(default_cfg).solve(&inst, 0.7, inst.cold_start());
+        let b = CdSolver::new(cfg(CdMode::Sync, threads)).solve(&inst, 0.7, inst.cold_start());
+        let c = CdSolver::new(cfg(CdMode::Sync, threads)).solve(&inst, 0.7, inst.cold_start());
+        for (other, otag) in [(&b, "explicit sync"), (&c, "repeat run")] {
+            assert_eq!(a.theta, other.theta, "t={threads} vs {otag}: θ drifted");
+            assert_eq!(a.u, other.u, "t={threads} vs {otag}: u drifted");
+            assert_eq!(a.stats.outer_iters, other.stats.outer_iters, "t={threads} {otag}");
+            assert_eq!(a.stats.grad_evals, other.stats.grad_evals, "t={threads} {otag}");
+            assert_eq!(
+                a.stats.final_violation.to_bits(),
+                other.stats.final_violation.to_bits(),
+                "t={threads} {otag}"
+            );
+        }
+    }
+}
+
+/// Clause 5: `max_outer` bounds wild rounds and confirmation sweeps
+/// alike — a hopeless tolerance terminates instead of spinning.
+#[test]
+fn async_max_outer_still_bounds_the_solve() {
+    let ds = synth::sparse_classes(916, 200, 40, 0.1);
+    let inst = Instance::from_dataset(Model::Svm, &ds);
+    let s = CdSolver::new(SolverConfig {
+        tol: 1e-16,
+        max_outer: 3,
+        solver_threads: Some(4),
+        cd_mode: CdMode::Async,
+        ..Default::default()
+    });
+    let r = s.solve(&inst, 10.0, inst.cold_start());
+    assert!(r.stats.outer_iters <= 3);
+    assert!(!r.stats.converged);
+    assert!(inst.in_box(&r.theta, 1e-12), "even a truncated solve stays feasible");
+}

@@ -1,0 +1,95 @@
+#!/usr/bin/env bash
+# Solver bench smoke: run the solver-focused bench_micro series (cd
+# sweep scaling, cd-mode sync vs async, pool reuse) at a CI-sized l and
+# hold BENCH_solver.json to its contract:
+#
+#   1. schema   — schema_version 1 with the cd_sweep / cd_mode /
+#                 pool_reuse series present;
+#   2. scaling  — on the LARGEST l in the run, the 4-thread sync sweep
+#                 must reach >= MIN_SPEEDUP x the serial sweep (the
+#                 tentpole's perf floor; ~2x expected, gated at 1.8 for
+#                 CI-runner noise, overridable via BENCH_MIN_SPEEDUP);
+#   3. pool     — the persistent pool spawns at most one worker per
+#                 shard slot across the whole run (i.e. <= 1 spawn per
+#                 solve, amortized ~0), while the scoped fallback spawns
+#                 per call;
+#   4. modes    — every cd_mode cell converged (asserted inside the
+#                 bench itself) and both modes report wall-clock.
+#
+# CI runners expose few cores; the gate reads the machine's parallelism
+# first and SKIPS the speedup assertion (not the run) below 4 cores.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+WORK=$(mktemp -d)
+trap 'rm -rf "$WORK"' EXIT
+
+# 100k rows keeps the full series under a couple of minutes in release
+# while staying big enough for the 4-thread sweep to beat spawn overhead
+MAX_L=${BENCH_MAX_L:-100000}
+MIN_SPEEDUP=${BENCH_MIN_SPEEDUP:-1.8}
+
+cargo build --release --quiet --benches
+cargo bench --bench bench_micro -- --max-l "$MAX_L" --out "$WORK" | tail -n 40
+
+test -s "$WORK/BENCH_solver.json" || {
+  echo "BENCH_solver.json was not written"; exit 1; }
+
+if command -v python3 > /dev/null; then
+  python3 - "$WORK/BENCH_solver.json" "$MIN_SPEEDUP" <<'EOF'
+import json, os, sys
+
+b = json.load(open(sys.argv[1]))
+min_speedup = float(sys.argv[2])
+assert b["schema_version"] == 1, b["schema_version"]
+series = b["series"]
+kinds = {e["series"] for e in series}
+assert {"cd_sweep", "cd_mode", "pool_reuse"} <= kinds, sorted(kinds)
+
+# -- scaling gate: 4-thread sync >= MIN_SPEEDUP x serial on the largest l
+sweeps = [e for e in series if e["series"] == "cd_sweep"]
+big = max(e["l"] for e in sweeps)
+cores = os.cpu_count() or 1
+checked = 0
+for arm in ("full", "screened"):
+    cells = {e["threads"]: e for e in sweeps
+             if e["l"] == big and e["arm"] == arm and e["storage"] == "dense"}
+    if 1 not in cells or 4 not in cells:
+        continue
+    x = cells[1]["min_s"] / cells[4]["min_s"]
+    print(f"   cd_sweep dense l={big} {arm}: 4-thread sync = {x:.2f}x serial")
+    if cores >= 4:
+        assert x >= min_speedup, (
+            f"{arm}: 4-thread sync only {x:.2f}x serial on l={big} "
+            f"(gate {min_speedup}x, {cores} cores)")
+        checked += 1
+if cores >= 4:
+    assert checked > 0, "no l=100k dense cells found to gate on"
+else:
+    print(f"   ({cores} cores: speedup gate skipped, series still ran)")
+
+# -- pool accounting: persistent workers, not per-call spawns
+pool = {e["kind"]: e for e in series if e["series"] == "pool_reuse"}
+routed, scoped = pool["routed"], pool["scoped"]
+assert routed["workers_spawned"] <= routed["threads"], routed
+spawn_per_call = routed["workers_spawned"] / max(routed["iters"], 1)
+assert spawn_per_call <= 1.0, routed
+assert scoped["os_threads_spawned"] >= scoped["iters"], scoped
+print(f"   pool: {routed['workers_spawned']} spawns over {routed['iters']} calls "
+      f"vs scoped {scoped['os_threads_spawned']} over {scoped['iters']}")
+
+# -- cd_mode series shape: sync & async rows for every (l, storage)
+modes = [e for e in series if e["series"] == "cd_mode"]
+assert {e["mode"] for e in modes} == {"sync", "async"}, modes
+for e in modes:
+    assert e["min_s"] > 0, e
+print("   BENCH_solver.json: schema + gates OK")
+EOF
+else
+  echo "   (python3 unavailable; grep-level checks only)"
+  grep -q '"schema_version":1' "$WORK/BENCH_solver.json"
+  grep -q '"series":"cd_mode"' "$WORK/BENCH_solver.json"
+  grep -q '"series":"pool_reuse"' "$WORK/BENCH_solver.json"
+fi
+
+echo "bench smoke: OK"
