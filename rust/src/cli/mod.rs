@@ -37,7 +37,9 @@ USAGE:
            [--threads N] [--support-only] [--out FILE]
   dvi serve [--workers N] [--cache-mb MB] [--model-cache-mb MB]
            [--preload ds1,ds2 [--preload-scale S]]
-           line-JSON requests on stdin
+           [--listen ADDR] [--socket PATH]  (network mode; default: stdin)
+           [--model-dir DIR] [--max-inflight N] [--queue-cost N]
+           line-JSON requests on stdin, TCP, or a unix socket
   dvi gen-data --dataset NAME --out FILE [--scale S]
   dvi info                           runtime + artifact status
   dvi help
@@ -48,14 +50,32 @@ SERVE:
   {"kind": "screen", ...} for batch DVI screening of (c_prev, c) pairs
   against one resident instance, {"kind": "train", ...} /
   {"kind": "predict", ...} for the model-artifact loop,
-  {"kind": "cache", ...} to list/evict resident cache entries, and
-  {"batch": [...]} to fan a list of any of these across the pool and get
-  one ordered response line back. Instances are cached in an LRU keyed
-  by (dataset, model, storage, scale); --cache-mb sets its byte budget
-  (default 256, 0 disables) and --model-cache-mb the trained-model
-  cache's (default 64). --preload builds the named registry datasets
-  into the instance cache before serving (at --preload-scale, default
-  1.0), logging per-dataset build time. See README.md.
+  {"kind": "cache", ...} to list/evict resident cache entries,
+  {"kind": "stats", ...} for one JSON snapshot of every metrics family,
+  and {"batch": [...]} to fan a list of any of these across the pool and
+  get one ordered response line back. Instances are cached in an LRU
+  keyed by (dataset, model, storage, scale); --cache-mb sets its byte
+  budget (default 256, 0 disables) and --model-cache-mb the
+  trained-model cache's (default 64). --preload builds the named
+  registry datasets into the instance cache before serving (at
+  --preload-scale, default 1.0), logging per-dataset build time.
+
+  --listen HOST:PORT and/or --socket PATH serve the same protocol to
+  any number of concurrent network clients multiplexed onto one worker
+  pool and one warm cache (port 0 picks a free port; the bound address
+  is logged as `[serve] listening on ...`). Per connection, responses
+  replay in input order after EOF, exactly like stdin mode; add
+  "stream": true to a request (or batch line) to emit each response as
+  its job completes instead — entries keep their ids, so streamed
+  output re-sorted by id is byte-identical to the buffered session
+  under "timings": false. --max-inflight caps one connection's
+  in-flight requests (typed "code": "rejected" errors) and --queue-cost
+  bounds the global queued cost estimate (typed "code": "overloaded");
+  0 = unlimited. --model-dir DIR auto-loads every *.pallas-model
+  artifact into the model cache at startup (corrupt files are skipped
+  with a warning) and lets train requests carry "persist": true to
+  write their artifact there — a restarted server answers predict by
+  model_id with zero retrains. See README.md.
 
 MODEL:
   `dvi train` solves one (dataset, model, C) problem and writes a
@@ -388,6 +408,7 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
             ..Default::default()
         },
         save: flags.get("out").cloned(),
+        persist_dir: None,
         report_support: flags.contains_key("print-support"),
     };
     let outcome = crate::coordinator::run_job(&JobSpec::train(0, spec));
@@ -470,6 +491,7 @@ fn cmd_predict(args: &[String]) -> Result<(), String> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<(), String> {
+    use crate::serve::{ModelRegistry, ServeOptions, Server};
     let (_, flags) = parse_flags(args)?;
     let workers = get_usize(&flags, "workers", 2)?;
     // instance-cache budget in MiB; 0 disables residency entirely
@@ -494,9 +516,58 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
             }
         }
     }
+
+    let mut opts = ServeOptions::default();
+    opts.max_inflight = get_usize(&flags, "max-inflight", 0)? as u64;
+    opts.queue_cost = get_usize(&flags, "queue-cost", 0)? as u64;
+    if let Some(dir) = flags.get("model-dir") {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("--model-dir {}: {e}", dir.display()))?;
+        let pool = svc.pool_handle();
+        let scan = ModelRegistry::new(&dir)
+            .load_all(&pool.models, &pool.metrics)
+            .map_err(|e| format!("--model-dir {}: {e}", dir.display()))?;
+        for (id, file) in &scan.loaded {
+            eprintln!("[serve] model-dir: loaded {id} from {}", file.display());
+        }
+        for (file, err) in &scan.skipped {
+            eprintln!("[serve] model-dir: skipped {}: {err}", file.display());
+        }
+        opts.model_dir = Some(dir);
+    }
+
+    let listen = flags.get("listen").cloned();
+    let socket = flags.get("socket").cloned();
+    if listen.is_some() || socket.is_some() {
+        // network mode: accept loops own the process until killed
+        let mut server = Server::new(svc.pool_handle(), opts);
+        if let Some(addr) = &listen {
+            let bound = server.bind_tcp(addr).map_err(|e| format!("--listen {addr}: {e}"))?;
+            eprintln!("[serve] listening on {bound}");
+        }
+        if let Some(path) = &socket {
+            #[cfg(unix)]
+            {
+                let p = std::path::Path::new(path);
+                server.bind_unix(p).map_err(|e| format!("--socket {path}: {e}"))?;
+                eprintln!("[serve] listening on unix:{path}");
+            }
+            #[cfg(not(unix))]
+            return Err(format!("--socket {path}: unix sockets are not available here"));
+        }
+        server.wait();
+        return Ok(());
+    }
+
+    // stdin/stdout mode: admission caps apply here too (0 = unlimited),
+    // and the session shares the same connection handler as the network
+    // listeners, so byte behavior is identical
+    if opts.max_inflight != 0 || opts.queue_cost != 0 || opts.model_dir.is_some() {
+        svc.set_serve_options(opts);
+    }
     let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    svc.serve(stdin.lock(), stdout.lock()).map_err(|e| e.to_string())?;
+    svc.serve(stdin.lock(), std::io::stdout()).map_err(|e| e.to_string())?;
     eprintln!("{}", svc.metrics().render());
     svc.shutdown();
     Ok(())

@@ -29,6 +29,10 @@ pub enum JobKind {
     Predict(PredictSpec),
     /// Introspect/evict the instance and model caches.
     Cache(CacheSpec),
+    /// Snapshot every metrics family (counters, gauges, histograms, the
+    /// process-wide solver-pool counters) in one response — the scrape
+    /// endpoint for a live server.
+    Stats,
 }
 
 /// A scheduled unit of work.
@@ -123,6 +127,7 @@ pub enum JobReply {
     Train(TrainSummary),
     Predict(PredictSummary),
     Cache(CacheSummary),
+    Stats(StatsSummary),
 }
 
 impl JobReply {
@@ -157,6 +162,13 @@ impl JobReply {
     pub fn as_cache(&self) -> Option<&CacheSummary> {
         match self {
             JobReply::Cache(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_stats(&self) -> Option<&StatsSummary> {
+        match self {
+            JobReply::Stats(s) => Some(s),
             _ => None,
         }
     }
@@ -267,6 +279,11 @@ pub struct TrainSpec {
     pub solver: SolverConfig,
     /// Persist the artifact here after training.
     pub save: Option<String>,
+    /// Persist the artifact into this model-registry directory as
+    /// `<model_id>.pallas-model` (the serve layer maps `"persist": true`
+    /// to its `--model-dir`); a restarted server re-loads it without
+    /// retraining.
+    pub persist_dir: Option<String>,
     /// Echo the full support-set indices in the summary (`dvi train
     /// --print-support`; the CI smoke leg diffs the parallel solver's
     /// support set against the serial one with this).
@@ -298,6 +315,8 @@ pub struct TrainSummary {
     pub artifact_bytes: usize,
     /// Where the artifact was persisted, when requested.
     pub saved: Option<String>,
+    /// Registry path the artifact landed at under [`TrainSpec::persist_dir`].
+    pub persisted: Option<String>,
     /// Ascending E-set indices, when [`TrainSpec::report_support`].
     pub support_indices: Option<Vec<u32>>,
     pub solve_secs: f64,
@@ -376,6 +395,21 @@ pub struct CacheSummary {
     pub evicted: Option<bool>,
 }
 
+/// What a stats job reports (`"kind": "stats"`): one point-in-time
+/// snapshot of every metrics family in the pool's registry, plus the
+/// process-wide solver-pool counters. The snapshot races in-flight jobs
+/// exactly like `"kind": "cache"` does, so reproducible values need
+/// `--workers 1` or a quiesced session.
+#[derive(Clone, Debug)]
+pub struct StatsSummary {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, u64)>,
+    /// Histogram summaries — timing-derived, so the encoder only emits
+    /// them under `"timings": true`.
+    pub histograms: Vec<crate::metrics::HistStat>,
+    pub pool: crate::linalg::par::PoolStats,
+}
+
 /// Execute a job without resident caches: transient zero-budget caches
 /// make this path identical to the pooled one minus residency. The CLI's
 /// one-shot `dvi path` / `dvi train` / `dvi predict` use it.
@@ -396,6 +430,7 @@ pub fn run_job_cached(
         JobKind::Train(s) => run_train(s, cache, models, metrics).map(JobReply::Train),
         JobKind::Predict(s) => run_predict(s, models, metrics).map(JobReply::Predict),
         JobKind::Cache(s) => run_cache(s, cache, models, metrics).map(JobReply::Cache),
+        JobKind::Stats => Ok(JobReply::Stats(run_stats(metrics))),
     };
     JobOutcome { id: spec.id, timings: spec.timings, result }
 }
@@ -618,6 +653,19 @@ fn run_train(
     if let Some(path) = &spec.save {
         std::fs::write(path, &encoded).map_err(|e| format!("train: save {path}: {e}"))?;
     }
+    // registry persistence: the filename IS the deterministic model id,
+    // so retraining the same problem overwrites (idempotent) instead of
+    // accumulating duplicates, and a restarted server's registry scan
+    // re-loads the artifact under the same resident id
+    let persisted = match &spec.persist_dir {
+        Some(dir) => {
+            let path = std::path::Path::new(dir).join(format!("{}.pallas-model", trained.id()));
+            std::fs::write(&path, &encoded)
+                .map_err(|e| format!("train: persist {}: {e}", path.display()))?;
+            Some(path.to_string_lossy().into_owned())
+        }
+        None => None,
+    };
     let summary = TrainSummary {
         model_id: trained.id(),
         dataset: spec.dataset.clone(),
@@ -630,6 +678,7 @@ fn run_train(
         active: trained.active.len(),
         artifact_bytes: encoded.len(),
         saved: spec.save.clone(),
+        persisted,
         support_indices: spec.report_support.then(|| trained.support.clone()),
         solve_secs,
     };
@@ -709,6 +758,17 @@ fn run_predict(
         labels,
         predict_secs: t.elapsed().as_secs_f64(),
     })
+}
+
+/// Snapshot every metrics family plus the process-wide solver-pool
+/// counters (infallible — a scrape never errors).
+fn run_stats(metrics: &Registry) -> StatsSummary {
+    StatsSummary {
+        counters: metrics.counters_snapshot(),
+        gauges: metrics.gauges_snapshot(),
+        histograms: metrics.histograms_snapshot(),
+        pool: crate::linalg::par::pool_stats(),
+    }
 }
 
 /// Execute a cache introspection/evict op against both resident caches.
@@ -948,6 +1008,7 @@ mod tests {
             c,
             solver: SolverConfig { tol: 1e-7, ..Default::default() },
             save: None,
+            persist_dir: None,
             report_support: false,
         }
     }
@@ -1100,6 +1161,53 @@ mod tests {
         let r = out.result.expect("predict from file failed");
         assert_eq!(r.as_predict().unwrap().scores.len(), 1);
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn train_persist_dir_writes_id_named_artifact() {
+        let dir = std::env::temp_dir().join(format!("dvi_persist_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut spec = quick_train("toy1", 0.5);
+        spec.persist_dir = Some(dir.to_str().unwrap().to_string());
+        let out = run_job(&JobSpec::train(0, spec.clone()));
+        let reply = out.result.expect("train failed");
+        let t = reply.as_train().unwrap();
+        let path = dir.join(format!("{}.pallas-model", t.model_id));
+        assert_eq!(t.persisted.as_deref(), path.to_str());
+        assert!(t.saved.is_none(), "persist_dir is independent of save");
+        let loaded = model_format::load(&path).expect("persisted artifact loads");
+        assert_eq!(loaded.id(), t.model_id, "filename is the content id");
+        // retrain is an idempotent overwrite, not an accumulation
+        run_job(&JobSpec::train(1, spec)).result.expect("retrain failed");
+        let entries = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(entries, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn train_persist_into_missing_dir_is_error_not_panic() {
+        let mut spec = quick_train("toy1", 0.5);
+        spec.persist_dir = Some("/no/such/registry-dir".into());
+        let out = run_job(&JobSpec::train(0, spec));
+        let err = out.result.unwrap_err();
+        assert!(err.contains("persist"), "{err}");
+    }
+
+    #[test]
+    fn stats_job_snapshots_every_family() {
+        let cache = InstanceCache::new(0);
+        let models = ModelCache::new(0);
+        let m = Registry::default();
+        m.counter("service_requests").add(2);
+        m.gauge("serve_queue_cost").set(5);
+        m.histogram("job_secs").record_secs(0.125);
+        let spec = JobSpec { id: 0, kind: JobKind::Stats, timings: false, after: None };
+        let out = run_job_cached(&spec, &cache, &models, &m);
+        let reply = out.result.expect("stats never fails");
+        let s = reply.as_stats().unwrap();
+        assert!(s.counters.iter().any(|(n, v)| n == "service_requests" && *v == 2));
+        assert!(s.gauges.iter().any(|(n, v)| n == "serve_queue_cost" && *v == 5));
+        assert!(s.histograms.iter().any(|h| h.name == "job_secs" && h.count == 1));
     }
 
     #[test]

@@ -3,9 +3,9 @@
 //! jobs on a thread worker pool backed by a resident
 //! [`cache::InstanceCache`] and a sibling [`cache::ModelCache`] of
 //! trained models, tracks metrics, and exposes a line-oriented JSON
-//! service with single, screen, train, predict, cache, and batch
+//! service with single, screen, train, predict, cache, stats, and batch
 //! request kinds (the "screening service" the examples and the CLI
-//! drive).
+//! drive). The network front-end over this lives in [`crate::serve`].
 
 pub mod cache;
 pub mod job;
@@ -16,7 +16,7 @@ pub use cache::{CacheKey, InstanceCache, InstanceEntryInfo, ModelCache, ModelEnt
 pub use job::{
     run_job, run_job_cached, CacheOp, CacheSpec, CacheSummary, JobKind, JobOutcome, JobReply,
     JobSpec, JobSummary, ModelRef, PredictInput, PredictSpec, PredictSummary, ScreenSpec,
-    ScreenSummary, TrainSpec, TrainSummary,
+    ScreenSummary, StatsSummary, TrainSpec, TrainSummary,
 };
 pub use pool::WorkerPool;
-pub use service::ScreeningService;
+pub use service::{ParsedRequest, ScreeningService};

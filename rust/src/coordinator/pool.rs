@@ -20,7 +20,7 @@ use super::job::{run_job_cached, JobOutcome, JobSpec};
 use crate::metrics::{Counter, Registry};
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -67,7 +67,11 @@ fn release_dependents(id: u64, deps: &Mutex<DepState>, tx: &Sender<Msg>) {
 /// Fixed-size worker pool with a shared resident instance cache.
 pub struct WorkerPool {
     tx: Sender<Msg>,
-    results_rx: Receiver<JobOutcome>,
+    /// Mutex-wrapped so the pool is `Sync`: the serve subsystem shares
+    /// one pool behind an `Arc` and drains results from a dispatcher
+    /// thread. There is exactly one consumer at a time, so the lock is
+    /// uncontended in practice.
+    results_rx: Mutex<Receiver<JobOutcome>>,
     /// A sender the pool keeps for itself so the drop path can fail out
     /// parked jobs whose dependency never ran (workers hold clones).
     results_tx: Sender<JobOutcome>,
@@ -224,7 +228,7 @@ impl WorkerPool {
         }
         WorkerPool {
             tx,
-            results_rx,
+            results_rx: Mutex::new(results_rx),
             results_tx,
             rx,
             workers,
@@ -285,7 +289,17 @@ impl WorkerPool {
 
     /// Block for the next finished job.
     pub fn recv(&self) -> Option<JobOutcome> {
-        self.results_rx.recv().ok()
+        self.results_rx.lock().unwrap().recv().ok()
+    }
+
+    /// Block for the next finished job, giving up after `timeout` — the
+    /// serve dispatcher uses this to interleave result routing with
+    /// shutdown checks without busy-waiting.
+    pub fn recv_timeout(
+        &self,
+        timeout: std::time::Duration,
+    ) -> Result<JobOutcome, RecvTimeoutError> {
+        self.results_rx.lock().unwrap().recv_timeout(timeout)
     }
 
     /// Submit a batch and wait for all results (order by job id).
@@ -461,6 +475,7 @@ mod tests {
                 c: 0.5,
                 solver: SolverConfig { tol: 1e-6, ..Default::default() },
                 save: None,
+                persist_dir: None,
                 report_support: false,
             },
         ));
@@ -499,6 +514,7 @@ mod tests {
                 c: 0.5,
                 solver: SolverConfig { tol: 1e-6, ..Default::default() },
                 save: None,
+                persist_dir: None,
                 report_support: false,
             },
         ));
@@ -517,6 +533,7 @@ mod tests {
                 c: 0.5,
                 solver: SolverConfig { tol: 1e-6, ..Default::default() },
                 save: None,
+                persist_dir: None,
                 report_support: false,
             },
         ));

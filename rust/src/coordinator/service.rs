@@ -108,10 +108,29 @@
 //! Lists both resident caches (key, bytes, hits per entry); the evict op
 //! removes one entry and reports whether it existed.
 //!
+//! ## Stats requests
+//!
+//! ```json
+//! {"kind": "stats", "timings": false}
+//! ```
+//!
+//! One point-in-time snapshot of every metrics family — all counters and
+//! gauges in the pool's registry plus the process-wide solver-pool
+//! spawn/dispatch counters; histogram summaries are timing-derived and
+//! only appear under `"timings": true`. This is the scrape endpoint for
+//! a live server (no log parsing, no stderr). Like `"kind": "cache"` it
+//! races whatever jobs are in flight.
+//!
 //! Responses are written in *input order* once EOF is reached (jobs still
 //! execute concurrently in between), so a scripted session's output is
 //! reproducible. Numeric fields are validated at parse so malformed
 //! requests produce an error response line instead of a worker panic.
+//! The serve subsystem ([`crate::serve`]) runs this same per-connection
+//! protocol over TCP/unix sockets, adds `"stream": true` per-entry
+//! framing and admission control, and maps `"persist": true` train
+//! requests into its `--model-dir` registry; [`ScreeningService::serve`]
+//! is a thin stdin/stdout adapter over that handler, byte-identical to
+//! the historical loop.
 
 use super::cache::{CacheKey, InstanceCache, ModelCache};
 use super::job::{
@@ -122,12 +141,13 @@ use super::pool::WorkerPool;
 use crate::config::json::{parse_json, Json};
 use crate::config::{RunConfig, SolverConfig};
 use crate::problem::Model;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
+use std::sync::Arc;
 
 /// Cap on batch entries per line and screen pairs per job: a huge request
 /// must degrade to an error line, not an OOM.
-const MAX_BATCH: usize = 10_000;
+pub(crate) const MAX_BATCH: usize = 10_000;
 const MAX_PAIRS: usize = 100_000;
 /// Caps on inline predict batches (rows and total floats).
 const MAX_PREDICT_ROWS: usize = 100_000;
@@ -142,25 +162,26 @@ pub struct ParsedRequest {
     /// this session has completed. Lets e.g. a predict depend on a
     /// same-session train with `--workers` > 1.
     pub after: Option<u64>,
+    /// `"stream": true` — emit this request's response(s) as each job
+    /// completes instead of buffering for input-order replay. Honored by
+    /// the serve-layer connection handler; the buffered default keeps the
+    /// historical determinism contract.
+    pub stream: bool,
+    /// `"persist": true` on a train request — persist the artifact into
+    /// the server's `--model-dir` registry. The serve layer resolves the
+    /// directory (and rejects the flag when no registry is configured).
+    pub persist: bool,
 }
 
-/// Service wrapping a pool with JSON request/response framing.
+/// Service wrapping a pool with JSON request/response framing. The pool
+/// is behind an `Arc` so the serve subsystem can multiplex many network
+/// connections onto the same workers/caches ([`Self::pool_handle`]).
 pub struct ScreeningService {
-    pool: WorkerPool,
+    pool: Arc<WorkerPool>,
     next_id: u64,
-}
-
-/// A response owed for one input line (or one batch entry).
-enum Pending {
-    /// Already answerable (parse/validation error).
-    Ready(Json),
-    /// Awaiting the outcome of job `id`.
-    Job(u64),
-}
-
-enum LineSlot {
-    Single(Pending),
-    Batch(Vec<Pending>),
+    /// Admission/registry options for [`Self::serve`] sessions. Defaults
+    /// to fully open — the historical stdin-loop behavior.
+    serve_opts: crate::serve::ServeOptions,
 }
 
 impl ScreeningService {
@@ -173,16 +194,34 @@ impl ScreeningService {
     /// (0 disables residency — every job rebuilds, like the pre-cache
     /// service).
     pub fn with_cache(workers: usize, cache_bytes: usize) -> ScreeningService {
-        ScreeningService { pool: WorkerPool::with_cache(workers, cache_bytes), next_id: 0 }
+        ScreeningService {
+            pool: Arc::new(WorkerPool::with_cache(workers, cache_bytes)),
+            next_id: 0,
+            serve_opts: Default::default(),
+        }
     }
 
     /// Explicit byte budgets for both the instance cache and the
     /// trained-model cache (`dvi serve --cache-mb/--model-cache-mb`).
     pub fn with_caches(workers: usize, cache_bytes: usize, model_bytes: usize) -> ScreeningService {
         ScreeningService {
-            pool: WorkerPool::with_caches(workers, cache_bytes, model_bytes),
+            pool: Arc::new(WorkerPool::with_caches(workers, cache_bytes, model_bytes)),
             next_id: 0,
+            serve_opts: Default::default(),
         }
+    }
+
+    /// Apply admission-control / model-registry options to later
+    /// [`Self::serve`] sessions (`dvi serve --max-inflight/--queue-cost/
+    /// --model-dir` in stdin mode).
+    pub fn set_serve_options(&mut self, opts: crate::serve::ServeOptions) {
+        self.serve_opts = opts;
+    }
+
+    /// A shared handle on the underlying pool — what [`crate::serve::Server`]
+    /// multiplexes network connections onto.
+    pub fn pool_handle(&self) -> Arc<WorkerPool> {
+        self.pool.clone()
     }
 
     /// Warm the instance cache before serving (`dvi serve --preload`):
@@ -221,11 +260,23 @@ impl ScreeningService {
             };
             let key = CacheKey::new(name, model, crate::linalg::Storage::Auto, scale);
             let t = std::time::Instant::now();
-            let result = self
-                .pool
-                .cache
-                .get_or_build(&key, &self.pool.metrics)
-                .map(|inst| (model, t.elapsed().as_secs_f64(), inst.approx_bytes()));
+            // a panicking dataset generator (degenerate shape assert, OOM
+            // guard) must log-and-continue like any failed build — preload
+            // is best-effort warm-up, never a startup abort
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.pool.cache.get_or_build(&key, &self.pool.metrics)
+            }))
+            .unwrap_or_else(|p| {
+                let msg = if let Some(s) = p.downcast_ref::<&str>() {
+                    (*s).to_string()
+                } else if let Some(s) = p.downcast_ref::<String>() {
+                    s.clone()
+                } else {
+                    "unknown panic".to_string()
+                };
+                Err(format!("preload panicked: {msg}"))
+            })
+            .map(|inst| (model, t.elapsed().as_secs_f64(), inst.approx_bytes()));
             out.push((name.to_string(), result));
         }
         out
@@ -268,17 +319,25 @@ impl ScreeningService {
                 Some(a as u64)
             }
         };
+        // stream framing is likewise kind-agnostic; the per-kind parsers
+        // skip the key the same way
+        let stream = match obj.get("stream") {
+            None => false,
+            Some(v) => v.as_bool().ok_or("stream: bool")?,
+        };
         let mut req = match kind {
             "path" => Self::parse_path_object(obj),
             "screen" => Self::parse_screen_object(obj),
             "train" => Self::parse_train_object(obj),
             "predict" => Self::parse_predict_object(obj),
             "cache" => Self::parse_cache_object(obj),
+            "stats" => Self::parse_stats_object(obj),
             other => Err(format!(
-                "unknown request kind `{other}` (path | screen | train | predict | cache)"
+                "unknown request kind `{other}` (path | screen | train | predict | cache | stats)"
             )),
         }?;
         req.after = after;
+        req.stream = stream;
         Ok(req)
     }
 
@@ -287,7 +346,7 @@ impl ScreeningService {
         let mut timings = true;
         for (k, v) in obj {
             match k.as_str() {
-                "kind" | "after" => {} // dispatched by the caller
+                "kind" | "after" | "stream" => {} // dispatched by the caller
                 "timings" => timings = v.as_bool().ok_or("timings: bool")?,
                 "dataset" => cfg.dataset = v.as_str().ok_or("dataset: string")?.to_string(),
                 "model" => cfg.model = v.as_str().ok_or("model: string")?.to_string(),
@@ -338,7 +397,13 @@ impl ScreeningService {
         // request like {"scale": 1e18} would reach the worker and abort
         // it inside the dataset generator's allocation
         cfg.validate_semantics().map_err(|e| e.to_string())?;
-        Ok(ParsedRequest { kind: JobKind::Path(cfg), timings, after: None })
+        Ok(ParsedRequest {
+            kind: JobKind::Path(cfg),
+            timings,
+            after: None,
+            stream: false,
+            persist: false,
+        })
     }
 
     fn parse_screen_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
@@ -356,7 +421,7 @@ impl ScreeningService {
         let mut timings = true;
         for (k, v) in obj {
             match k.as_str() {
-                "kind" | "after" => {}
+                "kind" | "after" | "stream" => {}
                 "timings" => timings = v.as_bool().ok_or("timings: bool")?,
                 "dataset" => spec.dataset = v.as_str().ok_or("dataset: string")?.to_string(),
                 "model" => {
@@ -438,7 +503,13 @@ impl ScreeningService {
         if spec.pairs.is_empty() {
             return Err("screen: `pairs` must be a non-empty array".into());
         }
-        Ok(ParsedRequest { kind: JobKind::Screen(spec), timings, after: None })
+        Ok(ParsedRequest {
+            kind: JobKind::Screen(spec),
+            timings,
+            after: None,
+            stream: false,
+            persist: false,
+        })
     }
 
     fn parse_train_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
@@ -450,12 +521,14 @@ impl ScreeningService {
             c: f64::NAN,
             solver: SolverConfig::default(),
             save: None,
+            persist_dir: None,
             report_support: false,
         };
         let mut timings = true;
+        let mut persist = false;
         for (k, v) in obj {
             match k.as_str() {
-                "kind" | "after" => {}
+                "kind" | "after" | "stream" => {}
                 "timings" => timings = v.as_bool().ok_or("timings: bool")?,
                 "dataset" => spec.dataset = v.as_str().ok_or("dataset: string")?.to_string(),
                 "model" => {
@@ -495,6 +568,9 @@ impl ScreeningService {
                 "solver_threads" => spec.solver.solver_threads = Some(parse_threads(v)?),
                 "cd_mode" => spec.solver.cd_mode = parse_cd_mode(v)?,
                 "save" => spec.save = Some(v.as_str().ok_or("save: string")?.to_string()),
+                // the serve layer rewrites this into `persist_dir` once it
+                // knows the server's --model-dir; here it only flags intent
+                "persist" => persist = v.as_bool().ok_or("persist: bool")?,
                 other => return Err(format!("unknown train field `{other}`")),
             }
         }
@@ -504,7 +580,13 @@ impl ScreeningService {
         if spec.c.is_nan() {
             return Err("train: `c` is required".into());
         }
-        Ok(ParsedRequest { kind: JobKind::Train(spec), timings, after: None })
+        Ok(ParsedRequest {
+            kind: JobKind::Train(spec),
+            timings,
+            after: None,
+            stream: false,
+            persist,
+        })
     }
 
     fn parse_predict_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
@@ -520,7 +602,7 @@ impl ScreeningService {
         let mut timings = true;
         for (k, v) in obj {
             match k.as_str() {
-                "kind" | "after" => {}
+                "kind" | "after" | "stream" => {}
                 "timings" => timings = v.as_bool().ok_or("timings: bool")?,
                 "model_id" => model_id = Some(v.as_str().ok_or("model_id: string")?.to_string()),
                 "model_file" => {
@@ -613,6 +695,8 @@ impl ScreeningService {
             kind: JobKind::Predict(PredictSpec { model, input, threads, support_only }),
             timings,
             after: None,
+            stream: false,
+            persist: false,
         })
     }
 
@@ -628,7 +712,7 @@ impl ScreeningService {
         let mut timings = true;
         for (k, v) in obj {
             match k.as_str() {
-                "kind" | "after" => {}
+                "kind" | "after" | "stream" => {}
                 "timings" => timings = v.as_bool().ok_or("timings: bool")?,
                 "op" => op = v.as_str().ok_or("op: string")?.to_string(),
                 "target" => target = Some(v.as_str().ok_or("target: string")?.to_string()),
@@ -691,7 +775,33 @@ impl ScreeningService {
             },
             other => return Err(format!("unknown cache op `{other}` (list | evict)")),
         };
-        Ok(ParsedRequest { kind: JobKind::Cache(CacheSpec { op }), timings, after: None })
+        Ok(ParsedRequest {
+            kind: JobKind::Cache(CacheSpec { op }),
+            timings,
+            after: None,
+            stream: false,
+            persist: false,
+        })
+    }
+
+    /// `{"kind": "stats"}` — no fields beyond the kind-agnostic ones; a
+    /// selector typo must answer with an error, not a silent full dump.
+    fn parse_stats_object(obj: &BTreeMap<String, Json>) -> Result<ParsedRequest, String> {
+        let mut timings = true;
+        for (k, v) in obj {
+            match k.as_str() {
+                "kind" | "after" | "stream" => {}
+                "timings" => timings = v.as_bool().ok_or("timings: bool")?,
+                other => return Err(format!("unknown stats field `{other}`")),
+            }
+        }
+        Ok(ParsedRequest {
+            kind: JobKind::Stats,
+            timings,
+            after: None,
+            stream: false,
+            persist: false,
+        })
     }
 
     /// Submit a path run; returns its job id.
@@ -711,20 +821,6 @@ impl ScreeningService {
         self.next_id += 1;
         self.pool.submit(JobSpec { id, kind, timings, after });
         id
-    }
-
-    /// A dependency edge may only name an already-submitted job of this
-    /// service — parse-failed lines consume no id, so the edge must be
-    /// rejected (not parked forever) when it points past the last one.
-    fn check_after(&self, after: Option<u64>) -> Result<(), String> {
-        match after {
-            Some(a) if a >= self.next_id => Err(format!(
-                "after: {a} does not name an already-submitted job \
-                 (next id is {})",
-                self.next_id
-            )),
-            _ => Ok(()),
-        }
     }
 
     /// Block for the next result.
@@ -823,6 +919,9 @@ impl ScreeningService {
                 if let Some(p) = &s.saved {
                     o.insert("saved".into(), Json::Str(p.clone()));
                 }
+                if let Some(p) = &s.persisted {
+                    o.insert("persisted".into(), Json::Str(p.clone()));
+                }
                 if outcome.timings {
                     o.insert("solve_secs".into(), Json::Float(s.solve_secs));
                 }
@@ -882,6 +981,53 @@ impl ScreeningService {
                     o.insert("evicted".into(), Json::Bool(e));
                 }
             }
+            Ok(JobReply::Stats(s)) => {
+                o.insert("ok".into(), Json::Bool(true));
+                o.insert("kind".into(), Json::Str("stats".into()));
+                let counters: BTreeMap<String, Json> = s
+                    .counters
+                    .iter()
+                    .map(|(n, v)| (n.clone(), Json::Int(*v as i64)))
+                    .collect();
+                o.insert("counters".into(), Json::Object(counters));
+                let gauges: BTreeMap<String, Json> = s
+                    .gauges
+                    .iter()
+                    .map(|(n, v)| (n.clone(), Json::Int(*v as i64)))
+                    .collect();
+                o.insert("gauges".into(), Json::Object(gauges));
+                let mut pool = BTreeMap::new();
+                pool.insert(
+                    "workers_spawned".to_string(),
+                    Json::Int(s.pool.workers_spawned as i64),
+                );
+                pool.insert(
+                    "jobs_dispatched".to_string(),
+                    Json::Int(s.pool.jobs_dispatched as i64),
+                );
+                pool.insert("scoped_spawns".to_string(), Json::Int(s.pool.scoped_spawns as i64));
+                o.insert("pool".into(), Json::Object(pool));
+                // histogram summaries are wall-clock derived — emitting
+                // them under the determinism contract would break
+                // byte-identical session diffs
+                if outcome.timings {
+                    let hists: Vec<Json> = s
+                        .histograms
+                        .iter()
+                        .map(|h| {
+                            let mut m = BTreeMap::new();
+                            m.insert("name".to_string(), Json::Str(h.name.clone()));
+                            m.insert("n".to_string(), Json::Int(h.count as i64));
+                            m.insert("mean".to_string(), Json::Float(h.mean));
+                            m.insert("p50".to_string(), Json::Float(h.p50));
+                            m.insert("p99".to_string(), Json::Float(h.p99));
+                            m.insert("max".to_string(), Json::Float(h.max));
+                            Json::Object(m)
+                        })
+                        .collect();
+                    o.insert("histograms".into(), Json::Array(hists));
+                }
+            }
         }
         Json::Object(o)
     }
@@ -889,112 +1035,37 @@ impl ScreeningService {
     /// Serve until EOF: one JSON request (or batch) per line in, one JSON
     /// response per line out, *in input order* — jobs run concurrently on
     /// the pool in between, but the emitted session is reproducible.
-    pub fn serve<R: BufRead, W: Write>(&mut self, input: R, mut output: W) -> std::io::Result<()> {
-        let mut slots: Vec<LineSlot> = Vec::new();
-        let mut submitted = 0u64;
-        for line in input.lines() {
-            let line = line?;
-            let line = line.trim();
-            if line.is_empty() || line.starts_with('#') {
-                continue;
-            }
-            slots.push(self.accept_line(line, &mut submitted));
-        }
-        // drain every accepted job, then answer in input order
-        let mut results: HashMap<u64, Json> = HashMap::new();
-        for _ in 0..submitted {
-            if let Some(outcome) = self.recv() {
-                results.insert(outcome.id, Self::encode_response_json(&outcome));
-            }
-        }
-        for slot in slots {
-            let json = match slot {
-                LineSlot::Single(p) => resolve_pending(p, &mut results),
-                LineSlot::Batch(ps) => {
-                    let entries: Vec<Json> = ps
-                        .into_iter()
-                        .map(|p| resolve_pending(p, &mut results))
-                        .collect();
-                    let mut o = BTreeMap::new();
-                    o.insert("batch".to_string(), Json::Array(entries));
-                    Json::Object(o)
-                }
-            };
-            writeln!(output, "{}", json.to_string())?;
-            output.flush()?;
-        }
+    ///
+    /// This is a thin adapter over the serve subsystem's connection
+    /// handler ([`crate::serve::Server::serve_session`]) with admission
+    /// control defaulting to unlimited (see [`Self::set_serve_options`]),
+    /// so the emitted bytes match the historical stdin/stdout loop
+    /// exactly — the TCP/unix listeners run the very same handler per
+    /// connection.
+    pub fn serve<R: BufRead, W: Write + Send>(
+        &mut self,
+        input: R,
+        output: W,
+    ) -> std::io::Result<()> {
+        let mut server = crate::serve::Server::with_start(
+            self.pool.clone(),
+            self.serve_opts.clone(),
+            self.next_id,
+        );
+        let result = server.serve_session(input, output, self.next_id);
+        // join the dispatcher before returning so a later direct recv()
+        // on this service sees the results channel uncontended
+        server.stop();
+        self.next_id = result?;
         Ok(())
     }
 
-    /// Parse one input line into its response slot, submitting any jobs
-    /// it contains.
-    fn accept_line(&mut self, line: &str, submitted: &mut u64) -> LineSlot {
-        let j = match parse_json(line) {
-            Ok(j) => j,
-            Err(e) => return LineSlot::Single(Pending::Ready(error_json(e.to_string()))),
-        };
-        let Some(obj) = j.as_object() else {
-            return LineSlot::Single(Pending::Ready(error_json(
-                "request must be a JSON object".into(),
-            )));
-        };
-        if let Some(batch) = obj.get("batch") {
-            if obj.len() != 1 {
-                return LineSlot::Single(Pending::Ready(error_json(
-                    "a batch request must contain only the `batch` field".into(),
-                )));
-            }
-            let Some(entries) = batch.as_array() else {
-                return LineSlot::Single(Pending::Ready(error_json(
-                    "batch must be an array of request objects".into(),
-                )));
-            };
-            if entries.len() > MAX_BATCH {
-                return LineSlot::Single(Pending::Ready(error_json(format!(
-                    "batch is capped at {MAX_BATCH} entries"
-                ))));
-            }
-            self.pool.metrics.counter("service_batches").inc();
-            let pending = entries
-                .iter()
-                .map(|e| {
-                    let parsed = e
-                        .as_object()
-                        .ok_or("batch entry must be a request object".to_string())
-                        .and_then(Self::parse_object)
-                        .and_then(|req| self.check_after(req.after).map(|()| req));
-                    match parsed {
-                        Ok(req) => {
-                            *submitted += 1;
-                            self.pool.metrics.counter("service_requests").inc();
-                            Pending::Job(self.submit_gated(req.kind, req.timings, req.after))
-                        }
-                        Err(msg) => Pending::Ready(error_json(msg)),
-                    }
-                })
-                .collect();
-            LineSlot::Batch(pending)
-        } else {
-            match Self::parse_object(obj)
-                .and_then(|req| self.check_after(req.after).map(|()| req))
-            {
-                Ok(req) => {
-                    *submitted += 1;
-                    self.pool.metrics.counter("service_requests").inc();
-                    LineSlot::Single(Pending::Job(self.submit_gated(
-                        req.kind,
-                        req.timings,
-                        req.after,
-                    )))
-                }
-                Err(msg) => LineSlot::Single(Pending::Ready(error_json(msg))),
-            }
-        }
-    }
-
-    /// Shut the pool down (drains queued jobs, joins workers).
+    /// Shut the service down: this drops the service's handle on the
+    /// shared pool; the workers drain queued jobs and join when the last
+    /// `Arc` holder (e.g. a still-running [`crate::serve::Server`])
+    /// releases it.
     pub fn shutdown(self) {
-        self.pool.shutdown();
+        drop(self);
     }
 
     /// Metrics registry (jobs_done, jobs_failed, job_secs,
@@ -1028,27 +1099,14 @@ fn parse_cd_mode(v: &Json) -> Result<crate::config::CdMode, String> {
         .ok_or_else(|| format!("cd_mode must be sync|async, got `{s}`"))
 }
 
-fn error_json(msg: String) -> Json {
+/// An id-less error object (parse failures — no job was submitted). The
+/// serve-layer connection handler shares this shape so a request is
+/// answered identically whether it fails over stdin or over a socket.
+pub(crate) fn error_json(msg: String) -> Json {
     let mut o = BTreeMap::new();
     o.insert("ok".to_string(), Json::Bool(false));
     o.insert("error".to_string(), Json::Str(msg));
     Json::Object(o)
-}
-
-/// Answer one pending slot from the drained results. A job whose worker
-/// died without reporting (the guard makes this near-impossible) still
-/// yields an error object instead of a hole in the session.
-fn resolve_pending(p: Pending, results: &mut HashMap<u64, Json>) -> Json {
-    match p {
-        Pending::Ready(j) => j,
-        Pending::Job(id) => results.remove(&id).unwrap_or_else(|| {
-            let mut o = BTreeMap::new();
-            o.insert("id".to_string(), Json::Int(id as i64));
-            o.insert("ok".to_string(), Json::Bool(false));
-            o.insert("error".to_string(), Json::Str("job result lost".into()));
-            Json::Object(o)
-        }),
-    }
 }
 
 #[cfg(test)]
@@ -1237,6 +1295,7 @@ mod tests {
                 c: 0.5,
                 solver: SolverConfig { tol: 1e-6, ..Default::default() },
                 save: None,
+                persist_dir: None,
                 report_support: false,
             },
         ));

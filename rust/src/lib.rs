@@ -61,6 +61,7 @@ pub mod problem;
 pub mod report;
 pub mod runtime;
 pub mod screening;
+pub mod serve;
 pub mod solver;
 pub mod testutil;
 pub mod validation;

@@ -100,6 +100,17 @@ impl Drop for Timer<'_> {
     }
 }
 
+/// Point-in-time summary statistics for one named histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistStat {
+    pub name: String,
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
 /// A registry of named metrics, renderable as a text report.
 #[derive(Default)]
 pub struct Registry {
@@ -134,6 +145,43 @@ impl Registry {
             .entry(name.to_string())
             .or_default()
             .clone()
+    }
+
+    /// Sorted `(name, value)` snapshot of every counter.
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, c)| (name.clone(), c.get()))
+            .collect()
+    }
+
+    /// Sorted `(name, value)` snapshot of every gauge.
+    pub fn gauges_snapshot(&self) -> Vec<(String, u64)> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, g)| (name.clone(), g.get()))
+            .collect()
+    }
+
+    /// Sorted summary-statistics snapshot of every histogram.
+    pub fn histograms_snapshot(&self) -> Vec<HistStat> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, h)| HistStat {
+                name: name.clone(),
+                count: h.count() as u64,
+                mean: h.mean(),
+                p50: h.percentile(50.0),
+                p99: h.percentile(99.0),
+                max: h.max(),
+            })
+            .collect()
     }
 
     /// Human-readable dump (sorted by name).
@@ -223,6 +271,26 @@ mod tests {
         let s = r.render();
         assert!(s.contains("jobs = 2"));
         assert!(s.contains("lat: n=1"));
+    }
+
+    #[test]
+    fn snapshots_are_sorted_and_complete() {
+        let r = Registry::default();
+        r.counter("b_count").add(3);
+        r.counter("a_count").add(1);
+        r.gauge("depth").set(7);
+        r.histogram("lat").record_secs(0.25);
+        assert_eq!(
+            r.counters_snapshot(),
+            vec![("a_count".to_string(), 1), ("b_count".to_string(), 3)]
+        );
+        assert_eq!(r.gauges_snapshot(), vec![("depth".to_string(), 7)]);
+        let hists = r.histograms_snapshot();
+        assert_eq!(hists.len(), 1);
+        assert_eq!(hists[0].name, "lat");
+        assert_eq!(hists[0].count, 1);
+        assert!((hists[0].mean - 0.25).abs() < 1e-12);
+        assert!((hists[0].max - 0.25).abs() < 1e-12);
     }
 
     #[test]

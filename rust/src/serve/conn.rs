@@ -1,0 +1,442 @@
+//! The per-connection protocol handler: parses request lines, applies
+//! admission control, submits jobs under translated pool ids, and writes
+//! responses — buffered in input order by default, or streamed per
+//! completion under `"stream": true`.
+//!
+//! Each session owns two halves. The *reader* (the caller's thread)
+//! parses lines, admits and submits jobs, and forwards one event per
+//! line to the writer. The *writer* (a scoped thread, so it may borrow
+//! the output) interleaves those line slots with job outcomes arriving
+//! from the server's dispatcher, emitting streamed responses
+//! immediately and replaying buffered ones in input order once EOF has
+//! been read and every submitted job has reported. With no `"stream"`
+//! requests the emitted bytes are identical to the historical
+//! single-session loop in [`crate::coordinator::service`].
+
+use super::server::{ConnShared, Route, ServeShared};
+use crate::config::json::{parse_json, Json};
+use crate::coordinator::job::{JobKind, JobSpec, PredictInput};
+use crate::coordinator::service::{self, ParsedRequest, ScreeningService, MAX_BATCH};
+use crate::coordinator::JobOutcome;
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Reader-to-writer events. Outcomes are injected by the server's
+/// dispatcher thread through the [`Route`] registered at submit.
+pub(crate) enum ConnEvent {
+    /// One input line's response slot, in input order.
+    Slot(SlotInfo),
+    /// One submitted job finished; `local_id` is the wire id.
+    Outcome { local_id: u64, stream: bool, outcome: JobOutcome },
+    /// The input reached EOF; no further slots follow.
+    Eof,
+}
+
+/// One response-in-waiting: already answerable (parse/admission errors)
+/// or pending a submitted job's outcome.
+pub(crate) enum Pending {
+    Ready(Json),
+    Job(u64),
+}
+
+/// One input line's worth of pendings.
+pub(crate) enum SlotInfo {
+    Single { stream: bool, p: Pending },
+    Batch { stream: bool, ps: Vec<Pending> },
+}
+
+/// Run one full session: read `input` to EOF, answer on `output`.
+/// Returns the next unissued local id (the stdin adapter persists it so
+/// ids keep incrementing across `serve()` calls on one service).
+pub(crate) fn run_session<R: BufRead, W: Write + Send>(
+    shared: &Arc<ServeShared>,
+    input: R,
+    output: W,
+    start_local: u64,
+) -> std::io::Result<u64> {
+    let (tx, rx) = channel::<ConnEvent>();
+    let conn = Arc::new(ConnShared { inflight: AtomicU64::new(0) });
+    let mut sess = Session {
+        shared,
+        conn: &conn,
+        tx,
+        start_local,
+        next_local: start_local,
+        pool_ids: Vec::new(),
+    };
+    std::thread::scope(|scope| {
+        let writer = scope.spawn(move || write_loop(rx, output));
+        let mut read_err: Option<std::io::Error> = None;
+        for line in input.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => {
+                    read_err = Some(e);
+                    break;
+                }
+            };
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let slot = sess.accept_line(line);
+            if sess.tx.send(ConnEvent::Slot(slot)).is_err() {
+                break; // writer died (output io error) — stop reading
+            }
+        }
+        let _ = sess.tx.send(ConnEvent::Eof);
+        let next_local = sess.next_local;
+        // drop the session (and with it the reader's event sender) BEFORE
+        // joining the writer: on forced teardown the writer unblocks only
+        // once every sender — reader and routed — is gone
+        drop(sess);
+        let write_result = match writer.join() {
+            Ok(r) => r,
+            Err(_) => Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "connection writer panicked",
+            )),
+        };
+        match read_err {
+            Some(e) => Err(e),
+            None => write_result.map(|()| next_local),
+        }
+    })
+}
+
+/// Reader-side session state: id bookkeeping and the submit path.
+struct Session<'a> {
+    shared: &'a Arc<ServeShared>,
+    conn: &'a Arc<ConnShared>,
+    tx: Sender<ConnEvent>,
+    start_local: u64,
+    next_local: u64,
+    /// Pool id for each local id issued this session
+    /// (`pool_ids[local - start_local]`) — the `after` translation table.
+    pool_ids: Vec<u64>,
+}
+
+impl Session<'_> {
+    /// Parse one input line into its response slot, submitting any jobs
+    /// it contains. Never blocks on job execution.
+    fn accept_line(&mut self, line: &str) -> SlotInfo {
+        let err = |msg: String| SlotInfo::Single {
+            stream: false,
+            p: Pending::Ready(service::error_json(msg)),
+        };
+        let j = match parse_json(line) {
+            Ok(j) => j,
+            Err(e) => return err(e.to_string()),
+        };
+        let Some(obj) = j.as_object() else {
+            return err("request must be a JSON object".into());
+        };
+        if let Some(batch) = obj.get("batch") {
+            // `stream` is the only key allowed next to `batch` — it
+            // frames the whole line, never an individual entry
+            let mut stream = false;
+            for (k, v) in obj {
+                match k.as_str() {
+                    "batch" => {}
+                    "stream" => match v.as_bool() {
+                        Some(b) => stream = b,
+                        None => return err("stream: bool".into()),
+                    },
+                    _ => {
+                        return err(
+                            "a batch request must contain only the `batch` field".into(),
+                        )
+                    }
+                }
+            }
+            let Some(entries) = batch.as_array() else {
+                return err("batch must be an array of request objects".into());
+            };
+            if entries.len() > MAX_BATCH {
+                return err(format!("batch is capped at {MAX_BATCH} entries"));
+            }
+            self.shared.pool.metrics.counter("service_batches").inc();
+            let ps = entries
+                .iter()
+                .map(|e| {
+                    let parsed = e
+                        .as_object()
+                        .ok_or("batch entry must be a request object".to_string())
+                        .and_then(|o| {
+                            if o.contains_key("stream") {
+                                return Err(
+                                    "stream applies to the whole line, not batch entries"
+                                        .to_string(),
+                                );
+                            }
+                            ScreeningService::parse_object(o)
+                        });
+                    match parsed {
+                        Ok(req) => self.admit_and_submit(req, stream),
+                        Err(msg) => Pending::Ready(service::error_json(msg)),
+                    }
+                })
+                .collect();
+            SlotInfo::Batch { stream, ps }
+        } else {
+            match ScreeningService::parse_object(obj) {
+                Ok(req) => {
+                    let stream = req.stream;
+                    SlotInfo::Single { stream, p: self.admit_and_submit(req, stream) }
+                }
+                Err(msg) => err(msg),
+            }
+        }
+    }
+
+    /// Admission control, id issue, route registration, pool submit.
+    /// A refused request answers with a typed error and consumes no id.
+    fn admit_and_submit(&mut self, req: ParsedRequest, stream: bool) -> Pending {
+        // the dependency edge must name an id this session has already
+        // issued — parse-failed and refused lines consume none
+        if let Some(a) = req.after {
+            if a >= self.next_local {
+                return Pending::Ready(service::error_json(format!(
+                    "after: {a} does not name an already-submitted job \
+                     (next id is {})",
+                    self.next_local
+                )));
+            }
+        }
+        let mut kind = req.kind;
+        if req.persist {
+            let Some(dir) = &self.shared.opts.model_dir else {
+                return Pending::Ready(service::error_json(
+                    "persist: true requires a server --model-dir registry".into(),
+                ));
+            };
+            match &mut kind {
+                JobKind::Train(spec) => {
+                    spec.persist_dir = Some(dir.to_string_lossy().into_owned());
+                }
+                // parse_object only sets persist on train requests
+                _ => {
+                    return Pending::Ready(service::error_json(
+                        "persist applies to train requests".into(),
+                    ))
+                }
+            }
+        }
+
+        let metrics = &self.shared.pool.metrics;
+        let opts = &self.shared.opts;
+        let cost = estimate_cost(&kind);
+        // per-connection cap first: one greedy client is refused before
+        // it can contend for the global budget
+        if opts.max_inflight > 0
+            && self.conn.inflight.load(Ordering::SeqCst) >= opts.max_inflight
+        {
+            metrics.counter("serve_rejected").inc();
+            return Pending::Ready(admission_error(
+                "rejected",
+                format!("connection in-flight cap ({}) reached", opts.max_inflight),
+            ));
+        }
+        let new_cost = if opts.queue_cost > 0 {
+            // reserve the cost only if it fits — CAS loop against
+            // concurrent connections
+            let mut cur = self.shared.queued_cost.load(Ordering::SeqCst);
+            loop {
+                if cur.saturating_add(cost) > opts.queue_cost {
+                    metrics.counter("serve_overloaded").inc();
+                    return Pending::Ready(admission_error(
+                        "overloaded",
+                        format!(
+                            "global queue budget ({}) exceeded: {cur} queued + {cost} requested",
+                            opts.queue_cost
+                        ),
+                    ));
+                }
+                match self.shared.queued_cost.compare_exchange(
+                    cur,
+                    cur + cost,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                ) {
+                    Ok(_) => break cur + cost,
+                    Err(actual) => cur = actual,
+                }
+            }
+        } else {
+            self.shared.queued_cost.fetch_add(cost, Ordering::SeqCst) + cost
+        };
+        metrics.gauge("serve_queue_cost").set(new_cost);
+        let inflight = self.shared.inflight_total.fetch_add(1, Ordering::SeqCst) + 1;
+        metrics.gauge("serve_inflight").set(inflight);
+        self.conn.inflight.fetch_add(1, Ordering::SeqCst);
+        metrics.counter("service_requests").inc();
+
+        let local = self.next_local;
+        self.next_local += 1;
+        let pool_id = self.shared.next_pool_id.fetch_add(1, Ordering::SeqCst);
+        self.pool_ids.push(pool_id);
+        // locals below start_local were issued by an earlier session on
+        // the same service (the stdin adapter keeps local == pool in
+        // lockstep there, so the raw id is the pool id)
+        let after = req.after.map(|a| {
+            if a < self.start_local {
+                a
+            } else {
+                self.pool_ids[(a - self.start_local) as usize]
+            }
+        });
+        // route BEFORE submit: the outcome may arrive immediately
+        self.shared.routes.lock().unwrap().insert(
+            pool_id,
+            Route {
+                tx: self.tx.clone(),
+                local_id: local,
+                stream,
+                cost,
+                conn: self.conn.clone(),
+            },
+        );
+        self.shared.pool.submit(JobSpec { id: pool_id, kind, timings: req.timings, after });
+        Pending::Job(local)
+    }
+}
+
+/// Typed admission refusal: like an error response but carrying a
+/// machine-readable `"code"` so clients can back off without string
+/// matching.
+fn admission_error(code: &str, msg: String) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("ok".to_string(), Json::Bool(false));
+    o.insert("code".to_string(), Json::Str(code.to_string()));
+    o.insert("error".to_string(), Json::Str(msg));
+    Json::Object(o)
+}
+
+/// Cheap admission cost in row-scan-equivalent units: proportional to
+/// the rows × work-per-row class of the job, never its exact runtime.
+/// The point is ordering (a 4096-row dataset predict outweighs a screen
+/// pair), not precision.
+pub(crate) fn estimate_cost(kind: &JobKind) -> u64 {
+    match kind {
+        // one full path run screens `points` grid steps over l rows
+        JobKind::Path(cfg) => (cfg.grid.points as u64).saturating_mul(1000),
+        // one anchor solve plus a row scan per pair
+        JobKind::Screen(s) => 1000u64.saturating_add((s.pairs.len() as u64) * 100),
+        JobKind::Train(_) => 2000,
+        JobKind::Predict(p) => match &p.input {
+            PredictInput::Rows { flat, width } => {
+                ((flat.len() / (*width).max(1)) as u64).max(1)
+            }
+            // a registry dataset can be arbitrarily large; treat it as
+            // the heavyweight class
+            PredictInput::Dataset { .. } => 100_000,
+        },
+        JobKind::Cache(_) | JobKind::Stats => 1,
+    }
+}
+
+/// The writer half: stream or buffer each response, then replay buffered
+/// slots in input order. Exits once EOF has been read and every awaited
+/// job has reported — or when every event sender is gone (forced
+/// teardown), in which case missing buffered jobs answer as lost.
+fn write_loop<W: Write>(rx: Receiver<ConnEvent>, mut output: W) -> std::io::Result<()> {
+    let mut slots: Vec<SlotInfo> = Vec::new();
+    let mut outcomes_seen: HashSet<u64> = HashSet::new();
+    let mut done: HashMap<u64, Json> = HashMap::new();
+    let mut awaited: HashSet<u64> = HashSet::new();
+    let mut eof = false;
+    loop {
+        if eof && awaited.is_empty() {
+            break;
+        }
+        let Ok(event) = rx.recv() else { break };
+        match event {
+            ConnEvent::Eof => eof = true,
+            ConnEvent::Outcome { local_id, stream, mut outcome } => {
+                outcomes_seen.insert(local_id);
+                awaited.remove(&local_id);
+                // the wire speaks connection-local ids only
+                outcome.id = local_id;
+                let json = ScreeningService::encode_response_json(&outcome);
+                if stream {
+                    writeln!(output, "{}", json.to_string())?;
+                    output.flush()?;
+                } else {
+                    done.insert(local_id, json);
+                }
+            }
+            ConnEvent::Slot(slot) => {
+                // every submitted job — streamed or buffered — gates
+                // session completion (an outcome may already have beaten
+                // its slot here, hence the seen check)
+                let mut register = |p: &Pending| {
+                    if let Pending::Job(id) = p {
+                        if !outcomes_seen.contains(id) {
+                            awaited.insert(*id);
+                        }
+                    }
+                };
+                match &slot {
+                    SlotInfo::Single { p, .. } => register(p),
+                    SlotInfo::Batch { ps, .. } => ps.iter().for_each(&mut register),
+                }
+                match slot {
+                    // streamed slots: answerable pendings (parse and
+                    // admission errors) emit now; job outcomes will
+                    // stream from the dispatcher; nothing to replay
+                    SlotInfo::Single { stream: true, p } => {
+                        if let Pending::Ready(j) = p {
+                            writeln!(output, "{}", j.to_string())?;
+                            output.flush()?;
+                        }
+                    }
+                    SlotInfo::Batch { stream: true, ps } => {
+                        for p in ps {
+                            if let Pending::Ready(j) = p {
+                                writeln!(output, "{}", j.to_string())?;
+                                output.flush()?;
+                            }
+                        }
+                    }
+                    buffered => slots.push(buffered),
+                }
+            }
+        }
+    }
+    // input-order replay of the buffered session — with no streamed
+    // requests this is the whole output, byte-identical to the
+    // historical loop
+    for slot in slots {
+        let json = match slot {
+            SlotInfo::Single { p, .. } => resolve(p, &mut done),
+            SlotInfo::Batch { ps, .. } => {
+                let entries: Vec<Json> = ps.into_iter().map(|p| resolve(p, &mut done)).collect();
+                let mut o = BTreeMap::new();
+                o.insert("batch".to_string(), Json::Array(entries));
+                Json::Object(o)
+            }
+        };
+        writeln!(output, "{}", json.to_string())?;
+        output.flush()?;
+    }
+    Ok(())
+}
+
+/// Answer one buffered pending from the routed outcomes. A job whose
+/// outcome never arrived (forced teardown) still yields an error object
+/// instead of a hole in the session.
+fn resolve(p: Pending, done: &mut HashMap<u64, Json>) -> Json {
+    match p {
+        Pending::Ready(j) => j,
+        Pending::Job(id) => done.remove(&id).unwrap_or_else(|| {
+            let mut o = BTreeMap::new();
+            o.insert("id".to_string(), Json::Int(id as i64));
+            o.insert("ok".to_string(), Json::Bool(false));
+            o.insert("error".to_string(), Json::Str("job result lost".into()));
+            Json::Object(o)
+        }),
+    }
+}

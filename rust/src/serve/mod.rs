@@ -1,0 +1,43 @@
+//! Network serving subsystem: multi-client listeners in front of the
+//! coordinator's [`crate::coordinator::WorkerPool`].
+//!
+//! The screening service's line protocol (one JSON request per line, one
+//! JSON response per line — see [`crate::coordinator::service`]) was
+//! historically bound to a single stdin/stdout session. This module puts
+//! a real server in front of the same pool:
+//!
+//! - [`Server`] owns a dispatcher thread that drains pool outcomes and
+//!   routes each to the connection that submitted it, plus any number of
+//!   TCP ([`Server::bind_tcp`]) and unix-socket ([`Server::bind_unix`])
+//!   accept loops. Every connection runs the identical per-connection
+//!   handler, so N concurrent clients multiplex onto one warm
+//!   instance/model cache and one worker pool.
+//! - `"stream": true` on a request (or batch line) emits responses as
+//!   each job completes instead of buffering for input-order replay;
+//!   entries stay tagged with their per-connection `id`, so a streamed
+//!   session re-sorted by id is byte-identical to the buffered one under
+//!   `"timings": false`.
+//! - [`ServeOptions`] carries admission control: a per-connection
+//!   in-flight cap (typed `"code": "rejected"` errors) and a global
+//!   queued-cost budget (typed `"code": "overloaded"`), with a cheap
+//!   rows-scan cost estimate per request so a huge predict cannot
+//!   silently starve screen traffic.
+//! - [`ModelRegistry`] is the `--model-dir` artifact store: persisted
+//!   `.pallas-model` files auto-load into the model cache at startup
+//!   (corrupt files are skipped with a typed warning, never a panic),
+//!   and train requests carrying `"persist": true` write their artifact
+//!   back into the directory — a restart serves predict-by-id with zero
+//!   retrains.
+//!
+//! The historical stdin/stdout loop ([`ScreeningService::serve`]) is a
+//! thin adapter over [`Server::serve_session`] with admission unlimited,
+//! so scripted sessions stay byte-for-byte identical.
+//!
+//! [`ScreeningService::serve`]: crate::coordinator::ScreeningService::serve
+
+mod conn;
+mod registry;
+mod server;
+
+pub use registry::{ModelRegistry, RegistryScan};
+pub use server::{ServeOptions, Server};

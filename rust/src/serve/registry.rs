@@ -1,0 +1,172 @@
+//! The `--model-dir` artifact registry: a plain directory of
+//! `<model_id>.pallas-model` files shared across server restarts (and,
+//! on shared storage, across a fleet).
+//!
+//! At startup [`ModelRegistry::load_all`] scans the directory and makes
+//! every readable artifact resident in the pool's model cache, so a
+//! restarted server answers `predict` by `model_id` with zero retrains.
+//! A corrupt or truncated file is *skipped* with its typed
+//! [`ModelIoError`] carried in the scan report — one bad artifact must
+//! never abort startup or panic. New artifacts enter the directory via
+//! train requests carrying `"persist": true` (the connection handler
+//! maps them to [`TrainSpec::persist_dir`]); the filename is the
+//! deterministic model id, so re-training the same problem overwrites
+//! in place instead of accumulating duplicates.
+//!
+//! [`ModelIoError`]: crate::model::ModelIoError
+//! [`TrainSpec::persist_dir`]: crate::coordinator::TrainSpec::persist_dir
+
+use crate::coordinator::ModelCache;
+use crate::metrics::Registry;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Handle on a model registry directory.
+pub struct ModelRegistry {
+    dir: PathBuf,
+}
+
+/// What a startup scan found, for the caller to log.
+#[derive(Debug, Default)]
+pub struct RegistryScan {
+    /// `(model_id, path)` per artifact made resident.
+    pub loaded: Vec<(String, PathBuf)>,
+    /// `(path, error)` per artifact skipped as unreadable/corrupt.
+    pub skipped: Vec<(PathBuf, String)>,
+}
+
+impl ModelRegistry {
+    pub fn new(dir: impl Into<PathBuf>) -> ModelRegistry {
+        ModelRegistry { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Scan the directory (sorted, for deterministic logs) and load every
+    /// `*.pallas-model` artifact into `models`. Io/decode failures on
+    /// individual files are collected, not raised; only an unreadable
+    /// directory itself is an error.
+    pub fn load_all(
+        &self,
+        models: &ModelCache,
+        metrics: &Registry,
+    ) -> std::io::Result<RegistryScan> {
+        let mut scan = RegistryScan::default();
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.is_file() && p.extension().map_or(false, |x| x == "pallas-model")
+            })
+            .collect();
+        paths.sort();
+        for path in paths {
+            // the loader is typed-error based (ModelIoError), but a
+            // hostile artifact must not be able to abort startup even
+            // through an unforeseen decoder panic
+            let loaded = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                crate::model::load(&path)
+            }));
+            match loaded {
+                Ok(Ok(m)) => {
+                    let id = models.insert(Arc::new(m), metrics);
+                    metrics.counter("model_registry_loaded").inc();
+                    scan.loaded.push((id, path));
+                }
+                Ok(Err(e)) => {
+                    metrics.counter("model_registry_skipped").inc();
+                    scan.skipped.push((path, e.to_string()));
+                }
+                Err(_) => {
+                    metrics.counter("model_registry_skipped").inc();
+                    scan.skipped.push((path, "model io: decoder panicked".into()));
+                }
+            }
+        }
+        Ok(scan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SolverConfig;
+    use crate::coordinator::{run_job, JobSpec, TrainSpec, TrainSummary};
+    use crate::problem::Model;
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dvi_registry_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Train toy1 and persist its artifact into `dir` via the same
+    /// `persist_dir` path the serve layer uses for `"persist": true`.
+    fn persist_one(dir: &Path) -> TrainSummary {
+        let spec = TrainSpec {
+            dataset: "toy1".into(),
+            model: Model::Svm,
+            scale: 0.03,
+            storage: crate::linalg::Storage::Auto,
+            c: 0.5,
+            solver: SolverConfig { tol: 1e-6, ..Default::default() },
+            save: None,
+            persist_dir: Some(dir.to_str().unwrap().to_string()),
+            report_support: false,
+        };
+        let outcome = run_job(&JobSpec::train(0, spec));
+        outcome.result.unwrap().as_train().unwrap().clone()
+    }
+
+    #[test]
+    fn load_all_skips_corrupt_and_loads_good() {
+        let dir = fresh_dir("mixed");
+        let summary = persist_one(&dir);
+        assert!(summary.persisted.is_some());
+        // one corrupt file with the right extension, one ignorable file
+        std::fs::write(dir.join("junk.pallas-model"), b"PALLASMD garbage").unwrap();
+        std::fs::write(dir.join("README.txt"), b"not a model").unwrap();
+
+        let models = ModelCache::new(ModelCache::DEFAULT_BUDGET_BYTES);
+        let metrics = Registry::default();
+        let scan = ModelRegistry::new(&dir).load_all(&models, &metrics).unwrap();
+        assert_eq!(scan.loaded.len(), 1, "{scan:?}");
+        assert_eq!(scan.loaded[0].0, summary.model_id);
+        assert_eq!(scan.skipped.len(), 1, "{scan:?}");
+        assert!(scan.skipped[0].1.contains("model io"), "{scan:?}");
+        assert_eq!(metrics.counter("model_registry_loaded").get(), 1);
+        assert_eq!(metrics.counter("model_registry_skipped").get(), 1);
+        // the good artifact is resident — predict-by-id needs no retrain
+        assert!(models.get(&summary.model_id, &metrics).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_all_missing_dir_is_io_error() {
+        let models = ModelCache::new(0);
+        let metrics = Registry::default();
+        let err = ModelRegistry::new("/no/such/registry-dir").load_all(&models, &metrics);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn persist_then_rescan_round_trip() {
+        let dir = fresh_dir("roundtrip");
+        let summary = persist_one(&dir);
+        // re-training the same problem overwrites in place: still 1 file
+        let again = persist_one(&dir);
+        assert_eq!(again.model_id, summary.model_id);
+
+        // a "restarted" server scans the same directory
+        let models = ModelCache::new(ModelCache::DEFAULT_BUDGET_BYTES);
+        let metrics = Registry::default();
+        let scan = ModelRegistry::new(&dir).load_all(&models, &metrics).unwrap();
+        assert_eq!(scan.loaded.len(), 1, "{scan:?}");
+        assert_eq!(scan.loaded[0].0, summary.model_id);
+        assert!(scan.skipped.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

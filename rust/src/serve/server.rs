@@ -1,0 +1,303 @@
+//! The server core: shared routing state, the outcome dispatcher thread,
+//! and the TCP / unix-socket accept loops.
+//!
+//! One [`Server`] fronts one [`WorkerPool`]. Connections submit jobs
+//! under globally unique pool ids (`next_pool_id`); the dispatcher drains
+//! the pool's results channel and routes each outcome to the submitting
+//! connection's event channel, where the per-connection writer rewrites
+//! the id back to the connection-local one before encoding. All of this
+//! is std-only: plain threads, `mpsc` channels, and atomics.
+
+use super::conn::{self, ConnEvent};
+use crate::coordinator::WorkerPool;
+use std::collections::HashMap;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Admission-control and registry knobs for a [`Server`]. The default is
+/// fully open (no caps, no registry) — exactly the historical stdin-loop
+/// behavior.
+#[derive(Clone, Debug, Default)]
+pub struct ServeOptions {
+    /// Per-connection in-flight request cap; 0 = unlimited. Requests over
+    /// the cap answer with a typed `"code": "rejected"` error and consume
+    /// no id — the connection stays usable.
+    pub max_inflight: u64,
+    /// Global queued-cost budget across every connection; 0 = unlimited.
+    /// Requests whose cost estimate does not fit answer with a typed
+    /// `"code": "overloaded"` error and consume no id.
+    pub queue_cost: u64,
+    /// Model registry directory: `"persist": true` train requests write
+    /// `<model_id>.pallas-model` here (see
+    /// [`super::ModelRegistry`] for the startup scan).
+    pub model_dir: Option<std::path::PathBuf>,
+}
+
+/// Per-connection admission state, shared between the connection's
+/// submit path and the dispatcher's release path.
+pub(crate) struct ConnShared {
+    pub(crate) inflight: AtomicU64,
+}
+
+/// Where one submitted job's outcome must be delivered.
+pub(crate) struct Route {
+    pub(crate) tx: Sender<ConnEvent>,
+    /// The connection-local id the client knows this job by.
+    pub(crate) local_id: u64,
+    /// Whether the outcome streams immediately or buffers for replay.
+    pub(crate) stream: bool,
+    /// Admission cost reserved at submit, released on completion.
+    pub(crate) cost: u64,
+    pub(crate) conn: Arc<ConnShared>,
+}
+
+/// State shared by the dispatcher, the accept loops, and every live
+/// connection handler.
+pub(crate) struct ServeShared {
+    pub(crate) pool: Arc<WorkerPool>,
+    /// Pool-side job ids are globally unique across connections; each
+    /// connection keeps its own dense local id space for the wire.
+    pub(crate) next_pool_id: AtomicU64,
+    pub(crate) routes: Mutex<HashMap<u64, Route>>,
+    /// Sum of cost estimates for submitted-but-unfinished jobs.
+    pub(crate) queued_cost: AtomicU64,
+    /// Count of submitted-but-unfinished jobs across all connections.
+    pub(crate) inflight_total: AtomicU64,
+    pub(crate) opts: ServeOptions,
+    pub(crate) stop: AtomicBool,
+}
+
+/// Multi-client server over one worker pool. Dropping (or [`Server::stop`])
+/// shuts the listeners and joins the dispatcher; the pool itself is owned
+/// by the caller and survives.
+pub struct Server {
+    shared: Arc<ServeShared>,
+    dispatcher: Option<JoinHandle<()>>,
+    accept_handles: Vec<JoinHandle<()>>,
+    /// Bound addresses, kept to wake the blocking accept loops at stop.
+    tcp_wake: Vec<SocketAddr>,
+    #[cfg(unix)]
+    sock_wake: Vec<std::path::PathBuf>,
+}
+
+impl Server {
+    /// A server over `pool` with pool-side job ids starting at 0.
+    pub fn new(pool: Arc<WorkerPool>, opts: ServeOptions) -> Server {
+        Self::with_start(pool, opts, 0)
+    }
+
+    /// A server whose pool-side job ids start at `start_pool_id` — the
+    /// stdin adapter threads the service's persistent id counter through
+    /// here so ids keep incrementing across `serve()` calls.
+    pub fn with_start(pool: Arc<WorkerPool>, opts: ServeOptions, start_pool_id: u64) -> Server {
+        let shared = Arc::new(ServeShared {
+            pool,
+            next_pool_id: AtomicU64::new(start_pool_id),
+            routes: Mutex::new(HashMap::new()),
+            queued_cost: AtomicU64::new(0),
+            inflight_total: AtomicU64::new(0),
+            opts,
+            stop: AtomicBool::new(false),
+        });
+        let dispatcher = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("dvi-serve-dispatch".into())
+                .spawn(move || dispatch_loop(&shared))
+                .expect("spawn serve dispatcher")
+        };
+        Server {
+            shared,
+            dispatcher: Some(dispatcher),
+            accept_handles: Vec::new(),
+            tcp_wake: Vec::new(),
+            #[cfg(unix)]
+            sock_wake: Vec::new(),
+        }
+    }
+
+    /// The server's admission/registry options.
+    pub fn options(&self) -> &ServeOptions {
+        &self.shared.opts
+    }
+
+    /// Run one blocking line-protocol session on the caller's thread —
+    /// the stdin/stdout adapter. `start_local` seeds the session's id
+    /// space (network connections use 0; the service adapter passes its
+    /// persistent counter). Returns the next unissued local id.
+    pub fn serve_session<R: BufRead, W: Write + Send>(
+        &self,
+        input: R,
+        output: W,
+        start_local: u64,
+    ) -> io::Result<u64> {
+        conn::run_session(&self.shared, input, output, start_local)
+    }
+
+    /// Bind a TCP listener and spawn its accept loop. `addr` may use port
+    /// 0 for an OS-assigned port — the actually bound address is
+    /// returned (and printed by the CLI for scripts to parse).
+    pub fn bind_tcp(&mut self, addr: &str) -> io::Result<SocketAddr> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        self.tcp_wake.push(local);
+        let shared = self.shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("dvi-accept-tcp".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    // checked before handling so the stop() wake
+                    // connection is never served
+                    if shared.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    spawn_conn_thread(&shared, stream);
+                }
+            })?;
+        self.accept_handles.push(handle);
+        Ok(local)
+    }
+
+    /// Bind a unix-domain socket listener and spawn its accept loop. A
+    /// stale socket file from a previous run is removed first.
+    #[cfg(unix)]
+    pub fn bind_unix(&mut self, path: &std::path::Path) -> io::Result<()> {
+        use std::os::unix::net::UnixListener;
+        // a dead server's socket file would otherwise make rebinding
+        // fail with AddrInUse forever
+        if path.exists() {
+            std::fs::remove_file(path)?;
+        }
+        let listener = UnixListener::bind(path)?;
+        self.sock_wake.push(path.to_path_buf());
+        let shared = self.shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("dvi-accept-unix".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if shared.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let shared = shared.clone();
+                    let _ = std::thread::Builder::new().name("dvi-conn".into()).spawn(
+                        move || {
+                            shared.pool.metrics.counter("serve_connections_opened").inc();
+                            if let Ok(read) = stream.try_clone() {
+                                let _ = conn::run_session(
+                                    &shared,
+                                    BufReader::new(read),
+                                    stream,
+                                    0,
+                                );
+                            }
+                            shared.pool.metrics.counter("serve_connections_closed").inc();
+                        },
+                    );
+                }
+            })?;
+        self.accept_handles.push(handle);
+        Ok(())
+    }
+
+    /// Block until every accept loop exits (i.e. until [`Server::stop`]
+    /// is called from another thread or the process dies) — the CLI's
+    /// serve-forever mode.
+    pub fn wait(&mut self) {
+        for h in self.accept_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Shut down: stop accepting, drop live routes (their connections
+    /// answer outstanding jobs as lost), and join the dispatcher. Safe to
+    /// call more than once; `Drop` calls it too.
+    pub fn stop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // wake each blocking accept loop with a throwaway connection;
+        // the loop re-checks the stop flag before serving it
+        for addr in self.tcp_wake.drain(..) {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(250));
+        }
+        #[cfg(unix)]
+        for p in self.sock_wake.drain(..) {
+            let _ = std::os::unix::net::UnixStream::connect(&p);
+            let _ = std::fs::remove_file(&p);
+        }
+        for h in self.accept_handles.drain(..) {
+            let _ = h.join();
+        }
+        // dropping the routes drops their event senders: connection
+        // writers blocked on the channel unblock and answer any still-
+        // missing buffered job as lost instead of hanging
+        self.shared.routes.lock().unwrap().clear();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn spawn_conn_thread(shared: &Arc<ServeShared>, stream: TcpStream) {
+    let shared = shared.clone();
+    // per-connection reader thread; detached — process teardown (or the
+    // client closing its write half) ends it
+    let _ = std::thread::Builder::new().name("dvi-conn".into()).spawn(move || {
+        shared.pool.metrics.counter("serve_connections_opened").inc();
+        if let Ok(read) = stream.try_clone() {
+            let _ = conn::run_session(&shared, BufReader::new(read), stream, 0);
+        }
+        shared.pool.metrics.counter("serve_connections_closed").inc();
+    });
+}
+
+/// Drain pool outcomes and route each to its submitting connection,
+/// releasing the admission cost it reserved. Exits when the stop flag is
+/// set (checked between receives) or the pool closes.
+fn dispatch_loop(shared: &ServeShared) {
+    loop {
+        match shared.pool.recv_timeout(Duration::from_millis(25)) {
+            Ok(outcome) => {
+                let route = shared.routes.lock().unwrap().remove(&outcome.id);
+                // no route: the job was submitted outside the serve layer
+                // (direct pool API) or its connection was torn down — the
+                // outcome has no consumer either way
+                let Some(route) = route else { continue };
+                let new_cost = shared
+                    .queued_cost
+                    .fetch_sub(route.cost, Ordering::SeqCst)
+                    .saturating_sub(route.cost);
+                let inflight = shared
+                    .inflight_total
+                    .fetch_sub(1, Ordering::SeqCst)
+                    .saturating_sub(1);
+                shared.pool.metrics.gauge("serve_queue_cost").set(new_cost);
+                shared.pool.metrics.gauge("serve_inflight").set(inflight);
+                route.conn.inflight.fetch_sub(1, Ordering::SeqCst);
+                // a connection that died mid-flight just drops the event
+                let _ = route.tx.send(ConnEvent::Outcome {
+                    local_id: route.local_id,
+                    stream: route.stream,
+                    outcome,
+                });
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Network serving semantics: N concurrent TCP clients multiplexed onto
+//! one worker pool must each see exactly the bytes a serial stdin
+//! session would have produced; `"stream": true` re-sorted by id must be
+//! byte-identical to the buffered session; admission control answers
+//! typed `overloaded`/`rejected` errors without killing the connection;
+//! and a `--model-dir` registry restart serves predict-by-id with zero
+//! retrains.
+
+use dvi_screen::config::{parse_json, Json};
+use dvi_screen::coordinator::ScreeningService;
+use dvi_screen::serve::{ModelRegistry, ServeOptions, Server};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+
+/// The mixed deterministic session each client plays: two path runs,
+/// one screen job, one batch line (path + screen), one job error, one
+/// parse error. Everything under `"timings": false`, so the bytes are
+/// scheduling-independent.
+const SESSION: &str = r#"{"dataset": "toy1", "scale": 0.05, "points": 4, "rule": "dvi", "tol": 1e-6, "timings": false}
+{"dataset": "toy1", "scale": 0.05, "points": 4, "rule": "essnsv", "tol": 1e-6, "timings": false}
+{"kind": "screen", "dataset": "toy1", "scale": 0.05, "pairs": [[0.5, 0.9]], "tol": 1e-6, "timings": false}
+{"batch": [{"dataset": "toy1", "scale": 0.05, "points": 3, "rule": "none", "tol": 1e-6, "timings": false}, {"kind": "screen", "dataset": "toy1", "scale": 0.05, "pairs": [[0.8, 1.6]], "tol": 1e-6, "timings": false}]}
+{"dataset": "no-such-set", "points": 4, "timings": false}
+{"dataset": "toy1", "points": 0}
+"#;
+
+/// Run `input` through a fresh single-service stdin session — the byte
+/// reference every network client is compared against.
+fn serial_reference(input: &str) -> Vec<String> {
+    let mut svc = ScreeningService::new(2);
+    let mut out = Vec::new();
+    svc.serve(input.as_bytes(), &mut out).unwrap();
+    svc.shutdown();
+    String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
+}
+
+/// Play `input` against a TCP server and collect the response lines.
+fn tcp_session(addr: std::net::SocketAddr, input: &str) -> Vec<String> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(input.as_bytes()).unwrap();
+    // half-close: the server sees EOF, replays buffered responses, and
+    // the read side below drains them until the server closes
+    stream.shutdown(Shutdown::Write).unwrap();
+    let mut lines = Vec::new();
+    for line in BufReader::new(stream).lines() {
+        lines.push(line.unwrap());
+    }
+    lines
+}
+
+#[test]
+fn four_tcp_clients_match_serial_stdin_byte_for_byte() {
+    let reference = serial_reference(SESSION);
+    assert_eq!(reference.len(), 6);
+
+    let svc = ScreeningService::new(3);
+    let mut server = Server::new(svc.pool_handle(), ServeOptions::default());
+    let addr = server.bind_tcp("127.0.0.1:0").unwrap();
+
+    let sessions: Vec<Vec<String>> = std::thread::scope(|s| {
+        let handles: Vec<_> =
+            (0..4).map(|_| s.spawn(move || tcp_session(addr, SESSION))).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (client, lines) in sessions.iter().enumerate() {
+        assert_eq!(lines, &reference, "client {client} diverged from the serial session");
+    }
+
+    // all 4 clients shared ONE resident instance: exactly one build
+    let pool = svc.pool_handle();
+    assert_eq!(pool.metrics.counter("instance_cache_misses").get(), 1);
+    assert_eq!(pool.metrics.counter("serve_connections_opened").get(), 4);
+
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn streamed_sorted_by_id_equals_buffered() {
+    let buffered = serial_reference(SESSION);
+
+    // the same session with "stream": true stamped on every line
+    let streamed_input: String = SESSION
+        .lines()
+        .map(|l| {
+            let mut l = l.trim_start_matches('{').to_string();
+            l.insert_str(0, "{\"stream\": true, ");
+            l.push('\n');
+            l
+        })
+        .collect();
+
+    let svc = ScreeningService::new(3);
+    let mut server = Server::new(svc.pool_handle(), ServeOptions::default());
+    let addr = server.bind_tcp("127.0.0.1:0").unwrap();
+    let mut lines = tcp_session(addr, &streamed_input);
+
+    // a streamed batch answers one line PER entry instead of one
+    // wrapper line: 5 singles + 2 batch entries
+    assert_eq!(lines.len(), 7, "{lines:?}");
+
+    // order by id; the one id-less line (the parse error consumed no
+    // id) sorts last, where input order put it
+    lines.sort_by_key(|l| {
+        parse_json(l).ok().and_then(|j| j.get("id").and_then(Json::as_int)).unwrap_or(i64::MAX)
+    });
+
+    // re-wrap the streamed batch entries (ids 3 and 4) the way the
+    // buffered session's one `{"batch": [...]}` line carries them
+    let wrapper = {
+        let mut o = BTreeMap::new();
+        o.insert(
+            "batch".to_string(),
+            Json::Array(vec![
+                parse_json(&lines[3]).unwrap(),
+                parse_json(&lines[4]).unwrap(),
+            ]),
+        );
+        Json::Object(o).to_string()
+    };
+    let rewrapped: Vec<String> = lines[..3]
+        .iter()
+        .cloned()
+        .chain(std::iter::once(wrapper))
+        .chain(lines[5..].iter().cloned())
+        .collect();
+    assert_eq!(rewrapped, buffered);
+
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn over_budget_answers_overloaded_and_connection_stays_usable() {
+    let svc = ScreeningService::new(2);
+    // a 1-unit global budget: any path run (points × 1000 units) can
+    // never fit, while a stats request (1 unit) always can
+    let opts = ServeOptions { queue_cost: 1, ..Default::default() };
+    let mut server = Server::new(svc.pool_handle(), opts);
+    let addr = server.bind_tcp("127.0.0.1:0").unwrap();
+
+    let input = "{\"dataset\": \"toy1\", \"points\": 4, \"timings\": false}\n\
+                 {\"kind\": \"stats\", \"timings\": false}\n";
+    let lines = tcp_session(addr, input);
+    assert_eq!(lines.len(), 2, "{lines:?}");
+
+    let refused = parse_json(&lines[0]).unwrap();
+    assert_eq!(refused.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(refused.get("code").unwrap().as_str(), Some("overloaded"), "{lines:?}");
+    assert!(refused.get("id").is_none(), "refused requests consume no id");
+
+    // the SAME connection then serves a cheap request under id 0
+    let stats = parse_json(&lines[1]).unwrap();
+    assert_eq!(stats.get("ok").unwrap().as_bool(), Some(true), "{lines:?}");
+    assert_eq!(stats.get("id").unwrap().as_int(), Some(0));
+    let counters = stats.get("counters").unwrap();
+    assert_eq!(counters.get("serve_overloaded").unwrap().as_int(), Some(1));
+
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn per_connection_cap_answers_rejected() {
+    let svc = ScreeningService::new(2);
+    let opts = ServeOptions { max_inflight: 1, ..Default::default() };
+    let mut server = Server::new(svc.pool_handle(), opts);
+    let addr = server.bind_tcp("127.0.0.1:0").unwrap();
+
+    // line 1 occupies the single in-flight slot for at least one full
+    // instance build + 8 path steps; line 2 is read (and refused)
+    // microseconds later, long before line 1 can complete
+    let input = "{\"dataset\": \"toy2\", \"scale\": 0.5, \"points\": 8, \"timings\": false}\n\
+                 {\"kind\": \"stats\", \"timings\": false}\n";
+    let lines = tcp_session(addr, input);
+    assert_eq!(lines.len(), 2, "{lines:?}");
+
+    let ok = parse_json(&lines[0]).unwrap();
+    assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true), "{lines:?}");
+    assert_eq!(ok.get("id").unwrap().as_int(), Some(0));
+
+    let refused = parse_json(&lines[1]).unwrap();
+    assert_eq!(refused.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(refused.get("code").unwrap().as_str(), Some("rejected"), "{lines:?}");
+    assert!(refused.get("id").is_none());
+
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn model_dir_restart_serves_predict_without_retraining() {
+    let dir = std::env::temp_dir().join(format!("dvi_serve_net_registry_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // server 1: train with "persist": true writes the artifact
+    let model_id = {
+        let svc = ScreeningService::new(2);
+        let opts = ServeOptions { model_dir: Some(dir.clone()), ..Default::default() };
+        let mut server = Server::new(svc.pool_handle(), opts);
+        let addr = server.bind_tcp("127.0.0.1:0").unwrap();
+        let lines = tcp_session(
+            addr,
+            "{\"kind\": \"train\", \"dataset\": \"toy1\", \"scale\": 0.03, \"c\": 0.5, \
+             \"tol\": 1e-6, \"persist\": true, \"timings\": false}\n",
+        );
+        let j = parse_json(&lines[0]).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{lines:?}");
+        let id = j.get("model_id").unwrap().as_str().unwrap().to_string();
+        let persisted = j.get("persisted").unwrap().as_str().unwrap().to_string();
+        assert!(std::path::Path::new(&persisted).exists());
+        server.stop();
+        svc.shutdown();
+        id
+    };
+
+    // without a registry, "persist": true is a typed refusal
+    {
+        let svc = ScreeningService::new(1);
+        let mut server = Server::new(svc.pool_handle(), ServeOptions::default());
+        let addr = server.bind_tcp("127.0.0.1:0").unwrap();
+        let lines = tcp_session(
+            addr,
+            "{\"kind\": \"train\", \"dataset\": \"toy1\", \"scale\": 0.03, \"c\": 0.5, \
+             \"persist\": true, \"timings\": false}\n",
+        );
+        let j = parse_json(&lines[0]).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("--model-dir"), "{lines:?}");
+        server.stop();
+        svc.shutdown();
+    }
+
+    // server 2 ("restart"): the startup scan makes the artifact resident,
+    // so predict by model_id pays a cache hit, not a train job
+    {
+        let svc = ScreeningService::new(2);
+        let pool = svc.pool_handle();
+        let scan = ModelRegistry::new(&dir).load_all(&pool.models, &pool.metrics).unwrap();
+        assert_eq!(scan.loaded.len(), 1, "{scan:?}");
+        assert_eq!(scan.loaded[0].0, model_id);
+
+        let opts = ServeOptions { model_dir: Some(dir.clone()), ..Default::default() };
+        let mut server = Server::new(pool.clone(), opts);
+        let addr = server.bind_tcp("127.0.0.1:0").unwrap();
+        let input = format!(
+            "{{\"kind\": \"predict\", \"model_id\": \"{model_id}\", \"dataset\": \"toy1\", \
+             \"scale\": 0.03, \"timings\": false}}\n\
+             {{\"kind\": \"stats\", \"timings\": false}}\n"
+        );
+        let lines = tcp_session(addr, &input);
+        let p = parse_json(&lines[0]).unwrap();
+        assert_eq!(p.get("ok").unwrap().as_bool(), Some(true), "{lines:?}");
+        assert_eq!(p.get("rows").unwrap().as_int(), Some(60));
+
+        let stats = parse_json(&lines[1]).unwrap();
+        let counters = stats.get("counters").unwrap();
+        assert_eq!(counters.get("model_registry_loaded").unwrap().as_int(), Some(1));
+        // the scoring model came out of the resident cache — nothing was
+        // re-trained and nothing was re-read from disk
+        assert_eq!(counters.get("model_cache_hits").unwrap().as_int(), Some(1));
+        assert!(counters.get("model_cache_loads").is_none(), "{lines:?}");
+
+        server.stop();
+        svc.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

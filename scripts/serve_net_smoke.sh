@@ -1,0 +1,148 @@
+#!/usr/bin/env bash
+# Network serving smoke test: run the built `dvi serve --listen` binary
+# on a loopback port and hold the serving subsystem to its contracts:
+#
+#   1. network ≡ stdin — two CONCURRENT scripted TCP clients each get
+#                     byte-for-byte the output the same session produces
+#                     through the stdin adapter ("timings": false);
+#   2. stream ≡ buffered — a `"stream": true` session's lines re-sorted
+#                     by id are byte-identical to the buffered session;
+#   3. registry restart — a model trained with "persist": true lands in
+#                     --model-dir; a RESTARTED server loads it at startup
+#                     and serves predict by model_id with zero retrains
+#                     (asserted on the "stats" counters: a model-cache
+#                     hit, no artifact re-read, one registry load).
+#
+# Requires python3 for the TCP clients (present on the CI runners).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v python3 > /dev/null; then
+  echo "serve net smoke: python3 unavailable; skipping"
+  exit 0
+fi
+
+WORK=$(mktemp -d)
+SERVER_PID=""
+cleanup() {
+  [[ -n "$SERVER_PID" ]] && kill "$SERVER_PID" 2> /dev/null || true
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+cargo build --release --quiet
+BIN=target/release/dvi
+MODELDIR="$WORK/models"
+
+# A deterministic all-single-request session (every response line
+# carries an id, so the streamed sort in leg 2 is total).
+cat > "$WORK/session.jsonl" <<'EOF'
+{"dataset": "toy1", "scale": 0.05, "points": 4, "rule": "dvi", "tol": 1e-6, "timings": false}
+{"dataset": "toy1", "scale": 0.05, "points": 4, "rule": "essnsv", "tol": 1e-6, "timings": false}
+{"kind": "screen", "dataset": "toy1", "scale": 0.05, "pairs": [[0.5, 0.8], [0.8, 1.6]], "tol": 1e-6, "timings": false}
+{"dataset": "toy1", "scale": 0.05, "points": 3, "rule": "none", "tol": 1e-6, "timings": false}
+{"dataset": "no-such-set", "points": 4, "timings": false}
+EOF
+sed 's/^{/{"stream": true, /' "$WORK/session.jsonl" > "$WORK/session.stream.jsonl"
+
+# One-shot TCP client: send a session, half-close, drain to EOF.
+cat > "$WORK/client.py" <<'EOF'
+import socket, sys
+host, port, infile, outfile = sys.argv[1], int(sys.argv[2]), sys.argv[3], sys.argv[4]
+s = socket.create_connection((host, port), timeout=120)
+with open(infile, "rb") as f:
+    s.sendall(f.read())
+s.shutdown(socket.SHUT_WR)
+chunks = []
+while True:
+    c = s.recv(65536)
+    if not c:
+        break
+    chunks.append(c)
+with open(outfile, "wb") as f:
+    f.write(b"".join(chunks))
+EOF
+
+start_server() {  # start_server <logfile> [extra serve flags...]
+  local log=$1; shift
+  "$BIN" serve --workers 3 --listen 127.0.0.1:0 "$@" 2> "$log" &
+  SERVER_PID=$!
+  local port=""
+  for _ in $(seq 1 100); do
+    port=$(sed -n 's/.*\[serve\] listening on 127\.0\.0\.1:\([0-9]*\)$/\1/p' "$log" | head -1)
+    [[ -n "$port" ]] && break
+    kill -0 "$SERVER_PID" 2> /dev/null || { echo "server died:"; cat "$log"; exit 1; }
+    sleep 0.1
+  done
+  [[ -n "$port" ]] || { echo "server never bound:"; cat "$log"; exit 1; }
+  PORT=$port
+}
+
+stop_server() {
+  kill "$SERVER_PID" 2> /dev/null || true
+  wait "$SERVER_PID" 2> /dev/null || true
+  SERVER_PID=""
+}
+
+# The stdin adapter is the byte reference for every network client.
+"$BIN" serve --workers 3 < "$WORK/session.jsonl" > "$WORK/ref.buffered" 2> /dev/null
+
+start_server "$WORK/serve1.log" --model-dir "$MODELDIR"
+
+echo "== two concurrent TCP clients, each byte-identical to stdin serve"
+python3 "$WORK/client.py" 127.0.0.1 "$PORT" "$WORK/session.jsonl" "$WORK/out.client1" &
+C1=$!
+python3 "$WORK/client.py" 127.0.0.1 "$PORT" "$WORK/session.jsonl" "$WORK/out.client2" &
+C2=$!
+wait "$C1" "$C2"
+diff "$WORK/ref.buffered" "$WORK/out.client1"
+diff "$WORK/ref.buffered" "$WORK/out.client2"
+
+echo "== streamed output re-sorted by id diffs clean against buffered"
+python3 "$WORK/client.py" 127.0.0.1 "$PORT" "$WORK/session.stream.jsonl" "$WORK/out.stream"
+python3 - "$WORK/out.stream" <<'EOF' > "$WORK/out.stream.sorted"
+import json, sys
+lines = [l for l in open(sys.argv[1]) if l.strip()]
+lines.sort(key=lambda l: json.loads(l)["id"])
+sys.stdout.write("".join(lines))
+EOF
+diff "$WORK/ref.buffered" "$WORK/out.stream.sorted"
+
+echo "== train with persist:true writes into --model-dir"
+cat > "$WORK/train.jsonl" <<'EOF'
+{"kind": "train", "dataset": "toy1", "scale": 0.05, "c": 0.5, "tol": 1e-6, "persist": true, "timings": false}
+EOF
+python3 "$WORK/client.py" 127.0.0.1 "$PORT" "$WORK/train.jsonl" "$WORK/out.train"
+grep -q '"ok":true' "$WORK/out.train" || { echo "train failed:"; cat "$WORK/out.train"; exit 1; }
+MODEL_ID=$(python3 -c 'import json,sys; print(json.load(open(sys.argv[1]))["model_id"])' "$WORK/out.train")
+ls "$MODELDIR/$MODEL_ID.pallas-model" > /dev/null
+
+stop_server
+
+echo "== a restarted server loads the registry and predicts with zero retrains"
+# a corrupt artifact next to the good one must be skipped, not fatal
+printf 'PALLASMD garbage' > "$MODELDIR/junk.pallas-model"
+start_server "$WORK/serve2.log" --model-dir "$MODELDIR"
+grep -q "model-dir: loaded $MODEL_ID" "$WORK/serve2.log" || {
+  echo "expected a registry load log line:"; cat "$WORK/serve2.log"; exit 1; }
+grep -q "model-dir: skipped .*junk" "$WORK/serve2.log" || {
+  echo "expected the corrupt artifact to be skipped:"; cat "$WORK/serve2.log"; exit 1; }
+cat > "$WORK/predict.jsonl" <<EOF
+{"kind": "predict", "model_id": "$MODEL_ID", "dataset": "toy1", "scale": 0.05, "timings": false}
+{"kind": "stats", "timings": false}
+EOF
+python3 "$WORK/client.py" 127.0.0.1 "$PORT" "$WORK/predict.jsonl" "$WORK/out.predict"
+python3 - "$WORK/out.predict" <<'EOF'
+import json, sys
+predict, stats = [json.loads(l) for l in open(sys.argv[1]) if l.strip()]
+assert predict["ok"], predict
+c = stats["counters"]
+assert c.get("model_registry_loaded") == 1, c
+assert c.get("model_registry_skipped") == 1, c
+assert c.get("model_cache_hits") == 1, c
+assert "model_cache_loads" not in c, c
+print(f"   predict served {predict['rows']} rows from the restarted registry")
+EOF
+stop_server
+
+echo "serve net smoke: OK"

@@ -148,6 +148,25 @@ grep -q '"dataset":"toy1"' "$WORK/out.cache" || {
 grep -q "preloaded toy1" "$WORK/metrics.cache" || {
   echo "expected a preload log line:"; cat "$WORK/metrics.cache"; exit 1; }
 
+echo "== stats snapshot covers every metrics family"
+printf '%s\n%s\n' \
+  '{"kind": "stats", "timings": false}' \
+  '{"kind": "stats"}' \
+  | "$BIN" serve --workers 1 > "$WORK/out.stats" 2> /dev/null
+head -1 "$WORK/out.stats" | grep -q '"kind":"stats"' || {
+  echo "expected a stats response:"; cat "$WORK/out.stats"; exit 1; }
+for fam in counters gauges pool; do
+  head -1 "$WORK/out.stats" | grep -q "\"$fam\"" || {
+    echo "stats snapshot is missing \"$fam\":"; cat "$WORK/out.stats"; exit 1; }
+done
+# histograms are wall-clock derived: absent under "timings": false,
+# present in the default (timed) snapshot
+if head -1 "$WORK/out.stats" | grep -q '"histograms"'; then
+  echo "deterministic stats must omit histograms:"; cat "$WORK/out.stats"; exit 1
+fi
+tail -1 "$WORK/out.stats" | grep -q '"histograms"' || {
+  echo "timed stats must include histograms:"; cat "$WORK/out.stats"; exit 1; }
+
 echo "== screening_service example"
 cargo run --release --quiet --example screening_service > /dev/null
 
