@@ -19,7 +19,7 @@ USAGE:
            [--solver-threads N]  (CD sweep worker threads; defaults to --threads)
            [--cd-mode sync|async]  (parallel CD arm; default sync — see SOLVER)
            [--storage dense|csr|auto]
-           [--validate] [--pjrt] [--config FILE]
+           [--validate] [--pjrt] [--config FILE] [--trace-out FILE]
   dvi experiment --id fig1|tab1|fig2|tab2|fig3|tab3|ablation|all
            [--scale S] [--points N] [--tol F] [--out DIR] [--threads N] [--pjrt]
   dvi gauntlet [--rules e1,e2,...] [--datasets d1,d2] [--scale S] [--points N]
@@ -33,12 +33,14 @@ USAGE:
   dvi train [--dataset NAME] [--model svm|lad|wsvm] --c F [--scale S]
            [--tol F] [--threads N] [--solver-threads N] [--cd-mode sync|async]
            [--print-support] [--storage dense|csr|auto] [--out FILE]
+           [--trace-out FILE]
   dvi predict --model FILE --dataset NAME [--scale S] [--storage ...]
            [--threads N] [--support-only] [--out FILE]
   dvi serve [--workers N] [--cache-mb MB] [--model-cache-mb MB]
            [--preload ds1,ds2 [--preload-scale S]]
            [--listen ADDR] [--socket PATH]  (network mode; default: stdin)
            [--model-dir DIR] [--max-inflight N] [--queue-cost N]
+           [--trace-out FILE] [--metrics-listen HOST:PORT]
            line-JSON requests on stdin, TCP, or a unix socket
   dvi gen-data --dataset NAME --out FILE [--scale S]
   dvi info                           runtime + artifact status
@@ -133,6 +135,23 @@ STORAGE:
   sparsity, vs full z-score on dense.) Also available as the `storage`
   key in --config TOML (see examples/sparse_path.toml) and in serve
   requests.
+
+OBSERVABILITY:
+  --trace-out FILE (path, train, serve) enables span tracing and writes
+  a Chrome trace-event JSON file on exit — open it in chrome://tracing
+  or Perfetto. Spans cover the whole request lifecycle: connection ->
+  request -> queue_wait -> job -> per-step screening and per-iteration
+  CD sweeps. In serve network mode the trace also flushes on SIGTERM.
+  Tracing writes only to the sidecar file: response bytes stay
+  identical under \"timings\": false, and the disabled path costs one
+  relaxed atomic load per span site.
+
+  --metrics-listen HOST:PORT (serve) binds a scrape endpoint answering
+  `GET /metrics` in Prometheus text format (port 0 picks a free port;
+  the bound address is logged as `[serve] metrics listening on ...`).
+  It renders every service metrics family plus solver-pool gauges
+  (queue depth, per-worker busy seconds) and cumulative per-rule
+  screening telemetry. See README.md OBSERVABILITY.
 ";
 
 /// Parse `--key value` / `--flag` style args into a map. Returns
@@ -188,6 +207,25 @@ fn get_cd_mode(
         None => Ok(default),
         Some(v) => crate::config::CdMode::parse(v)
             .ok_or_else(|| format!("--cd-mode must be sync|async, got `{v}`")),
+    }
+}
+
+/// Arm span tracing if `--trace-out FILE` was passed. Call before the
+/// command does any traced work so no spans are lost.
+fn arm_trace(flags: &BTreeMap<String, String>) {
+    if let Some(file) = flags.get("trace-out") {
+        crate::obs::set_trace_out(PathBuf::from(file));
+    }
+}
+
+/// Write the armed trace (if any) and tell the user where it went.
+/// Trace-file write failures are reported but never fail the command —
+/// the computed result already printed.
+fn flush_trace() {
+    match crate::obs::flush() {
+        Ok(Some(path)) => eprintln!("[trace] wrote {}", path.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("[trace] write failed: {e}"),
     }
 }
 
@@ -257,9 +295,11 @@ fn cmd_path(args: &[String]) -> Result<(), String> {
     cfg.solver.cd_mode = get_cd_mode(&flags, cfg.solver.cd_mode)?;
     cfg.validate = cfg.validate || flags.contains_key("validate");
     cfg.use_pjrt = cfg.use_pjrt || flags.contains_key("pjrt");
+    arm_trace(&flags);
 
     let spec = crate::coordinator::JobSpec::path(0, cfg);
     let outcome = crate::coordinator::run_job(&spec);
+    flush_trace();
     match outcome.result {
         Err(e) => Err(e),
         Ok(reply) => {
@@ -411,7 +451,9 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
         persist_dir: None,
         report_support: flags.contains_key("print-support"),
     };
+    arm_trace(&flags);
     let outcome = crate::coordinator::run_job(&JobSpec::train(0, spec));
+    flush_trace();
     let reply = outcome.result?;
     let s = reply.as_train().expect("train jobs return train summaries");
     println!(
@@ -493,6 +535,12 @@ fn cmd_predict(args: &[String]) -> Result<(), String> {
 fn cmd_serve(args: &[String]) -> Result<(), String> {
     use crate::serve::{ModelRegistry, ServeOptions, Server};
     let (_, flags) = parse_flags(args)?;
+    arm_trace(&flags);
+    if flags.contains_key("trace-out") {
+        // network mode blocks in wait() until the process is killed, so
+        // a SIGTERM must flush the trace before exiting
+        crate::obs::install_sigterm_flush();
+    }
     let workers = get_usize(&flags, "workers", 2)?;
     // instance-cache budget in MiB; 0 disables residency entirely
     let cache_mb = get_usize(&flags, "cache-mb", 256)?;
@@ -537,6 +585,16 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         opts.model_dir = Some(dir);
     }
 
+    if let Some(addr) = flags.get("metrics-listen") {
+        let registry = svc.pool_handle().metrics.clone();
+        let render = std::sync::Arc::new(move || {
+            crate::obs::expo::render_exposition(Some(&registry))
+        });
+        let bound = crate::obs::expo::serve_metrics(addr, render)
+            .map_err(|e| format!("--metrics-listen {addr}: {e}"))?;
+        eprintln!("[serve] metrics listening on {bound}");
+    }
+
     let listen = flags.get("listen").cloned();
     let socket = flags.get("socket").cloned();
     if listen.is_some() || socket.is_some() {
@@ -557,6 +615,7 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
             return Err(format!("--socket {path}: unix sockets are not available here"));
         }
         server.wait();
+        flush_trace();
         return Ok(());
     }
 
@@ -570,6 +629,7 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     svc.serve(stdin.lock(), std::io::stdout()).map_err(|e| e.to_string())?;
     eprintln!("{}", svc.metrics().render());
     svc.shutdown();
+    flush_trace();
     Ok(())
 }
 
@@ -840,6 +900,31 @@ mod tests {
             .map(|s| s.to_string())
             .collect();
         assert_eq!(dispatch(&args), 1);
+    }
+
+    #[test]
+    fn cmd_path_trace_out_writes_chrome_json() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dvi_cli_trace_{}.json", std::process::id()));
+        let args: Vec<String> = [
+            "path", "--dataset", "toy1", "--scale", "0.02", "--points", "3", "--tol", "1e-4",
+            "--trace-out", p.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&args), 0);
+        let text = std::fs::read_to_string(&p).unwrap();
+        let j = crate::config::parse_json(&text).unwrap();
+        let events = j
+            .as_object()
+            .unwrap()
+            .get("traceEvents")
+            .unwrap()
+            .as_array()
+            .unwrap();
+        assert!(!events.is_empty(), "a traced path run must export spans");
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

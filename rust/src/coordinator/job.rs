@@ -424,6 +424,22 @@ pub fn run_job_cached(
     models: &ModelCache,
     metrics: &Registry,
 ) -> JobOutcome {
+    // the job-body span parents onto the request span a serving front-end
+    // derived from this job id (absent for CLI one-shots — harmless: the
+    // exporter only checks pairs)
+    let mut span = crate::obs::Span::enter_under("job", crate::obs::request_span_id(spec.id));
+    span.attr("job_id", spec.id as f64);
+    span.attr_str(
+        "job_kind",
+        match &spec.kind {
+            JobKind::Path(_) => "path",
+            JobKind::Screen(_) => "screen",
+            JobKind::Train(_) => "train",
+            JobKind::Predict(_) => "predict",
+            JobKind::Cache(_) => "cache",
+            JobKind::Stats => "stats",
+        },
+    );
     let result = match &spec.kind {
         JobKind::Path(cfg) => run_path(cfg, cache, metrics).map(JobReply::Path),
         JobKind::Screen(s) => run_screen(s, cache, metrics).map(JobReply::Screen),
@@ -582,7 +598,23 @@ fn run_screen(
         let (_, theta_a, u) = anchors.last().expect("anchor just ensured");
         let t = Instant::now();
         let report = match engine.as_mut() {
-            None => dvi::screen_w_par(&inst, c_prev, c_next, u, spec.solver.threads),
+            None => {
+                // the fast path bypasses the Traced engine decorator, so
+                // it carries its own span + telemetry
+                let mut sp = crate::obs::Span::enter("screen_rows");
+                let report = dvi::screen_w_par(&inst, c_prev, c_next, u, spec.solver.threads);
+                let scanned = l as u64;
+                let rejected = (report.n_lo + report.n_hi) as u64;
+                crate::obs::telemetry::record_screen("dvi", scanned, rejected);
+                sp.attr_str("rule", "dvi");
+                sp.attr("rows_scanned", scanned as f64);
+                sp.attr("rows_rejected", rejected as f64);
+                sp.attr(
+                    "rejection_rate",
+                    if l == 0 { 0.0 } else { rejected as f64 / scanned as f64 },
+                );
+                report
+            }
             Some(eng) => {
                 let ctx = StepContext {
                     c_prev,

@@ -195,6 +195,12 @@ impl WorkerPool {
                             };
                             match msg {
                                 Ok(Msg::Job(spec)) => {
+                                    // close the queue-wait span opened at
+                                    // submit (any worker may emit it)
+                                    crate::obs::event_end(
+                                        "queue_wait",
+                                        crate::obs::queue_span_id(spec.id),
+                                    );
                                     let guard = ResultGuard {
                                         id: spec.id,
                                         results_tx: &results_tx,
@@ -273,12 +279,24 @@ impl WorkerPool {
             }
             st.submitted.insert(spec.id);
             if !st.done.contains(&dep) {
+                // parked time counts as queue wait: the span opened below
+                // closes at worker pickup regardless of the park
+                crate::obs::event_begin(
+                    "queue_wait",
+                    crate::obs::queue_span_id(spec.id),
+                    crate::obs::request_span_id(spec.id),
+                );
                 st.waiting.entry(dep).or_default().push(spec);
                 return;
             }
         } else {
             self.deps.lock().unwrap().submitted.insert(spec.id);
         }
+        crate::obs::event_begin(
+            "queue_wait",
+            crate::obs::queue_span_id(spec.id),
+            crate::obs::request_span_id(spec.id),
+        );
         self.tx.send(Msg::Job(spec)).expect("pool closed");
     }
 

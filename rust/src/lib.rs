@@ -28,6 +28,9 @@
 //!   predict.
 //! * [`coordinator`] — a multi-threaded job coordinator and screening
 //!   service: the L3 entry point that examples and the CLI drive.
+//! * [`obs`] — observability: request-scoped span tracing (Chrome
+//!   trace-event export via `--trace-out`) and the Prometheus `/metrics`
+//!   exposition behind `dvi serve --metrics-listen`.
 //! * [`data`], [`linalg`], [`config`], [`report`], [`validation`],
 //!   [`metrics`], [`testutil`] — substrates (dataset generators and IO,
 //!   storage-polymorphic dense/CSR kernels, config parsing, table/figure
@@ -56,6 +59,7 @@ pub mod experiments;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod path;
 pub mod problem;
 pub mod report;

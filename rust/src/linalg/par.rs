@@ -32,7 +32,8 @@ use std::cell::Cell;
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Mutex, MutexGuard};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::time::Instant;
 
 /// Resolve a requested thread count: 0 = auto-detect, otherwise the
 /// requested count; always ≥ 1, never more than `items`, and capped at
@@ -219,9 +220,15 @@ static SCOPED_SPAWNS: AtomicU64 = AtomicU64::new(0);
 /// lifetime-erasure safety argument — no borrow captured by a job can
 /// outlive the dispatching call.
 pub struct SolverPool {
-    senders: Mutex<Vec<mpsc::Sender<Job>>>,
+    /// Per-worker job queue plus that worker's cumulative busy-time
+    /// counter (nanoseconds spent executing jobs).
+    senders: Mutex<Vec<(mpsc::Sender<Job>, Arc<AtomicU64>)>>,
     workers_spawned: AtomicU64,
     jobs_dispatched: AtomicU64,
+    /// Jobs enqueued but not yet picked up by a worker — incremented at
+    /// enqueue, decremented as the job body starts, so it reads 0 whenever
+    /// the pool is quiescent (the `/metrics` `pool_queue_depth` gauge).
+    queue_depth: AtomicU64,
 }
 
 /// Monotonic counters describing pool (and fallback) activity since
@@ -254,6 +261,25 @@ pub fn pool_stats() -> PoolStats {
     }
 }
 
+/// Live pool utilization: current queue depth and per-worker cumulative
+/// busy time. Kept OUT of [`PoolStats`] deliberately — that struct's
+/// fields are enumerated verbatim into the deterministic `"stats"`
+/// response JSON, whereas these values are wall-clock-dependent and only
+/// surface on the `/metrics` exposition.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PoolBusy {
+    /// Jobs enqueued to workers but not yet started.
+    pub queue_depth: u64,
+    /// Nanoseconds worker k has spent executing jobs, one entry per
+    /// spawned worker.
+    pub busy_nanos: Vec<u64>,
+}
+
+/// Utilization snapshot of the global pool.
+pub fn pool_busy() -> PoolBusy {
+    solver_pool().busy()
+}
+
 impl SolverPool {
     /// An empty pool; workers are spawned on first use. `const` so the
     /// global pool is a plain `static` with no lazy-init cell.
@@ -262,6 +288,7 @@ impl SolverPool {
             senders: Mutex::new(Vec::new()),
             workers_spawned: AtomicU64::new(0),
             jobs_dispatched: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
         }
     }
 
@@ -275,16 +302,26 @@ impl SolverPool {
         self.jobs_dispatched.load(Ordering::Relaxed)
     }
 
+    /// Utilization snapshot: queue depth + per-worker busy nanoseconds.
+    pub fn busy(&self) -> PoolBusy {
+        let senders = self.senders.lock().unwrap_or_else(|e| e.into_inner());
+        PoolBusy {
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            busy_nanos: senders.iter().map(|(_, b)| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+
     /// Lock the sender table, growing it to `want` workers first (capped
     /// at [`MAX_POOL_WORKERS`]). The lock is held only while enqueueing —
     /// never while waiting for results — so concurrent solves interleave
     /// jobs onto the shared workers instead of serializing whole solves.
-    fn lock_and_grow(&self, want: usize) -> MutexGuard<'_, Vec<mpsc::Sender<Job>>> {
+    fn lock_and_grow(&self, want: usize) -> MutexGuard<'_, Vec<(mpsc::Sender<Job>, Arc<AtomicU64>)>> {
         let mut senders = self.senders.lock().unwrap_or_else(|e| e.into_inner());
         let want = want.min(MAX_POOL_WORKERS);
         while senders.len() < want {
             let (tx, rx) = mpsc::channel::<Job>();
             let idx = senders.len();
+            let busy = Arc::new(AtomicU64::new(0));
             std::thread::Builder::new()
                 .name(format!("dvi-solver-{idx}"))
                 .spawn(move || {
@@ -297,7 +334,7 @@ impl SolverPool {
                 })
                 .expect("spawn solver pool worker");
             self.workers_spawned.fetch_add(1, Ordering::Relaxed);
-            senders.push(tx);
+            senders.push((tx, busy));
         }
         senders
     }
@@ -330,12 +367,21 @@ impl SolverPool {
                 let r = r.clone();
                 let ack = ack_tx.clone();
                 let f = &f;
+                let depth = &self.queue_depth;
+                let busy = senders[(k - 1) % senders.len()].1.clone();
                 let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    // symmetric with the enqueue-side increment below; the
+                    // send-failure inline path runs this same body, so the
+                    // gauge always returns to 0 at quiescence
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    let t0 = Instant::now();
                     let out = catch_unwind(AssertUnwindSafe(|| f(r)));
+                    busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     let _ = ack.send((k, out));
                 });
                 let job: Job = unsafe { std::mem::transmute(job) };
-                if let Err(err) = senders[(k - 1) % senders.len()].send(job) {
+                self.queue_depth.fetch_add(1, Ordering::Relaxed);
+                if let Err(err) = senders[(k - 1) % senders.len()].0.send(job) {
                     // A worker's queue can only be gone if its thread
                     // failed to start; run the job here — it still acks.
                     (err.0)();
@@ -387,12 +433,18 @@ impl SolverPool {
                 }
                 let ack = ack_tx.clone();
                 let f = &f;
+                let depth = &self.queue_depth;
+                let busy = senders[(w - 1) % senders.len()].1.clone();
                 let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    let t0 = Instant::now();
                     let out = catch_unwind(AssertUnwindSafe(|| f(lo..hi, head)));
+                    busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     let _ = ack.send(out);
                 });
                 let job: Job = unsafe { std::mem::transmute(job) };
-                if let Err(err) = senders[(w - 1) % senders.len()].send(job) {
+                self.queue_depth.fetch_add(1, Ordering::Relaxed);
+                if let Err(err) = senders[(w - 1) % senders.len()].0.send(job) {
                     (err.0)();
                 }
             }
@@ -846,6 +898,21 @@ mod tests {
             outer.len() + inner
         });
         assert_eq!(out, vec![18, 18]);
+    }
+
+    #[test]
+    fn pool_busy_tracks_depth_and_worker_time() {
+        let pool = SolverPool::new();
+        assert_eq!(pool.busy(), PoolBusy { queue_depth: 0, busy_nanos: vec![] });
+        pool.run_ranges(shard_ranges(8, 4), |r| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            r.len()
+        });
+        let b = pool.busy();
+        // quiescent: every enqueued job started, so the gauge is back to 0
+        assert_eq!(b.queue_depth, 0);
+        assert_eq!(b.busy_nanos.len(), 3);
+        assert!(b.busy_nanos.iter().all(|&n| n >= 1_000_000), "{:?}", b.busy_nanos);
     }
 
     #[test]

@@ -1,6 +1,18 @@
 //! Lightweight metrics: counters, gauges, and duration histograms with
 //! percentile queries. Used by the coordinator and the bench harness.
 //! Thread-safe via atomics / mutex-guarded histogram buffers.
+//!
+//! Two histogram shapes:
+//!
+//! * [`Histogram`] — exact storage, right for low-frequency series
+//!   (thousands of path steps). Snapshots pay one sort per histogram,
+//!   never per statistic, and sort with [`f64::total_cmp`] so a NaN
+//!   sample can never panic a scrape.
+//! * [`BoundedHistogram`] — fixed log-spaced buckets with lock-free
+//!   recording, for high-frequency serve-path latencies where an exact
+//!   sample `Vec` would grow without bound. Percentiles come from
+//!   bucket upper bounds (≤ 19% relative error at 4 buckets/octave);
+//!   count/sum/min/max stay exact.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -36,6 +48,15 @@ impl Gauge {
     }
 }
 
+/// Nearest-rank percentile over an ascending-sorted slice; 0 for empty.
+fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
 /// Duration histogram with exact storage (sample counts here are small —
 /// thousands of path steps, not millions of RPCs).
 #[derive(Default, Debug)]
@@ -64,21 +85,176 @@ impl Histogram {
             g.iter().sum::<f64>() / g.len() as f64
         }
     }
+
+    /// One sorted copy of the samples (total order — NaN sorts last
+    /// instead of panicking the comparator).
+    fn sorted(&self) -> Vec<f64> {
+        let mut v = self.samples.lock().unwrap().clone();
+        v.sort_by(f64::total_cmp);
+        v
+    }
+
     /// Percentile in [0, 100] by nearest-rank; 0 for empty.
     pub fn percentile(&self, p: f64) -> f64 {
-        let mut v = self.samples.lock().unwrap().clone();
-        if v.is_empty() {
-            return 0.0;
-        }
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-        v[rank.min(v.len() - 1)]
+        percentile_sorted(&self.sorted(), p)
     }
     pub fn min(&self) -> f64 {
         self.percentile(0.0)
     }
     pub fn max(&self) -> f64 {
         self.percentile(100.0)
+    }
+
+    /// Every summary statistic from ONE lock + ONE sort (the snapshot
+    /// path used to re-clone + re-sort per percentile).
+    pub fn summary(&self, name: &str) -> HistStat {
+        let sorted = self.sorted();
+        let count = sorted.len() as u64;
+        let mean = if sorted.is_empty() { 0.0 } else { sorted.iter().sum::<f64>() / count as f64 };
+        HistStat {
+            name: name.to_string(),
+            count,
+            mean,
+            p50: percentile_sorted(&sorted, 50.0),
+            p99: percentile_sorted(&sorted, 99.0),
+            max: percentile_sorted(&sorted, 100.0),
+        }
+    }
+}
+
+/// Buckets per octave (factor-of-two range) in [`BoundedHistogram`].
+const BH_PER_OCTAVE: f64 = 4.0;
+/// Lowest bucket upper bound: 1µs (serve-path latencies are seconds).
+const BH_LO: f64 = 1e-6;
+/// Bucket count: 128 quarter-octave buckets span 1µs … ~4800s.
+const BH_BUCKETS: usize = 128;
+
+/// Fixed-memory log-bucket histogram: O(1) lock-free recording at any
+/// sample rate. Counts land in quarter-octave buckets; sum/min/max are
+/// tracked exactly via CAS, so `mean()` is exact and percentiles are
+/// bucket-bound approximations.
+#[derive(Debug)]
+pub struct BoundedHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// f64 bit patterns CAS-updated (Mutex-free float accumulators).
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for BoundedHistogram {
+    fn default() -> Self {
+        BoundedHistogram {
+            buckets: (0..BH_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+}
+
+impl BoundedHistogram {
+    fn bucket_of(v: f64) -> usize {
+        if !(v > BH_LO) {
+            // NaN, negatives, zero, and sub-µs all land in bucket 0
+            return 0;
+        }
+        let idx = ((v / BH_LO).log2() * BH_PER_OCTAVE).floor() as i64 + 1;
+        idx.clamp(0, BH_BUCKETS as i64 - 1) as usize
+    }
+
+    /// Upper bound of bucket `i` — the value percentiles report.
+    fn bucket_bound(i: usize) -> f64 {
+        BH_LO * 2f64.powf((i + 1) as f64 / BH_PER_OCTAVE)
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_secs(d.as_secs_f64());
+    }
+
+    pub fn record_secs(&self, s: f64) {
+        self.buckets[Self::bucket_of(s)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        if s.is_finite() {
+            cas_f64(&self.sum_bits, |cur| cur + s);
+            cas_f64(&self.min_bits, |cur| cur.min(s));
+            cas_f64(&self.max_bits, |cur| cur.max(s));
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+    pub fn min(&self) -> f64 {
+        let v = f64::from_bits(self.min_bits.load(Ordering::Relaxed));
+        if v.is_finite() {
+            v
+        } else {
+            0.0
+        }
+    }
+    pub fn max(&self) -> f64 {
+        let v = f64::from_bits(self.max_bits.load(Ordering::Relaxed));
+        if v.is_finite() {
+            v
+        } else {
+            0.0
+        }
+    }
+
+    /// Nearest-rank percentile over the bucket counts, reported as the
+    /// containing bucket's upper bound (clamped to the exact max).
+    pub fn percentile(&self, p: f64) -> f64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * (total as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Self::bucket_bound(i).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    pub fn summary(&self, name: &str) -> HistStat {
+        HistStat {
+            name: name.to_string(),
+            count: self.count(),
+            mean: self.mean(),
+            p50: self.percentile(50.0),
+            p99: self.percentile(99.0),
+            max: self.max(),
+        }
+    }
+}
+
+/// CAS-update an f64 stored as bits in an `AtomicU64`.
+fn cas_f64(bits: &AtomicU64, f: impl Fn(f64) -> f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    loop {
+        let next = f(f64::from_bits(cur)).to_bits();
+        match bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
     }
 }
 
@@ -117,6 +293,7 @@ pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
     gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+    bounded: Mutex<BTreeMap<String, std::sync::Arc<BoundedHistogram>>>,
 }
 
 impl Registry {
@@ -147,6 +324,18 @@ impl Registry {
             .clone()
     }
 
+    /// A log-bucket histogram for high-frequency series (serve-path
+    /// request latencies). Namespaced with the exact histograms in
+    /// snapshots and renders, distinct in storage.
+    pub fn bounded_histogram(&self, name: &str) -> std::sync::Arc<BoundedHistogram> {
+        self.bounded
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
     /// Sorted `(name, value)` snapshot of every counter.
     pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
         self.counters
@@ -167,21 +356,19 @@ impl Registry {
             .collect()
     }
 
-    /// Sorted summary-statistics snapshot of every histogram.
+    /// Sorted summary-statistics snapshot of every histogram (exact and
+    /// bounded), one sort per exact histogram.
     pub fn histograms_snapshot(&self) -> Vec<HistStat> {
-        self.histograms
+        let mut stats: Vec<HistStat> = self
+            .histograms
             .lock()
             .unwrap()
             .iter()
-            .map(|(name, h)| HistStat {
-                name: name.clone(),
-                count: h.count() as u64,
-                mean: h.mean(),
-                p50: h.percentile(50.0),
-                p99: h.percentile(99.0),
-                max: h.max(),
-            })
-            .collect()
+            .map(|(name, h)| h.summary(name))
+            .collect();
+        stats.extend(self.bounded.lock().unwrap().iter().map(|(name, h)| h.summary(name)));
+        stats.sort_by(|a, b| a.name.cmp(&b.name));
+        stats
     }
 
     /// Human-readable dump (sorted by name).
@@ -193,14 +380,12 @@ impl Registry {
         for (name, g) in self.gauges.lock().unwrap().iter() {
             out.push_str(&format!("{name} = {}\n", g.get()));
         }
-        for (name, h) in self.histograms.lock().unwrap().iter() {
+        let mut hists = self.histograms_snapshot();
+        hists.sort_by(|a, b| a.name.cmp(&b.name));
+        for h in hists {
             out.push_str(&format!(
-                "{name}: n={} mean={:.6}s p50={:.6}s p99={:.6}s max={:.6}s\n",
-                h.count(),
-                h.mean(),
-                h.percentile(50.0),
-                h.percentile(99.0),
-                h.max()
+                "{}: n={} mean={:.6}s p50={:.6}s p99={:.6}s max={:.6}s\n",
+                h.name, h.count, h.mean, h.p50, h.p99, h.max
             ));
         }
         out
@@ -251,6 +436,34 @@ mod tests {
     }
 
     #[test]
+    fn nan_sample_never_panics_a_snapshot() {
+        let h = Histogram::default();
+        h.record_secs(1.0);
+        h.record_secs(f64::NAN);
+        h.record_secs(2.0);
+        // total_cmp sorts the NaN last; finite statistics stay sensible
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.count(), 3);
+        let s = h.summary("lat");
+        assert_eq!(s.count, 3);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn summary_matches_individual_statistics() {
+        let h = Histogram::default();
+        for i in 1..=100 {
+            h.record_secs(i as f64);
+        }
+        let s = h.summary("x");
+        assert_eq!(s.count, 100);
+        assert_eq!(s.mean, h.mean());
+        assert_eq!(s.p50, h.percentile(50.0));
+        assert_eq!(s.p99, h.percentile(99.0));
+        assert_eq!(s.max, h.max());
+    }
+
+    #[test]
     fn timer_records() {
         let h = Histogram::default();
         {
@@ -259,6 +472,47 @@ mod tests {
         }
         assert_eq!(h.count(), 1);
         assert!(h.sum() >= 0.001);
+    }
+
+    #[test]
+    fn bounded_histogram_bounds_and_exact_moments() {
+        let h = BoundedHistogram::default();
+        for i in 1..=1000 {
+            h.record_secs(i as f64 * 1e-3); // 1ms … 1s
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.sum() - 500.5).abs() < 1e-9, "sum is exact: {}", h.sum());
+        assert!((h.mean() - 0.5005).abs() < 1e-12);
+        assert_eq!(h.min(), 1e-3);
+        assert_eq!(h.max(), 1.0);
+        // quarter-octave buckets: percentile within 19% of the true value
+        let p50 = h.percentile(50.0);
+        assert!((0.5..=0.6).contains(&p50), "p50 {p50}");
+        assert_eq!(h.percentile(100.0), 1.0, "top percentile clamps to the exact max");
+    }
+
+    #[test]
+    fn bounded_histogram_handles_degenerate_samples() {
+        let h = BoundedHistogram::default();
+        h.record_secs(0.0);
+        h.record_secs(-1.0);
+        h.record_secs(f64::NAN);
+        h.record_secs(1e12); // beyond the top bucket
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.max(), 1e12);
+        let s = h.summary("edge");
+        assert_eq!(s.count, 4);
+        assert!(s.p99.is_finite());
+    }
+
+    #[test]
+    fn bounded_histogram_is_fixed_memory() {
+        let h = BoundedHistogram::default();
+        for _ in 0..100_000 {
+            h.record_secs(0.001);
+        }
+        assert_eq!(h.count(), 100_000);
+        assert_eq!(h.buckets.len(), BH_BUCKETS);
     }
 
     #[test]
@@ -291,6 +545,18 @@ mod tests {
         assert_eq!(hists[0].count, 1);
         assert!((hists[0].mean - 0.25).abs() < 1e-12);
         assert!((hists[0].max - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounded_histograms_join_snapshots_sorted() {
+        let r = Registry::default();
+        r.histogram("z_exact").record_secs(0.25);
+        r.bounded_histogram("a_request_secs").record_secs(0.125);
+        let hists = r.histograms_snapshot();
+        let names: Vec<&str> = hists.iter().map(|h| h.name.as_str()).collect();
+        assert_eq!(names, vec!["a_request_secs", "z_exact"]);
+        assert_eq!(hists[0].count, 1);
+        assert!(r.render().contains("a_request_secs: n=1"));
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! Chrome trace-event JSON export.
+//!
+//! Renders a [`RawEvent`] snapshot as the Trace Event Format that
+//! `chrome://tracing` and Perfetto load directly:
+//!
+//! * spans whose begin and end landed on the same thread become duration
+//!   events (`"ph": "B"` / `"ph": "E"`) on that `tid`;
+//! * cross-thread spans (request lifetime, queue wait) become async
+//!   events (`"ph": "b"` / `"ph": "e"`) matched by `"id"` — the format's
+//!   own representation for work that migrates between threads;
+//! * only *paired* spans are exported: a begin whose end was lost to
+//!   ring wrap (or is still open at flush) would render as an unmatched
+//!   event, so the exporter drops singletons — every end in the file has
+//!   its begin, by construction.
+//!
+//! `ts` is microseconds from the trace epoch (the format's unit), events
+//! are sorted by ascending `ts`, every event carries the span id in
+//! `args.id`, begins carry `args.parent`, and ends carry the span's
+//! recorded attributes. Span ids are hex *strings* (`"0x..."`): derived
+//! ids set bit 63, which overflows the i64 integers most JSON parsers
+//! (including [`crate::config::json`]) use for number literals.
+
+use super::ring::RawEvent;
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Render a snapshot to a complete Chrome trace JSON document.
+pub fn render(events: &[RawEvent]) -> String {
+    // pair begins/ends by span id, keeping only complete spans
+    let mut begins: HashMap<u64, &RawEvent> = HashMap::new();
+    let mut ends: HashMap<u64, &RawEvent> = HashMap::new();
+    for ev in events {
+        if ev.begin {
+            begins.insert(ev.span_id, ev);
+        } else {
+            ends.insert(ev.span_id, ev);
+        }
+    }
+
+    // (ts_ns, phase_rank, span_id, event, phase); begins sort before
+    // ends at equal timestamps so zero-length spans stay well-formed
+    let mut out_events: Vec<(u64, u8, u64, &RawEvent, char)> = Vec::new();
+    for (id, b) in &begins {
+        let Some(e) = ends.get(id) else { continue };
+        let (ph_b, ph_e) = if b.tid == e.tid { ('B', 'E') } else { ('b', 'e') };
+        out_events.push((b.ts_ns, 0, *id, b, ph_b));
+        out_events.push((e.ts_ns.max(b.ts_ns), 1, *id, e, ph_e));
+    }
+    out_events.sort_by_key(|&(ts, rank, id, _, _)| (ts, rank, id));
+
+    let mut s = String::with_capacity(out_events.len() * 128 + 64);
+    s.push_str("{\"displayTimeUnit\": \"ms\", \"traceEvents\": [");
+    for (i, &(ts_ns, _, id, ev, ph)) in out_events.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push('{');
+        let _ = write!(s, "\"name\": \"{}\", \"ph\": \"{ph}\", ", escape(ev.name));
+        if ph == 'b' || ph == 'e' {
+            // async events require a category and a matching id
+            let _ = write!(s, "\"cat\": \"request\", \"id\": \"0x{id:x}\", ");
+        }
+        let _ = write!(s, "\"ts\": {}, \"pid\": 1, \"tid\": {}, \"args\": {{", us(ts_ns), ev.tid);
+        let _ = write!(s, "\"id\": \"0x{id:x}\"");
+        if ev.begin {
+            let _ = write!(s, ", \"parent\": \"0x{:x}\"", ev.parent_id);
+        }
+        for k in 0..ev.n_attrs as usize {
+            let (key, v) = ev.attrs[k];
+            let _ = write!(s, ", \"{}\": {}", escape(key), num(v));
+        }
+        if let Some((key, v)) = ev.str_attr {
+            let _ = write!(s, ", \"{}\": \"{}\"", escape(key), escape(v));
+        }
+        s.push_str("}}");
+    }
+    s.push_str("]}\n");
+    s
+}
+
+/// Microseconds with nanosecond precision, fixed-point (never scientific
+/// notation, always a valid JSON number).
+fn us(ts_ns: u64) -> String {
+    format!("{}.{:03}", ts_ns / 1000, ts_ns % 1000)
+}
+
+/// A finite f64 as a JSON number; non-finite values become null.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        let s = format!("{v}");
+        // `{}` on f64 never emits exponents, but an integral value
+        // prints without a dot — fine for JSON either way
+        s
+    } else {
+        "null".to_string()
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_json;
+    use crate::obs::ring::RawEvent;
+
+    fn ev(span_id: u64, parent: u64, tid: u64, ts: u64, begin: bool, name: &'static str) -> RawEvent {
+        RawEvent { ts_ns: ts, span_id, parent_id: parent, tid, begin, name, ..RawEvent::EMPTY }
+    }
+
+    #[test]
+    fn paired_spans_export_and_singletons_drop() {
+        let mut open = ev(7, 0, 1, 50, true, "lost");
+        open.n_attrs = 0;
+        let events = vec![
+            ev(1, 0, 1, 0, true, "outer"),
+            ev(2, 1, 1, 10, true, "inner"),
+            ev(2, 0, 1, 20, false, "inner"),
+            ev(1, 0, 1, 30, false, "outer"),
+            open, // no matching end — must not be exported
+        ];
+        let json = render(&events);
+        let doc = parse_json(&json).expect("exporter emits valid JSON");
+        let arr = doc.get("traceEvents").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert!(!json.contains("lost"));
+        // sorted by ts, begins before ends, parents precede children
+        let ts: Vec<f64> = arr.iter().map(|e| e.get("ts").unwrap().as_float().unwrap()).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(arr[0].get("ph").unwrap().as_str(), Some("B"));
+        assert_eq!(arr[0].get("args").unwrap().get("parent").unwrap().as_str(), Some("0x0"));
+        assert_eq!(arr[1].get("args").unwrap().get("parent").unwrap().as_str(), Some("0x1"));
+    }
+
+    #[test]
+    fn cross_thread_spans_become_async_pairs() {
+        let events = vec![ev(9, 0, 1, 0, true, "request"), ev(9, 0, 3, 100, false, "request")];
+        let json = render(&events);
+        let doc = parse_json(&json).unwrap();
+        let arr = doc.get("traceEvents").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("ph").unwrap().as_str(), Some("b"));
+        assert_eq!(arr[1].get("ph").unwrap().as_str(), Some("e"));
+        assert_eq!(arr[0].get("id").unwrap().as_str(), arr[1].get("id").unwrap().as_str());
+        assert_eq!(arr[0].get("cat").unwrap().as_str(), Some("request"));
+    }
+
+    #[test]
+    fn attrs_ride_the_end_event() {
+        let mut end = ev(4, 0, 2, 90, false, "sweep");
+        end.attrs[0] = ("shards", 4.0);
+        end.attrs[1] = ("violation", 0.125);
+        end.n_attrs = 2;
+        end.str_attr = Some(("cd_mode", "sync"));
+        let events = vec![ev(4, 2, 2, 40, true, "sweep"), end];
+        let doc = parse_json(&render(&events)).unwrap();
+        let arr = doc.get("traceEvents").unwrap().as_array().unwrap();
+        let args = arr[1].get("args").unwrap();
+        assert_eq!(args.get("shards").unwrap().as_float(), Some(4.0));
+        assert_eq!(args.get("violation").unwrap().as_float(), Some(0.125));
+        assert_eq!(args.get("cd_mode").unwrap().as_str(), Some("sync"));
+    }
+}

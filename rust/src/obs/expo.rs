@@ -1,0 +1,247 @@
+//! Prometheus text-format exposition + the `/metrics` HTTP listener.
+//!
+//! [`render_exposition`] turns the serving stack's metric sources into
+//! one Prometheus text-format (0.0.4) document:
+//!
+//! * every family of a service [`Registry`] — counters, gauges, and
+//!   histogram summaries (as `summary` with `quantile` labels, `_sum`,
+//!   `_count`);
+//! * solver-pool activity from [`crate::linalg::par::pool_stats`]
+//!   (spawn/dispatch counters) and [`crate::linalg::par::pool_busy`]
+//!   (`pool_queue_depth` gauge, per-worker busy seconds);
+//! * the cumulative per-rule screening telemetry
+//!   ([`super::telemetry::registry`]).
+//!
+//! Metric names may embed labels Prometheus-style
+//! (`screen_rows_scanned_total{rule="dvi"}`); the renderer emits one
+//! `# TYPE` line per base name (the part before `{`), so labelled
+//! series group under a single family.
+//!
+//! [`serve_metrics`] binds a TCP listener (the CLI's
+//! `--metrics-listen HOST:PORT`) and answers each connection with a
+//! single HTTP response: `GET /metrics` → 200 + the rendered document,
+//! anything else → 404. One-shot (`Connection: close`), matching how
+//! Prometheus scrapes and keeping the responder tiny.
+
+use crate::metrics::Registry;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Append `# TYPE` for `name`'s base family unless already emitted.
+fn type_line(out: &mut String, last_base: &mut String, name: &str, kind: &str) {
+    let base = name.split('{').next().unwrap_or(name);
+    if base != last_base {
+        out.push_str(&format!("# TYPE {base} {kind}\n"));
+        *last_base = base.to_string();
+    }
+}
+
+/// A float in Prometheus text syntax (`NaN` / `+Inf` / `-Inf` spelled
+/// the way the format requires).
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render one registry's families (counters → gauges → histograms, each
+/// alphabetical — the snapshot order).
+pub fn render_registry(reg: &Registry) -> String {
+    let mut out = String::new();
+    let mut last = String::new();
+    for (name, v) in reg.counters_snapshot() {
+        type_line(&mut out, &mut last, &name, "counter");
+        out.push_str(&format!("{name} {v}\n"));
+    }
+    for (name, v) in reg.gauges_snapshot() {
+        type_line(&mut out, &mut last, &name, "gauge");
+        out.push_str(&format!("{name} {v}\n"));
+    }
+    for h in reg.histograms_snapshot() {
+        type_line(&mut out, &mut last, &h.name, "summary");
+        out.push_str(&format!("{}{{quantile=\"0.5\"}} {}\n", h.name, fmt_f64(h.p50)));
+        out.push_str(&format!("{}{{quantile=\"0.99\"}} {}\n", h.name, fmt_f64(h.p99)));
+        out.push_str(&format!("{}_sum {}\n", h.name, fmt_f64(h.mean * h.count as f64)));
+        out.push_str(&format!("{}_count {}\n", h.name, h.count));
+    }
+    out
+}
+
+/// The full `/metrics` document: the service registry (when serving has
+/// one), solver-pool counters/gauges, and screening telemetry.
+pub fn render_exposition(service: Option<&Registry>) -> String {
+    let mut out = String::new();
+    if let Some(reg) = service {
+        out.push_str(&render_registry(reg));
+    }
+
+    let stats = crate::linalg::par::pool_stats();
+    out.push_str("# TYPE pool_workers_spawned_total counter\n");
+    out.push_str(&format!("pool_workers_spawned_total {}\n", stats.workers_spawned));
+    out.push_str("# TYPE pool_jobs_dispatched_total counter\n");
+    out.push_str(&format!("pool_jobs_dispatched_total {}\n", stats.jobs_dispatched));
+    out.push_str("# TYPE pool_scoped_spawns_total counter\n");
+    out.push_str(&format!("pool_scoped_spawns_total {}\n", stats.scoped_spawns));
+
+    let busy = crate::linalg::par::pool_busy();
+    out.push_str("# TYPE pool_queue_depth gauge\n");
+    out.push_str(&format!("pool_queue_depth {}\n", busy.queue_depth));
+    out.push_str("# TYPE pool_worker_busy_seconds counter\n");
+    for (k, nanos) in busy.busy_nanos.iter().enumerate() {
+        out.push_str(&format!(
+            "pool_worker_busy_seconds{{worker=\"{k}\"}} {}\n",
+            fmt_f64(*nanos as f64 * 1e-9)
+        ));
+    }
+
+    out.push_str(&render_registry(super::telemetry::registry()));
+    out
+}
+
+/// Answer one accepted connection: read the request head, route, write a
+/// single response, close.
+fn answer(mut stream: TcpStream, render: &(dyn Fn() -> String + Send + Sync)) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let mut head = Vec::with_capacity(512);
+    let mut buf = [0u8; 512];
+    // read until end-of-headers (we ignore any body; /metrics is GET)
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < 8192 {
+        match stream.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+        }
+    }
+    let request_line = std::str::from_utf8(&head)
+        .unwrap_or("")
+        .lines()
+        .next()
+        .unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let response = if method == "GET" && (path == "/metrics" || path.starts_with("/metrics?")) {
+        let body = render();
+        format!(
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+    } else {
+        let body = "not found; scrape GET /metrics\n";
+        format!(
+            "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+    };
+    let _ = stream.write_all(response.as_bytes());
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Bind `addr` and serve `GET /metrics` forever on a background thread,
+/// rendering each scrape with `render`. Returns the bound address (so
+/// `HOST:0` callers learn the ephemeral port). The render closure keeps
+/// this module free of any coordinator dependency — the CLI decides
+/// which registries a scrape sees.
+pub fn serve_metrics(
+    addr: &str,
+    render: Arc<dyn Fn() -> String + Send + Sync>,
+) -> std::io::Result<SocketAddr> {
+    let sock = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidInput, "unresolvable metrics address"))?;
+    let listener = TcpListener::bind(sock)?;
+    let local = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("dvi-metrics".into())
+        .spawn(move || {
+            for stream in listener.incoming().flatten() {
+                answer(stream, render.as_ref());
+            }
+        })
+        .expect("spawn metrics listener thread");
+    Ok(local)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_renders_every_family_with_type_lines() {
+        let reg = Registry::default();
+        reg.counter("jobs_total").add(3);
+        reg.gauge("cache_bytes").set(640);
+        reg.histogram("solve_secs").record_secs(0.5);
+        reg.histogram("solve_secs").record_secs(1.5);
+        reg.bounded_histogram("request_secs").record_secs(0.01);
+        let s = render_registry(&reg);
+        assert!(s.contains("# TYPE jobs_total counter\njobs_total 3\n"));
+        assert!(s.contains("# TYPE cache_bytes gauge\ncache_bytes 640\n"));
+        assert!(s.contains("# TYPE solve_secs summary\n"));
+        assert!(s.contains("solve_secs{quantile=\"0.5\"}"));
+        assert!(s.contains("solve_secs{quantile=\"0.99\"}"));
+        assert!(s.contains("solve_secs_sum 2\n"));
+        assert!(s.contains("solve_secs_count 2\n"));
+        assert!(s.contains("# TYPE request_secs summary\n"));
+        assert!(s.contains("request_secs_count 1\n"));
+    }
+
+    #[test]
+    fn labelled_series_share_one_type_line() {
+        let reg = Registry::default();
+        reg.counter("rows_total{rule=\"a\"}").add(1);
+        reg.counter("rows_total{rule=\"b\"}").add(2);
+        let s = render_registry(&reg);
+        assert_eq!(s.matches("# TYPE rows_total counter").count(), 1);
+        assert!(s.contains("rows_total{rule=\"a\"} 1\n"));
+        assert!(s.contains("rows_total{rule=\"b\"} 2\n"));
+    }
+
+    #[test]
+    fn exposition_always_includes_pool_families() {
+        let s = render_exposition(None);
+        assert!(s.contains("# TYPE pool_workers_spawned_total counter"));
+        assert!(s.contains("# TYPE pool_jobs_dispatched_total counter"));
+        assert!(s.contains("# TYPE pool_scoped_spawns_total counter"));
+        assert!(s.contains("# TYPE pool_queue_depth gauge"));
+        assert!(s.contains("# TYPE pool_worker_busy_seconds counter"));
+    }
+
+    #[test]
+    fn metrics_endpoint_scrapes_and_404s() {
+        let addr = serve_metrics(
+            "127.0.0.1:0",
+            Arc::new(|| "# TYPE up gauge\nup 1\n".to_string()),
+        )
+        .expect("bind metrics listener");
+
+        let scrape = |req: &str| {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(req.as_bytes()).unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        };
+
+        let ok = scrape("GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+        assert!(ok.contains("text/plain; version=0.0.4"));
+        assert!(ok.ends_with("up 1\n"), "{ok}");
+
+        let missing = scrape("GET /other HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.1 404 Not Found\r\n"), "{missing}");
+
+        // listener survives to answer another scrape
+        let again = scrape("GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(again.starts_with("HTTP/1.1 200 OK\r\n"));
+    }
+}

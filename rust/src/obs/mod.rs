@@ -1,0 +1,337 @@
+//! Observability: request-scoped span tracing + scrapeable metrics
+//! exposition for the serving stack.
+//!
+//! Two independent surfaces share this module:
+//!
+//! * **Span tracing** — explicit begin/end spans with parent ids pushed
+//!   into a process-wide lock-free [`ring::EventRing`], exported as
+//!   Chrome trace-event JSON ([`chrome`]) via `--trace-out FILE` on
+//!   `dvi serve` / `dvi path` / `dvi train`, flushed on exit and on
+//!   SIGTERM ([`install_sigterm_flush`]). Spans cover the whole request
+//!   lifecycle: connection → parse/admission → pool dispatch (queue
+//!   wait) → job body → per-step screening → per-iteration CD sweeps.
+//! * **Metrics exposition** — `GET /metrics` in Prometheus text format
+//!   ([`expo`]) behind `dvi serve --metrics-listen HOST:PORT`, rendering
+//!   every [`crate::metrics::Registry`] family plus solver-pool gauges
+//!   and the cumulative per-rule screening telemetry ([`telemetry`]).
+//!
+//! The determinism contract: observability NEVER writes to the protocol
+//! stream. A `"timings": false` session produces byte-identical
+//! responses with tracing on or off; everything here goes to the sidecar
+//! trace file or the scrape endpoint. The disabled path is one relaxed
+//! atomic load per potential span — no allocation, no time syscalls.
+//!
+//! Span ids: guard spans ([`Span`]) draw from a process counter and
+//! parent onto the per-thread current span. Requests cross threads
+//! (submitted on a connection reader, finished on a pool worker, retired
+//! on the dispatcher), so their span ids are *derived from the pool job
+//! id* ([`request_span_id`]/[`queue_span_id`]) — any thread can emit the
+//! matching begin or end without coordination.
+
+pub mod chrome;
+pub mod expo;
+pub mod ring;
+#[cfg(unix)]
+mod signal;
+pub mod telemetry;
+
+pub use ring::{EventRing, RawEvent, MAX_ATTRS};
+
+use std::cell::Cell;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Ring capacity (events). Power of two; the ring keeps the newest
+/// window when a long run overflows it.
+const RING_CAP: usize = 1 << 16;
+
+/// High bit marks span ids derived from pool job ids (cross-thread
+/// request/queue spans) so they can never collide with the sequential
+/// guard-span counter.
+const DERIVED_BIT: u64 = 1 << 63;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RING: OnceLock<EventRing> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static TRACE_OUT: Mutex<Option<PathBuf>> = Mutex::new(None);
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Trace-local thread id (dense small integers; 0 = unassigned).
+    static TID: Cell<u64> = const { Cell::new(0) };
+    /// The innermost open guard span on this thread (0 = root).
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Is tracing on? One relaxed load — THE disabled-path cost.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on (idempotent). Allocates the ring and pins the trace
+/// epoch on first call.
+pub fn enable() {
+    RING.get_or_init(|| EventRing::new(RING_CAP));
+    EPOCH.get_or_init(Instant::now);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Enable tracing and set the Chrome trace-event JSON flush target
+/// (the CLI's `--trace-out FILE`).
+pub fn set_trace_out(path: PathBuf) {
+    enable();
+    *TRACE_OUT.lock().unwrap() = Some(path);
+}
+
+/// The configured flush target, if any.
+pub fn trace_out() -> Option<PathBuf> {
+    TRACE_OUT.lock().unwrap().clone()
+}
+
+/// Snapshot every currently-published event (empty when tracing never
+/// started).
+pub fn snapshot_events() -> Vec<RawEvent> {
+    RING.get().map(EventRing::snapshot).unwrap_or_default()
+}
+
+/// Write the Chrome trace to the configured `--trace-out` path. Returns
+/// the path written, or `None` when no target is configured. Safe to
+/// call repeatedly (exit AND signal paths both flush).
+pub fn flush() -> std::io::Result<Option<PathBuf>> {
+    let Some(path) = trace_out() else { return Ok(None) };
+    let json = chrome::render(&snapshot_events());
+    std::fs::write(&path, json)?;
+    Ok(Some(path))
+}
+
+/// Install a SIGTERM handler that flushes the trace and exits 0 (the
+/// rolling-restart path for a network server, which otherwise never
+/// reaches the end-of-main flush). No-op on non-unix platforms and on
+/// repeat calls.
+pub fn install_sigterm_flush() {
+    #[cfg(unix)]
+    signal::install();
+}
+
+fn now_ns() -> u64 {
+    EPOCH.get().map(|e| e.elapsed().as_nanos() as u64).unwrap_or(0)
+}
+
+fn tid() -> u64 {
+    TID.with(|t| {
+        if t.get() == 0 {
+            t.set(NEXT_TID.fetch_add(1, Ordering::Relaxed));
+        }
+        t.get()
+    })
+}
+
+fn push(ev: RawEvent) {
+    if let Some(ring) = RING.get() {
+        ring.push(ev);
+    }
+}
+
+/// Span id for the whole request lifetime of pool job `pool_id`
+/// (begin at admission/submit, end at outcome dispatch).
+pub fn request_span_id(pool_id: u64) -> u64 {
+    DERIVED_BIT | (pool_id << 1)
+}
+
+/// Span id for pool job `pool_id`'s queue wait (begin at submit, end at
+/// worker pickup).
+pub fn queue_span_id(pool_id: u64) -> u64 {
+    DERIVED_BIT | (pool_id << 1) | 1
+}
+
+/// The innermost open guard span on this thread (0 = root). Lets
+/// cross-thread begins parent onto the emitting thread's context.
+pub fn current_span() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    CURRENT.with(|c| c.get())
+}
+
+/// Emit a bare span begin with an explicit id (cross-thread spans; the
+/// matching [`event_end`] may come from any thread).
+pub fn event_begin(name: &'static str, span_id: u64, parent_id: u64) {
+    if !enabled() {
+        return;
+    }
+    push(RawEvent {
+        ts_ns: now_ns(),
+        span_id,
+        parent_id,
+        tid: tid(),
+        begin: true,
+        name,
+        ..RawEvent::EMPTY
+    });
+}
+
+/// Emit a bare span end with an explicit id. `str_attr`/`attrs` ride the
+/// end event (they are only known once the work finishes).
+pub fn event_end(name: &'static str, span_id: u64) {
+    if !enabled() {
+        return;
+    }
+    push(RawEvent { ts_ns: now_ns(), span_id, tid: tid(), begin: false, name, ..RawEvent::EMPTY });
+}
+
+/// Intern a dynamic string (e.g. a composed rule name) so events stay
+/// `Copy`. Deduplicated; the tiny vocabulary (rule expressions, dataset
+/// names) bounds the leak.
+pub fn intern(s: &str) -> &'static str {
+    static INTERNED: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+    let mut set = INTERNED.lock().unwrap();
+    if let Some(hit) = set.iter().find(|k| **k == s) {
+        return hit;
+    }
+    let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
+    set.push(leaked);
+    leaked
+}
+
+/// A guard span: begin on construction, end on drop, parented onto the
+/// thread's innermost open span. Inert (no ids drawn, no events, no
+/// clock reads) while tracing is disabled.
+pub struct Span {
+    id: u64,
+    prev: u64,
+    name: &'static str,
+    str_attr: Option<(&'static str, &'static str)>,
+    attrs: [(&'static str, f64); MAX_ATTRS],
+    n_attrs: u8,
+    active: bool,
+}
+
+impl Span {
+    const INERT: Span = Span {
+        id: 0,
+        prev: 0,
+        name: "",
+        str_attr: None,
+        attrs: [("", 0.0); MAX_ATTRS],
+        n_attrs: 0,
+        active: false,
+    };
+
+    /// Open a span under the thread's current span.
+    #[inline]
+    pub fn enter(name: &'static str) -> Span {
+        if !enabled() {
+            return Span::INERT;
+        }
+        Self::open(name, None)
+    }
+
+    /// Open a span under an explicit parent (e.g. a job body parenting
+    /// onto its cross-thread request span).
+    #[inline]
+    pub fn enter_under(name: &'static str, parent: u64) -> Span {
+        if !enabled() {
+            return Span::INERT;
+        }
+        Self::open(name, Some(parent))
+    }
+
+    fn open(name: &'static str, parent: Option<u64>) -> Span {
+        let id = NEXT_SPAN.fetch_add(1, Ordering::Relaxed);
+        let prev = CURRENT.with(|c| {
+            let p = c.get();
+            c.set(id);
+            p
+        });
+        let parent_id = parent.unwrap_or(prev);
+        push(RawEvent {
+            ts_ns: now_ns(),
+            span_id: id,
+            parent_id,
+            tid: tid(),
+            begin: true,
+            name,
+            ..RawEvent::EMPTY
+        });
+        Span { id, prev, name, str_attr: None, attrs: [("", 0.0); MAX_ATTRS], n_attrs: 0, active: true }
+    }
+
+    /// Attach a numeric attribute (emitted with the end event). Silently
+    /// dropped past [`MAX_ATTRS`] or on an inert span.
+    #[inline]
+    pub fn attr(&mut self, key: &'static str, value: f64) {
+        if self.active && (self.n_attrs as usize) < MAX_ATTRS {
+            self.attrs[self.n_attrs as usize] = (key, value);
+            self.n_attrs += 1;
+        }
+    }
+
+    /// Attach the span's one string attribute (emitted with the end
+    /// event).
+    #[inline]
+    pub fn attr_str(&mut self, key: &'static str, value: &'static str) {
+        if self.active {
+            self.str_attr = Some((key, value));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        CURRENT.with(|c| c.set(self.prev));
+        push(RawEvent {
+            ts_ns: now_ns(),
+            span_id: self.id,
+            parent_id: 0,
+            tid: tid(),
+            begin: false,
+            name: self.name,
+            str_attr: self.str_attr,
+            attrs: self.attrs,
+            n_attrs: self.n_attrs,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        // tracing may have been enabled by a sibling test in this
+        // process; only assert the inert contract when it is off
+        if !enabled() {
+            let before = RING.get().map(EventRing::pushed).unwrap_or(0);
+            let mut sp = Span::enter("never");
+            sp.attr("x", 1.0);
+            drop(sp);
+            assert_eq!(RING.get().map(EventRing::pushed).unwrap_or(0), before);
+            assert_eq!(current_span(), 0);
+        }
+    }
+
+    #[test]
+    fn interning_dedups() {
+        let a = intern("dvi+essnsv");
+        let b = intern("dvi+essnsv");
+        assert!(std::ptr::eq(a, b));
+        assert_eq!(a, "dvi+essnsv");
+    }
+
+    #[test]
+    fn derived_ids_never_collide_with_guard_ids() {
+        assert_ne!(request_span_id(0), queue_span_id(0));
+        assert_ne!(request_span_id(5), queue_span_id(5));
+        // guard ids are sequential from 1 without the high bit
+        assert_eq!(request_span_id(7) & DERIVED_BIT, DERIVED_BIT);
+        assert_eq!(NEXT_SPAN.load(Ordering::Relaxed) & DERIVED_BIT, 0);
+    }
+}

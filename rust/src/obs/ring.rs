@@ -1,0 +1,179 @@
+//! The lock-free event ring behind span tracing.
+//!
+//! A fixed-capacity power-of-two ring of [`RawEvent`] slots. Writers
+//! claim a ticket with one `fetch_add` and publish through a per-slot
+//! seqlock (odd = mid-write, `2·ticket + 2` = published), so concurrent
+//! emitters never block each other and never allocate. When the ring
+//! wraps, the newest events overwrite the oldest — a bounded trace that
+//! keeps the most recent window, never unbounded memory. The reader
+//! (trace flush) walks the last `capacity` tickets and drops any slot
+//! whose sequence shows a wrap race or an in-flight write, so a snapshot
+//! can run concurrently with live traffic and only ever loses the slots
+//! actually being overwritten at that instant.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Fixed attribute capacity per event — enough for every span this crate
+/// emits, chosen so [`RawEvent`] stays `Copy` and the disabled path never
+/// touches the heap.
+pub const MAX_ATTRS: usize = 4;
+
+/// One trace event: a span begin or end, fixed-size, no heap.
+#[derive(Clone, Copy)]
+pub struct RawEvent {
+    /// Nanoseconds since the process trace epoch.
+    pub ts_ns: u64,
+    /// Span this event belongs to (begin/end pairs share it).
+    pub span_id: u64,
+    /// Enclosing span id (0 = root). Only meaningful on begins.
+    pub parent_id: u64,
+    /// Trace-local thread id (small dense integers, not OS tids).
+    pub tid: u64,
+    /// `true` = span begin, `false` = span end.
+    pub begin: bool,
+    /// Span name. Static (or interned) so events stay `Copy`.
+    pub name: &'static str,
+    /// One optional string attribute (e.g. `("cd_mode", "sync")`).
+    pub str_attr: Option<(&'static str, &'static str)>,
+    /// Numeric attributes, `n_attrs` of them valid.
+    pub attrs: [(&'static str, f64); MAX_ATTRS],
+    pub n_attrs: u8,
+}
+
+impl RawEvent {
+    pub const EMPTY: RawEvent = RawEvent {
+        ts_ns: 0,
+        span_id: 0,
+        parent_id: 0,
+        tid: 0,
+        begin: false,
+        name: "",
+        str_attr: None,
+        attrs: [("", 0.0); MAX_ATTRS],
+        n_attrs: 0,
+    };
+}
+
+struct Slot {
+    /// Seqlock word: `2·ticket + 1` while the claiming writer is copying,
+    /// `2·ticket + 2` once published. A reader accepts a slot only when
+    /// it observes the published value for the exact ticket it expects,
+    /// before AND after copying the payload out.
+    seq: AtomicU64,
+    ev: UnsafeCell<RawEvent>,
+}
+
+/// Multi-producer bounded event ring. Single logical consumer (the trace
+/// flush), which tolerates concurrent producers by seqlock validation.
+pub struct EventRing {
+    head: AtomicU64,
+    mask: u64,
+    slots: Vec<Slot>,
+}
+
+// Slots are raced deliberately: writers serialize per slot via the
+// ticket claim, and the reader validates with the seqlock.
+unsafe impl Sync for EventRing {}
+
+impl EventRing {
+    /// `capacity` is rounded up to a power of two.
+    pub fn new(capacity: usize) -> EventRing {
+        let cap = capacity.next_power_of_two().max(2);
+        let slots = (0..cap)
+            .map(|_| Slot { seq: AtomicU64::new(0), ev: UnsafeCell::new(RawEvent::EMPTY) })
+            .collect();
+        EventRing { head: AtomicU64::new(0), mask: (cap as u64) - 1, slots }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever pushed (not clamped to capacity).
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::SeqCst)
+    }
+
+    /// Record one event. Lock-free: one `fetch_add` + two slot stores.
+    pub fn push(&self, ev: RawEvent) {
+        let ticket = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket & self.mask) as usize];
+        slot.seq.store(ticket.wrapping_mul(2).wrapping_add(1), Ordering::SeqCst);
+        // Raced only across a full ring wrap (capacity pushes in between);
+        // the seqlock check below makes the reader drop a torn slot.
+        unsafe { *slot.ev.get() = ev };
+        slot.seq.store(ticket.wrapping_mul(2).wrapping_add(2), Ordering::SeqCst);
+    }
+
+    /// Copy out every currently-published event, oldest first. Slots that
+    /// wrapped or are mid-write are skipped, never torn.
+    pub fn snapshot(&self) -> Vec<RawEvent> {
+        let head = self.head.load(Ordering::SeqCst);
+        let cap = self.slots.len() as u64;
+        let start = head.saturating_sub(cap);
+        let mut out = Vec::with_capacity((head - start) as usize);
+        for ticket in start..head {
+            let slot = &self.slots[(ticket & self.mask) as usize];
+            let want = ticket.wrapping_mul(2).wrapping_add(2);
+            if slot.seq.load(Ordering::SeqCst) != want {
+                continue;
+            }
+            let ev = unsafe { std::ptr::read_volatile(slot.ev.get()) };
+            if slot.seq.load(Ordering::SeqCst) != want {
+                continue;
+            }
+            out.push(ev);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64) -> RawEvent {
+        RawEvent { span_id: id, ts_ns: id, ..RawEvent::EMPTY }
+    }
+
+    #[test]
+    fn keeps_the_newest_window_on_wrap() {
+        let ring = EventRing::new(4);
+        for i in 0..10 {
+            ring.push(ev(i));
+        }
+        let got: Vec<u64> = ring.snapshot().iter().map(|e| e.span_id).collect();
+        assert_eq!(got, vec![6, 7, 8, 9]);
+        assert_eq!(ring.pushed(), 10);
+    }
+
+    #[test]
+    fn snapshot_of_partial_ring_is_ordered() {
+        let ring = EventRing::new(8);
+        for i in 0..3 {
+            ring.push(ev(i));
+        }
+        let got: Vec<u64> = ring.snapshot().iter().map(|e| e.span_id).collect();
+        assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn concurrent_pushers_never_lose_the_latest_window() {
+        let ring = std::sync::Arc::new(EventRing::new(1024));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let ring = ring.clone();
+                s.spawn(move || {
+                    for i in 0..500u64 {
+                        ring.push(ev(t * 1000 + i));
+                    }
+                });
+            }
+        });
+        assert_eq!(ring.pushed(), 2000);
+        let snap = ring.snapshot();
+        // quiescent snapshot: a full ring, no torn slots
+        assert_eq!(snap.len(), 1024);
+    }
+}

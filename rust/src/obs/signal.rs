@@ -1,0 +1,65 @@
+//! SIGTERM → trace flush, unix-only, std + raw libc FFI (no crates).
+//!
+//! A long-running `dvi serve` is normally stopped by SIGTERM (rolling
+//! restarts, container runtimes), which would otherwise skip the
+//! end-of-main trace flush. The handler itself must stay async-signal
+//! safe, so it only writes one byte to a pre-opened self-pipe; a watcher
+//! thread blocks on the read end and performs the actual flush + exit
+//! from safe Rust.
+
+use std::sync::atomic::{AtomicBool, AtomicI32, Ordering};
+
+const SIGTERM: i32 = 15;
+
+extern "C" {
+    fn pipe(fds: *mut i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+}
+
+static PIPE_WR: AtomicI32 = AtomicI32::new(-1);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_sigterm(_sig: i32) {
+    // async-signal-safe: one write(2) to the self-pipe, nothing else
+    let fd = PIPE_WR.load(Ordering::Relaxed);
+    if fd >= 0 {
+        let b = 1u8;
+        unsafe { write(fd, &b, 1) };
+    }
+}
+
+/// Install the handler + watcher (idempotent).
+pub fn install() {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let mut fds = [-1i32; 2];
+    if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+        return; // no pipe, no graceful flush — keep serving
+    }
+    let (rd, wr) = (fds[0], fds[1]);
+    PIPE_WR.store(wr, Ordering::SeqCst);
+    unsafe { signal(SIGTERM, on_sigterm) };
+    std::thread::Builder::new()
+        .name("dvi-obs-signal".into())
+        .spawn(move || {
+            let mut buf = 0u8;
+            loop {
+                let n = unsafe { read(rd, &mut buf, 1) };
+                if n == 1 {
+                    break;
+                }
+                if n == 0 {
+                    return; // pipe closed without a signal
+                }
+                // n < 0: EINTR etc — retry
+            }
+            if let Ok(Some(path)) = crate::obs::flush() {
+                eprintln!("[obs] SIGTERM: trace flushed to {}", path.display());
+            }
+            std::process::exit(0);
+        })
+        .ok();
+}

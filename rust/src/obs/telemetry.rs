@@ -1,0 +1,47 @@
+//! Cumulative screening telemetry, independent of span tracing.
+//!
+//! Every screening invocation — engine path or the plain-DVI fast path —
+//! records how many rows it scanned and how many it rejected, keyed by
+//! rule name. The counters live in a process-wide
+//! [`crate::metrics::Registry`] with the rule name embedded Prometheus
+//! style (`screen_rows_scanned_total{rule="dvi"}`), so the `/metrics`
+//! exposition renders them without a separate label mechanism and the
+//! cost is two relaxed atomic adds per screen call.
+
+use crate::metrics::Registry;
+use std::sync::OnceLock;
+
+static TELEMETRY: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide telemetry registry (rule-labelled screening
+/// counters). Distinct from any per-service registry: screening runs in
+/// CLI paths that have no coordinator.
+pub fn registry() -> &'static Registry {
+    TELEMETRY.get_or_init(Registry::default)
+}
+
+/// Record one screening pass for `rule`: `scanned` rows examined,
+/// `rejected` of them eliminated. Always on — this is the live-traffic
+/// counterpart of the offline `BENCH_screening.json` rates.
+pub fn record_screen(rule: &str, scanned: u64, rejected: u64) {
+    let reg = registry();
+    reg.counter(&format!("screen_rows_scanned_total{{rule=\"{rule}\"}}")).add(scanned);
+    reg.counter(&format!("screen_rows_rejected_total{{rule=\"{rule}\"}}")).add(rejected);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn screen_counters_accumulate_per_rule() {
+        record_screen("test_rule_a", 100, 40);
+        record_screen("test_rule_a", 100, 10);
+        record_screen("test_rule_b", 7, 7);
+        let snap = registry().counters_snapshot();
+        let get = |name: &str| snap.iter().find(|(n, _)| n == name).map(|&(_, v)| v);
+        assert_eq!(get("screen_rows_scanned_total{rule=\"test_rule_a\"}"), Some(200));
+        assert_eq!(get("screen_rows_rejected_total{rule=\"test_rule_a\"}"), Some(50));
+        assert_eq!(get("screen_rows_rejected_total{rule=\"test_rule_b\"}"), Some(7));
+    }
+}

@@ -171,7 +171,11 @@ impl PathRunner {
     /// installed one pre-refactor; other expressions keep their engine.
     pub fn with_backend(mut self, backend: Box<dyn DviScanBackend>) -> Self {
         if self.rule.single() == Some(RuleKind::DviW) {
-            self.engine = Box::new(DviWRule::with_backend(backend));
+            // re-wrap in the tracing decorator: backend swaps must not
+            // silently drop screening spans/telemetry
+            self.engine = Box::new(crate::screening::Traced::new(Box::new(
+                DviWRule::with_backend(backend),
+            )));
         }
         self
     }
@@ -256,6 +260,10 @@ impl PathRunner {
         for k in 1..grid.len() {
             let (c_prev, c_next) = (grid[k - 1], grid[k]);
 
+            let mut step_span = crate::obs::Span::enter("path_step");
+            step_span.attr("step", k as f64);
+            step_span.attr("c", c_next);
+
             let t_screen = Instant::now();
             let report: ScreenReport = if self.rule.is_none() {
                 ScreenReport::keep_all(l)
@@ -329,7 +337,11 @@ impl PathRunner {
             let free = report.free_indices();
 
             let t_solve = Instant::now();
-            cur = solver.solve_free_with_u(inst, c_next, theta0, &free, u0);
+            cur = {
+                let mut sp = crate::obs::Span::enter("solve");
+                sp.attr("free", free.len() as f64);
+                solver.solve_free_with_u(inst, c_next, theta0, &free, u0)
+            };
             let solve_secs = t_solve.elapsed().as_secs_f64();
 
             // periodic hygiene refresh of the incrementally-maintained u

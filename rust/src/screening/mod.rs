@@ -34,7 +34,7 @@ pub use dvi::{Dvi, DviForm};
 pub use region::{decide_bounds, DualRegion, RowScratch};
 pub use rule::{
     DviThetaRule, DviWRule, NoneRule, RuleExpr, ScreeningRule, SsnsvRule, StepContext,
-    VALID_RULES,
+    Traced, VALID_RULES,
 };
 pub use ssnsv::{Ssnsv, SsnsvContext};
 

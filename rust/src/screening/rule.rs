@@ -250,6 +250,70 @@ impl ScreeningRule for NoneRule {
     }
 }
 
+/// Instrumented decorator around any engine: emits `screen_init` /
+/// `screen_prepare` / `screen_rows` spans (rule name, rows scanned /
+/// rejected, rejection rate) and feeds the cumulative per-rule telemetry
+/// counters ([`crate::obs::telemetry`]). Installed by [`RuleExpr::build`]
+/// so every config surface gets it for free; decisions pass through
+/// untouched, so traced and untraced engines are bit-identical — and the
+/// spans themselves are inert unless `--trace-out` enabled tracing.
+pub struct Traced {
+    inner: Box<dyn ScreeningRule>,
+    /// Interned rule name, so span attributes stay `Copy`.
+    label: &'static str,
+}
+
+impl Traced {
+    pub fn new(inner: Box<dyn ScreeningRule>) -> Traced {
+        let label = crate::obs::intern(&inner.name());
+        Traced { inner, label }
+    }
+}
+
+impl ScreeningRule for Traced {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn requires_cmax(&self) -> bool {
+        self.inner.requires_cmax()
+    }
+
+    fn init(&mut self, inst: &Instance, threads: usize) {
+        let mut sp = crate::obs::Span::enter("screen_init");
+        sp.attr_str("rule", self.label);
+        self.inner.init(inst, threads);
+    }
+
+    fn prepare(&self, inst: &Instance, ctx: &StepContext) -> DualRegion {
+        let mut sp = crate::obs::Span::enter("screen_prepare");
+        sp.attr_str("rule", self.label);
+        self.inner.prepare(inst, ctx)
+    }
+
+    fn screen_rows(
+        &mut self,
+        inst: &Instance,
+        region: &DualRegion,
+        threads: usize,
+    ) -> Vec<Decision> {
+        let mut sp = crate::obs::Span::enter("screen_rows");
+        let decisions = self.inner.screen_rows(inst, region, threads);
+        let scanned = decisions.len() as u64;
+        let rejected =
+            decisions.iter().filter(|d| !matches!(d, Decision::Keep)).count() as u64;
+        crate::obs::telemetry::record_screen(self.label, scanned, rejected);
+        sp.attr_str("rule", self.label);
+        sp.attr("rows_scanned", scanned as f64);
+        sp.attr("rows_rejected", rejected as f64);
+        sp.attr(
+            "rejection_rate",
+            if scanned == 0 { 0.0 } else { rejected as f64 / scanned as f64 },
+        );
+        decisions
+    }
+}
+
 /// The accepted atom names, quoted by every rule-parse error and the CLI
 /// usage text.
 pub const VALID_RULES: &str = "dvi, dvi-theta, ssnsv, essnsv, none";
@@ -333,12 +397,17 @@ impl RuleExpr {
     /// [`super::Composite`] intersecting the members. `threads` picks
     /// the w-form scan backend (the same policy the path runner uses).
     pub fn build(&self, threads: usize) -> Box<dyn ScreeningRule> {
-        if let [k] = self.atoms.as_slice() {
-            return build_atom(*k, threads);
-        }
-        Box::new(super::Composite::new(
-            self.atoms.iter().map(|&k| build_atom(k, threads)).collect(),
-        ))
+        let engine: Box<dyn ScreeningRule> = if let [k] = self.atoms.as_slice() {
+            build_atom(*k, threads)
+        } else {
+            Box::new(super::Composite::new(
+                self.atoms.iter().map(|&k| build_atom(k, threads)).collect(),
+            ))
+        };
+        // one decorator at the top level — member atoms inside a
+        // composite are not individually traced, so telemetry counts
+        // each screened row exactly once per expression
+        Box::new(Traced::new(engine))
     }
 }
 
@@ -409,5 +478,43 @@ mod tests {
             let e = RuleExpr::parse(s).unwrap();
             assert_eq!(e.build(1).name(), e.name(), "{s}");
         }
+    }
+
+    #[test]
+    fn traced_decorator_passes_decisions_through_and_counts() {
+        use crate::data::synth;
+        use crate::problem::Instance;
+
+        let ds = synth::toy_gaussian(11, 40, 1.5, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let theta = inst.cold_start();
+        let u = inst.u_from_theta(&theta);
+        let ctx = StepContext {
+            c_prev: 0.5,
+            c_next: 0.6,
+            theta_prev: &theta,
+            u_prev: &u,
+            w_feasible: None,
+        };
+
+        let mut plain = DviWRule::with_threads(1);
+        let mut traced = Traced::new(Box::new(DviWRule::with_threads(1)));
+        assert_eq!(traced.name(), plain.name());
+        assert!(!traced.requires_cmax());
+
+        let region_p = plain.prepare(&inst, &ctx);
+        let region_t = traced.prepare(&inst, &ctx);
+        let d_plain = plain.screen_rows(&inst, &region_p, 1);
+        let d_traced = traced.screen_rows(&inst, &region_t, 1);
+        assert_eq!(d_plain, d_traced, "decorator must not change decisions");
+
+        // the decorator fed the cumulative per-rule telemetry
+        let snap = crate::obs::telemetry::registry().counters_snapshot();
+        let scanned = snap
+            .iter()
+            .find(|(n, _)| n == "screen_rows_scanned_total{rule=\"dvi\"}")
+            .map(|&(_, v)| v)
+            .unwrap_or(0);
+        assert!(scanned >= 40, "scanned {scanned}");
     }
 }

@@ -58,6 +58,11 @@ pub(crate) fn run_session<R: BufRead, W: Write + Send>(
     start_local: u64,
 ) -> std::io::Result<u64> {
     let (tx, rx) = channel::<ConnEvent>();
+    // the whole session — parse, admission, submits — parents under one
+    // connection span on the reader thread; request spans opened at
+    // submit nest beneath it in the exported trace
+    let mut conn_span = crate::obs::Span::enter("connection");
+    conn_span.attr("start_local", start_local as f64);
     let conn = Arc::new(ConnShared { inflight: AtomicU64::new(0) });
     let mut sess = Session {
         shared,
@@ -289,15 +294,29 @@ impl Session<'_> {
             }
         });
         // route BEFORE submit: the outcome may arrive immediately
-        self.shared.routes.lock().unwrap().insert(
-            pool_id,
-            Route {
-                tx: self.tx.clone(),
-                local_id: local,
-                stream,
-                cost,
-                conn: self.conn.clone(),
-            },
+        let backlog = {
+            let mut routes = self.shared.routes.lock().unwrap();
+            routes.insert(
+                pool_id,
+                Route {
+                    tx: self.tx.clone(),
+                    local_id: local,
+                    stream,
+                    cost,
+                    conn: self.conn.clone(),
+                    submitted: std::time::Instant::now(),
+                },
+            );
+            routes.len() as u64
+        };
+        metrics.gauge("serve_dispatcher_backlog").set(backlog);
+        // the request span opens here on the reader thread and closes on
+        // the dispatcher thread when the outcome routes back — exported
+        // as an async event pair keyed by the derived pool-id span id
+        crate::obs::event_begin(
+            "request",
+            crate::obs::request_span_id(pool_id),
+            crate::obs::current_span(),
         );
         self.shared.pool.submit(JobSpec { id: pool_id, kind, timings: req.timings, after });
         Pending::Job(local)

@@ -33,6 +33,17 @@
 //! thin adapter over [`Server::serve_session`] with admission unlimited,
 //! so scripted sessions stay byte-for-byte identical.
 //!
+//! # Observability
+//!
+//! Every stage of the request lifecycle is instrumented through
+//! [`crate::obs`]: a `connection` span per session, an async `request`
+//! span from submit (reader thread) to outcome routing (dispatcher
+//! thread), and a `serve_dispatcher_backlog` gauge plus
+//! `serve_request_secs` bounded latency histogram on the pool's metrics
+//! registry. All of it writes to the trace ring / `/metrics` endpoint
+//! only — the response byte stream is untouched, so `"timings": false`
+//! sessions stay deterministic with tracing enabled.
+//!
 //! [`ScreeningService::serve`]: crate::coordinator::ScreeningService::serve
 
 mod conn;

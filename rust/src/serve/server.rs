@@ -54,6 +54,10 @@ pub(crate) struct Route {
     /// Admission cost reserved at submit, released on completion.
     pub(crate) cost: u64,
     pub(crate) conn: Arc<ConnShared>,
+    /// When the route was registered (just before pool submit); the
+    /// dispatcher turns this into the `serve_request_secs` latency
+    /// histogram when the outcome is routed back.
+    pub(crate) submitted: std::time::Instant,
 }
 
 /// State shared by the dispatcher, the accept loops, and every live
@@ -269,11 +273,22 @@ fn dispatch_loop(shared: &ServeShared) {
     loop {
         match shared.pool.recv_timeout(Duration::from_millis(25)) {
             Ok(outcome) => {
-                let route = shared.routes.lock().unwrap().remove(&outcome.id);
+                let (route, backlog) = {
+                    let mut routes = shared.routes.lock().unwrap();
+                    let route = routes.remove(&outcome.id);
+                    (route, routes.len() as u64)
+                };
                 // no route: the job was submitted outside the serve layer
                 // (direct pool API) or its connection was torn down — the
                 // outcome has no consumer either way
                 let Some(route) = route else { continue };
+                shared.pool.metrics.gauge("serve_dispatcher_backlog").set(backlog);
+                crate::obs::event_end("request", crate::obs::request_span_id(outcome.id));
+                shared
+                    .pool
+                    .metrics
+                    .bounded_histogram("serve_request_secs")
+                    .record_secs(route.submitted.elapsed().as_secs_f64());
                 let new_cost = shared
                     .queued_cost
                     .fetch_sub(route.cost, Ordering::SeqCst)

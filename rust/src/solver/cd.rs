@@ -316,16 +316,24 @@ impl CdSolver {
             stats.outer_iters += 1;
             rng.shuffle(&mut active);
 
-            let (kept, max_violation) = sweep_live(
-                inst,
-                c,
-                &active,
-                &mut theta,
-                &mut u,
-                m_bar,
-                self.cfg.shrink,
-                &mut stats,
-            );
+            let (kept, max_violation) = {
+                let mut sp = crate::obs::Span::enter("sweep");
+                sp.attr_str("cd_mode", "serial");
+                sp.attr("shards", 1.0);
+                sp.attr("iter", stats.outer_iters as f64);
+                let out = sweep_live(
+                    inst,
+                    c,
+                    &active,
+                    &mut theta,
+                    &mut u,
+                    m_bar,
+                    self.cfg.shrink,
+                    &mut stats,
+                );
+                sp.attr("violation", out.1);
+                out
+            };
             shrunk = shrunk || kept.len() < active.len();
             active = kept;
             stats.final_violation = max_violation;

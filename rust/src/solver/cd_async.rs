@@ -207,12 +207,18 @@ pub(super) fn solve_free_with_u_async(
             epoch += 1;
             let mut sorted = active.clone();
             sorted.sort_unstable();
-            wild_round(
-                inst, c, tol, cfg.seed, epoch, t, &sorted, &mut theta, &u, &mut stats,
-            );
-            // deferred reconciliation: the racing u is discarded and
-            // rebuilt exactly from θ, so CAS drift never compounds
-            u = inst.u_from_theta(&theta);
+            {
+                let mut sp = crate::obs::Span::enter("sweep");
+                sp.attr_str("cd_mode", "async");
+                sp.attr("shards", t as f64);
+                sp.attr("iter", stats.outer_iters as f64);
+                wild_round(
+                    inst, c, tol, cfg.seed, epoch, t, &sorted, &mut theta, &u, &mut stats,
+                );
+                // deferred reconciliation: the racing u is discarded and
+                // rebuilt exactly from θ, so CAS drift never compounds
+                u = inst.u_from_theta(&theta);
+            }
             if stats.outer_iters >= cfg.max_outer {
                 break;
             }
@@ -223,16 +229,24 @@ pub(super) fn solve_free_with_u_async(
         // serial criterion
         stats.outer_iters += 1;
         rng.shuffle(&mut active);
-        let (kept, max_violation) = cd::sweep_live(
-            inst,
-            c,
-            &active,
-            &mut theta,
-            &mut u,
-            m_bar,
-            cfg.shrink,
-            &mut stats,
-        );
+        let (kept, max_violation) = {
+            let mut sp = crate::obs::Span::enter("sweep");
+            sp.attr_str("cd_mode", "async_confirm");
+            sp.attr("shards", 1.0);
+            sp.attr("iter", stats.outer_iters as f64);
+            let out = cd::sweep_live(
+                inst,
+                c,
+                &active,
+                &mut theta,
+                &mut u,
+                m_bar,
+                cfg.shrink,
+                &mut stats,
+            );
+            sp.attr("violation", out.1);
+            out
+        };
         shrunk = shrunk || kept.len() < active.len();
         active = kept;
         stats.final_violation = max_violation;

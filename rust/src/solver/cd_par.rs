@@ -239,6 +239,10 @@ pub(super) fn solve_free_with_u_par(
             plan_shards(requested, active.len())
         };
         confirm_serial = false;
+        let mut sweep_span = crate::obs::Span::enter("sweep");
+        sweep_span.attr_str("cd_mode", if t <= 1 { "sync_serial" } else { "sync" });
+        sweep_span.attr("shards", t as f64);
+        sweep_span.attr("iter", stats.outer_iters as f64);
         let (kept, max_violation) = if t <= 1 {
             // single shard: THE serial sweep against the live u (shared
             // with `solve_serial`, so small/endgame/confirmation blocks
@@ -304,6 +308,8 @@ pub(super) fn solve_free_with_u_par(
             }
             (kept, max_violation)
         };
+        sweep_span.attr("violation", max_violation);
+        drop(sweep_span);
 
         shrunk = shrunk || kept.len() < active.len();
         active = kept;

@@ -1,0 +1,115 @@
+//! The tracing determinism and well-formedness contract: arming
+//! `--trace-out` must not perturb a `"timings": false` session's
+//! response bytes, and the exported Chrome trace must be valid JSON
+//! whose spans pair up, sort by timestamp, cover the whole request
+//! lifecycle (connection -> request -> queue_wait -> job -> screen /
+//! sweep), and whose in-trace parents begin before their children.
+//!
+//! Everything lives in ONE test function: tracing is armed
+//! process-globally, so the untraced reference bytes must be captured
+//! before `set_trace_out` and this binary must not race a second test
+//! against the shared ring.
+
+use dvi_screen::config::{parse_json, Json};
+use dvi_screen::coordinator::ScreeningService;
+use std::collections::{HashMap, HashSet};
+
+/// A deterministic mixed session: two path runs (dvi / composed rule),
+/// one screen job, one job error. `"timings": false` throughout, so the
+/// bytes are scheduling-independent — the exact property tracing must
+/// preserve.
+const SESSION: &str = r#"{"dataset": "toy1", "scale": 0.05, "points": 4, "rule": "dvi", "tol": 1e-6, "timings": false}
+{"dataset": "toy1", "scale": 0.05, "points": 3, "rule": "dvi+essnsv", "tol": 1e-6, "timings": false}
+{"kind": "screen", "dataset": "toy1", "scale": 0.05, "pairs": [[0.5, 0.9]], "tol": 1e-6, "timings": false}
+{"dataset": "no-such-set", "points": 4, "timings": false}
+"#;
+
+/// Play the session through a fresh service's stdin adapter (the same
+/// per-connection handler the network listeners run) and keep the raw
+/// output bytes.
+fn run_session_bytes(input: &str) -> Vec<u8> {
+    let mut svc = ScreeningService::new(2);
+    let mut out = Vec::new();
+    svc.serve(input.as_bytes(), &mut out).unwrap();
+    svc.shutdown();
+    out
+}
+
+#[test]
+fn traced_session_bytes_identical_and_trace_well_formed() {
+    // reference bytes BEFORE tracing exists anywhere in the process
+    let reference = run_session_bytes(SESSION);
+    assert!(!reference.is_empty());
+
+    let target =
+        std::env::temp_dir().join(format!("dvi_obs_trace_{}.json", std::process::id()));
+    dvi_screen::obs::set_trace_out(target.clone());
+    let traced = run_session_bytes(SESSION);
+    assert_eq!(
+        traced, reference,
+        "arming --trace-out changed the response byte stream"
+    );
+
+    let written = dvi_screen::obs::flush().unwrap().expect("a trace target was set");
+    assert_eq!(written, target);
+    let text = std::fs::read_to_string(&written).unwrap();
+    let doc = parse_json(&text).expect("the trace file is valid JSON");
+    let events = doc.get("traceEvents").unwrap().as_array().unwrap();
+    assert!(!events.is_empty(), "a traced session must export spans");
+
+    // lifecycle coverage: one span name per instrumented layer
+    let names: HashSet<&str> =
+        events.iter().filter_map(|e| e.get("name").and_then(Json::as_str)).collect();
+    for want in ["connection", "request", "queue_wait", "job", "path_step", "solve", "sweep", "screen_rows"]
+    {
+        assert!(names.contains(want), "span `{want}` missing from trace: {names:?}");
+    }
+
+    // timestamps are sorted ascending across the whole file
+    let ts: Vec<f64> =
+        events.iter().map(|e| e.get("ts").unwrap().as_float().unwrap()).collect();
+    assert!(ts.windows(2).all(|w| w[0] <= w[1]), "trace ts not monotone");
+
+    // every end has exactly one begin, and the begin comes first; the
+    // exporter keys both halves by the hex span id in args
+    let mut begins: HashMap<&str, usize> = HashMap::new();
+    let mut ends: HashMap<&str, usize> = HashMap::new();
+    for (i, e) in events.iter().enumerate() {
+        let args = e.get("args").unwrap();
+        let id = args.get("id").unwrap().as_str().unwrap();
+        match e.get("ph").unwrap().as_str().unwrap() {
+            "B" | "b" => {
+                assert!(begins.insert(id, i).is_none(), "duplicate begin for {id}");
+            }
+            "E" | "e" => {
+                assert!(begins.contains_key(id), "end before begin for {id}");
+                assert!(ends.insert(id, i).is_none(), "duplicate end for {id}");
+            }
+            other => panic!("unexpected phase {other}"),
+        }
+    }
+    assert_eq!(begins.len(), ends.len(), "unpaired spans escaped the exporter");
+
+    // a parent that is itself in the trace must have begun no later
+    // than its child (absent parents — e.g. CLI one-shot request ids —
+    // are legal: the exporter only promises pairs)
+    for e in events.iter() {
+        let args = e.get("args").unwrap();
+        let Some(parent) = args.get("parent").and_then(Json::as_str) else { continue };
+        if parent == "0x0" {
+            continue;
+        }
+        let child = args.get("id").unwrap().as_str().unwrap();
+        if let Some(&pi) = begins.get(parent) {
+            let ci = begins[child];
+            assert!(
+                ts[pi] <= ts[ci],
+                "parent {parent} begins after child {child}: {} > {}",
+                ts[pi],
+                ts[ci]
+            );
+        }
+    }
+
+    std::fs::remove_file(&written).ok();
+}

@@ -189,6 +189,96 @@ fn per_connection_cap_answers_rejected() {
     svc.shutdown();
 }
 
+/// Scrape `path` once from the metrics endpoint and return the whole
+/// HTTP response (status line, headers, body).
+fn scrape(addr: std::net::SocketAddr, path: &str) -> String {
+    use std::io::Read;
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: dvi\r\n\r\n").unwrap();
+    stream.flush().unwrap();
+    let mut text = String::new();
+    stream.read_to_string(&mut text).unwrap();
+    text
+}
+
+/// The value of a plain (unlabelled) counter/gauge sample line, or 0.0
+/// if the family has not been touched yet.
+fn sample_value(body: &str, name: &str) -> f64 {
+    body.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find_map(|l| {
+            let mut it = l.split_whitespace();
+            (it.next() == Some(name)).then(|| it.next().unwrap().parse().unwrap())
+        })
+        .unwrap_or(0.0)
+}
+
+#[test]
+fn metrics_endpoint_serves_complete_families_and_monotone_counters() {
+    let svc = ScreeningService::new(3);
+    let mut server = Server::new(svc.pool_handle(), ServeOptions::default());
+    let addr = server.bind_tcp("127.0.0.1:0").unwrap();
+
+    let registry = svc.pool_handle().metrics.clone();
+    let render = std::sync::Arc::new(move || {
+        dvi_screen::obs::expo::render_exposition(Some(&registry))
+    });
+    let maddr = dvi_screen::obs::expo::serve_metrics("127.0.0.1:0", render).unwrap();
+
+    let first = scrape(maddr, "/metrics");
+    assert!(first.starts_with("HTTP/1.1 200 OK"), "{first}");
+    assert!(first.contains("text/plain; version=0.0.4"), "{first}");
+
+    // two concurrent clients drive every layer of the serving stack
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            (0..2).map(|_| s.spawn(move || tcp_session(addr, SESSION))).collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let second = scrape(maddr, "/metrics");
+    // every layer's families render: pool job counters and latency
+    // histograms, serve admission gauges, the dispatcher backlog and
+    // request-latency summary, solver-pool gauges, and per-rule
+    // screening telemetry
+    for needle in [
+        "# TYPE jobs_done counter",
+        "service_requests",
+        "serve_inflight",
+        "serve_queue_cost",
+        "serve_dispatcher_backlog",
+        "serve_request_secs_count",
+        "job_secs_count",
+        "pool_queue_depth",
+        "pool_workers_spawned_total",
+        "screen_rows_scanned_total{rule=\"dvi\"}",
+        "screen_rows_rejected_total{rule=\"dvi\"}",
+    ] {
+        assert!(second.contains(needle), "missing `{needle}` in scrape:\n{second}");
+    }
+
+    // counters only move up between scrapes, and the sessions above
+    // must have moved them
+    for counter in ["jobs_done", "service_requests"] {
+        let (a, b) = (sample_value(&first, counter), sample_value(&second, counter));
+        assert!(b >= a, "{counter} went backwards: {a} -> {b}");
+        assert!(b > 0.0, "{counter} never moved:\n{second}");
+    }
+    // both sessions fully drained: admission gauges are back to zero
+    assert_eq!(sample_value(&second, "serve_inflight"), 0.0, "{second}");
+    assert_eq!(sample_value(&second, "pool_queue_depth"), 0.0, "{second}");
+
+    // anything but GET /metrics is a 404, and the endpoint answers
+    // again after it
+    assert!(scrape(maddr, "/other").starts_with("HTTP/1.1 404"), "404 for non-metrics paths");
+    assert!(scrape(maddr, "/metrics").starts_with("HTTP/1.1 200 OK"));
+
+    server.stop();
+    svc.shutdown();
+}
+
 #[test]
 fn model_dir_restart_serves_predict_without_retraining() {
     let dir = std::env::temp_dir().join(format!("dvi_serve_net_registry_{}", std::process::id()));

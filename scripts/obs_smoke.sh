@@ -1,0 +1,184 @@
+#!/usr/bin/env bash
+# Observability smoke test: hold the tracing + metrics surfaces to their
+# contracts using the built `dvi` binary:
+#
+#   1. determinism — a scripted "timings": false stdin session produces
+#                    byte-identical output with and without --trace-out;
+#   2. trace shape — the written Chrome trace JSON loads, carries the
+#                    required keys, sorts by ts, pairs every begin with
+#                    its end (B/E and async b/e, keyed by args.id), and
+#                    covers the whole lifecycle (connection -> request ->
+#                    queue_wait -> job -> screen/sweep spans);
+#   3. scrape      — `GET /metrics` on --metrics-listen answers valid
+#                    Prometheus text (every sample typed, required
+#                    families present) and non-/metrics paths 404;
+#   4. SIGTERM     — a killed `dvi serve --listen --trace-out` server
+#                    flushes its trace on the way down, and that trace
+#                    passes the same shape validation.
+#
+# Requires python3 for the client / validators (present on CI runners).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v python3 > /dev/null; then
+  echo "obs smoke: python3 unavailable; skipping"
+  exit 0
+fi
+
+WORK=$(mktemp -d)
+SERVER_PID=""
+cleanup() {
+  [[ -n "$SERVER_PID" ]] && kill "$SERVER_PID" 2> /dev/null || true
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+cargo build --release --quiet
+BIN=target/release/dvi
+
+cat > "$WORK/session.jsonl" <<'EOF'
+{"dataset": "toy1", "scale": 0.05, "points": 4, "rule": "dvi", "tol": 1e-6, "timings": false}
+{"dataset": "toy1", "scale": 0.05, "points": 3, "rule": "dvi+essnsv", "tol": 1e-6, "timings": false}
+{"kind": "screen", "dataset": "toy1", "scale": 0.05, "pairs": [[0.5, 0.9]], "tol": 1e-6, "timings": false}
+{"dataset": "no-such-set", "points": 4, "timings": false}
+EOF
+
+# Shared trace-shape validator (leg 2 and leg 4).
+cat > "$WORK/check_trace.py" <<'EOF'
+import json, sys
+
+doc = json.load(open(sys.argv[1]))
+assert "traceEvents" in doc and "displayTimeUnit" in doc, sorted(doc)
+events = doc["traceEvents"]
+assert events, "trace exported no spans"
+
+ts = [e["ts"] for e in events]
+assert all(a <= b for a, b in zip(ts, ts[1:])), "ts not monotone"
+
+begins, ends = {}, {}
+for i, e in enumerate(events):
+    for key in ("name", "ph", "ts", "pid", "tid", "args"):
+        assert key in e, (key, e)
+    sid = e["args"]["id"]
+    if e["ph"] in ("B", "b"):
+        assert sid not in begins, f"duplicate begin {sid}"
+        begins[sid] = i
+    elif e["ph"] in ("E", "e"):
+        assert sid in begins, f"end before begin {sid}"
+        assert sid not in ends, f"duplicate end {sid}"
+        ends[sid] = i
+    else:
+        raise AssertionError(f"unexpected phase {e['ph']}")
+    if e["ph"] in ("b", "e"):  # async events need the matching id + cat
+        assert e.get("cat") == "request" and e.get("id"), e
+assert set(begins) == set(ends), "unpaired spans escaped the exporter"
+
+names = {e["name"] for e in events}
+for want in sys.argv[2:]:
+    assert want in names, f"span `{want}` missing from {sorted(names)}"
+print(f"   trace OK: {len(events)} events, {len(begins)} spans, names {sorted(names)}")
+EOF
+
+# Prometheus text-format validator.
+cat > "$WORK/check_metrics.py" <<'EOF'
+import re, sys
+
+body = open(sys.argv[1]).read()
+typed, samples = {}, 0
+for line in body.splitlines():
+    if not line.strip():
+        continue
+    if line.startswith("# TYPE "):
+        _, _, name, kind = line.split()
+        assert kind in ("counter", "gauge", "summary"), line
+        typed[name] = kind
+        continue
+    if line.startswith("#"):
+        continue
+    m = re.match(r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})? (-?[0-9.eE+-]+|NaN|\+Inf|-Inf)$', line)
+    assert m, f"bad sample line: {line!r}"
+    base = re.sub(r"_(sum|count)$", "", m.group(1))
+    assert m.group(1) in typed or base in typed, f"untyped sample: {line!r}"
+    samples += 1
+assert samples > 0, "no samples rendered"
+for fam in sys.argv[2:]:
+    assert fam in body, f"family `{fam}` missing from scrape:\n{body}"
+print(f"   metrics OK: {samples} samples, {len(typed)} typed families")
+EOF
+
+# One-shot TCP client: send a session, half-close, drain to EOF.
+cat > "$WORK/client.py" <<'EOF'
+import socket, sys
+host, port, infile, outfile = sys.argv[1], int(sys.argv[2]), sys.argv[3], sys.argv[4]
+s = socket.create_connection((host, port), timeout=120)
+with open(infile, "rb") as f:
+    s.sendall(f.read())
+s.shutdown(socket.SHUT_WR)
+chunks = []
+while True:
+    c = s.recv(65536)
+    if not c:
+        break
+    chunks.append(c)
+with open(outfile, "wb") as f:
+    f.write(b"".join(chunks))
+EOF
+
+echo "== traced stdin session is byte-identical to the untraced one"
+"$BIN" serve --workers 3 < "$WORK/session.jsonl" > "$WORK/out.plain" 2> /dev/null
+"$BIN" serve --workers 3 --trace-out "$WORK/stdin.trace.json" \
+  < "$WORK/session.jsonl" > "$WORK/out.traced" 2> /dev/null
+diff "$WORK/out.plain" "$WORK/out.traced"
+
+echo "== the stdin trace is well-formed Chrome trace JSON"
+python3 "$WORK/check_trace.py" "$WORK/stdin.trace.json" \
+  connection request queue_wait job sweep screen_rows
+
+echo "== serve --metrics-listen answers a valid Prometheus scrape"
+"$BIN" serve --workers 3 --listen 127.0.0.1:0 --metrics-listen 127.0.0.1:0 \
+  --trace-out "$WORK/net.trace.json" 2> "$WORK/serve.log" &
+SERVER_PID=$!
+PORT="" MPORT=""
+for _ in $(seq 1 100); do
+  PORT=$(sed -n 's/.*\[serve\] listening on 127\.0\.0\.1:\([0-9]*\)$/\1/p' "$WORK/serve.log" | head -1)
+  MPORT=$(sed -n 's/.*\[serve\] metrics listening on 127\.0\.0\.1:\([0-9]*\)$/\1/p' "$WORK/serve.log" | head -1)
+  [[ -n "$PORT" && -n "$MPORT" ]] && break
+  kill -0 "$SERVER_PID" 2> /dev/null || { echo "server died:"; cat "$WORK/serve.log"; exit 1; }
+  sleep 0.1
+done
+[[ -n "$PORT" && -n "$MPORT" ]] || { echo "server never bound:"; cat "$WORK/serve.log"; exit 1; }
+
+python3 "$WORK/client.py" 127.0.0.1 "$PORT" "$WORK/session.jsonl" "$WORK/out.net"
+diff "$WORK/out.plain" "$WORK/out.net"
+
+curl -sf "http://127.0.0.1:$MPORT/metrics" > "$WORK/scrape.txt" \
+  || python3 -c "import sys,urllib.request;open(sys.argv[2],'wb').write(urllib.request.urlopen(sys.argv[1]).read())" \
+       "http://127.0.0.1:$MPORT/metrics" "$WORK/scrape.txt"
+python3 "$WORK/check_metrics.py" "$WORK/scrape.txt" \
+  jobs_done service_requests serve_inflight serve_dispatcher_backlog \
+  serve_request_secs pool_queue_depth pool_workers_spawned_total \
+  'screen_rows_scanned_total{rule="dvi"}'
+if python3 -c "import sys,urllib.request,urllib.error
+try:
+    urllib.request.urlopen(sys.argv[1])
+except urllib.error.HTTPError as e:
+    sys.exit(0 if e.code == 404 else 1)
+sys.exit(1)" "http://127.0.0.1:$MPORT/other"; then
+  echo "   non-/metrics paths answer 404"
+else
+  echo "expected 404 for /other"; exit 1
+fi
+
+echo "== SIGTERM flushes the server trace"
+kill -TERM "$SERVER_PID"
+for _ in $(seq 1 100); do
+  kill -0 "$SERVER_PID" 2> /dev/null || break
+  sleep 0.1
+done
+kill -0 "$SERVER_PID" 2> /dev/null && { echo "server ignored SIGTERM"; exit 1; }
+SERVER_PID=""
+[[ -s "$WORK/net.trace.json" ]] || { echo "no trace flushed on SIGTERM:"; cat "$WORK/serve.log"; exit 1; }
+python3 "$WORK/check_trace.py" "$WORK/net.trace.json" \
+  connection request queue_wait job sweep screen_rows
+
+echo "obs smoke: OK"
