@@ -15,6 +15,10 @@
 //!   (`--out DIR`, default `.`), the CI bench-smoke gate's input;
 //! * pool reuse: the persistent pinned worker pool vs per-call scoped
 //!   spawning, with spawn/dispatch/migration counters;
+//! * shard-axis: exact u = Zᵀθ reconstruction on short-and-wide data
+//!   (n ∈ {10k, 100k}, small l, dense and CSR), racing the `rows`,
+//!   `cols`, and `auto` shard axes — also written to BENCH_solver.json
+//!   for the bench-smoke auto-vs-fixed gate;
 //! * one dual-CD sweep (gradient-eval rate);
 //! * Lemma 20 extremization (SSNSV/ESSNSV inner loop);
 //! * w-form vs θ-form DVI ablation (the Gram-matrix crossover).
@@ -544,6 +548,67 @@ fn main() {
         }
     }
 
+    // ---- shard-axis reconstruction: rows vs cols vs auto on wide data ------
+    // The column-mirror acceptance series: exact u = Zᵀθ reconstruction
+    // on short-and-wide instances (n ≫ l), where the `rows` arm is the
+    // serial t_matvec (there is nothing to shard along l) and the `cols`
+    // arm feature-shards disjoint column slabs over the solver pool.
+    // `auto` must track whichever fixed axis wins; the bench-smoke gate
+    // holds it to within 10% of the better one on the widest cells. The
+    // lazy column mirror is built outside the timed region, and every
+    // arm is checked bit-identical to the serial kernel before timing.
+    {
+        use dvi_screen::linalg::{ShardAxis, Storage};
+        println!("\n# shard axis: u = Z^T theta reconstruction, rows vs cols vs auto");
+        let threads = 4usize;
+        for (l, n, storage, density, tag) in [
+            (400usize, 10_000usize, Storage::Dense, 1.0f64, "dense"),
+            (400, 10_000, Storage::Csr, 0.05, "csr"),
+            (200, 100_000, Storage::Dense, 1.0, "dense"),
+            (200, 100_000, Storage::Csr, 0.01, "csr"),
+        ] {
+            let ds = if storage == Storage::Csr {
+                synth::sparse_classes(0x5A1D, l, n, density)
+            } else {
+                synth::gaussian_classes(0x5A1D, l, n, 1.0, 1.0, 0.5, 1.0)
+            };
+            let inst = Instance::from_dataset(Model::Svm, &ds);
+            let theta: Vec<f64> =
+                (0..l).map(|i| 0.5 + 0.4 * (i as f64 * 0.23).sin()).collect();
+            let serial = inst.u_from_theta(&theta);
+            let t = std::time::Instant::now();
+            let first = inst.u_from_theta_axis(&theta, ShardAxis::Cols, threads);
+            let mirror_secs = t.elapsed().as_secs_f64();
+            assert_eq!(first, serial, "cols reconstruction must be bit-identical");
+            println!(
+                "shard_axis[{tag}] l={l} n={n}: mirror build + first cols pass \
+                 {mirror_secs:.3}s ({} MB charged)",
+                inst.mirror_bytes() / (1 << 20)
+            );
+            for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Auto] {
+                let s = bench(
+                    &format!("shard_axis_{}_{tag}_{l}x{n}_t{threads}", axis.name()),
+                    3,
+                    0.3,
+                    || inst.u_from_theta_axis(&theta, axis, threads).len(),
+                );
+                solver_series.push(SolverSeriesEntry {
+                    name: s.name.clone(),
+                    stats: s,
+                    extra: vec![
+                        ("series", Json::Str("shard_axis".into())),
+                        ("axis", Json::Str(axis.name().into())),
+                        ("picked", Json::Str(inst.pick_axis(axis).name().into())),
+                        ("storage", Json::Str(tag.into())),
+                        ("l", Json::Int(l as i64)),
+                        ("n", Json::Int(n as i64)),
+                        ("threads", Json::Int(threads as i64)),
+                    ],
+                });
+            }
+        }
+    }
+
     // ---- PJRT scan -------------------------------------------------------
     match dvi_screen::runtime::PjrtScreener::from_default_dir() {
         Ok(mut screener) => {
@@ -625,7 +690,7 @@ fn main() {
 
     // ---- BENCH_solver.json -------------------------------------------------
     // Machine-readable record of the solver-focused series (cd_sweep,
-    // cd_mode, pool_reuse) for the CI bench-smoke gate and for diffing
+    // cd_mode, pool_reuse, shard_axis) for the CI bench-smoke gate and for diffing
     // runs; schema mirrors the gauntlet's BENCH_screening.json.
     {
         use std::collections::BTreeMap;

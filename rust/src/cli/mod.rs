@@ -18,6 +18,7 @@ USAGE:
            [--threads N]  (scan/validate worker threads; 1 = serial, 0 = auto)
            [--solver-threads N]  (CD sweep worker threads; defaults to --threads)
            [--cd-mode sync|async]  (parallel CD arm; default sync — see SOLVER)
+           [--shard-axis rows|cols|auto]  (reconstruction axis — see SHARD-AXIS)
            [--storage dense|csr|auto]
            [--validate] [--pjrt] [--config FILE] [--trace-out FILE]
   dvi experiment --id fig1|tab1|fig2|tab2|fig3|tab3|ablation|all
@@ -32,8 +33,8 @@ USAGE:
            [--points N] [--rule dvi|none]     cross-validated C selection
   dvi train [--dataset NAME] [--model svm|lad|wsvm] --c F [--scale S]
            [--tol F] [--threads N] [--solver-threads N] [--cd-mode sync|async]
-           [--print-support] [--storage dense|csr|auto] [--out FILE]
-           [--trace-out FILE]
+           [--shard-axis rows|cols|auto] [--print-support]
+           [--storage dense|csr|auto] [--out FILE] [--trace-out FILE]
   dvi predict --model FILE --dataset NAME [--scale S] [--storage ...]
            [--threads N] [--support-only] [--out FILE]
   dvi serve [--workers N] [--cache-mb MB] [--model-cache-mb MB]
@@ -124,6 +125,24 @@ SOLVER:
   --config TOML and as "solver_threads" / "cd_mode" in serve
   path/screen/train requests.
 
+SHARD-AXIS:
+  --shard-axis picks which axis the n-dimensional passes shard over on
+  the solver pool — the exact u = Z^T theta reconstructions, trained-w
+  accumulation, and the theta-form Gram build:
+    rows  shard the l training rows (default; the pre-existing layout)
+    cols  shard n contiguous feature columns via a lazily built
+          column-major mirror (CSC for sparse storage), cached on the
+          instance and charged to the instance-cache budget up front
+    auto  per instance: cols when n >= 1024 and 4n >= l (wide data),
+          rows otherwise
+  Every axis replays the identical accumulation order per output
+  component, so results are BIT-IDENTICAL across axes and thread
+  counts — this is purely a performance knob (cols wins on wide data
+  where n >> l). The resolved axis is emitted as the `shard_axis` attr
+  on `sweep` and `screen_rows` trace spans. Also available as
+  `solver.shard_axis` in --config TOML and as "shard_axis" in serve
+  path/screen/train requests.
+
 STORAGE:
   --storage picks the instance-matrix layout: `dense` (row-major buffer),
   `csr` (compressed sparse rows — libsvm files parse straight into CSR,
@@ -210,6 +229,17 @@ fn get_cd_mode(
     }
 }
 
+fn get_shard_axis(
+    flags: &BTreeMap<String, String>,
+    default: crate::config::ShardAxis,
+) -> Result<crate::config::ShardAxis, String> {
+    match flags.get("shard-axis") {
+        None => Ok(default),
+        Some(v) => crate::config::ShardAxis::parse(v)
+            .ok_or_else(|| format!("--shard-axis must be rows|cols|auto, got `{v}`")),
+    }
+}
+
 /// Arm span tracing if `--trace-out FILE` was passed. Call before the
 /// command does any traced work so no spans are lost.
 fn arm_trace(flags: &BTreeMap<String, String>) {
@@ -293,6 +323,7 @@ fn cmd_path(args: &[String]) -> Result<(), String> {
         cfg.solver.solver_threads = Some(get_usize(&flags, "solver-threads", 0)?);
     }
     cfg.solver.cd_mode = get_cd_mode(&flags, cfg.solver.cd_mode)?;
+    cfg.solver.shard_axis = get_shard_axis(&flags, cfg.solver.shard_axis)?;
     cfg.validate = cfg.validate || flags.contains_key("validate");
     cfg.use_pjrt = cfg.use_pjrt || flags.contains_key("pjrt");
     arm_trace(&flags);
@@ -445,6 +476,7 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
                 None
             },
             cd_mode: get_cd_mode(&flags, crate::config::CdMode::default())?,
+            shard_axis: get_shard_axis(&flags, crate::config::ShardAxis::default())?,
             ..Default::default()
         },
         save: flags.get("out").cloned(),
@@ -600,6 +632,20 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     if listen.is_some() || socket.is_some() {
         // network mode: accept loops own the process until killed
         let mut server = Server::new(svc.pool_handle(), opts);
+        // graceful SIGTERM drain (unconditional — not just when tracing):
+        // stop admitting (typed "draining" refusals), flush in-flight
+        // jobs to the wire, then the watcher flushes any trace and exits
+        let drain = server.drain_handle();
+        crate::obs::set_sigterm_preflush(Box::new(move || {
+            eprintln!("[serve] SIGTERM: draining in-flight requests");
+            drain.begin();
+            if drain.wait_idle(std::time::Duration::from_secs(30)) {
+                eprintln!("[serve] drain complete");
+            } else {
+                eprintln!("[serve] drain timed out; exiting with jobs in flight");
+            }
+        }));
+        crate::obs::install_sigterm_flush();
         if let Some(addr) = &listen {
             let bound = server.bind_tcp(addr).map_err(|e| format!("--listen {addr}: {e}"))?;
             eprintln!("[serve] listening on {bound}");
@@ -780,6 +826,31 @@ mod tests {
         .collect();
         assert_eq!(dispatch(&args), 0);
         let bad: Vec<String> = ["path", "--dataset", "toy1", "--cd-mode", "wild"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(dispatch(&bad), 1);
+    }
+
+    #[test]
+    fn cmd_path_and_train_accept_shard_axis() {
+        let args: Vec<String> = [
+            "path", "--dataset", "toy1", "--scale", "0.02", "--points", "3", "--tol", "1e-5",
+            "--threads", "2", "--shard-axis", "cols",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&args), 0);
+        let args: Vec<String> = [
+            "train", "--dataset", "toy1", "--scale", "0.03", "--c", "0.5", "--tol", "1e-6",
+            "--threads", "2", "--shard-axis", "auto",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(dispatch(&args), 0);
+        let bad: Vec<String> = ["path", "--dataset", "toy1", "--shard-axis", "columns"]
             .iter()
             .map(|s| s.to_string())
             .collect();

@@ -4,6 +4,7 @@
 //! empty config reproduces the paper's protocol.
 
 use super::toml::{parse_str, TomlError, Value};
+use crate::linalg::ShardAxis;
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -82,6 +83,13 @@ pub struct SolverConfig {
     /// `(seed, threads)`) or [`CdMode::Async`] (wild atomic updates,
     /// nondeterministic run-to-run). Ignored when `cd_threads() == 1`.
     pub cd_mode: CdMode,
+    /// Which axis the n-dimensional hot paths (u = Zᵀθ reconstruction, w
+    /// extraction, θ-form Gram build) shard over: `rows` (default, the
+    /// historical row-major path), `cols` (feature-sharded over the lazy
+    /// column mirror), or `auto` (per-instance pick from the cached
+    /// shape/nnz balance). Results are byte-identical for every setting at
+    /// every thread count — the axis only partitions work.
+    pub shard_axis: ShardAxis,
 }
 
 impl Default for SolverConfig {
@@ -94,6 +102,7 @@ impl Default for SolverConfig {
             threads: 1,
             solver_threads: None,
             cd_mode: CdMode::Sync,
+            shard_axis: ShardAxis::Rows,
         }
     }
 }
@@ -245,7 +254,7 @@ impl RunConfig {
     /// catch typos early.
     pub fn from_toml_str(src: &str) -> Result<RunConfig, TomlError> {
         let m = parse_str(src)?;
-        const KNOWN: [&str; 17] = [
+        const KNOWN: [&str; 18] = [
             "model",
             "dataset",
             "scale",
@@ -263,6 +272,7 @@ impl RunConfig {
             "solver.threads",
             "solver.solver_threads",
             "solver.cd_mode",
+            "solver.shard_axis",
         ];
         for k in m.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -293,6 +303,15 @@ impl RunConfig {
                     CdMode::parse(&s).ok_or_else(|| TomlError {
                         line: 0,
                         msg: format!("`solver.cd_mode` must be \"sync\" or \"async\", got `{s}`"),
+                    })?
+                },
+                shard_axis: {
+                    let s = get_str(&m, "solver.shard_axis", d.solver.shard_axis.name())?;
+                    ShardAxis::parse(&s).ok_or_else(|| TomlError {
+                        line: 0,
+                        msg: format!(
+                            "`solver.shard_axis` must be \"rows\", \"cols\", or \"auto\", got `{s}`"
+                        ),
                     })?
                 },
             },
@@ -469,6 +488,27 @@ threads = 4
         for mode in [CdMode::Sync, CdMode::Async] {
             assert_eq!(CdMode::parse(mode.name()), Some(mode));
         }
+    }
+
+    #[test]
+    fn shard_axis_parses_and_defaults_rows() {
+        assert_eq!(
+            RunConfig::from_toml_str("").unwrap().solver.shard_axis,
+            ShardAxis::Rows
+        );
+        for (spelling, want) in
+            [("rows", ShardAxis::Rows), ("cols", ShardAxis::Cols), ("auto", ShardAxis::Auto)]
+        {
+            let src = format!("[solver]\nshard_axis = \"{spelling}\"");
+            assert_eq!(
+                RunConfig::from_toml_str(&src).unwrap().solver.shard_axis,
+                want,
+                "{spelling}"
+            );
+        }
+        let err = RunConfig::from_toml_str("[solver]\nshard_axis = \"columns\"").unwrap_err();
+        assert!(err.msg.contains("rows"), "{}", err.msg);
+        assert!(RunConfig::from_toml_str("[solver]\nshard_axis = 1").is_err());
     }
 
     #[test]

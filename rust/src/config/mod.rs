@@ -12,5 +12,6 @@ pub mod json;
 pub mod toml;
 
 pub use experiment::{CdMode, ExperimentConfig, GridConfig, RunConfig, SolverConfig};
+pub use crate::linalg::ShardAxis;
 pub use json::{parse_json, Json, JsonError};
 pub use toml::{parse_str, TomlError, Value};

@@ -529,7 +529,7 @@ fn run_screen(
         if !inst.in_box(t0, 1e-6) {
             return Err("screen: theta leaves the dual box [lo, hi]".into());
         }
-        let u = inst.u_from_theta(t0);
+        let u = inst.u_from_theta_axis(t0, spec.solver.shard_axis, spec.solver.threads);
         anchors.push((spec.pairs[0].0, t0.clone(), u));
     }
 
@@ -545,7 +545,7 @@ fn run_screen(
         if rule.single() == Some(RuleKind::DviW) {
             None
         } else {
-            let mut e = rule.build(spec.solver.threads);
+            let mut e = rule.build_axis(spec.solver.threads, spec.solver.shard_axis);
             let t = Instant::now();
             e.init(&inst, spec.solver.threads);
             screen_secs += t.elapsed().as_secs_f64();
@@ -560,7 +560,7 @@ fn run_screen(
         let r = solver.solve(&inst, c_max, inst.cold_start());
         solve_secs += t.elapsed().as_secs_f64();
         anchor_solves += 1;
-        Some(inst.w_from_theta(c_max, &r.theta))
+        Some(inst.w_from_theta_axis(c_max, &r.theta, spec.solver.shard_axis, spec.solver.threads))
     } else {
         None
     };
@@ -589,7 +589,7 @@ fn run_screen(
             // incrementally, with low-bit drift): the scan is then a
             // pure function of θ, so a θ echoed over the wire and fed
             // back reproduces decisions bit-for-bit
-            let u = inst.u_from_theta(&r.theta);
+            let u = inst.u_from_theta_axis(&r.theta, spec.solver.shard_axis, spec.solver.threads);
             anchors.push((c_prev, r.theta, u));
             if anchors.len() > MAX_ANCHORS {
                 anchors.remove(0); // least-recently-used
@@ -602,6 +602,10 @@ fn run_screen(
                 // the fast path bypasses the Traced engine decorator, so
                 // it carries its own span + telemetry
                 let mut sp = crate::obs::Span::enter("screen_rows");
+                sp.attr_str(
+                    "shard_axis",
+                    inst.pick_axis(spec.solver.shard_axis).name(),
+                );
                 let report = dvi::screen_w_par(&inst, c_prev, c_next, u, spec.solver.threads);
                 let scanned = l as u64;
                 let rejected = (report.n_lo + report.n_hi) as u64;
@@ -673,13 +677,15 @@ fn run_train(
     let t = Instant::now();
     let r = CdSolver::new(spec.solver.clone()).solve(&inst, spec.c, inst.cold_start());
     let solve_secs = t.elapsed().as_secs_f64();
-    let trained = TrainedModel::from_solution(
+    let trained = TrainedModel::from_solution_axis(
         &inst,
         &spec.dataset,
         spec.scale,
         spec.c,
         spec.solver.tol,
         &r.theta,
+        spec.solver.shard_axis,
+        spec.solver.threads,
     );
     let encoded = model_format::encode(&trained);
     if let Some(path) = &spec.save {

@@ -94,7 +94,11 @@
 //! deterministic per (seed, solver_threads); async solves are KKT-valid
 //! at the same tolerance but nondeterministic run to run — see README
 //! §Solver for the contract before diffing session outputs that vary
-//! either knob.
+//! either knob. `"shard_axis": "rows"|"cols"|"auto"` (default `rows`)
+//! picks the parallel schedule for the n-dimensional reconstruction and
+//! Gram-build passes; results are bit-identical across axes, so it is a
+//! pure performance knob (`auto` resolves per instance from the cached
+//! shape, emitted on the `sweep`/`screen_rows` spans).
 //!
 //! ## Cache requests
 //!
@@ -380,6 +384,7 @@ impl ScreeningService {
                 "threads" => cfg.solver.threads = parse_threads(v)?,
                 "solver_threads" => cfg.solver.solver_threads = Some(parse_threads(v)?),
                 "cd_mode" => cfg.solver.cd_mode = parse_cd_mode(v)?,
+                "shard_axis" => cfg.solver.shard_axis = parse_shard_axis(v)?,
                 "storage" => {
                     let s = v.as_str().ok_or("storage: string")?;
                     if crate::linalg::Storage::parse(s).is_none() {
@@ -458,6 +463,7 @@ impl ScreeningService {
                 "threads" => spec.solver.threads = parse_threads(v)?,
                 "solver_threads" => spec.solver.solver_threads = Some(parse_threads(v)?),
                 "cd_mode" => spec.solver.cd_mode = parse_cd_mode(v)?,
+                "shard_axis" => spec.solver.shard_axis = parse_shard_axis(v)?,
                 "pairs" => {
                     let arr = v.as_array().ok_or("pairs: array of [c_prev, c_next]")?;
                     if arr.len() > MAX_PAIRS {
@@ -567,6 +573,7 @@ impl ScreeningService {
                 "threads" => spec.solver.threads = parse_threads(v)?,
                 "solver_threads" => spec.solver.solver_threads = Some(parse_threads(v)?),
                 "cd_mode" => spec.solver.cd_mode = parse_cd_mode(v)?,
+                "shard_axis" => spec.solver.shard_axis = parse_shard_axis(v)?,
                 "save" => spec.save = Some(v.as_str().ok_or("save: string")?.to_string()),
                 // the serve layer rewrites this into `persist_dir` once it
                 // knows the server's --model-dir; here it only flags intent
@@ -1099,6 +1106,12 @@ fn parse_cd_mode(v: &Json) -> Result<crate::config::CdMode, String> {
         .ok_or_else(|| format!("cd_mode must be sync|async, got `{s}`"))
 }
 
+fn parse_shard_axis(v: &Json) -> Result<crate::config::ShardAxis, String> {
+    let s = v.as_str().ok_or("shard_axis: string")?;
+    crate::config::ShardAxis::parse(s)
+        .ok_or_else(|| format!("shard_axis must be rows|cols|auto, got `{s}`"))
+}
+
 /// An id-less error object (parse failures — no job was submitted). The
 /// serve-layer connection handler shares this shape so a request is
 /// answered identically whether it fails over stdin or over a socket.
@@ -1258,6 +1271,41 @@ mod tests {
             r#"{"dataset": "toy1", "cd_mode": "wild"}"#,
             r#"{"dataset": "toy1", "cd_mode": 2}"#,
             r#"{"kind": "train", "dataset": "toy1", "c": 0.5, "cd_mode": "Async"}"#,
+        ] {
+            let e = parse_line(bad);
+            assert!(e.is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn parse_shard_axis_on_path_screen_train() {
+        use crate::config::ShardAxis;
+        // default is rows; explicit values stick on every solver-bearing kind
+        let cfg = ScreeningService::parse_request(r#"{"dataset": "toy1"}"#).unwrap();
+        assert_eq!(cfg.solver.shard_axis, ShardAxis::Rows);
+        let cfg = ScreeningService::parse_request(
+            r#"{"dataset": "toy1", "shard_axis": "cols"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.solver.shard_axis, ShardAxis::Cols);
+        let r = parse_line(
+            r#"{"kind": "screen", "dataset": "toy1", "pairs": [[0.1, 0.2]],
+                "shard_axis": "auto"}"#,
+        )
+        .unwrap();
+        let JobKind::Screen(s) = r.kind else { panic!("expected screen kind") };
+        assert_eq!(s.solver.shard_axis, ShardAxis::Auto);
+        let r = parse_line(
+            r#"{"kind": "train", "dataset": "toy1", "c": 0.5, "shard_axis": "cols"}"#,
+        )
+        .unwrap();
+        let JobKind::Train(s) = r.kind else { panic!("expected train kind") };
+        assert_eq!(s.solver.shard_axis, ShardAxis::Cols);
+        // vocabulary and type errors answer at parse, not in the worker
+        for bad in [
+            r#"{"dataset": "toy1", "shard_axis": "columns"}"#,
+            r#"{"dataset": "toy1", "shard_axis": 1}"#,
+            r#"{"kind": "train", "dataset": "toy1", "c": 0.5, "shard_axis": "Cols"}"#,
         ] {
             let e = parse_line(bad);
             assert!(e.is_err(), "accepted `{bad}`");

@@ -1,0 +1,546 @@
+//! Column-access mirror of [`super::Rows`]: the feature-axis sibling of
+//! the row layer, enabling write-disjoint column sharding of n-dimensional
+//! accumulations (u = Zᵀθ reconstruction, w extraction) on wide data.
+//!
+//! **Bit-compatibility contract.** `Rows::t_matvec` zeroes the output,
+//! skips rows with a zero coefficient, and axpy-accumulates the surviving
+//! rows in ascending row order — so each output component `out[j]` is an
+//! *independent* sequential sum over ascending rows. A column shard that
+//! owns a contiguous slab of components and replays exactly that per-
+//! component order (ascending rows, same zero-coefficient skip, same
+//! stored-entry set) produces bit-identical results for its slab, and
+//! slabs never overlap, so the sharded reconstruction equals the serial
+//! row-major one at every thread count. `tests` below and
+//! `tests/integration_cols.rs` lock this end-to-end.
+//!
+//! A single *dot product* cannot be split across column slabs without
+//! changing the floating-point reduction order, so kernels that need whole
+//! dots (the θ-form Gram build) shard over *output* columns and compute
+//! each dot with the existing row kernels — see
+//! [`crate::screening::Dvi::new_theta_axis`].
+
+use super::csr::CsrMatrix;
+use super::matrix::RowMatrix;
+use super::rows::Rows;
+
+/// Which data axis the n-dimensional hot paths shard over. `Rows` is the
+/// historical row-major path (serial n-length accumulators); `Cols` shards
+/// disjoint column slabs of the lazily built mirror across the solver
+/// pool; `Auto` picks per instance from the cached shape/nnz balance (see
+/// [`crate::problem::Instance::pick_axis`]). The axis never changes any
+/// result byte — it only partitions work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShardAxis {
+    Rows,
+    Cols,
+    Auto,
+}
+
+impl ShardAxis {
+    pub fn parse(s: &str) -> Option<ShardAxis> {
+        match s {
+            "rows" => Some(ShardAxis::Rows),
+            "cols" => Some(ShardAxis::Cols),
+            "auto" => Some(ShardAxis::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardAxis::Rows => "rows",
+            ShardAxis::Cols => "cols",
+            ShardAxis::Auto => "auto",
+        }
+    }
+}
+
+impl Default for ShardAxis {
+    fn default() -> Self {
+        ShardAxis::Rows
+    }
+}
+
+/// Dense column-major matrix: column j is the contiguous slice
+/// `data[j·rows .. (j+1)·rows]`. Mirrors a [`RowMatrix`] including its
+/// explicit zeros, so a column sweep replays every `vi·0.0` term the dense
+/// row axpy performs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl ColMatrix {
+    /// Transpose-copy a row-major matrix into column-major layout.
+    pub fn from_row_major(m: &RowMatrix) -> ColMatrix {
+        let (rows, cols) = (m.rows(), m.cols());
+        let mut data = vec![0.0f64; rows * cols];
+        for i in 0..rows {
+            let r = m.row(i);
+            for j in 0..cols {
+                data[j * rows + i] = r[j];
+            }
+        }
+        ColMatrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Column j as a contiguous slice (length `rows`).
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+}
+
+/// Compressed sparse column (CSC) matrix — the transpose layout of
+/// [`CsrMatrix`]. `colptr` (len `cols + 1`) delimits each column's slice
+/// of `indices`/`values`; row indices are strictly ascending within a
+/// column (guaranteed by the counting-sort construction, which visits CSR
+/// rows in ascending order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    rows: usize,
+    cols: usize,
+    colptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Counting-sort transposition of a CSR matrix: one pass counts the
+    /// per-column entries, a prefix sum turns counts into `colptr`, and a
+    /// second pass scatters each stored entry into its column slot. Rows
+    /// are visited ascending, so each column's row indices come out
+    /// ascending — the order the bit-compatibility contract requires.
+    pub fn from_csr(m: &CsrMatrix) -> CscMatrix {
+        assert!(m.rows() <= u32::MAX as usize, "row count exceeds u32 index range");
+        let (rows, cols) = (m.rows(), m.cols());
+        let mut colptr = vec![0usize; cols + 1];
+        for i in 0..rows {
+            let (idx, _) = m.row(i);
+            for &j in idx {
+                colptr[j as usize + 1] += 1;
+            }
+        }
+        for j in 0..cols {
+            colptr[j + 1] += colptr[j];
+        }
+        let nnz = m.nnz();
+        let mut next = colptr.clone();
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0.0f64; nnz];
+        for i in 0..rows {
+            let (idx, val) = m.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                let p = next[j as usize];
+                indices[p] = i as u32;
+                values[p] = v;
+                next[j as usize] = p + 1;
+            }
+        }
+        CscMatrix { rows, cols, colptr, indices, values }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored-entry count.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Cumulative column nonzero counts (len `cols + 1`) — the natural
+    /// weight vector for nnz-balanced column slabs.
+    #[inline]
+    pub fn colptr(&self) -> &[usize] {
+        &self.colptr
+    }
+
+    /// Column j as (ascending row indices, values) slices.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.colptr[j], self.colptr[j + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+}
+
+/// A column-access mirror in either dense (column-major) or CSC storage,
+/// always matching the storage of the [`Rows`] it was built from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Cols {
+    Dense(ColMatrix),
+    Sparse(CscMatrix),
+}
+
+impl Cols {
+    /// Build the mirror for the given row matrix (dense → column-major
+    /// dense, CSR → CSC). O(l·n) / O(nnz) one-time cost; the instance
+    /// layer caches the result alongside the nnz prefix.
+    pub fn from_rows(z: &Rows) -> Cols {
+        match z {
+            Rows::Dense(m) => Cols::Dense(ColMatrix::from_row_major(m)),
+            Rows::Sparse(m) => Cols::Sparse(CscMatrix::from_csr(m)),
+        }
+    }
+
+    /// Sample count l (length of each column).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            Cols::Dense(m) => m.rows(),
+            Cols::Sparse(m) => m.rows(),
+        }
+    }
+
+    /// Feature dimension n (number of columns).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            Cols::Dense(m) => m.cols(),
+            Cols::Sparse(m) => m.cols(),
+        }
+    }
+
+    pub fn storage_name(&self) -> &'static str {
+        match self {
+            Cols::Dense(_) => "dense",
+            Cols::Sparse(_) => "csc",
+        }
+    }
+
+    /// Borrow column j as a storage-polymorphic view.
+    #[inline]
+    pub fn col(&self, j: usize) -> ColView<'_> {
+        match self {
+            Cols::Dense(m) => ColView::Dense(m.col(j)),
+            Cols::Sparse(m) => {
+                let (indices, values) = m.col(j);
+                ColView::Sparse { rows: m.rows(), indices, values }
+            }
+        }
+    }
+
+    /// Mirror buffer footprint in bytes. Identical to
+    /// [`Cols::projected_bytes`] for the same shape/nnz, so the instance
+    /// cache can charge the mirror *before* it is lazily built.
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            Cols::Dense(m) => Cols::projected_bytes(false, m.rows(), m.cols(), m.rows() * m.cols()),
+            Cols::Sparse(m) => Cols::projected_bytes(true, m.rows(), m.cols(), m.nnz()),
+        }
+    }
+
+    /// Mirror size computable from shape/nnz alone, *without* building the
+    /// mirror: the dense column-major payload is `l·n·8`, CSC carries
+    /// `nnz·(8 + 4)` values+indices plus the `(n + 1)·8` colptr. The LRU
+    /// charge in `Instance::approx_bytes` uses this projection so lazily
+    /// building the mirror never changes an already-admitted entry's cost.
+    pub fn projected_bytes(sparse: bool, rows: usize, cols: usize, nnz: usize) -> usize {
+        if sparse {
+            nnz * (8 + 4) + (cols + 1) * 8
+        } else {
+            rows * cols * 8
+        }
+    }
+
+    /// Column-slab boundaries (len `shards + 1`, starting at 0, ending at
+    /// n) carrying near-equal work: uniform column counts for dense,
+    /// nnz-balanced via `colptr` for CSC. Boundaries only partition work —
+    /// the slab kernel is bit-identical for any split.
+    pub fn balanced_bounds(&self, shards: usize) -> Vec<usize> {
+        let ranges = match self {
+            Cols::Dense(m) => super::par::shard_ranges(m.cols(), shards),
+            Cols::Sparse(m) => super::par::cumulative_ranges(m.colptr(), shards),
+        };
+        let mut bounds = Vec::with_capacity(ranges.len() + 1);
+        bounds.push(0usize);
+        bounds.extend(ranges.iter().map(|r| r.end));
+        bounds
+    }
+
+    /// out[k] = Σᵢ v[i]·M[i][j0+k] for the column slab `j0..j1`, replaying
+    /// `Rows::t_matvec`'s per-component accumulation exactly: rows visited
+    /// ascending, rows with `v[i] == 0.0` skipped (both storages skip
+    /// them), and for dense every surviving term — zeros included — is
+    /// added, just as the dense row axpy does. `out` must have length
+    /// `j1 − j0`.
+    pub fn t_matvec_slab(&self, v: &[f64], j0: usize, j1: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), j1 - j0, "slab output length mismatch");
+        match self {
+            Cols::Dense(m) => {
+                assert_eq!(v.len(), m.rows());
+                for (k, o) in out.iter_mut().enumerate() {
+                    let col = m.col(j0 + k);
+                    let mut s = 0.0f64;
+                    for (i, &vi) in v.iter().enumerate() {
+                        if vi != 0.0 {
+                            s += vi * col[i];
+                        }
+                    }
+                    *o = s;
+                }
+            }
+            Cols::Sparse(m) => {
+                assert_eq!(v.len(), m.rows());
+                for (k, o) in out.iter_mut().enumerate() {
+                    let (idx, val) = m.col(j0 + k);
+                    let mut s = 0.0f64;
+                    for (&i, &x) in idx.iter().zip(val) {
+                        let vi = v[i as usize];
+                        if vi != 0.0 {
+                            s += vi * x;
+                        }
+                    }
+                    *o = s;
+                }
+            }
+        }
+    }
+
+    /// Like [`Cols::t_matvec_slab`] but WITHOUT the zero-coefficient skip:
+    /// every row contributes unconditionally, replaying an *unconditional*
+    /// ascending-row axpy accumulation (`RowView::axpy_into` in a plain
+    /// `for k in 0..rows` loop — the model layer's support-row replay).
+    /// The two kernels agree whenever `v` contains no exact zeros; this
+    /// one stays exact even when it does.
+    pub fn accum_slab(&self, v: &[f64], j0: usize, j1: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), j1 - j0, "slab output length mismatch");
+        match self {
+            Cols::Dense(m) => {
+                assert_eq!(v.len(), m.rows());
+                for (k, o) in out.iter_mut().enumerate() {
+                    let col = m.col(j0 + k);
+                    let mut s = 0.0f64;
+                    for (i, &vi) in v.iter().enumerate() {
+                        s += vi * col[i];
+                    }
+                    *o = s;
+                }
+            }
+            Cols::Sparse(m) => {
+                assert_eq!(v.len(), m.rows());
+                for (k, o) in out.iter_mut().enumerate() {
+                    let (idx, val) = m.col(j0 + k);
+                    let mut s = 0.0f64;
+                    for (&i, &x) in idx.iter().zip(val) {
+                        s += v[i as usize] * x;
+                    }
+                    *o = s;
+                }
+            }
+        }
+    }
+}
+
+/// Borrowed view of one column in either storage.
+#[derive(Clone, Copy, Debug)]
+pub enum ColView<'a> {
+    Dense(&'a [f64]),
+    Sparse {
+        rows: usize,
+        indices: &'a [u32],
+        values: &'a [f64],
+    },
+}
+
+impl<'a> ColView<'a> {
+    /// Logical length (the sample count l, both storages).
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            ColView::Dense(c) => c.len(),
+            ColView::Sparse { rows, .. } => *rows,
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stored-entry count.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        match self {
+            ColView::Dense(c) => c.len(),
+            ColView::Sparse { values, .. } => values.len(),
+        }
+    }
+
+    /// Densified copy (tests and cold paths only).
+    pub fn to_vec(&self) -> Vec<f64> {
+        match self {
+            ColView::Dense(c) => c.to_vec(),
+            ColView::Sparse { rows, indices, values } => {
+                let mut out = vec![0.0; *rows];
+                for (&i, &v) in indices.iter().zip(*values) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Storage;
+
+    fn random_rows(l: usize, n: usize, density: f64, seed: u64) -> (Rows, Rows) {
+        let mut rng = crate::data::Rng::new(seed);
+        let mut entries = Vec::new();
+        for _ in 0..l {
+            let mut row = Vec::new();
+            for j in 0..n {
+                if rng.bernoulli(density) {
+                    row.push((j, rng.normal(0.0, 1.0)));
+                }
+            }
+            entries.push(row);
+        }
+        let sp = CsrMatrix::from_rows(entries, n);
+        let de = Rows::Dense(sp.to_dense());
+        (de, Rows::Sparse(sp))
+    }
+
+    #[test]
+    fn shard_axis_parse_and_names() {
+        assert_eq!(ShardAxis::parse("rows"), Some(ShardAxis::Rows));
+        assert_eq!(ShardAxis::parse("cols"), Some(ShardAxis::Cols));
+        assert_eq!(ShardAxis::parse("auto"), Some(ShardAxis::Auto));
+        assert_eq!(ShardAxis::parse("columns"), None);
+        assert_eq!(ShardAxis::Cols.name(), "cols");
+        assert_eq!(ShardAxis::default(), ShardAxis::Rows);
+    }
+
+    #[test]
+    fn csc_mirrors_csr_with_ascending_rows() {
+        let (_, sp) = random_rows(13, 21, 0.3, 7);
+        let Rows::Sparse(csr) = &sp else { unreachable!() };
+        let csc = CscMatrix::from_csr(csr);
+        assert_eq!(csc.rows(), 13);
+        assert_eq!(csc.cols(), 21);
+        assert_eq!(csc.nnz(), csr.nnz());
+        for j in 0..21 {
+            let (idx, val) = csc.col(j);
+            // ascending row order within each column
+            assert!(idx.windows(2).all(|w| w[0] < w[1]), "col {j} rows not ascending");
+            for (&i, &v) in idx.iter().zip(val) {
+                assert_eq!(csr.get(i as usize, j), v, "entry ({i},{j})");
+            }
+        }
+        // every stored entry present
+        let col_nnz: usize = (0..21).map(|j| csc.col(j).0.len()).sum();
+        assert_eq!(col_nnz, csr.nnz());
+    }
+
+    #[test]
+    fn dense_mirror_is_exact_transpose() {
+        let (de, _) = random_rows(9, 11, 0.8, 3);
+        let cols = Cols::from_rows(&de);
+        assert_eq!(cols.storage_name(), "dense");
+        for j in 0..11 {
+            let col = cols.col(j).to_vec();
+            for i in 0..9 {
+                assert_eq!(col[i], de.get(i, j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn slab_t_matvec_bit_identical_to_rows() {
+        // dimensions straddling the 8-aligned limit, with zero coefficients
+        for (l, n, density) in [(17usize, 27usize, 0.3), (5, 40, 0.9), (23, 8, 0.5)] {
+            let (de, sp) = random_rows(l, n, density, 1000 + n as u64);
+            let v: Vec<f64> =
+                (0..l).map(|i| if i % 4 == 0 { 0.0 } else { (i as f64 * 0.31).sin() }).collect();
+            for z in [&de, &sp] {
+                let mut want = vec![0.0; n];
+                z.t_matvec(&v, &mut want);
+                let cols = Cols::from_rows(z);
+                // whole-range slab
+                let mut got = vec![0.0; n];
+                cols.t_matvec_slab(&v, 0, n, &mut got);
+                assert_eq!(got, want, "{} whole slab", z.storage_name());
+                // arbitrary multi-slab splits must concatenate identically
+                for shards in [2usize, 3, 5] {
+                    let bounds = cols.balanced_bounds(shards);
+                    assert_eq!(*bounds.first().unwrap(), 0);
+                    assert_eq!(*bounds.last().unwrap(), n);
+                    let mut got = vec![0.0; n];
+                    for w in bounds.windows(2) {
+                        let (a, b) = (w[0], w[1]);
+                        cols.t_matvec_slab(&v, a, b, &mut got[a..b]);
+                    }
+                    assert_eq!(got, want, "{} {shards}-slab", z.storage_name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accum_slab_replays_unconditional_axpy() {
+        let (de, sp) = random_rows(14, 19, 0.4, 77);
+        // v with exact zeros: accum must keep their ±0.0 contributions,
+        // exactly like an unconditional ascending-row axpy replay
+        let v: Vec<f64> =
+            (0..14).map(|i| if i % 3 == 0 { 0.0 } else { -(i as f64) * 0.09 }).collect();
+        for z in [&de, &sp] {
+            let mut want = vec![0.0; 19];
+            for (i, &vi) in v.iter().enumerate() {
+                z.row(i).axpy_into(vi, &mut want);
+            }
+            let cols = Cols::from_rows(z);
+            let mut got = vec![0.0; 19];
+            for w in cols.balanced_bounds(3).windows(2) {
+                cols.accum_slab(&v, w[0], w[1], &mut got[w[0]..w[1]]);
+            }
+            assert_eq!(got, want, "{}", z.storage_name());
+        }
+    }
+
+    #[test]
+    fn approx_bytes_matches_projection() {
+        let (de, sp) = random_rows(12, 30, 0.25, 11);
+        let dc = Cols::from_rows(&de);
+        assert_eq!(dc.approx_bytes(), Cols::projected_bytes(false, 12, 30, 12 * 30));
+        assert_eq!(dc.approx_bytes(), 12 * 30 * 8);
+        let sc = Cols::from_rows(&sp);
+        assert_eq!(sc.approx_bytes(), Cols::projected_bytes(true, 12, 30, sp.nnz()));
+        assert_eq!(sc.approx_bytes(), sp.nnz() * 12 + 31 * 8);
+    }
+
+    #[test]
+    fn mirror_roundtrips_through_storage_conversion() {
+        let (de, sp) = random_rows(10, 16, 0.4, 21);
+        // the mirror of the CSR form and the CSR-ification of the dense
+        // mirror agree entry-wise
+        let mc = Cols::from_rows(&sp);
+        let md = Cols::from_rows(&de.clone().into_storage(Storage::Dense));
+        for j in 0..16 {
+            assert_eq!(mc.col(j).to_vec(), md.col(j).to_vec(), "col {j}");
+        }
+        assert_eq!(mc.rows(), md.rows());
+        assert_eq!(mc.cols(), md.cols());
+    }
+}

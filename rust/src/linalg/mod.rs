@@ -7,11 +7,13 @@
 //! `chunks_exact`). These are the L3 hot paths profiled in
 //! `EXPERIMENTS.md §Perf`.
 
+pub mod cols;
 pub mod csr;
 pub mod matrix;
 pub mod par;
 pub mod rows;
 
+pub use cols::{ColMatrix, ColView, Cols, CscMatrix, ShardAxis};
 pub use csr::CsrMatrix;
 pub use matrix::RowMatrix;
 pub use rows::{RowView, Rows, Storage};

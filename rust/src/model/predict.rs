@@ -53,7 +53,7 @@ pub fn scores(
     }
     let rebuilt;
     let w: &[f64] = if opts.support_only {
-        rebuilt = model.reconstruct_w();
+        rebuilt = model.reconstruct_w_threads(opts.threads);
         &rebuilt
     } else {
         &model.w
@@ -89,7 +89,7 @@ pub fn scores_flat(
     }
     let rebuilt;
     let w: &[f64] = if opts.support_only {
-        rebuilt = model.reconstruct_w();
+        rebuilt = model.reconstruct_w_threads(opts.threads);
         &rebuilt
     } else {
         &model.w

@@ -1,7 +1,7 @@
 //! The trained-model artifact: everything prediction needs, nothing the
 //! training pipeline keeps for itself.
 
-use crate::linalg::{self, Rows, Storage};
+use crate::linalg::{self, Cols, Rows, ShardAxis, Storage};
 use crate::problem::{classify_kkt, Instance, KktClass, Model};
 
 /// A solved classifier/regressor at one C, extracted from a dual optimum
@@ -71,13 +71,31 @@ impl TrainedModel {
         tol: f64,
         theta: &[f64],
     ) -> TrainedModel {
+        Self::from_solution_axis(inst, dataset, scale, c, tol, theta, ShardAxis::Rows, 1)
+    }
+
+    /// [`TrainedModel::from_solution`] with the w-accumulation sharded
+    /// over the requested axis — bit-identical extraction for every
+    /// axis/thread count (the `cols` path replays the row-major
+    /// accumulation per column slab; see [`crate::linalg::Cols`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_solution_axis(
+        inst: &Instance,
+        dataset: &str,
+        scale: f64,
+        c: f64,
+        tol: f64,
+        theta: &[f64],
+        axis: ShardAxis,
+        threads: usize,
+    ) -> TrainedModel {
         assert_eq!(theta.len(), inst.len(), "theta length must equal l");
         assert!(c.is_finite() && c > 0.0, "C must be finite and positive");
         assert!(inst.len() <= u32::MAX as usize, "row count exceeds u32 index range");
         // u recomputed exactly from θ (not the solver's incrementally
         // maintained copy) so w is a pure function of θ — the same
         // convention the coordinator's screen jobs follow.
-        let w = inst.w_from_theta(c, theta);
+        let w = inst.w_from_theta_axis(c, theta, axis, threads);
         let support: Vec<u32> = classify_kkt(inst, &w, tol)
             .indices_of(KktClass::E)
             .into_iter()
@@ -190,6 +208,32 @@ impl TrainedModel {
         linalg::scale(-self.c, &mut u);
         u
     }
+
+    /// [`TrainedModel::reconstruct_w`], feature-sharded when it pays: for
+    /// wide models (n ≥ 1024, not strongly tall — the instance layer's
+    /// auto heuristic applied to the active set) a transient column mirror
+    /// of the stored active rows is built (O(active nnz)) and disjoint
+    /// column slabs accumulate on the solver pool via
+    /// [`Cols::accum_slab`], which replays the serial unconditional-axpy
+    /// order exactly — the result is bit-identical to
+    /// [`TrainedModel::reconstruct_w`] at every thread count. Narrow or
+    /// tall models (and `threads <= 1`) keep the serial replay.
+    pub fn reconstruct_w_threads(&self, threads: usize) -> Vec<f64> {
+        let n = self.n();
+        let rows = self.z_active.rows();
+        let t = linalg::par::effective_threads(threads, n.max(1));
+        if t <= 1 || n < 1024 || 4 * n < rows {
+            return self.reconstruct_w();
+        }
+        let cols = Cols::from_rows(&self.z_active);
+        let mut u = vec![0.0; n];
+        let bounds = cols.balanced_bounds(t);
+        linalg::par::run_sharded_mut(&mut u, 1, &bounds, |range, slab| {
+            cols.accum_slab(&self.theta_active, range.start, range.end, slab);
+        });
+        linalg::scale(-self.c, &mut u);
+        u
+    }
 }
 
 /// FNV-1a 64-bit — the crate-local content digest (std-only; also the
@@ -253,6 +297,36 @@ mod tests {
             assert_eq!(rebuilt.len(), m.w.len());
             for (a, b) in rebuilt.iter().zip(&m.w) {
                 assert_eq!(a.to_bits(), b.to_bits(), "storage {storage:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_reconstruction_bit_identical_on_wide_model() {
+        use crate::config::SolverConfig;
+        use crate::solver::CdSolver;
+        // wide enough (n ≥ 1024) that reconstruct_w_threads takes the
+        // column-sharded path instead of falling back to serial
+        for storage in [Storage::Csr, Storage::Dense] {
+            let ds = crate::data::synth::sparse_classes(31, 50, 1100, 0.02).into_storage(storage);
+            let inst = Instance::from_dataset(Model::Svm, &ds);
+            let r = CdSolver::new(SolverConfig { tol: 1e-6, ..Default::default() })
+                .solve(&inst, 0.5, inst.cold_start());
+            let m = TrainedModel::from_solution(&inst, "wide", 1.0, 0.5, 1e-6, &r.theta);
+            let serial = m.reconstruct_w();
+            for threads in [1usize, 2, 4, 7] {
+                let par = m.reconstruct_w_threads(threads);
+                assert_eq!(par, serial, "storage {storage:?} threads {threads}");
+            }
+            // extraction itself is axis/thread invariant too
+            for threads in [2usize, 4] {
+                for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Auto] {
+                    let m2 = TrainedModel::from_solution_axis(
+                        &inst, "wide", 1.0, 0.5, 1e-6, &r.theta, axis, threads,
+                    );
+                    assert_eq!(m2.w, m.w, "axis {} threads {threads}", axis.name());
+                    assert_eq!(m2.id(), m.id(), "axis {} threads {threads}", axis.name());
+                }
             }
         }
     }

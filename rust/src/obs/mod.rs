@@ -117,6 +117,17 @@ pub fn install_sigterm_flush() {
     signal::install();
 }
 
+/// Register a hook the SIGTERM watcher runs *before* the trace flush and
+/// exit — the serve layer's graceful drain (stop admitting, wait for
+/// in-flight jobs). No-op on non-unix platforms; replaces any previously
+/// registered hook.
+pub fn set_sigterm_preflush(hook: Box<dyn FnOnce() + Send>) {
+    #[cfg(unix)]
+    signal::set_preflush_hook(hook);
+    #[cfg(not(unix))]
+    drop(hook);
+}
+
 fn now_ns() -> u64 {
     EPOCH.get().map(|e| e.elapsed().as_nanos() as u64).unwrap_or(0)
 }

@@ -8,6 +8,7 @@
 //! from safe Rust.
 
 use std::sync::atomic::{AtomicBool, AtomicI32, Ordering};
+use std::sync::Mutex;
 
 const SIGTERM: i32 = 15;
 
@@ -20,6 +21,17 @@ extern "C" {
 
 static PIPE_WR: AtomicI32 = AtomicI32::new(-1);
 static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+/// Hook the watcher runs (from safe Rust, off the signal handler) before
+/// flushing the trace and exiting — the serve layer installs its
+/// graceful drain here. FnOnce: it runs at most once, on the single
+/// SIGTERM that ends the process.
+static PRE_FLUSH: Mutex<Option<Box<dyn FnOnce() + Send>>> = Mutex::new(None);
+
+/// Register (or replace) the pre-flush hook.
+pub fn set_preflush_hook(hook: Box<dyn FnOnce() + Send>) {
+    *PRE_FLUSH.lock().unwrap() = Some(hook);
+}
 
 extern "C" fn on_sigterm(_sig: i32) {
     // async-signal-safe: one write(2) to the self-pipe, nothing else
@@ -55,6 +67,11 @@ pub fn install() {
                     return; // pipe closed without a signal
                 }
                 // n < 0: EINTR etc — retry
+            }
+            // the drain (or any other registered hook) runs first so
+            // in-flight work lands in the trace before it is written
+            if let Some(hook) = PRE_FLUSH.lock().unwrap().take() {
+                hook();
             }
             if let Ok(Some(path)) = crate::obs::flush() {
                 eprintln!("[obs] SIGTERM: trace flushed to {}", path.display());

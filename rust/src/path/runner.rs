@@ -162,7 +162,7 @@ impl PathRunner {
 
     /// Rule-expression constructor: atoms or `+`-compositions.
     pub fn new_expr(model: Model, cfg: PathConfig, rule: RuleExpr) -> PathRunner {
-        let engine = rule.build(cfg.solver.threads);
+        let engine = rule.build_axis(cfg.solver.threads, cfg.solver.shard_axis);
         PathRunner { model, cfg, rule, engine }
     }
 
@@ -222,7 +222,12 @@ impl PathRunner {
             let t = Instant::now();
             let r = solver.solve(inst, *grid.last().unwrap(), inst.cold_start());
             init_secs += t.elapsed().as_secs_f64();
-            Some(inst.w_from_theta(*grid.last().unwrap(), &r.theta))
+            Some(inst.w_from_theta_axis(
+                *grid.last().unwrap(),
+                &r.theta,
+                self.cfg.solver.shard_axis,
+                self.cfg.solver.threads,
+            ))
         } else {
             None
         };
@@ -346,7 +351,11 @@ impl PathRunner {
 
             // periodic hygiene refresh of the incrementally-maintained u
             if k % 32 == 0 {
-                cur.u = inst.u_from_theta(&cur.theta);
+                cur.u = inst.u_from_theta_axis(
+                    &cur.theta,
+                    self.cfg.solver.shard_axis,
+                    self.cfg.solver.threads,
+                );
             }
 
             steps.push(StepRecord {

@@ -1,7 +1,8 @@
 //! Materialized problem instance: `(Z, ȳ, box)` plus cached row norms.
 
 use crate::data::{Dataset, Task};
-use crate::linalg::{self, RowMatrix, Rows};
+use crate::linalg::{self, Cols, RowMatrix, Rows, ShardAxis};
+use std::sync::OnceLock;
 
 /// Which special case of problem (3) to instantiate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -78,6 +79,15 @@ pub struct Instance {
     /// instance in the coordinator's `InstanceCache` (it is charged to
     /// [`Instance::approx_bytes`]).
     pub nnz_prefix: Vec<usize>,
+    /// Lazily built column-access mirror of Z (dense → column-major, CSR →
+    /// CSC), used by the feature-sharded (`cols`-axis) reconstruction
+    /// kernels. Built on first use via [`Instance::cols`], cached for the
+    /// instance's lifetime, and evicted with the instance when the
+    /// coordinator's `InstanceCache` drops the entry. Its *projected* size
+    /// is charged to [`Instance::approx_bytes`] up front (the projection
+    /// equals the built size — see [`Cols::projected_bytes`]), so lazily
+    /// materializing it never changes an admitted entry's LRU cost.
+    cols: OnceLock<Cols>,
 }
 
 impl Instance {
@@ -144,6 +154,7 @@ impl Instance {
             hi,
             z_norms_sq,
             nnz_prefix,
+            cols: OnceLock::new(),
         }
     }
 
@@ -165,14 +176,62 @@ impl Instance {
     }
 
     /// Approximate resident size in bytes — the Z storage footprint
-    /// ([`Rows::approx_bytes`]) plus the four l-length side vectors. The
-    /// coordinator's instance cache charges entries against its byte
-    /// budget with this estimate.
+    /// ([`Rows::approx_bytes`]), the four l-length side vectors, the nnz
+    /// prefix, and the column mirror's projected footprint
+    /// ([`Instance::mirror_bytes`]). The coordinator's instance cache
+    /// charges entries against its byte budget with this estimate; the
+    /// mirror is charged whether or not it has been built yet so the
+    /// lazy build can never grow an entry past its admitted cost.
     pub fn approx_bytes(&self) -> usize {
         self.z.approx_bytes()
             + 8 * (self.ybar.len() + self.lo.len() + self.hi.len() + self.z_norms_sq.len())
             + 8 * self.nnz_prefix.len()
+            + self.mirror_bytes()
             + std::mem::size_of::<Instance>()
+    }
+
+    /// Size of the column-access mirror in bytes, computed from the cached
+    /// shape/nnz *without* building it. Exactly equal to
+    /// `self.cols().approx_bytes()` once the mirror exists (pinned by the
+    /// `mirror_charge_is_projected_upfront` test), so
+    /// [`Instance::approx_bytes`] is identical before and after the lazy
+    /// build.
+    pub fn mirror_bytes(&self) -> usize {
+        let nnz = *self.nnz_prefix.last().unwrap_or(&0);
+        Cols::projected_bytes(self.z.is_sparse(), self.len(), self.dim(), nnz)
+    }
+
+    /// The column-access mirror of Z, built on first use (O(nnz) counting
+    /// sort for CSR, O(l·n) transpose copy for dense) and cached for the
+    /// instance's lifetime.
+    pub fn cols(&self) -> &Cols {
+        self.cols.get_or_init(|| Cols::from_rows(&self.z))
+    }
+
+    /// Whether the lazy mirror has been materialized (cache accounting
+    /// tests and diagnostics only — the charge is identical either way).
+    pub fn cols_built(&self) -> bool {
+        self.cols.get().is_some()
+    }
+
+    /// Resolve `Auto` to a concrete shard axis from the cached shape/nnz
+    /// balance: `cols` when the feature dimension is wide enough to
+    /// amortize slab dispatch (n ≥ 1024) and the data is not strongly tall
+    /// (4·n ≥ l — per-column work is l-proportional dense and nnz/n-
+    /// proportional sparse, so very tall shapes keep the row path).
+    /// `Rows`/`Cols` pass through unchanged. The resolved axis never
+    /// changes any result byte — it only partitions work.
+    pub fn pick_axis(&self, axis: ShardAxis) -> ShardAxis {
+        match axis {
+            ShardAxis::Auto => {
+                if self.dim() >= 1024 && 4 * self.dim() >= self.len() {
+                    ShardAxis::Cols
+                } else {
+                    ShardAxis::Rows
+                }
+            }
+            fixed => fixed,
+        }
     }
 
     /// Stored entries in row i of Z, from the cached prefix.
@@ -220,9 +279,60 @@ impl Instance {
         u
     }
 
+    /// Axis-aware u = Zᵀθ: the `rows` axis is the serial row-major
+    /// t_matvec above; the `cols` axis shards disjoint contiguous column
+    /// slabs of the lazy mirror across the solver pool, each slab
+    /// replaying the row-major per-component accumulation exactly
+    /// ([`Cols::t_matvec_slab`]) — so the result is bit-identical to
+    /// [`Instance::u_from_theta`] for every axis and thread count.
+    pub fn u_from_theta_axis(
+        &self,
+        theta: &[f64],
+        axis: ShardAxis,
+        threads: usize,
+    ) -> Vec<f64> {
+        match self.pick_axis(axis) {
+            ShardAxis::Cols => self.u_from_theta_cols(theta, threads),
+            _ => self.u_from_theta(theta),
+        }
+    }
+
+    /// Feature-sharded u = Zᵀθ over the column mirror. Slab boundaries are
+    /// nnz-balanced (uniform for dense); merges are write-disjoint because
+    /// each shard owns its contiguous output slab.
+    fn u_from_theta_cols(&self, theta: &[f64], threads: usize) -> Vec<f64> {
+        let n = self.dim();
+        let mut u = vec![0.0; n];
+        if n == 0 {
+            return u;
+        }
+        let cols = self.cols();
+        let t = linalg::par::effective_threads(threads, n);
+        let bounds = cols.balanced_bounds(t);
+        linalg::par::run_sharded_mut(&mut u, 1, &bounds, |range, slab| {
+            cols.t_matvec_slab(theta, range.start, range.end, slab);
+        });
+        u
+    }
+
     /// Primal weight vector from the dual point: w = −C·Zᵀθ (Eq. 13).
     pub fn w_from_theta(&self, c: f64, theta: &[f64]) -> Vec<f64> {
         let mut w = self.u_from_theta(theta);
+        linalg::scale(-c, &mut w);
+        w
+    }
+
+    /// Axis-aware w = −C·Zᵀθ — bit-identical to
+    /// [`Instance::w_from_theta`] for every axis and thread count (the
+    /// final scale is the same serial pass either way).
+    pub fn w_from_theta_axis(
+        &self,
+        c: f64,
+        theta: &[f64],
+        axis: ShardAxis,
+        threads: usize,
+    ) -> Vec<f64> {
+        let mut w = self.u_from_theta_axis(theta, axis, threads);
         linalg::scale(-c, &mut w);
         w
     }
@@ -454,6 +564,72 @@ mod tests {
         }
         // and the prefix is charged to the cache budget estimate
         assert!(sp.approx_bytes() >= sp.z.approx_bytes() + 8 * (sp.len() + 1));
+    }
+
+    #[test]
+    fn mirror_charge_is_projected_upfront() {
+        use crate::linalg::Storage;
+        let ds = synth::sparse_classes(12, 40, 30, 0.15);
+        let sp = Instance::from_dataset(Model::Svm, &ds);
+        let de = Instance::from_dataset(Model::Svm, &ds.clone().into_storage(Storage::Dense));
+        for inst in [&sp, &de] {
+            assert!(!inst.cols_built(), "mirror must be lazy");
+            let before = inst.approx_bytes();
+            // the mirror is charged before it exists...
+            assert!(before >= inst.z.approx_bytes() + inst.mirror_bytes());
+            let built = inst.cols().approx_bytes();
+            // ...the projection equals the built footprint exactly...
+            assert_eq!(inst.mirror_bytes(), built, "{}", inst.z.storage_name());
+            // ...so building never changes the LRU charge
+            assert!(inst.cols_built());
+            assert_eq!(inst.approx_bytes(), before, "{}", inst.z.storage_name());
+        }
+        // concrete projections: dense l·n·8; CSC nnz·12 + (n+1)·8
+        assert_eq!(de.mirror_bytes(), 40 * 30 * 8);
+        assert_eq!(sp.mirror_bytes(), sp.z.nnz() * 12 + 31 * 8);
+    }
+
+    #[test]
+    fn axis_reconstruction_bit_identical() {
+        use crate::linalg::Storage;
+        let ds = synth::sparse_classes(21, 50, 33, 0.2);
+        let sp = Instance::from_dataset(Model::Svm, &ds);
+        let de = Instance::from_dataset(Model::Svm, &ds.clone().into_storage(Storage::Dense));
+        for inst in [&sp, &de] {
+            let theta: Vec<f64> =
+                (0..inst.len()).map(|i| if i % 5 == 0 { 0.0 } else { (i as f64 * 0.17).sin() }).collect();
+            let want_u = inst.u_from_theta(&theta);
+            let want_w = inst.w_from_theta(1.75, &theta);
+            for threads in [1usize, 2, 4, 7] {
+                for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Auto] {
+                    assert_eq!(
+                        inst.u_from_theta_axis(&theta, axis, threads),
+                        want_u,
+                        "{} u axis={} threads={threads}",
+                        inst.z.storage_name(),
+                        axis.name()
+                    );
+                    assert_eq!(
+                        inst.w_from_theta_axis(1.75, &theta, axis, threads),
+                        want_w,
+                        "{} w axis={} threads={threads}",
+                        inst.z.storage_name(),
+                        axis.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pick_axis_resolves_auto_from_shape() {
+        let ds = synth::toy_gaussian(1, 10, 1.5, 0.75);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        // fixed axes pass through untouched
+        assert_eq!(inst.pick_axis(ShardAxis::Rows), ShardAxis::Rows);
+        assert_eq!(inst.pick_axis(ShardAxis::Cols), ShardAxis::Cols);
+        // n = 2 ≪ 1024: auto stays on the row path for tall/narrow data
+        assert_eq!(inst.pick_axis(ShardAxis::Auto), ShardAxis::Rows);
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //!   (the ablation bench explores the crossover).
 
 use super::{Decision, ScreenReport};
-use crate::linalg::{self, par, RowMatrix};
+use crate::linalg::{self, par, RowMatrix, ShardAxis};
 use crate::problem::Instance;
 
 /// Which evaluation strategy to use.
@@ -101,6 +101,58 @@ impl Dvi {
                 for j in (i + 1)..l {
                     data[j * l + i] = data[i * l + j];
                 }
+            }
+        }
+        Dvi { form: DviForm::Theta, gram: Some(RowMatrix::from_flat(l, l, data)) }
+    }
+
+    /// Axis-aware θ-form build. `Rows` (and `Auto` resolving to rows)
+    /// delegates to [`Dvi::new_theta_threads`]. `Cols` shards the Gram's
+    /// *output* columns instead: shard k owns a contiguous slab of columns
+    /// j, balanced by upper-triangle entry count (column j holds j+1
+    /// entries), and computes every entry ⟨zᵢ, zⱼ⟩ for i ≤ j as the same
+    /// whole dot the serial build evaluates — a single dot is never split
+    /// across shards, because the 8-accumulator reduction is not
+    /// associative. Shards return packed slabs that the main thread
+    /// scatters and mirrors serially, so the matrix is bit-identical to
+    /// the row-sharded and serial builds for any thread count.
+    pub fn new_theta_axis(inst: &Instance, threads: usize, axis: ShardAxis) -> Dvi {
+        let l = inst.len();
+        let t = par::effective_threads(threads, l);
+        if t <= 1 || inst.pick_axis(axis) != ShardAxis::Cols {
+            return Self::new_theta_threads(inst, threads);
+        }
+        assert!(
+            l.checked_mul(l).map_or(false, |entries| entries <= 256 * 1024 * 1024),
+            "Gram matrix for l={l} would exceed the memory budget; use DviForm::W"
+        );
+        let cum = par::cumulative_weights((0..l).map(|j| j + 1));
+        let ranges = par::cumulative_ranges(&cum, t);
+        let slabs = par::run_sharded_ranges(ranges, |cols| {
+            let mut out = Vec::with_capacity(cum[cols.end] - cum[cols.start]);
+            for j in cols {
+                for i in 0..=j {
+                    out.push(inst.z.gram(i, j));
+                }
+            }
+            out
+        });
+        let mut data = vec![0.0f64; l * l];
+        let mut j = 0usize;
+        for slab in slabs {
+            let mut k = 0usize;
+            while k < slab.len() {
+                for i in 0..=j {
+                    data[i * l + j] = slab[k];
+                    k += 1;
+                }
+                j += 1;
+            }
+        }
+        debug_assert_eq!(j, l, "packed slabs must cover every Gram column");
+        for i in 0..l {
+            for j in (i + 1)..l {
+                data[j * l + i] = data[i * l + j];
             }
         }
         Dvi { form: DviForm::Theta, gram: Some(RowMatrix::from_flat(l, l, data)) }
@@ -472,6 +524,30 @@ mod tests {
                 par_rule.gram.as_ref().unwrap().flat(),
                 "threads={threads}"
             );
+        }
+    }
+
+    #[test]
+    fn cols_axis_gram_build_matches_serial() {
+        use crate::linalg::Storage;
+        // prime l so no shard count divides the column slabs evenly
+        for ds in [
+            synth::toy_gaussian(43, 53, 1.0, 0.75),
+            synth::sparse_classes(44, 61, 24, 0.2).into_storage(Storage::Csr),
+        ] {
+            let inst = Instance::from_dataset(Model::Svm, &ds);
+            let serial = Dvi::new_theta(&inst);
+            for threads in [1usize, 2, 4, 7, 0] {
+                for axis in [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Auto] {
+                    let rule = Dvi::new_theta_axis(&inst, threads, axis);
+                    assert_eq!(
+                        serial.gram.as_ref().unwrap().flat(),
+                        rule.gram.as_ref().unwrap().flat(),
+                        "threads={threads} axis={}",
+                        axis.name()
+                    );
+                }
+            }
         }
     }
 

@@ -21,7 +21,7 @@
 use super::dvi::{ball_params, Dvi};
 use super::region::{self, DualRegion};
 use super::{Decision, RuleKind};
-use crate::linalg;
+use crate::linalg::{self, ShardAxis};
 use crate::path::{DviScanBackend, NativeScan, ParScan};
 use crate::problem::{Instance, Model};
 
@@ -135,11 +135,18 @@ pub struct DviThetaRule {
     /// ‖zᵢ‖ from the Gram diagonal — the exact `g.get(i,i).max(0).sqrt()`
     /// values the enum path evaluated per row.
     zn: Vec<f64>,
+    /// Shard axis for the one-time Gram build (the built matrix is
+    /// bit-identical either way; this only picks the parallel schedule).
+    axis: ShardAxis,
 }
 
 impl DviThetaRule {
     pub fn new() -> DviThetaRule {
-        DviThetaRule { dvi: None, zn: Vec::new() }
+        Self::with_axis(ShardAxis::Rows)
+    }
+
+    pub fn with_axis(axis: ShardAxis) -> DviThetaRule {
+        DviThetaRule { dvi: None, zn: Vec::new(), axis }
     }
 }
 
@@ -155,7 +162,7 @@ impl ScreeningRule for DviThetaRule {
     }
 
     fn init(&mut self, inst: &Instance, threads: usize) {
-        let dvi = Dvi::new_theta_threads(inst, threads);
+        let dvi = Dvi::new_theta_axis(inst, threads, self.axis);
         let g = dvi.gram_matrix().expect("θ-form always builds the Gram matrix");
         self.zn = (0..inst.len()).map(|i| g.get(i, i).max(0.0).sqrt()).collect();
         self.dvi = Some(dvi);
@@ -261,12 +268,19 @@ pub struct Traced {
     inner: Box<dyn ScreeningRule>,
     /// Interned rule name, so span attributes stay `Copy`.
     label: &'static str,
+    /// Requested shard axis — resolved against the instance shape per
+    /// sweep so `screen_rows` spans report the axis actually in effect.
+    axis: ShardAxis,
 }
 
 impl Traced {
     pub fn new(inner: Box<dyn ScreeningRule>) -> Traced {
+        Self::with_axis(inner, ShardAxis::Rows)
+    }
+
+    pub fn with_axis(inner: Box<dyn ScreeningRule>, axis: ShardAxis) -> Traced {
         let label = crate::obs::intern(&inner.name());
-        Traced { inner, label }
+        Traced { inner, label, axis }
     }
 }
 
@@ -298,6 +312,7 @@ impl ScreeningRule for Traced {
         threads: usize,
     ) -> Vec<Decision> {
         let mut sp = crate::obs::Span::enter("screen_rows");
+        sp.attr_str("shard_axis", inst.pick_axis(self.axis).name());
         let decisions = self.inner.screen_rows(inst, region, threads);
         let scanned = decisions.len() as u64;
         let rejected =
@@ -397,24 +412,32 @@ impl RuleExpr {
     /// [`super::Composite`] intersecting the members. `threads` picks
     /// the w-form scan backend (the same policy the path runner uses).
     pub fn build(&self, threads: usize) -> Box<dyn ScreeningRule> {
+        self.build_axis(threads, ShardAxis::Rows)
+    }
+
+    /// [`RuleExpr::build`] with an explicit shard axis: θ-form members
+    /// shard their Gram build along it and the [`Traced`] decorator
+    /// stamps the resolved axis on every `screen_rows` span. Decisions
+    /// are bit-identical across axes.
+    pub fn build_axis(&self, threads: usize, axis: ShardAxis) -> Box<dyn ScreeningRule> {
         let engine: Box<dyn ScreeningRule> = if let [k] = self.atoms.as_slice() {
-            build_atom(*k, threads)
+            build_atom(*k, threads, axis)
         } else {
             Box::new(super::Composite::new(
-                self.atoms.iter().map(|&k| build_atom(k, threads)).collect(),
+                self.atoms.iter().map(|&k| build_atom(k, threads, axis)).collect(),
             ))
         };
         // one decorator at the top level — member atoms inside a
         // composite are not individually traced, so telemetry counts
         // each screened row exactly once per expression
-        Box::new(Traced::new(engine))
+        Box::new(Traced::with_axis(engine, axis))
     }
 }
 
-fn build_atom(kind: RuleKind, threads: usize) -> Box<dyn ScreeningRule> {
+fn build_atom(kind: RuleKind, threads: usize, axis: ShardAxis) -> Box<dyn ScreeningRule> {
     match kind {
         RuleKind::DviW => Box::new(DviWRule::with_threads(threads)),
-        RuleKind::DviTheta => Box::new(DviThetaRule::new()),
+        RuleKind::DviTheta => Box::new(DviThetaRule::with_axis(axis)),
         RuleKind::Ssnsv => Box::new(SsnsvRule::new(false)),
         RuleKind::Essnsv => Box::new(SsnsvRule::new(true)),
         RuleKind::None => Box::new(NoneRule),

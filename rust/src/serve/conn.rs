@@ -200,6 +200,15 @@ impl Session<'_> {
     /// Admission control, id issue, route registration, pool submit.
     /// A refused request answers with a typed error and consumes no id.
     fn admit_and_submit(&mut self, req: ParsedRequest, stream: bool) -> Pending {
+        // a draining server refuses everything new before any other
+        // admission check — in-flight jobs keep running to completion
+        if self.shared.draining.load(Ordering::SeqCst) {
+            self.shared.pool.metrics.counter("serve_draining_refused").inc();
+            return Pending::Ready(admission_error(
+                "draining",
+                "server is draining for shutdown; no new requests are admitted".into(),
+            ));
+        }
         // the dependency edge must name an id this session has already
         // issued — parse-failed and refused lines consume none
         if let Some(a) = req.after {

@@ -22,6 +22,10 @@
 //!   queued-cost budget (typed `"code": "overloaded"`), with a cheap
 //!   rows-scan cost estimate per request so a huge predict cannot
 //!   silently starve screen traffic.
+//! - [`DrainHandle`] is the graceful-shutdown path: the CLI's SIGTERM
+//!   watcher flips admission off (new requests answer a typed
+//!   `"code": "draining"` refusal), waits for in-flight jobs to flush
+//!   their responses, then lets the trace flush and the process exit.
 //! - [`ModelRegistry`] is the `--model-dir` artifact store: persisted
 //!   `.pallas-model` files auto-load into the model cache at startup
 //!   (corrupt files are skipped with a typed warning, never a panic),
@@ -51,4 +55,4 @@ mod registry;
 mod server;
 
 pub use registry::{ModelRegistry, RegistryScan};
-pub use server::{ServeOptions, Server};
+pub use server::{DrainHandle, ServeOptions, Server};

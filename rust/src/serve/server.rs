@@ -74,6 +74,10 @@ pub(crate) struct ServeShared {
     pub(crate) inflight_total: AtomicU64,
     pub(crate) opts: ServeOptions,
     pub(crate) stop: AtomicBool,
+    /// Graceful-shutdown latch: once set, connections refuse every new
+    /// request with a typed `"code": "draining"` error while already
+    /// submitted jobs keep running to completion.
+    pub(crate) draining: AtomicBool,
 }
 
 /// Multi-client server over one worker pool. Dropping (or [`Server::stop`])
@@ -107,6 +111,7 @@ impl Server {
             inflight_total: AtomicU64::new(0),
             opts,
             stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
         });
         let dispatcher = {
             let shared = shared.clone();
@@ -128,6 +133,13 @@ impl Server {
     /// The server's admission/registry options.
     pub fn options(&self) -> &ServeOptions {
         &self.shared.opts
+    }
+
+    /// A handle that can drain this server from another thread (the
+    /// SIGTERM watcher): flip admission off, then wait for in-flight
+    /// jobs to finish and their responses to reach the wire.
+    pub fn drain_handle(&self) -> DrainHandle {
+        DrainHandle { shared: self.shared.clone() }
     }
 
     /// Run one blocking line-protocol session on the caller's thread —
@@ -250,6 +262,44 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.stop();
+    }
+}
+
+/// Graceful-shutdown control detached from the [`Server`]'s lifetime, so
+/// the SIGTERM watcher thread can drive a drain while the main thread
+/// stays blocked in [`Server::wait`].
+pub struct DrainHandle {
+    shared: Arc<ServeShared>,
+}
+
+impl DrainHandle {
+    /// Stop admitting: every request parsed after this answers with a
+    /// typed `"code": "draining"` refusal. Jobs already submitted are
+    /// unaffected.
+    pub fn begin(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether a drain has begun.
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// Block until every in-flight job has completed, or `timeout`
+    /// elapses — returns whether the server went idle. The dispatcher
+    /// decrements `inflight_total` *before* the outcome reaches the
+    /// connection writer, so after the count hits zero this waits one
+    /// short grace period for the final response bytes to hit the wire.
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while self.shared.inflight_total.load(Ordering::SeqCst) > 0 {
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        std::thread::sleep(Duration::from_millis(250));
+        true
     }
 }
 

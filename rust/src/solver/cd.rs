@@ -243,7 +243,10 @@ impl CdSolver {
         theta: Vec<f64>,
         free: &[usize],
     ) -> SolveResult {
-        let u = inst.u_from_theta(&theta);
+        // the one O(l·n) reconstruction this entry point pays is axis-
+        // aware: wide instances shard u = Zᵀθ over column slabs of the
+        // lazy mirror (bit-identical to the serial row path)
+        let u = inst.u_from_theta_axis(&theta, self.cfg.shard_axis, self.cfg.threads);
         self.solve_free_with_u(inst, c, theta, free, u)
     }
 
@@ -319,6 +322,7 @@ impl CdSolver {
             let (kept, max_violation) = {
                 let mut sp = crate::obs::Span::enter("sweep");
                 sp.attr_str("cd_mode", "serial");
+                sp.attr_str("shard_axis", inst.pick_axis(self.cfg.shard_axis).name());
                 sp.attr("shards", 1.0);
                 sp.attr("iter", stats.outer_iters as f64);
                 let out = sweep_live(

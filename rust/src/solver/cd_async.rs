@@ -210,14 +210,17 @@ pub(super) fn solve_free_with_u_async(
             {
                 let mut sp = crate::obs::Span::enter("sweep");
                 sp.attr_str("cd_mode", "async");
+                sp.attr_str("shard_axis", inst.pick_axis(cfg.shard_axis).name());
                 sp.attr("shards", t as f64);
                 sp.attr("iter", stats.outer_iters as f64);
                 wild_round(
                     inst, c, tol, cfg.seed, epoch, t, &sorted, &mut theta, &u, &mut stats,
                 );
                 // deferred reconciliation: the racing u is discarded and
-                // rebuilt exactly from θ, so CAS drift never compounds
-                u = inst.u_from_theta(&theta);
+                // rebuilt exactly from θ, so CAS drift never compounds —
+                // this once-per-round O(nnz) rebuild is the async arm's
+                // dominant fixed cost on wide data, so it is axis-aware
+                u = inst.u_from_theta_axis(&theta, cfg.shard_axis, cfg.threads);
             }
             if stats.outer_iters >= cfg.max_outer {
                 break;
@@ -232,6 +235,7 @@ pub(super) fn solve_free_with_u_async(
         let (kept, max_violation) = {
             let mut sp = crate::obs::Span::enter("sweep");
             sp.attr_str("cd_mode", "async_confirm");
+            sp.attr_str("shard_axis", inst.pick_axis(cfg.shard_axis).name());
             sp.attr("shards", 1.0);
             sp.attr("iter", stats.outer_iters as f64);
             let out = cd::sweep_live(

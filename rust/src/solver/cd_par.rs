@@ -241,6 +241,7 @@ pub(super) fn solve_free_with_u_par(
         confirm_serial = false;
         let mut sweep_span = crate::obs::Span::enter("sweep");
         sweep_span.attr_str("cd_mode", if t <= 1 { "sync_serial" } else { "sync" });
+        sweep_span.attr_str("shard_axis", inst.pick_axis(cfg.shard_axis).name());
         sweep_span.attr("shards", t as f64);
         sweep_span.attr("iter", stats.outer_iters as f64);
         let (kept, max_violation) = if t <= 1 {

@@ -1,0 +1,154 @@
+//! Column-shard acceptance suite: the `--shard-axis` knob must be a pure
+//! performance choice. For every model (SVM / weighted SVM / LAD), both
+//! storages (dense / CSR), and thread counts {1, 2, 4, 7}, the
+//! column-sharded reconstructions must reproduce the row path bit for
+//! bit: screening decisions, u = Zᵀθ iterates, extracted model artifact
+//! bytes, and θ-form Gram matrices. `auto` must resolve deterministically
+//! from the instance shape and agree with whichever fixed axis it picks.
+
+use dvi_screen::config::SolverConfig;
+use dvi_screen::data::synth;
+use dvi_screen::linalg::{ShardAxis, Storage};
+use dvi_screen::model::{format, TrainedModel};
+use dvi_screen::problem::{Instance, Model};
+use dvi_screen::screening::dvi::screen_w_par;
+use dvi_screen::screening::Dvi;
+use dvi_screen::solver::CdSolver;
+
+const THREADS: [usize; 4] = [1, 2, 4, 7];
+const AXES: [ShardAxis; 3] = [ShardAxis::Rows, ShardAxis::Cols, ShardAxis::Auto];
+
+fn dataset(model: Model, storage: Storage) -> dvi_screen::data::Dataset {
+    match model {
+        Model::Svm | Model::WeightedSvm => {
+            // uneven sparse rows, prime-ish dims: no shard count divides
+            // the column slabs evenly
+            synth::sparse_classes(61, 83, 37, 0.2).into_storage(storage)
+        }
+        Model::Lad => {
+            let mut rng = dvi_screen::data::Rng::new(62);
+            synth::random_regression(&mut rng, 90, 23).into_storage(storage)
+        }
+    }
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn cols_axis_reproduces_rows_axis_bit_for_bit() {
+    for model in [Model::Svm, Model::WeightedSvm, Model::Lad] {
+        for storage in [Storage::Dense, Storage::Csr] {
+            let ds = dataset(model, storage);
+            let inst = Instance::from_dataset(model, &ds);
+            // the CD solve itself stays serial (threads: 1 below) so the
+            // anchor θ is one fixed bit pattern; the axis/thread sweep
+            // then exercises only the reconstruction paths under test
+            let r = CdSolver::new(SolverConfig { tol: 1e-7, ..Default::default() })
+                .solve(&inst, 0.4, inst.cold_start());
+
+            let u_ref = inst.u_from_theta(&r.theta);
+            let w_ref = inst.w_from_theta(0.4, &r.theta);
+            let dec_ref = screen_w_par(&inst, 0.4, 0.7, &u_ref, 1).decisions;
+            let model_ref =
+                TrainedModel::from_solution(&inst, "cols-suite", 1.0, 0.4, 1e-7, &r.theta);
+            let bytes_ref = format::encode(&model_ref);
+
+            for threads in THREADS {
+                for axis in AXES {
+                    let tag = format!(
+                        "{model:?} {storage:?} threads={threads} axis={}",
+                        axis.name()
+                    );
+                    let u = inst.u_from_theta_axis(&r.theta, axis, threads);
+                    assert_eq!(bits(&u), bits(&u_ref), "u diverged: {tag}");
+                    let w = inst.w_from_theta_axis(0.4, &r.theta, axis, threads);
+                    assert_eq!(bits(&w), bits(&w_ref), "w diverged: {tag}");
+                    let dec = screen_w_par(&inst, 0.4, 0.7, &u, threads).decisions;
+                    assert_eq!(dec, dec_ref, "decisions diverged: {tag}");
+                    let tm = TrainedModel::from_solution_axis(
+                        &inst,
+                        "cols-suite",
+                        1.0,
+                        0.4,
+                        1e-7,
+                        &r.theta,
+                        axis,
+                        threads,
+                    );
+                    assert_eq!(format::encode(&tm), bytes_ref, "artifact diverged: {tag}");
+                    assert_eq!(tm.id(), model_ref.id(), "model id diverged: {tag}");
+                    assert_eq!(
+                        bits(&tm.reconstruct_w_threads(threads)),
+                        bits(&model_ref.reconstruct_w()),
+                        "reconstructed w diverged: {tag}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn theta_form_gram_is_axis_invariant() {
+    for storage in [Storage::Dense, Storage::Csr] {
+        let ds = dataset(Model::Svm, storage);
+        let inst = Instance::from_dataset(Model::Svm, &ds);
+        let r = CdSolver::new(SolverConfig { tol: 1e-7, ..Default::default() })
+            .solve(&inst, 0.4, inst.cold_start());
+        let serial = Dvi::new_theta(&inst);
+        let want = serial.screen(&inst, 0.4, 0.7, &r.theta, &r.u).decisions;
+        for threads in THREADS {
+            for axis in AXES {
+                let rule = Dvi::new_theta_axis(&inst, threads, axis);
+                let got = rule.screen(&inst, 0.4, 0.7, &r.theta, &r.u).decisions;
+                assert_eq!(
+                    got,
+                    want,
+                    "{storage:?} threads={threads} axis={}",
+                    axis.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_axis_resolves_deterministically_from_shape() {
+    // tall-and-narrow: auto must pick rows
+    let tall = Instance::from_dataset(
+        Model::Svm,
+        &synth::sparse_classes(63, 200, 40, 0.2),
+    );
+    assert_eq!(tall.pick_axis(ShardAxis::Auto), ShardAxis::Rows);
+
+    // short-and-wide (n ≥ 1024, 4n ≥ l): auto must pick cols, and keep
+    // picking it on every call — the heuristic reads only cached shape
+    let wide = Instance::from_dataset(
+        Model::Svm,
+        &synth::sparse_classes(64, 40, 1100, 0.02),
+    );
+    for _ in 0..3 {
+        assert_eq!(wide.pick_axis(ShardAxis::Auto), ShardAxis::Cols);
+    }
+    // fixed axes always pass through, whatever the shape
+    for inst in [&tall, &wide] {
+        assert_eq!(inst.pick_axis(ShardAxis::Rows), ShardAxis::Rows);
+        assert_eq!(inst.pick_axis(ShardAxis::Cols), ShardAxis::Cols);
+    }
+
+    // and the auto-resolved reconstruction is still bit-identical on the
+    // wide instance, where it actually takes the cols path
+    let r = CdSolver::new(SolverConfig { tol: 1e-6, ..Default::default() })
+        .solve(&wide, 0.5, wide.cold_start());
+    let want = wide.u_from_theta(&r.theta);
+    for threads in THREADS {
+        let got = wide.u_from_theta_axis(&r.theta, ShardAxis::Auto, threads);
+        assert_eq!(bits(&got), bits(&want), "threads={threads}");
+    }
+    // the mirror was built lazily exactly once, and its bytes were
+    // charged up front
+    assert!(wide.cols_built());
+    assert_eq!(wide.cols().approx_bytes(), wide.mirror_bytes());
+}

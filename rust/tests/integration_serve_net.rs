@@ -189,6 +189,48 @@ fn per_connection_cap_answers_rejected() {
     svc.shutdown();
 }
 
+#[test]
+fn draining_server_refuses_new_work_and_flushes_in_flight() {
+    let svc = ScreeningService::new(2);
+    let mut server = Server::new(svc.pool_handle(), ServeOptions::default());
+    let drain = server.drain_handle();
+    let addr = server.bind_tcp("127.0.0.1:0").unwrap();
+    assert!(!drain.is_draining());
+
+    // a normal request completes before the drain begins
+    let lines = tcp_session(
+        addr,
+        "{\"dataset\": \"toy1\", \"scale\": 0.05, \"points\": 3, \"tol\": 1e-6, \
+         \"timings\": false}\n",
+    );
+    let ok = parse_json(&lines[0]).unwrap();
+    assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true), "{lines:?}");
+
+    drain.begin();
+    assert!(drain.is_draining());
+    // nothing was in flight, so the drain settles immediately (modulo
+    // the writer grace period)
+    assert!(drain.wait_idle(std::time::Duration::from_secs(10)));
+
+    // post-drain requests answer the typed refusal, id-less, and the
+    // connection itself still works end to end
+    let lines = tcp_session(
+        addr,
+        "{\"dataset\": \"toy1\", \"points\": 3, \"timings\": false}\n\
+         {\"kind\": \"stats\", \"timings\": false}\n",
+    );
+    assert_eq!(lines.len(), 2, "{lines:?}");
+    for line in &lines {
+        let j = parse_json(line).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false), "{lines:?}");
+        assert_eq!(j.get("code").unwrap().as_str(), Some("draining"), "{lines:?}");
+        assert!(j.get("id").is_none(), "refused requests consume no id");
+    }
+
+    server.stop();
+    svc.shutdown();
+}
+
 /// Scrape `path` once from the metrics endpoint and return the whole
 /// HTTP response (status line, headers, body).
 fn scrape(addr: std::net::SocketAddr, path: &str) -> String {

@@ -14,7 +14,12 @@
 #                 solve, amortized ~0), while the scoped fallback spawns
 #                 per call;
 #   4. modes    — every cd_mode cell converged (asserted inside the
-#                 bench itself) and both modes report wall-clock.
+#                 bench itself) and both modes report wall-clock;
+#   5. axis     — on the widest shard_axis cells (largest n), the `auto`
+#                 axis must stay within 10% of the better fixed axis
+#                 (rows vs cols) — the auto heuristic may never cost
+#                 more than picking the worse axis saves. Gated only on
+#                 >= 4 cores (the cells race 4-way sharding).
 #
 # CI runners expose few cores; the gate reads the machine's parallelism
 # first and SKIPS the speedup assertion (not the run) below 4 cores.
@@ -44,7 +49,7 @@ min_speedup = float(sys.argv[2])
 assert b["schema_version"] == 1, b["schema_version"]
 series = b["series"]
 kinds = {e["series"] for e in series}
-assert {"cd_sweep", "cd_mode", "pool_reuse"} <= kinds, sorted(kinds)
+assert {"cd_sweep", "cd_mode", "pool_reuse", "shard_axis"} <= kinds, sorted(kinds)
 
 # -- scaling gate: 4-thread sync >= MIN_SPEEDUP x serial on the largest l
 sweeps = [e for e in series if e["series"] == "cd_sweep"]
@@ -77,6 +82,24 @@ assert spawn_per_call <= 1.0, routed
 assert scoped["os_threads_spawned"] >= scoped["iters"], scoped
 print(f"   pool: {routed['workers_spawned']} spawns over {routed['iters']} calls "
       f"vs scoped {scoped['os_threads_spawned']} over {scoped['iters']}")
+
+# -- shard-axis gate: auto within 10% of the better fixed axis, widest n
+axes = [e for e in series if e["series"] == "shard_axis"]
+wide_n = max(e["n"] for e in axes)
+for storage in ("dense", "csr"):
+    cell = {e["axis"]: e for e in axes
+            if e["n"] == wide_n and e["storage"] == storage}
+    if {"rows", "cols", "auto"} - set(cell):
+        continue
+    best = min(cell["rows"]["min_s"], cell["cols"]["min_s"])
+    ratio = cell["auto"]["min_s"] / best
+    picked = cell["auto"]["picked"]
+    print(f"   shard_axis {storage} n={wide_n}: auto({picked}) = "
+          f"{ratio:.2f}x the better fixed axis")
+    if cores >= 4:
+        assert ratio <= 1.10, (
+            f"{storage} n={wide_n}: auto axis ({picked}) is {ratio:.2f}x the "
+            f"better fixed axis (gate 1.10x, {cores} cores)")
 
 # -- cd_mode series shape: sync & async rows for every (l, storage)
 modes = [e for e in series if e["series"] == "cd_mode"]

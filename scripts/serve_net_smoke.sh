@@ -11,7 +11,11 @@
 #                     --model-dir; a RESTARTED server loads it at startup
 #                     and serves predict by model_id with zero retrains
 #                     (asserted on the "stats" counters: a model-cache
-#                     hit, no artifact re-read, one registry load).
+#                     hit, no artifact re-read, one registry load);
+#   4. SIGTERM drain — a TERMed server stops admitting (typed
+#                     "code": "draining" refusals on a live connection),
+#                     finishes what it already accepted, and exits 0 on
+#                     its own instead of needing SIGKILL.
 #
 # Requires python3 for the TCP clients (present on the CI runners).
 set -euo pipefail
@@ -144,5 +148,67 @@ assert "model_cache_loads" not in c, c
 print(f"   predict served {predict['rows']} rows from the restarted registry")
 EOF
 stop_server
+
+echo "== SIGTERM drains: typed refusals for new work, in-flight flushed, exit 0"
+start_server "$WORK/serve3.log"
+cat > "$WORK/drain.py" <<'EOF'
+import json, os, signal, socket, sys, threading, time
+host, port, pid = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+s = socket.create_connection((host, port), timeout=120)
+f = s.makefile("rb")
+def send(obj):
+    s.sendall((json.dumps(obj) + "\n").encode())
+lines = []
+def reader():
+    while True:
+        l = f.readline()
+        if not l:
+            break
+        lines.append(json.loads(l))
+t = threading.Thread(target=reader)
+t.start()
+# the connection serves normally before the drain
+send({"stream": True, "kind": "stats", "timings": False})
+for _ in range(100):
+    if lines:
+        break
+    time.sleep(0.05)
+assert lines and lines[0].get("ok") is True, lines
+# occupy the pool so the drain has in-flight work to wait for, then TERM
+send({"stream": True, "dataset": "toy2", "scale": 0.5, "points": 8,
+      "timings": False})
+os.kill(pid, signal.SIGTERM)
+# probe the SAME live connection until the draining refusal lands
+for _ in range(200):
+    if any(l.get("code") == "draining" for l in lines):
+        break
+    try:
+        send({"stream": True, "kind": "stats", "timings": False})
+    except OSError:
+        break
+    time.sleep(0.05)
+t.join(timeout=60)
+refused = [l for l in lines if l.get("code") == "draining"]
+flushed = [l for l in lines if l.get("ok") is True and "steps" in l]
+assert refused, lines
+assert all("id" not in r for r in refused), lines
+assert flushed, lines
+print("   drain refused %d probe(s), flushed the in-flight path run"
+      % len(refused))
+EOF
+python3 "$WORK/drain.py" 127.0.0.1 "$PORT" "$SERVER_PID"
+# the TERMed server must exit 0 on its own — no SIGKILL escalation
+for _ in $(seq 1 100); do
+  kill -0 "$SERVER_PID" 2> /dev/null || break
+  sleep 0.1
+done
+if kill -0 "$SERVER_PID" 2> /dev/null; then
+  echo "server survived SIGTERM past the drain deadline:"; cat "$WORK/serve3.log"; exit 1
+fi
+wait "$SERVER_PID" 2> /dev/null && RC=0 || RC=$?
+[[ "$RC" -eq 0 ]] || { echo "drained server exited $RC:"; cat "$WORK/serve3.log"; exit 1; }
+grep -q "SIGTERM: draining" "$WORK/serve3.log" || {
+  echo "expected a drain log line:"; cat "$WORK/serve3.log"; exit 1; }
+SERVER_PID=""
 
 echo "serve net smoke: OK"
